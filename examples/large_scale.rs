@@ -1,0 +1,16 @@
+//! END-TO-END DRIVER (Figure 3 / §4 "Large Scale Segment Transfer"):
+//! generate two lobby-scale labeled rooms, match them with qFGW using
+//! colors as features, and report segment-transfer accuracy, wall time,
+//! and memory of the sparse quantized structures — proving all layers
+//! compose on a realistic large workload. At `--full` the rooms are the
+//! paper's 1,155,072 / 909,312 points.
+//!
+//! ```bash
+//! cargo run --release --example large_scale            # 10% scale (~115K/91K pts)
+//! cargo run --release --example large_scale -- 1.0     # full ~1M-point run
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    qgw::experiments::fig3::run(scale, 7, &mut std::io::stdout())
+}

@@ -1,0 +1,14 @@
+//! Figure-1 scenario: match the dog cloud with MREC, mbGW and qGW;
+//! export color-transferred PLY/CSV files for visualization and print
+//! each method's distortion and runtime.
+//!
+//! ```bash
+//! cargo run --release --example pointcloud_matching -- [scale] [out_dir]
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(0.25);
+    let out_dir = args.get(1).cloned().unwrap_or_else(|| "fig1_out".to_string());
+    qgw::experiments::fig1::run(scale, 7, &out_dir, &mut std::io::stdout())
+}

@@ -1,0 +1,101 @@
+"""AOT lowering: Layer-2 graphs -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` rust crate links) rejects at
+``proto.id() <= INT_MAX``. The HLO text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+One executable is emitted per (graph, padding bucket):
+
+    egw_step_m{M}   : (Cx[M,M], Cy[M,M], a[M], b[M], T[M,M], eps[])   -> (T'[M,M], loss[])
+    fgw_step_m{M}   : (... , feat_cost[M,M], alpha[], eps[])          -> (T'[M,M], loss[])
+    gw_loss_m{M}    : (Cx, Cy, T, a, b)                               -> (loss[],)
+
+plus ``manifest.txt`` with one line per artifact:
+``name kind m inner_iters path`` — parsed by rust/src/runtime/artifacts.rs.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_egw_step(m: int, inner_iters: int) -> str:
+    fn = lambda cx, cy, a, b, t, eps: model.egw_step(
+        cx, cy, a, b, t, eps, inner_iters=inner_iters)
+    lowered = jax.jit(fn).lower(
+        _spec(m, m), _spec(m, m), _spec(m), _spec(m), _spec(m, m), _spec())
+    return to_hlo_text(lowered)
+
+
+def lower_fgw_step(m: int, inner_iters: int) -> str:
+    fn = lambda cx, cy, a, b, t, fc, alpha, eps: model.fgw_step(
+        cx, cy, a, b, t, fc, alpha, eps, inner_iters=inner_iters)
+    lowered = jax.jit(fn).lower(
+        _spec(m, m), _spec(m, m), _spec(m), _spec(m), _spec(m, m),
+        _spec(m, m), _spec(), _spec())
+    return to_hlo_text(lowered)
+
+
+def lower_gw_loss(m: int) -> str:
+    lowered = jax.jit(model.gw_loss).lower(
+        _spec(m, m), _spec(m, m), _spec(m, m), _spec(m), _spec(m))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", type=int, nargs="*",
+                    default=list(model.PAD_BUCKETS))
+    ap.add_argument("--inner-iters", type=int,
+                    default=model.DEFAULT_INNER_ITERS)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+
+    for m in args.buckets:
+        for kind, lower in (
+            ("egw_step", lambda mm: lower_egw_step(mm, args.inner_iters)),
+            ("fgw_step", lambda mm: lower_fgw_step(mm, args.inner_iters)),
+            ("gw_loss", lower_gw_loss),
+        ):
+            name = f"{kind}_m{m}"
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            text = lower(m)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(
+                f"{name} {kind} {m} {args.inner_iters} {name}.hlo.txt")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')} "
+          f"({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

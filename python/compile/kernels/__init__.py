@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for quantized Gromov-Wasserstein.
+
+Exports the kernels called by the Layer-2 model (`compile.model`) plus their
+pure-jnp reference oracles (`compile.kernels.ref`).
+"""
+
+from .assign import assign_blocks, assign_blocks_ref
+from .pairwise import pairwise_sqdist
+from .gw_grad import matmul, gw_grad
+from .sinkhorn_step import scale_step, lse_step, sinkhorn_step
+from . import ref
+
+__all__ = [
+    "assign_blocks",
+    "assign_blocks_ref",
+    "pairwise_sqdist",
+    "matmul",
+    "gw_grad",
+    "scale_step",
+    "lse_step",
+    "sinkhorn_step",
+    "ref",
+]

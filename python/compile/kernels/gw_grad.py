@@ -1,0 +1,127 @@
+"""Pallas kernels: tiled matmul and the fused square-loss GW cost tensor.
+
+The global-alignment hot spot of qGW is the entropic-GW outer iteration on
+the m x m quantized representations. Its dominant cost is the matmul chain
+
+    grad = constC - 2 * Cx @ T @ Cy^T,    constC = (Cx^2 a) 1^T + 1 (Cy^2 b)^T
+
+(Peyre-Cuturi-Solomon factorization of the square loss). We implement it as
+two tiled Pallas matmuls; the second carries a fused epilogue that adds the
+rank-one constC terms and the -2 scale, so ``grad`` is produced in a single
+pass over the output tiles without materializing intermediate full-size
+temporaries beyond ``A = Cx @ T``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid = (m/bm, m/bn, m/bk); each program multiplies a (bm, bk) x (bk, bn)
+    tile pair on the MXU with fp32 accumulation into a VMEM scratch block;
+  * the k axis is the innermost (minor) grid dimension so the output block
+    stays resident in VMEM across the contraction (double-buffered loads of
+    the Cx/T tiles are handled by the Pallas pipeline);
+  * at bm=bn=bk=128 fp32 the working set is 3 x 64KB + epilogue vectors —
+    comfortably inside a TensorCore's ~16MB VMEM, leaving room for the
+    pipeline's second buffer set.
+
+All calls use ``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, preferred: int = 128) -> int:
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """(bm, bk) @ (bk, bn) accumulated over the k grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul(x: jnp.ndarray, y: jnp.ndarray, block: int = 0) -> jnp.ndarray:
+    """Tiled Pallas matmul with fp32 accumulation."""
+    m, kdim = x.shape
+    _, n = y.shape
+    bm, bk, bn = _pick_block(m, block or 128), _pick_block(kdim, block or 128), \
+        _pick_block(n, block or 128)
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def _gw_epilogue_kernel(a_ref, cy_ref, f1_ref, f2_ref, o_ref, *, nk: int):
+    """o = f1[:,None] + f2[None,:] - 2 * (A @ Cy^T), accumulated over k.
+
+    ``A = Cx @ T`` comes from the first matmul; ``f1 = Cx^2 a``,
+    ``f2 = Cy^2 b`` are the rank-one constC factors, fused in on the final
+    contraction step so the cost tensor never exists in un-shifted form.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Cy is symmetric in every qGW use, but keep the transpose-correct form:
+    # (A @ Cy^T)[i,j] = sum_k A[i,k] Cy[j,k]; we stream Cy row-blocks.
+    o_ref[...] += jnp.dot(a_ref[...], cy_ref[...].T,
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = (f1_ref[...][:, None] + f2_ref[...][None, :]
+                      - 2.0 * o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gw_grad(cx: jnp.ndarray, cy: jnp.ndarray, t: jnp.ndarray,
+            a: jnp.ndarray, b: jnp.ndarray, block: int = 0) -> jnp.ndarray:
+    """Fused square-loss GW cost tensor ``constC - 2 Cx T Cy^T``.
+
+    Two tiled passes: ``A = Cx @ T`` (plain matmul kernel), then the fused
+    epilogue kernel producing the gradient tile-by-tile.
+    """
+    m = cx.shape[0]
+    n = cy.shape[0]
+    f1 = matmul(cx * cx, a[:, None], block=block)[:, 0]
+    f2 = matmul(cy * cy, b[:, None], block=block)[:, 0]
+    am = matmul(cx, t, block=block)  # (m, n)
+
+    bm, bn = _pick_block(m, block or 128), _pick_block(n, block or 128)
+    bk = _pick_block(n, block or 128)
+    grid = (m // bm, n // bn, n // bk)
+    return pl.pallas_call(
+        functools.partial(_gw_epilogue_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # A
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),   # Cy rows
+            pl.BlockSpec((bm,), lambda i, j, k: (i,)),        # f1
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),        # f2
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(am, cy.astype(jnp.float32), f1, f2)

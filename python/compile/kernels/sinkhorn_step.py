@@ -1,0 +1,118 @@
+"""Pallas kernels: Sinkhorn scaling steps (plain and log-domain).
+
+Sinkhorn alternates ``u = a / (K v)`` and ``v = b / (K^T u)``. Each half-step
+is a matvec (or a logsumexp reduction in the stabilized form) plus a guarded
+divide — VPU work, bandwidth-bound: the cost/kernel matrix streams through
+VMEM once per half-step. We tile by row blocks; each program reduces its
+block against the full dual vector (m <= 1024 for all padding buckets, so it
+fits in VMEM whole) and writes the guarded quotient.
+
+Two variants:
+
+* ``scale_step`` — multiplicative scaling ``u = a/(Kv)``. Fast, but ``K =
+  exp(-C/eps)`` underflows for small eps; used when eps is large relative to
+  the cost scale.
+* ``lse_step`` — log-domain half-step
+  ``f_i = eps*log(a_i) - eps*logsumexp_j((g_j - C_ij)/eps)``. Never under- or
+  overflows; this is what the AOT-ed entropic-GW executable uses.
+
+Zero-mass guard: padded bucket entries carry ``a_i = 0`` (or ``b_j = 0``);
+0/0 maps to 0 (plain) and the log-domain potential is pinned to ``-BIG`` so
+padded rows/columns of the plan stay exactly zero. This makes static-shape
+padding sound (see rust runtime pad tests and
+test_model.py::test_padding_invariance).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sentinel for "log of zero mass": large enough that exp((x - BIG)/eps)
+# flushes to zero for every representable x, small enough to avoid inf-inf.
+NEG_BIG = -1e30
+
+
+def _pick_block(n: int, preferred: int = 256) -> int:
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _scale_step_kernel(k_ref, v_ref, a_ref, u_ref):
+    kv = jnp.dot(k_ref[...], v_ref[...], preferred_element_type=jnp.float32)
+    a = a_ref[...]
+    u_ref[...] = jnp.where(kv > 0, a / jnp.where(kv > 0, kv, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def scale_step(k: jnp.ndarray, v: jnp.ndarray, a: jnp.ndarray,
+               block: int = 0) -> jnp.ndarray:
+    """``u = a / (K v)`` with 0/0 -> 0. ``k``: [n,m], ``v``: [m], ``a``: [n]."""
+    n, m = k.shape
+    bn = _pick_block(n, block or 256)
+    return pl.pallas_call(
+        _scale_step_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(k.astype(jnp.float32), v.astype(jnp.float32), a.astype(jnp.float32))
+
+
+def _lse_step_kernel(c_ref, g_ref, loga_ref, f_ref, *, eps_is_input):
+    # c_ref: (bn, m) cost rows; g_ref: (m,) column potential;
+    # loga_ref: (bn,) log marginal (NEG_BIG where mass is zero).
+    c = c_ref[...]
+    g = g_ref[...]
+    loga = loga_ref[...]
+    z = (g[None, :] - c)  # divided by eps by the caller (pre-scaled)
+    zmax = jnp.max(z, axis=1)
+    # Guard fully-masked rows: zmax = NEG_BIG-ish -> exp(0)=1 row sum, then
+    # the loga = NEG_BIG pin below dominates anyway.
+    safe = jnp.maximum(zmax, NEG_BIG)
+    lse = safe + jnp.log(jnp.sum(jnp.exp(z - safe[:, None]), axis=1))
+    f = loga - lse
+    f_ref[...] = jnp.where(loga > NEG_BIG / 2, f, NEG_BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def lse_step(c_over_eps: jnp.ndarray, g_over_eps: jnp.ndarray,
+             loga: jnp.ndarray, block: int = 0) -> jnp.ndarray:
+    """Log-domain half-step on pre-scaled inputs.
+
+    Computes ``f/eps`` where
+    ``f_i/eps = log(a_i) - logsumexp_j(g_j/eps - C_ij/eps)``.
+    Working with ``x/eps`` keeps the kernel free of the eps scalar, so a
+    single artifact serves any regularization strength.
+    """
+    n, m = c_over_eps.shape
+    bn = _pick_block(n, block or 256)
+    return pl.pallas_call(
+        functools.partial(_lse_step_kernel, eps_is_input=False),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(c_over_eps.astype(jnp.float32), g_over_eps.astype(jnp.float32),
+      loga.astype(jnp.float32))
+
+
+def sinkhorn_step(k: jnp.ndarray, v: jnp.ndarray, a: jnp.ndarray,
+                  b: jnp.ndarray, block: int = 0):
+    """One full plain-scaling Sinkhorn iteration: returns ``(u', v')``."""
+    u = scale_step(k, v, a, block=block)
+    v2 = scale_step(k.T, u, b, block=block)
+    return u, v2

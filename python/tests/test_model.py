@@ -1,0 +1,242 @@
+"""Layer-2 correctness: the AOT-ed compute graphs behave like the math says.
+
+Covers: kernel-built graphs vs pure-jnp references, Sinkhorn marginal
+feasibility across eps scales, entropic-GW solving an actual isometry
+recovery problem, FGW limiting behaviour (alpha in {0,1}), and the padding
+invariance that makes the Rust runtime's static buckets sound.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _euclidean_mm(pts):
+    pts = np.asarray(pts, np.float64)
+    sq = np.sum(pts**2, 1)
+    c = np.sqrt(np.maximum(sq[:, None] + sq[None, :] - 2 * pts @ pts.T, 0))
+    return c.astype(np.float32)
+
+
+def _uniform(n):
+    return np.full(n, 1.0 / n, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# sinkhorn
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([16, 32, 64]), m=st.sampled_from([16, 32, 64]),
+       eps=st.sampled_from([1e-2, 1e-1]),
+       seed=st.integers(0, 2**31 - 1))
+def test_sinkhorn_marginals(n, m, eps, seed):
+    rng = _rng(seed)
+    cost = rng.random((n, m)).astype(np.float32)
+    wa = rng.random(n) + 0.05
+    wb = rng.random(m) + 0.05
+    a = (wa / wa.sum()).astype(np.float32)
+    b = (wb / wb.sum()).astype(np.float32)
+    t = np.array(model.sinkhorn(jnp.array(cost), jnp.array(a), jnp.array(b),
+                                jnp.float32(eps), n_iters=600))
+    np.testing.assert_allclose(t.sum(1), a, atol=5e-4)
+    np.testing.assert_allclose(t.sum(0), b, atol=5e-4)
+
+
+def test_sinkhorn_tiny_eps_column_marginal_exact():
+    # At eps << cost scale Sinkhorn converges slowly in the row marginal
+    # (geometric rate ~ exp(-osc(C)/eps)), but the final g-update makes the
+    # column marginal exact up to float rounding. Row feasibility only
+    # degrades gracefully.
+    rng = _rng(9)
+    cost = rng.random((24, 24)).astype(np.float32)
+    a = _uniform(24)
+    t = np.array(model.sinkhorn(jnp.array(cost), jnp.array(a), jnp.array(a),
+                                jnp.float32(1e-3), n_iters=200))
+    np.testing.assert_allclose(t.sum(0), a, atol=1e-5)
+    assert np.abs(t.sum(1) - a).max() < 0.5 / 24
+
+
+def test_sinkhorn_matches_ref():
+    rng = _rng(0)
+    cost = rng.random((32, 48)).astype(np.float32)
+    a, b = _uniform(32), _uniform(48)
+    got = np.array(model.sinkhorn(jnp.array(cost), jnp.array(a),
+                                  jnp.array(b), jnp.float32(0.05),
+                                  n_iters=100))
+    want = np.array(ref.sinkhorn_ref(jnp.array(cost), jnp.array(a),
+                                     jnp.array(b), 0.05, 100))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_sinkhorn_small_eps_finds_assignment():
+    # Cost = squared distance between two identical sorted 1-D clouds:
+    # at tiny eps the plan approaches the identity permutation / n.
+    n = 16
+    x = np.sort(_rng(1).random(n)).astype(np.float32)
+    cost = (x[:, None] - x[None, :]) ** 2
+    a = _uniform(n)
+    t = np.array(model.sinkhorn(jnp.array(cost), jnp.array(a), jnp.array(a),
+                                jnp.float32(1e-4), n_iters=300))
+    assert (np.argmax(t, axis=1) == np.arange(n)).all()
+
+
+# ---------------------------------------------------------------------------
+# egw_step / entropic GW
+# ---------------------------------------------------------------------------
+
+def test_egw_step_matches_ref():
+    rng = _rng(2)
+    cx = _euclidean_mm(rng.normal(size=(32, 3)))
+    cy = _euclidean_mm(rng.normal(size=(32, 3)))
+    a = _uniform(32)
+    t0 = np.outer(a, a).astype(np.float32)
+    t1, loss1 = model.egw_step(jnp.array(cx), jnp.array(cy), jnp.array(a),
+                               jnp.array(a), jnp.array(t0),
+                               jnp.float32(0.01), inner_iters=50)
+    t2, loss2 = model.egw_step_ref(cx, cy, a, a, t0, 0.01, inner_iters=50)
+    np.testing.assert_allclose(np.array(t1), np.array(t2), rtol=1e-3,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-3)
+
+
+def test_entropic_gw_recovers_isometry():
+    # Rotate a planar cloud: GW matching must recover the identity. Uses
+    # the eps-annealing schedule the Rust coordinator drives: warm-start
+    # each smaller eps from the previous plan (plain small-eps from the
+    # product coupling stalls in local minima — entirely expected for the
+    # nonconvex GW objective).
+    rng = _rng(3)
+    m = 32
+    pts = rng.normal(size=(m, 2))
+    rot = np.array([[0.0, 1.0], [-1.0, 0.0]])
+    cx = _euclidean_mm(pts)
+    cy = _euclidean_mm(pts @ rot)
+    a = _uniform(m)
+    t = np.outer(a, a).astype(np.float32)
+    loss = None
+    for eps in (5e-2, 1e-2, 1e-3):
+        for _ in range(15):
+            t, loss = model.egw_step(jnp.array(cx), jnp.array(cy),
+                                     jnp.array(a), jnp.array(a),
+                                     jnp.array(t), jnp.float32(eps),
+                                     inner_iters=50)
+            t = np.array(t)
+    assert (np.argmax(t, 1) == np.arange(m)).all()
+    assert float(loss) < 1e-2
+
+
+def test_egw_loss_decreases():
+    rng = _rng(4)
+    cx = _euclidean_mm(rng.normal(size=(48, 3)))
+    cy = _euclidean_mm(rng.normal(size=(48, 3)) * 1.1)
+    a = _uniform(48)
+    t = np.outer(a, a).astype(np.float32)
+    losses = []
+    for _ in range(12):
+        t, loss = model.egw_step(jnp.array(cx), jnp.array(cy), jnp.array(a),
+                                 jnp.array(a), jnp.array(t),
+                                 jnp.float32(0.01), inner_iters=50)
+        t = np.array(t)
+        losses.append(float(loss))
+    assert losses[-1] <= losses[0] + 1e-6
+
+
+def test_gw_loss_graph_matches_ref():
+    rng = _rng(5)
+    cx = _euclidean_mm(rng.normal(size=(32, 3)))
+    cy = _euclidean_mm(rng.normal(size=(32, 3)))
+    a = _uniform(32)
+    t = np.outer(a, a).astype(np.float32)
+    (got,) = model.gw_loss(jnp.array(cx), jnp.array(cy), jnp.array(t),
+                           jnp.array(a), jnp.array(a))
+    want = ref.gw_loss_ref(jnp.array(cx), jnp.array(cy), jnp.array(t),
+                           jnp.array(a), jnp.array(a))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fgw_step limiting behaviour
+# ---------------------------------------------------------------------------
+
+def test_fgw_alpha_zero_is_egw():
+    rng = _rng(6)
+    cx = _euclidean_mm(rng.normal(size=(32, 3)))
+    cy = _euclidean_mm(rng.normal(size=(32, 3)))
+    a = _uniform(32)
+    t0 = np.outer(a, a).astype(np.float32)
+    fc = rng.random((32, 32)).astype(np.float32)
+    t_f, _ = model.fgw_step(jnp.array(cx), jnp.array(cy), jnp.array(a),
+                            jnp.array(a), jnp.array(t0), jnp.array(fc),
+                            jnp.float32(0.0), jnp.float32(0.01))
+    t_g, _ = model.egw_step(jnp.array(cx), jnp.array(cy), jnp.array(a),
+                            jnp.array(a), jnp.array(t0), jnp.float32(0.01))
+    np.testing.assert_allclose(np.array(t_f), np.array(t_g), rtol=1e-4,
+                               atol=1e-7)
+
+
+def test_fgw_alpha_one_is_sinkhorn_on_features():
+    rng = _rng(7)
+    cx = _euclidean_mm(rng.normal(size=(32, 3)))
+    cy = _euclidean_mm(rng.normal(size=(32, 3)))
+    a = _uniform(32)
+    t0 = np.outer(a, a).astype(np.float32)
+    fc = rng.random((32, 32)).astype(np.float32)
+    t_f, _ = model.fgw_step(jnp.array(cx), jnp.array(cy), jnp.array(a),
+                            jnp.array(a), jnp.array(t0), jnp.array(fc),
+                            jnp.float32(1.0), jnp.float32(0.01))
+    t_s = model.sinkhorn(jnp.array(fc), jnp.array(a), jnp.array(a),
+                         jnp.float32(0.01))
+    np.testing.assert_allclose(np.array(t_f), np.array(t_s), rtol=1e-4,
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# padding invariance — the property the Rust runtime's buckets rely on
+# ---------------------------------------------------------------------------
+
+def _pad_mat(c, m):
+    out = np.zeros((m, m), np.float32)
+    out[: c.shape[0], : c.shape[1]] = c
+    return out
+
+
+def _pad_vec(v, m):
+    out = np.zeros(m, np.float32)
+    out[: v.shape[0]] = v
+    return out
+
+
+@pytest.mark.parametrize("n,bucket", [(20, 32), (48, 64), (100, 128)])
+def test_padding_invariance(n, bucket):
+    rng = _rng(8)
+    cx = _euclidean_mm(rng.normal(size=(n, 3)))
+    cy = _euclidean_mm(rng.normal(size=(n, 3)))
+    a = _uniform(n)
+    t0 = np.outer(a, a).astype(np.float32)
+
+    t_small, loss_small = model.egw_step(
+        jnp.array(cx), jnp.array(cy), jnp.array(a), jnp.array(a),
+        jnp.array(t0), jnp.float32(0.05), inner_iters=50)
+
+    t_pad, loss_pad = model.egw_step(
+        jnp.array(_pad_mat(cx, bucket)), jnp.array(_pad_mat(cy, bucket)),
+        jnp.array(_pad_vec(a, bucket)), jnp.array(_pad_vec(a, bucket)),
+        jnp.array(_pad_mat(t0, bucket)), jnp.float32(0.05), inner_iters=50)
+
+    t_pad = np.array(t_pad)
+    np.testing.assert_allclose(t_pad[:n, :n], np.array(t_small), rtol=1e-3,
+                               atol=1e-7)
+    # Padded region carries exactly zero mass.
+    assert np.abs(t_pad[n:, :]).max() == 0.0
+    assert np.abs(t_pad[:, n:]).max() == 0.0
+    np.testing.assert_allclose(float(loss_pad), float(loss_small),
+                               rtol=1e-3, atol=1e-7)

@@ -1,0 +1,89 @@
+//! Ablation bench: the design choices DESIGN.md calls out.
+//!
+//! 1. **Local matcher** — linear (paper) vs product (no local structure)
+//!    vs full local entropic GW (sGW/MREC style): distortion + time.
+//! 2. **Partitioner** — random Voronoi vs k-means++: quantized
+//!    eccentricity (the Theorem-5/6 error-bound driver) + distortion.
+//! 3. **eps annealing** — annealed schedule vs single small eps on the
+//!    global alignment: rep-space GW loss.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench_scale, time_once};
+use qgw::data::shapes::{sample_shape, ShapeClass};
+use qgw::eval::distortion_score;
+use qgw::gw::GwOptions;
+use qgw::partition::{kmeans_partition, voronoi_partition};
+use qgw::prng::Pcg32;
+use qgw::qgw::{
+    qgw_match, qgw_match_with_matcher, LocalMatcher, QgwConfig,
+};
+
+fn main() {
+    let scale = bench_scale(0.2);
+    let n = ((2000.0 * scale) as usize).max(200);
+    let mut rng = Pcg32::seed_from(7);
+    let shape = sample_shape(ShapeClass::Dog, n, &mut rng);
+    let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
+
+    println!("=== Ablation 1: local matcher (n={n}, p=0.15) ===");
+    println!("{:<10} {:>12} {:>10}", "matcher", "distortion", "time");
+    let matchers = vec![
+        LocalMatcher::Linear,
+        LocalMatcher::Product,
+        LocalMatcher::EntropicGw {
+            opts: GwOptions { outer_iters: 10, inner_iters: 50, ..GwOptions::single_eps(1e-2) },
+        },
+    ];
+    for matcher in &matchers {
+        let mut rng = Pcg32::seed_from(11);
+        let cfg = QgwConfig::with_fraction(0.15);
+        let (res, secs) = time_once(|| {
+            qgw_match_with_matcher(&shape.cloud, &copy.cloud, &cfg, matcher, &mut rng)
+        });
+        let d = distortion_score(&res.coupling.to_sparse(), &copy.cloud, &copy.ground_truth);
+        println!("{:<10} {:>12.4} {:>9.2}s", matcher.name(), d, secs);
+    }
+
+    println!("\n=== Ablation 2: partitioner (n={n}, m={}) ===", n / 10);
+    println!("{:<10} {:>14} {:>12} {:>10}", "partition", "q(P_X) ecc.", "distortion", "time");
+    for kmeans in [false, true] {
+        let mut rng = Pcg32::seed_from(13);
+        let m = n / 10;
+        let q = if kmeans {
+            kmeans_partition(&shape.cloud, m, 8, &mut rng)
+        } else {
+            voronoi_partition(&shape.cloud, m, &mut rng)
+        };
+        let ecc = q.quantized_eccentricity();
+        let mut rng = Pcg32::seed_from(13);
+        let cfg = QgwConfig { kmeans, ..QgwConfig::with_fraction(0.1) };
+        let (res, secs) = time_once(|| qgw_match(&shape.cloud, &copy.cloud, &cfg, &mut rng));
+        let d = distortion_score(&res.coupling.to_sparse(), &copy.cloud, &copy.ground_truth);
+        println!(
+            "{:<10} {:>14.4} {:>12.4} {:>9.2}s",
+            if kmeans { "kmeans++" } else { "voronoi" },
+            ecc,
+            d,
+            secs
+        );
+    }
+
+    println!("\n=== Ablation 3: global eps annealing (n={n}, p=0.1) ===");
+    println!("{:<22} {:>14} {:>10}", "schedule", "rep GW loss", "time");
+    let schedules: Vec<(&str, Vec<f64>)> = vec![
+        ("annealed 5e-2..1e-3", vec![5e-2, 1e-2, 1e-3]),
+        ("single 1e-3", vec![1e-3]),
+        ("single 5e-2", vec![5e-2]),
+    ];
+    for (name, eps_schedule) in schedules {
+        let mut rng = Pcg32::seed_from(17);
+        let cfg = QgwConfig {
+            gw: GwOptions { eps_schedule, ..GwOptions::default() },
+            ..QgwConfig::with_fraction(0.1)
+        };
+        let (res, secs) = time_once(|| qgw_match(&shape.cloud, &copy.cloud, &cfg, &mut rng));
+        println!("{:<22} {:>14.5} {:>9.2}s", name, res.gw_loss, secs);
+    }
+}

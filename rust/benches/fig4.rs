@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Figure 4 (appendix) — relative GW-loss error
+//! of qGW vs standard GW on make_blobs clouds, plus time curves.
+
+#[path = "harness.rs"]
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    let scale = harness::bench_scale(0.15);
+    qgw::experiments::fig4::run(scale, 7, &mut std::io::stdout())
+}

@@ -1,0 +1,64 @@
+//! Shared bench harness (criterion is unavailable offline): warmup +
+//! timed iterations with median/mean/p95 reporting, and a tiny table
+//! printer. Each bench binary is `harness = false` and drives this.
+
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} iters={:<3} min={:>10.3?} median={:>10.3?} mean={:>10.3?} p95={:>10.3?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.p95
+        );
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        times.push(start.elapsed());
+    }
+    times.sort_unstable();
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        mean,
+        median: times[times.len() / 2],
+        p95: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        min: times[0],
+    };
+    stats.report();
+    stats
+}
+
+/// One-shot timing (for long experiment rows where iterating is pointless).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// Scale factor for the experiment benches, from `QGW_BENCH_SCALE`
+/// (default keeps `cargo bench` under a few minutes; set 1.0 for the
+/// paper-scale run).
+pub fn bench_scale(default: f64) -> f64 {
+    std::env::var("QGW_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Figure 3 (large-scale segment transfer on
+//! ~1M-point rooms; random vs qFGW m=1000 vs m=5000, with memory
+//! accounting for the sparse quantized storage).
+//!
+//! `QGW_BENCH_SCALE=1.0 cargo bench --bench large_scale` reproduces the
+//! full 1,155,072 / 909,312-point experiment.
+
+#[path = "harness.rs"]
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    let scale = harness::bench_scale(0.03);
+    qgw::experiments::fig3::run(scale, 7, &mut std::io::stdout())
+}

@@ -1,0 +1,88 @@
+//! Micro benches over the hot-path primitives: 1-D OT, Sinkhorn, the GW
+//! cost tensor, network-simplex EMD, partitioning, and the qGW stage
+//! breakdown (partition / global / local) — the profile that drives the
+//! §Perf optimization loop in EXPERIMENTS.md.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use qgw::core::{uniform_measure, DenseMatrix, MmSpace};
+use qgw::data::blobs::make_blobs;
+use qgw::gw::{entropic_gw, gw_cost_tensor, product_coupling, GwOptions};
+use qgw::ot::{emd, emd1d, emd1d_presorted, sinkhorn_log, SinkhornOptions};
+use qgw::partition::voronoi_partition;
+use qgw::prng::{Pcg32, Rng};
+use qgw::qgw::{local_linear_matching, qgw_match, QgwConfig};
+
+fn main() {
+    let mut rng = Pcg32::seed_from(7);
+
+    println!("--- 1-D OT (Proposition 3 kernel) ---");
+    for k in [100usize, 1000, 10_000] {
+        let xs: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
+        let w = vec![1.0 / k as f64; k];
+        let mut xs_sorted = xs.clone();
+        xs_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bench(&format!("emd1d k={k}"), 2, 20, || emd1d(&xs, &w, &xs, &w));
+        bench(&format!("emd1d_presorted k={k}"), 2, 20, || {
+            emd1d_presorted(&xs_sorted, &w, &xs_sorted, &w)
+        });
+    }
+
+    println!("--- Sinkhorn (log-domain) ---");
+    for m in [64usize, 256] {
+        let cost = DenseMatrix::from_fn(m, m, |i, j| ((i * 31 + j * 17) % 97) as f64 / 97.0);
+        let a = uniform_measure(m);
+        let opts = SinkhornOptions { eps: 0.05, max_iters: 100, tol: 1e-9 };
+        bench(&format!("sinkhorn_log m={m} iters<=100"), 1, 10, || {
+            sinkhorn_log(&cost, &a, &a, &opts)
+        });
+    }
+
+    println!("--- GW cost tensor (L3 mirror of the L1 kernel) ---");
+    for m in [64usize, 256, 512] {
+        let x = make_blobs(m, 3, 1.0, 10.0, &mut rng);
+        let c = x.distance_matrix();
+        let a = uniform_measure(m);
+        let t = product_coupling(&a, &a);
+        bench(&format!("gw_cost_tensor m={m}"), 1, 10, || {
+            gw_cost_tensor(&c, &c, &t, &a, &a)
+        });
+    }
+
+    println!("--- entropic GW global alignment ---");
+    for m in [64usize, 128] {
+        let x = make_blobs(m, 3, 1.0, 10.0, &mut rng);
+        let y = make_blobs(m, 3, 1.0, 10.0, &mut rng);
+        let (cx, cy) = (x.distance_matrix(), y.distance_matrix());
+        let a = uniform_measure(m);
+        let opts = GwOptions::default();
+        bench(&format!("entropic_gw m={m}"), 0, 3, || entropic_gw(&cx, &cy, &a, &a, &opts));
+    }
+
+    println!("--- network simplex EMD ---");
+    for m in [32usize, 64, 128] {
+        let cost = DenseMatrix::from_fn(m, m, |i, j| ((i * 13 + j * 7) % 101) as f64);
+        let a = uniform_measure(m);
+        bench(&format!("emd m={m}"), 1, 5, || emd(&cost, &a, &a));
+    }
+
+    println!("--- qGW stage breakdown (N=20000, 10% partition) ---");
+    let n = 20_000;
+    let x = make_blobs(n, 4, 1.0, 10.0, &mut rng);
+    bench("voronoi_partition N=20000 m=2000", 0, 3, || {
+        let mut r = Pcg32::seed_from(1);
+        voronoi_partition(&x, 2000, &mut r)
+    });
+    let mut r = Pcg32::seed_from(1);
+    let qx = voronoi_partition(&x, 2000, &mut r);
+    let qy = voronoi_partition(&x, 2000, &mut r);
+    bench("local_linear_matching (single pair)", 10, 100, || {
+        local_linear_matching(&qx, &qy, 0, 0)
+    });
+    bench("qgw_match end-to-end N=20000 p=0.02", 0, 3, || {
+        let mut r = Pcg32::seed_from(2);
+        qgw_match(&x, &x, &QgwConfig::with_fraction(0.02), &mut r)
+    });
+}

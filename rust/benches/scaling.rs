@@ -1,0 +1,10 @@
+//! Bench: Proposition-3 scaling sweep — qGW wall time vs N with
+//! m ~ N^(1/3), log-log slope fit, and the GW contrast series.
+
+#[path = "harness.rs"]
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    let scale = harness::bench_scale(0.12);
+    qgw::experiments::scaling::run(scale, 7, &mut std::io::stdout())
+}

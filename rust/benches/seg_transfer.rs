@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Figure 2 (segmentation transfer accuracy per
+//! shape category, qFGW over the alpha/beta grid + random baseline).
+
+#[path = "harness.rs"]
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    let scale = harness::bench_scale(0.1);
+    qgw::experiments::fig2::run(scale, 7, &mut std::io::stdout())
+}

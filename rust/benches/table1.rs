@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Table 1 (point-cloud matching distortion +
+//! runtime across GW / erGW / MREC / mbGW / qGW).
+//!
+//! `QGW_BENCH_SCALE=1.0 cargo bench --bench table1` runs paper-scale
+//! sizes (slow baselines skip the sizes the paper also left blank).
+
+#[path = "harness.rs"]
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    let scale = harness::bench_scale(0.06);
+    qgw::experiments::table1::run(scale, 7, &mut std::io::stdout())
+}

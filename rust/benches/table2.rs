@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Table 2 (graph matching distortion % +
+//! runtime; erGW / mbGW / MREC / qFGW on TOSCA-style mesh graphs).
+
+#[path = "harness.rs"]
+mod harness;
+
+fn main() -> anyhow::Result<()> {
+    let scale = harness::bench_scale(0.03);
+    qgw::experiments::table2::run(scale, 7, &mut std::io::stdout())
+}

@@ -1,0 +1,281 @@
+//! Command-line interface (hand-rolled arg parsing — no clap offline).
+//!
+//! ```text
+//! qgw match      --class dog --n 2000 --fraction 0.1 [--fused A,B] [--seed S]
+//! qgw experiment table1|table2|fig1|fig2|fig3|fig4|scaling [--scale F] [--full]
+//! qgw serve      --class dog --n 5000 --fraction 0.1 --addr 127.0.0.1:7979
+//! qgw artifacts  [--dir artifacts]     # report loaded AOT artifacts
+//! qgw info
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::{MatchPipeline, MatchService, Metrics, PipelineInput};
+use crate::data::shapes::{sample_shape, ShapeClass};
+use crate::eval::distortion_score;
+use crate::prng::Pcg32;
+use crate::qgw::QgwConfig;
+
+/// Parsed `--key value` flags plus positional arguments.
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // `--flag` followed by a value, or bare boolean flag.
+                let is_bool = it.peek().map_or(true, |n| n.starts_with("--"));
+                if is_bool {
+                    flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    flags.insert(name.to_string(), it.next().unwrap().clone());
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
+        }
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+pub fn shape_class_by_name(name: &str) -> Result<ShapeClass> {
+    ShapeClass::ALL
+        .into_iter()
+        .find(|c| c.name().eq_ignore_ascii_case(name) || c.name().to_lowercase().trim_end_matches('s') == name.to_lowercase())
+        .ok_or_else(|| anyhow::anyhow!("unknown shape class {name:?} (try: humans, planes, spiders, cars, dogs, trees, vases)"))
+}
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "match" => cmd_match(&args),
+        "experiment" => crate::experiments::run_experiment(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "info" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try: match, experiment, serve, artifacts, info)"),
+    }
+}
+
+fn build_config(args: &Args) -> Result<QgwConfig> {
+    // Optional config file, overridden by flags.
+    let mut cfg = match args.flag("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.qgw_config(),
+        None => QgwConfig::default(),
+    };
+    if let Some(m) = args.flag("m") {
+        cfg.size = crate::qgw::PartitionSize::Count(m.parse().context("--m")?);
+    } else if args.flag("fraction").is_some() {
+        cfg.size = crate::qgw::PartitionSize::Fraction(args.f64_or("fraction", 0.1)?);
+    }
+    if args.bool_flag("kmeans") {
+        cfg.kmeans = true;
+    }
+    cfg.num_threads = args.usize_or("threads", cfg.num_threads)?;
+    Ok(cfg)
+}
+
+fn cmd_match(args: &Args) -> Result<()> {
+    let class = shape_class_by_name(args.flag("class").unwrap_or("dogs"))?;
+    let n = args.usize_or("n", 2000)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let cfg = build_config(args)?;
+
+    let mut rng = Pcg32::seed_from(seed);
+    let shape = sample_shape(class, n, &mut rng);
+    let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
+
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg, &metrics);
+    pipe.seed = seed;
+    if let Some(fused) = args.flag("fused") {
+        let parts: Vec<f64> = fused
+            .split(',')
+            .map(|p| p.parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .context("--fused A,B")?;
+        if parts.len() != 2 {
+            bail!("--fused expects alpha,beta");
+        }
+        pipe.fused = Some((parts[0], parts[1]));
+    }
+    let report = if pipe.fused.is_some() {
+        pipe.run(PipelineInput::CloudsWithFeatures {
+            x: &shape.cloud,
+            y: &copy.cloud,
+            fx: &shape.normals,
+            fy: &copy.normals,
+        })
+    } else {
+        pipe.run(PipelineInput::Clouds { x: &shape.cloud, y: &copy.cloud })
+    };
+
+    let sparse = report.result.coupling.to_sparse();
+    let distortion = distortion_score(&sparse, &copy.cloud, &copy.ground_truth);
+    println!("class={} n={n} m={}x{}", class.name(), report.m_x, report.m_y);
+    println!(
+        "distortion={distortion:.4} rep_gw_loss={:.6} local_matchings={}",
+        report.result.gw_loss, report.result.num_local_matchings
+    );
+    println!(
+        "q_x={:.4} q_y={:.4} thm6_bound={:.4}",
+        report.result.q_x, report.result.q_y, report.result.error_bound
+    );
+    println!(
+        "partition={:.3}s align+assemble={:.3}s total={:.3}s",
+        report.partition_secs, report.global_secs, report.total_secs
+    );
+    println!("metrics: {}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let class = shape_class_by_name(args.flag("class").unwrap_or("dogs"))?;
+    let n = args.usize_or("n", 5000)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7979").to_string();
+    let cfg = build_config(args)?;
+
+    let mut rng = Pcg32::seed_from(seed);
+    let shape = sample_shape(class, n, &mut rng);
+    let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
+    let metrics = Metrics::new();
+    let pipe = MatchPipeline::new(cfg, &metrics);
+    let report = pipe.run(PipelineInput::Clouds { x: &shape.cloud, y: &copy.cloud });
+
+    let svc = std::sync::Arc::new(MatchService::new(report.result.coupling));
+    let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let bound = svc.serve(&addr, std::sync::Arc::clone(&shutdown))?;
+    println!("serving match queries on {bound} ({})", svc.stats());
+    println!("protocol: QUERY <i> | MAP <i> | STATS | QUIT");
+    // Block forever (ctrl-c to exit).
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Client for the `serve` protocol: `qgw query --addr HOST:PORT <i> [i..]`
+/// prints the coupling row (or `--map` the argmax) for each point id.
+fn cmd_query(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write as IoWrite};
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7979");
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr} (is `qgw serve` running?)"))?;
+    let verb = if args.bool_flag("map") { "MAP" } else { "QUERY" };
+    let mut reader = BufReader::new(stream.try_clone()?);
+    if args.positional.is_empty() {
+        writeln!(stream, "STATS")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        print!("{line}");
+        return Ok(());
+    }
+    for id in &args.positional {
+        let _: usize = id.parse().with_context(|| format!("point id {id:?}"))?;
+        writeln!(stream, "{verb} {id}")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        println!("{id} -> {}", line.trim_end());
+    }
+    writeln!(stream, "QUIT")?;
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.flag("dir").unwrap_or("artifacts"));
+    match crate::runtime::XlaEngine::load(&dir)? {
+        None => println!("no artifacts at {dir:?} — run `make artifacts`"),
+        Some(engine) => {
+            println!("loaded {} artifacts from {dir:?}:", engine.manifest().len());
+            for a in engine.manifest().iter() {
+                println!("  {} kind={:?} m={} inner_iters={}", a.name, a.kind, a.m, a.inner_iters);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "qgw — Quantized Gromov-Wasserstein (three-layer Rust+JAX+Pallas)\n\
+         \n\
+         commands:\n\
+           match       match a shape against its perturbed copy\n\
+           experiment  regenerate a paper table/figure (table1 table2 fig1 fig2 fig3 fig4 scaling)\n\
+           serve       compute a matching and serve row queries over TCP\n\
+           query       client for serve (QUERY/MAP rows by point id)\n\
+           artifacts   report AOT artifacts available to the runtime\n\
+           info        this message"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_positional() {
+        let argv: Vec<String> =
+            ["table1", "--scale", "0.5", "--full", "--n", "100"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv).unwrap();
+        assert_eq!(args.positional, vec!["table1"]);
+        assert_eq!(args.f64_or("scale", 1.0).unwrap(), 0.5);
+        assert!(args.bool_flag("full"));
+        assert_eq!(args.usize_or("n", 0).unwrap(), 100);
+        assert_eq!(args.usize_or("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn shape_class_lookup() {
+        assert_eq!(shape_class_by_name("dogs").unwrap(), ShapeClass::Dog);
+        assert_eq!(shape_class_by_name("Dog").unwrap(), ShapeClass::Dog);
+        assert!(shape_class_by_name("dragon").is_err());
+    }
+
+    #[test]
+    fn bad_flag_value_errors() {
+        let argv: Vec<String> = ["--n", "abc"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv).unwrap();
+        assert!(args.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,257 @@
+//! Configuration system: a TOML-subset parser (sections, strings, numbers,
+//! booleans, flat arrays) plus the typed experiment configuration the CLI
+//! consumes. Hand-rolled because no serde/toml crates exist in the offline
+//! environment.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gw::GwOptions;
+use crate::qgw::{PartitionSize, QgwConfig};
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Array(vs) => vs.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map (keys in the root section have no prefix).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            values.insert(
+                full_key,
+                parse_value(val.trim())
+                    .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?,
+            );
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    /// Build a [`QgwConfig`] from the `[qgw]` section.
+    pub fn qgw_config(&self) -> QgwConfig {
+        let size = if let Some(m) = self.get("qgw.m").and_then(|v| v.as_usize()) {
+            PartitionSize::Count(m)
+        } else {
+            PartitionSize::Fraction(self.f64_or("qgw.fraction", 0.1))
+        };
+        let eps_schedule = self
+            .get("qgw.eps_schedule")
+            .and_then(|v| v.as_f64_array())
+            .unwrap_or_else(|| GwOptions::default().eps_schedule);
+        QgwConfig {
+            size,
+            kmeans: self.bool_or("qgw.kmeans", false),
+            gw: GwOptions {
+                eps_schedule,
+                outer_iters: self.usize_or("qgw.outer_iters", 30),
+                inner_iters: self.usize_or("qgw.inner_iters", 100),
+                tol: self.f64_or("qgw.tol", 1e-9),
+            },
+            mass_threshold: self.f64_or("qgw.mass_threshold", 1e-9),
+            num_threads: self.usize_or("qgw.threads", 0),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>> = inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value: {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "table1"
+seed = 42
+
+[qgw]
+fraction = 0.2
+eps_schedule = [0.05, 0.01, 0.001]
+kmeans = true
+outer_iters = 25
+
+[bench]
+scale = 0.5
+full = false
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "table1");
+        assert_eq!(c.usize_or("seed", 0), 42);
+        assert_eq!(c.f64_or("qgw.fraction", 0.0), 0.2);
+        assert!(c.bool_or("qgw.kmeans", false));
+        assert_eq!(
+            c.get("qgw.eps_schedule").unwrap().as_f64_array().unwrap(),
+            vec![0.05, 0.01, 0.001]
+        );
+        assert!(!c.bool_or("bench.full", true));
+    }
+
+    #[test]
+    fn builds_qgw_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let q = c.qgw_config();
+        assert!(matches!(q.size, PartitionSize::Fraction(f) if (f - 0.2).abs() < 1e-12));
+        assert!(q.kmeans);
+        assert_eq!(q.gw.outer_iters, 25);
+        assert_eq!(q.gw.eps_schedule, vec![0.05, 0.01, 0.001]);
+    }
+
+    #[test]
+    fn explicit_m_wins() {
+        let c = Config::parse("[qgw]\nm = 500\n").unwrap();
+        assert!(matches!(c.qgw_config().size, PartitionSize::Count(500)));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let c = Config::parse("key = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(c.str_or("key", ""), "a#b");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        let q = c.qgw_config();
+        assert!(matches!(q.size, PartitionSize::Fraction(f) if (f - 0.1).abs() < 1e-12));
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        assert!(Config::parse("this is not a kv pair").is_err());
+        assert!(Config::parse("x = @nope").is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Stage timing and counters for the pipeline and benches.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Thread-safe metrics registry: named durations and counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    durations: BTreeMap<String, Duration>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add_duration(stage, start.elapsed());
+        out
+    }
+
+    pub fn add_duration(&self, stage: &str, d: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.durations.entry(stage.to_string()).or_default() += d;
+    }
+
+    pub fn incr(&self, counter: &str, by: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.counters.entry(counter.to_string()).or_default() += by;
+    }
+
+    pub fn duration(&self, stage: &str) -> Duration {
+        self.inner.lock().unwrap().durations.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// `stage=1.234s ...` one-liner for logs and bench output.
+    pub fn summary(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut parts: Vec<String> = inner
+            .durations
+            .iter()
+            .map(|(k, v)| format!("{k}={:.3}s", v.as_secs_f64()))
+            .collect();
+        parts.extend(inner.counters.iter().map(|(k, v)| format!("{k}={v}")));
+        parts.join(" ")
+    }
+}
+
+/// RAII stage timer: records on drop.
+pub struct StageTimer<'a> {
+    metrics: &'a Metrics,
+    stage: &'a str,
+    start: Instant,
+}
+
+impl<'a> StageTimer<'a> {
+    pub fn new(metrics: &'a Metrics, stage: &'a str) -> Self {
+        Self { metrics, stage, start: Instant::now() }
+    }
+}
+
+impl Drop for StageTimer<'_> {
+    fn drop(&mut self) {
+        self.metrics.add_duration(self.stage, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_records() {
+        let m = Metrics::new();
+        let out = m.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(out, 42);
+        assert!(m.duration("work") >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("matchings", 3);
+        m.incr("matchings", 4);
+        assert_eq!(m.counter("matchings"), 7);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn stage_timer_raii() {
+        let m = Metrics::new();
+        {
+            let _t = StageTimer::new(&m, "scoped");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        assert!(m.duration("scoped") >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn summary_contains_stages() {
+        let m = Metrics::new();
+        m.incr("n", 1);
+        m.add_duration("s", Duration::from_secs(1));
+        let s = m.summary();
+        assert!(s.contains("s=1.000s"));
+        assert!(s.contains("n=1"));
+    }
+}

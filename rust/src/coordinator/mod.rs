@@ -1,0 +1,16 @@
+//! Layer-3 coordination: thread pool, stage metrics, the end-to-end match
+//! pipeline, and the row-query match service.
+//!
+//! No tokio/rayon in the offline environment — the pool is built on
+//! `std::thread::scope` (fan-out) and a channel-fed persistent pool
+//! (service mode).
+
+mod metrics;
+mod pipeline;
+mod pool;
+mod service;
+
+pub use metrics::{Metrics, StageTimer};
+pub use pipeline::{MatchPipeline, PipelineInput, PipelineReport};
+pub use pool::{parallel_map, ThreadPool};
+pub use service::MatchService;

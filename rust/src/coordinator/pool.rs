@@ -1,0 +1,176 @@
+//! Minimal threading substrate.
+//!
+//! * [`parallel_map`] — scoped fork-join over a slice: deterministic
+//!   chunking, no allocation beyond the output vector, results in input
+//!   order. This is what the qGW local-matching fan-out uses.
+//! * [`ThreadPool`] — persistent workers fed by a channel, for the match
+//!   service's request loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use when `requested == 0`.
+pub fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+}
+
+/// Apply `f` to every item in parallel, preserving order. Work is pulled
+/// from an atomic cursor in small batches so uneven item costs (big vs
+/// small partition blocks) balance out.
+pub fn parallel_map<T, U, F>(items: &[T], f: F, num_threads: usize) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = effective_threads(num_threads).min(n.max(1));
+    if threads <= 1 || n < 2 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let cursor = AtomicUsize::new(0);
+    let batch = (n / (threads * 8)).max(1);
+    // SAFETY-free approach: split the output into disjoint cells via raw
+    // pointers is unnecessary — use a Mutex-free trick: each worker writes
+    // to indices it claimed exclusively through the atomic cursor. We wrap
+    // cells in UnsafeCell-free form by collecting (idx, value) pairs and
+    // scattering afterwards.
+    let results: Mutex<Vec<(usize, U)>> = Mutex::new(Vec::with_capacity(n));
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut local: Vec<(usize, U)> = Vec::new();
+                loop {
+                    let start = cursor.fetch_add(batch, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + batch).min(n);
+                    for i in start..end {
+                        local.push((i, f(&items[i])));
+                    }
+                }
+                results.lock().unwrap().extend(local);
+            });
+        }
+    });
+    for (i, v) in results.into_inner().unwrap() {
+        out[i] = Some(v);
+    }
+    out.into_iter().map(|v| v.expect("worker missed an index")).collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent worker pool for the service path.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(num_threads: usize) -> Self {
+        let threads = effective_threads(num_threads);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&receiver);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { sender: Some(sender), workers }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("all workers dead");
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, |&x| x * 2, 4);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, |&x| x + 1, 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, |&x| x, 4).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_uses_multiple_threads() {
+        // Items sleep long enough that a single worker cannot drain the
+        // queue before others start.
+        use std::collections::HashSet;
+        let items: Vec<usize> = (0..64).collect();
+        let out = parallel_map(
+            &items,
+            |_| {
+                thread::sleep(std::time::Duration::from_millis(2));
+                format!("{:?}", thread::current().id())
+            },
+            4,
+        );
+        let distinct: HashSet<_> = out.into_iter().collect();
+        assert!(distinct.len() >= 2, "only {} threads used", distinct.len());
+    }
+
+    #[test]
+    fn thread_pool_runs_jobs() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+}

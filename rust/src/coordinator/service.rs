@@ -1,0 +1,170 @@
+//! Match service: hold a computed quantization coupling and serve
+//! point-to-point queries — the "fast computation of individual queries"
+//! capability of §2.2. Exposes an in-process API plus a line-oriented TCP
+//! protocol (`QUERY <i>` → `j:mass j:mass ...`, `MAP <i>` → `j`,
+//! `STATS` → summary) used by `qgw serve`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::qgw::QuantizationCoupling;
+
+pub struct MatchService {
+    coupling: Arc<QuantizationCoupling>,
+    queries: AtomicU64,
+}
+
+impl MatchService {
+    pub fn new(coupling: QuantizationCoupling) -> Self {
+        Self { coupling: Arc::new(coupling), queries: AtomicU64::new(0) }
+    }
+
+    /// `mu(x_i, .)` — sparse row of the coupling.
+    pub fn query(&self, i: usize) -> Vec<(usize, f64)> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        if i >= self.coupling.num_source_points() {
+            return Vec::new();
+        }
+        self.coupling.row_query(i)
+    }
+
+    /// Hard assignment of point `i`.
+    pub fn map_point(&self, i: usize) -> Option<usize> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        if i >= self.coupling.num_source_points() {
+            return None;
+        }
+        self.coupling.map_point(i)
+    }
+
+    pub fn num_queries(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> String {
+        format!(
+            "points={}x{} local_plans={} memory_bytes={} queries={}",
+            self.coupling.num_source_points(),
+            self.coupling.num_target_points(),
+            self.coupling.num_local_plans(),
+            self.coupling.memory_bytes(),
+            self.num_queries(),
+        )
+    }
+
+    /// Serve the TCP protocol until `shutdown` is set. Binds to `addr`
+    /// (e.g. `127.0.0.1:7979`); returns the bound address.
+    pub fn serve(
+        self: &Arc<Self>,
+        addr: &str,
+        shutdown: Arc<AtomicBool>,
+    ) -> std::io::Result<std::net::SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let svc = Arc::clone(self);
+        std::thread::spawn(move || {
+            while !shutdown.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let svc = Arc::clone(&svc);
+                        std::thread::spawn(move || {
+                            let _ = svc.handle_conn(stream);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(local)
+    }
+
+    fn handle_conn(&self, stream: TcpStream) -> std::io::Result<()> {
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            let mut parts = line.split_whitespace();
+            let response = match (parts.next(), parts.next()) {
+                (Some("QUERY"), Some(i)) => match i.parse::<usize>() {
+                    Ok(i) => {
+                        let row = self.query(i);
+                        row.iter()
+                            .map(|(j, w)| format!("{j}:{w:.9}"))
+                            .collect::<Vec<_>>()
+                            .join(" ")
+                    }
+                    Err(_) => "ERR bad index".to_string(),
+                },
+                (Some("MAP"), Some(i)) => match i.parse::<usize>() {
+                    Ok(i) => self
+                        .map_point(i)
+                        .map(|j| j.to_string())
+                        .unwrap_or_else(|| "NONE".to_string()),
+                    Err(_) => "ERR bad index".to_string(),
+                },
+                (Some("STATS"), _) => self.stats(),
+                (Some("QUIT"), _) => break,
+                _ => "ERR unknown command".to_string(),
+            };
+            writeln!(writer, "{response}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{MmSpace, PointCloud};
+    use crate::prng::{Gaussian, Pcg32};
+    use crate::qgw::{qgw_match, QgwConfig};
+
+    fn service() -> (PointCloud, Arc<MatchService>) {
+        let mut rng = Pcg32::seed_from(1);
+        let mut g = Gaussian::new();
+        let x = PointCloud::new((0..100 * 2).map(|_| g.sample(&mut rng)).collect(), 2);
+        let res = qgw_match(&x, &x, &QgwConfig::with_fraction(0.2), &mut rng);
+        (x, Arc::new(MatchService::new(res.coupling)))
+    }
+
+    #[test]
+    fn query_and_map() {
+        let (x, svc) = service();
+        let row = svc.query(0);
+        assert!(!row.is_empty());
+        let total: f64 = row.iter().map(|e| e.1).sum();
+        assert!((total - x.measure()[0]).abs() < 1e-9);
+        assert!(svc.map_point(0).is_some());
+        assert_eq!(svc.num_queries(), 2);
+    }
+
+    #[test]
+    fn out_of_range_is_graceful() {
+        let (_, svc) = service();
+        assert!(svc.query(10_000).is_empty());
+        assert_eq!(svc.map_point(10_000), None);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        use std::io::{BufRead, BufReader, Write};
+        let (_, svc) = service();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = svc.serve("127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(stream, "MAP 3").unwrap();
+        writeln!(stream, "STATS").unwrap();
+        writeln!(stream, "QUIT").unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(2).map(|l| l.unwrap()).collect();
+        assert!(lines[0].parse::<usize>().is_ok(), "MAP reply: {}", lines[0]);
+        assert!(lines[1].contains("points=100x100"), "STATS reply: {}", lines[1]);
+        shutdown.store(true, Ordering::Relaxed);
+    }
+}

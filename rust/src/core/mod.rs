@@ -1,0 +1,15 @@
+//! Core data structures: dense matrices, sparse couplings, and
+//! metric-measure spaces — including the paper's sparse *quantized storage*
+//! (dense `m x m` representative distances + per-point anchor distances),
+//! which is what lets qGW run on ~1M-point spaces in bounded memory (§2.2,
+//! "Computational Complexity").
+
+mod matrix;
+mod space;
+mod sparse;
+
+pub use matrix::DenseMatrix;
+pub use space::{
+    uniform_measure, DenseSpace, MmSpace, PointCloud, QuantizedSpace,
+};
+pub use sparse::SparseCoupling;

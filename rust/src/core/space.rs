@@ -1,0 +1,480 @@
+//! Metric measure spaces.
+//!
+//! Three concrete representations:
+//!
+//! * [`PointCloud`] — points in R^d with a probability measure; distances
+//!   computed on demand (never materializes O(N^2)).
+//! * [`DenseSpace`] — explicit distance matrix; used for the small spaces
+//!   (partition-block representatives, baseline solvers).
+//! * [`QuantizedSpace`] — the paper's sparse storage (§2.2 "Computational
+//!   Complexity"): a dense `m x m` matrix of representative distances plus
+//!   one anchor distance per point. This is the only structure the qGW hot
+//!   path touches, which is what bounds memory at O(m^2 + N) and enables
+//!   the ~1M-point experiments.
+
+use crate::core::DenseMatrix;
+
+/// A finite metric measure space: a metric on `{0, .., len-1}` plus a
+/// probability measure.
+pub trait MmSpace {
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Distance between points `i` and `j`.
+    fn dist(&self, i: usize, j: usize) -> f64;
+
+    /// Probability measure (sums to 1 over all points).
+    fn measure(&self) -> &[f64];
+
+    /// Eccentricity `s_X(i) = (sum_j d(i,j)^2 mu_j)^(1/2)` — Memoli [17],
+    /// used by the quantized-eccentricity bounds (paper §3).
+    fn eccentricity(&self, i: usize) -> f64 {
+        let mu = self.measure();
+        (0..self.len())
+            .map(|j| self.dist(i, j).powi(2) * mu[j])
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Materialize the full distance matrix. Only valid for small spaces;
+    /// baseline solvers (GW, erGW) call this, qGW never does on the full
+    /// space.
+    fn distance_matrix(&self) -> DenseMatrix {
+        DenseMatrix::from_fn(self.len(), self.len(), |i, j| self.dist(i, j))
+    }
+}
+
+/// Uniform probability measure on `n` points.
+pub fn uniform_measure(n: usize) -> Vec<f64> {
+    vec![1.0 / n as f64; n]
+}
+
+// ---------------------------------------------------------------------------
+// PointCloud
+// ---------------------------------------------------------------------------
+
+/// Euclidean point cloud with measure; the workhorse input type.
+#[derive(Clone, Debug)]
+pub struct PointCloud {
+    /// Row-major `n x dim` coordinates.
+    coords: Vec<f64>,
+    dim: usize,
+    measure: Vec<f64>,
+}
+
+impl PointCloud {
+    pub fn new(coords: Vec<f64>, dim: usize) -> Self {
+        assert!(dim > 0 && coords.len() % dim == 0);
+        let n = coords.len() / dim;
+        Self { coords, dim, measure: uniform_measure(n) }
+    }
+
+    pub fn with_measure(coords: Vec<f64>, dim: usize, measure: Vec<f64>) -> Self {
+        assert!(dim > 0 && coords.len() % dim == 0);
+        assert_eq!(coords.len() / dim, measure.len());
+        Self { coords, dim, measure }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of points (also available through [`MmSpace::len`]; the
+    /// inherent method avoids needing the trait in scope).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.measure.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.measure.is_empty()
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.coords[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn coords(&self) -> &[f64] {
+        &self.coords
+    }
+
+    #[inline]
+    pub fn sqdist(&self, i: usize, j: usize) -> f64 {
+        let (p, q) = (self.point(i), self.point(j));
+        let mut s = 0.0;
+        for k in 0..self.dim {
+            let d = p[k] - q[k];
+            s += d * d;
+        }
+        s
+    }
+
+    /// Exact diameter is O(N^2); sample-based estimate (max over `k`
+    /// random pairs plus a two-pass sweep) is what the perturbation
+    /// protocol and diagnostics use.
+    pub fn diameter_estimate(&self) -> f64 {
+        let n = self.coords.len() / self.dim;
+        if n < 2 {
+            return 0.0;
+        }
+        // Two sweeps of "farthest from current" — exact on most convex-ish
+        // clouds, a (1/2)-approximation in general.
+        let mut cur = 0usize;
+        let mut best = 0.0f64;
+        for _ in 0..3 {
+            let mut far = cur;
+            let mut fd = 0.0;
+            for j in 0..n {
+                let d = self.sqdist(cur, j);
+                if d > fd {
+                    fd = d;
+                    far = j;
+                }
+            }
+            best = best.max(fd);
+            cur = far;
+        }
+        best.sqrt()
+    }
+
+    /// Bounding-box extents (used by the room generator and PLY export).
+    pub fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.len();
+        let mut lo = vec![f64::INFINITY; self.dim];
+        let mut hi = vec![f64::NEG_INFINITY; self.dim];
+        for i in 0..n {
+            for (k, &c) in self.point(i).iter().enumerate() {
+                lo[k] = lo[k].min(c);
+                hi[k] = hi[k].max(c);
+            }
+        }
+        (lo, hi)
+    }
+}
+
+impl MmSpace for PointCloud {
+    fn len(&self) -> usize {
+        self.measure.len()
+    }
+
+    #[inline]
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.sqdist(i, j).sqrt()
+    }
+
+    fn measure(&self) -> &[f64] {
+        &self.measure
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DenseSpace
+// ---------------------------------------------------------------------------
+
+/// Explicit distance matrix + measure. Small spaces only.
+#[derive(Clone, Debug)]
+pub struct DenseSpace {
+    dists: DenseMatrix,
+    measure: Vec<f64>,
+}
+
+impl DenseSpace {
+    pub fn new(dists: DenseMatrix, measure: Vec<f64>) -> Self {
+        assert_eq!(dists.rows(), dists.cols());
+        assert_eq!(dists.rows(), measure.len());
+        Self { dists, measure }
+    }
+
+    pub fn from_space(space: &dyn MmSpace) -> Self {
+        Self { dists: space.distance_matrix(), measure: space.measure().to_vec() }
+    }
+
+    pub fn dists(&self) -> &DenseMatrix {
+        &self.dists
+    }
+}
+
+impl MmSpace for DenseSpace {
+    fn len(&self) -> usize {
+        self.measure.len()
+    }
+
+    #[inline]
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.dists.get(i, j)
+    }
+
+    fn measure(&self) -> &[f64] {
+        &self.measure
+    }
+
+    fn distance_matrix(&self) -> DenseMatrix {
+        self.dists.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QuantizedSpace — the paper's sparse storage
+// ---------------------------------------------------------------------------
+
+/// An m-pointed mm-space in the paper's sparse form.
+///
+/// Stores, for an m-pointed partition `P_X = {(x^1,U^1),..,(x^m,U^m)}` of an
+/// underlying N-point space:
+///
+/// * `rep_dists` — dense `m x m` distances between representatives
+///   (`X^m` with the restricted metric);
+/// * `rep_measure` — the pushforward measure `mu_P(x^p) = mu(U^p)`;
+/// * `block_of[i]` — which block each point belongs to;
+/// * `anchor_dist[i]` — `d(x_i, x^p)` to the point's own representative
+///   (the "radial slice" the local linear matching consumes);
+/// * `blocks[p]` — point ids per block, **sorted by anchor distance**
+///   (Proposition 3's O(k log k) sort happens once, here);
+/// * `point_measure[i]` — the underlying measure (for block-conditional
+///   measures `mu_{U^p} = mu|_{U^p} / mu(U^p)`).
+///
+/// Total memory O(m^2 + N), never O(N^2).
+#[derive(Clone, Debug)]
+pub struct QuantizedSpace {
+    rep_ids: Vec<usize>,
+    rep_dists: DenseMatrix,
+    rep_measure: Vec<f64>,
+    block_of: Vec<u32>,
+    anchor_dist: Vec<f64>,
+    blocks: Vec<Vec<u32>>,
+    point_measure: Vec<f64>,
+}
+
+impl QuantizedSpace {
+    /// Assemble from raw parts; validates partition invariants.
+    pub fn new(
+        rep_ids: Vec<usize>,
+        rep_dists: DenseMatrix,
+        block_of: Vec<u32>,
+        anchor_dist: Vec<f64>,
+        point_measure: Vec<f64>,
+    ) -> Self {
+        let m = rep_ids.len();
+        let n = block_of.len();
+        assert_eq!(rep_dists.rows(), m);
+        assert_eq!(anchor_dist.len(), n);
+        assert_eq!(point_measure.len(), n);
+
+        let mut blocks: Vec<Vec<u32>> = vec![Vec::new(); m];
+        for (i, &b) in block_of.iter().enumerate() {
+            assert!((b as usize) < m, "block id out of range");
+            blocks[b as usize].push(i as u32);
+        }
+        for (p, &r) in rep_ids.iter().enumerate() {
+            assert_eq!(block_of[r] as usize, p, "representative {r} not in its own block");
+        }
+        // Sort each block by anchor distance once (Proposition 3).
+        for block in &mut blocks {
+            block.sort_by(|&i, &j| {
+                anchor_dist[i as usize]
+                    .partial_cmp(&anchor_dist[j as usize])
+                    .unwrap()
+            });
+            assert!(!block.is_empty(), "empty partition block");
+        }
+        let mut rep_measure = vec![0.0; m];
+        for (i, &b) in block_of.iter().enumerate() {
+            rep_measure[b as usize] += point_measure[i];
+        }
+        Self { rep_ids, rep_dists, rep_measure, block_of, anchor_dist, blocks, point_measure }
+    }
+
+    /// Number of partition blocks `m`.
+    pub fn num_blocks(&self) -> usize {
+        self.rep_ids.len()
+    }
+
+    /// Number of underlying points `N`.
+    pub fn num_points(&self) -> usize {
+        self.block_of.len()
+    }
+
+    /// Underlying point ids of the representatives.
+    pub fn rep_ids(&self) -> &[usize] {
+        &self.rep_ids
+    }
+
+    /// The quantized representation `X^m` as a dense mm-space with the
+    /// pushforward measure.
+    pub fn rep_space(&self) -> DenseSpace {
+        DenseSpace::new(self.rep_dists.clone(), self.rep_measure.clone())
+    }
+
+    pub fn rep_dists(&self) -> &DenseMatrix {
+        &self.rep_dists
+    }
+
+    pub fn rep_measure(&self) -> &[f64] {
+        &self.rep_measure
+    }
+
+    /// Block membership of point `i`.
+    pub fn block_of(&self, i: usize) -> usize {
+        self.block_of[i] as usize
+    }
+
+    /// Point ids in block `p`, sorted by anchor distance.
+    pub fn block(&self, p: usize) -> &[u32] {
+        &self.blocks[p]
+    }
+
+    /// `d(x_i, x^{block_of(i)})`.
+    pub fn anchor_dist(&self, i: usize) -> f64 {
+        self.anchor_dist[i]
+    }
+
+    pub fn point_measure(&self) -> &[f64] {
+        &self.point_measure
+    }
+
+    /// Block-conditional measure of point `i`:
+    /// `mu_{U^p}(x_i) = mu(x_i) / mu(U^p)`.
+    pub fn conditional_measure(&self, i: usize) -> f64 {
+        self.point_measure[i] / self.rep_measure[self.block_of(i)]
+    }
+
+    /// Quantized eccentricity `q(P_X)` of the stored partition, computed in
+    /// the *sliced* form the sparse storage supports:
+    /// `q(P)^2 = sum_p mu(U^p) * s_{U^p}(x^p)^2`, with
+    /// `s_{U^p}(x^p)^2 = sum_{x in U^p} d(x, x^p)^2 mu_{U^p}(x)`.
+    pub fn quantized_eccentricity(&self) -> f64 {
+        let mut total = 0.0;
+        for (p, block) in self.blocks.iter().enumerate() {
+            let mut s2 = 0.0;
+            for &i in block {
+                let i = i as usize;
+                s2 += self.anchor_dist[i].powi(2) * self.conditional_measure(i);
+            }
+            total += self.rep_measure[p] * s2;
+        }
+        total.sqrt()
+    }
+
+    /// Maximum block diameter upper bound `2 * max anchor distance` (the
+    /// `eps` in Theorem 6; triangle inequality through the anchor).
+    pub fn block_diameter_bound(&self) -> f64 {
+        2.0 * self
+            .anchor_dist
+            .iter()
+            .fold(0.0f64, |m, &d| m.max(d))
+    }
+
+    /// Memory footprint in bytes (the paper's O(m^2 + N) claim is asserted
+    /// against this in the large-scale bench).
+    pub fn memory_bytes(&self) -> usize {
+        let m = self.num_blocks();
+        let n = self.num_points();
+        m * m * 8 + m * 8 + n * 4 + n * 8 + n * 8 + n * 4 + m * std::mem::size_of::<Vec<u32>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_cloud(n: usize) -> PointCloud {
+        PointCloud::new((0..n).map(|i| i as f64).collect(), 1)
+    }
+
+    #[test]
+    fn pointcloud_distances() {
+        let pc = line_cloud(5);
+        assert_eq!(pc.dist(0, 4), 4.0);
+        assert_eq!(pc.dist(2, 2), 0.0);
+        assert!((pc.measure().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diameter_estimate_on_line() {
+        let pc = line_cloud(10);
+        assert!((pc.diameter_estimate() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eccentricity_matches_bruteforce() {
+        let pc = line_cloud(4);
+        // s(0)^2 = (0 + 1 + 4 + 9)/4
+        assert!((pc.eccentricity(0) - (14.0f64 / 4.0).sqrt()).abs() < 1e-12);
+    }
+
+    fn quantize_line() -> QuantizedSpace {
+        // Points 0..6 on a line, blocks {0,1,2} rep 1 and {3,4,5} rep 4.
+        let pc = line_cloud(6);
+        let rep_ids = vec![1, 4];
+        let block_of = vec![0, 0, 0, 1, 1, 1];
+        let anchor: Vec<f64> = (0..6)
+            .map(|i| pc.dist(i, rep_ids[block_of[i] as usize]))
+            .collect();
+        let rep_d = DenseMatrix::from_fn(2, 2, |p, q| pc.dist(rep_ids[p], rep_ids[q]));
+        QuantizedSpace::new(rep_ids, rep_d, block_of, anchor, pc.measure().to_vec())
+    }
+
+    #[test]
+    fn quantized_space_structure() {
+        let q = quantize_line();
+        assert_eq!(q.num_blocks(), 2);
+        assert_eq!(q.num_points(), 6);
+        assert_eq!(q.rep_dists().get(0, 1), 3.0);
+        assert!((q.rep_measure()[0] - 0.5).abs() < 1e-12);
+        // Blocks sorted by anchor distance: rep first.
+        assert_eq!(q.block(0)[0], 1);
+        assert_eq!(q.block(1)[0], 4);
+    }
+
+    #[test]
+    fn conditional_measures_sum_to_one_per_block() {
+        let q = quantize_line();
+        for p in 0..q.num_blocks() {
+            let s: f64 = q.block(p).iter().map(|&i| q.conditional_measure(i as usize)).sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn quantized_eccentricity_line() {
+        let q = quantize_line();
+        // Each block: anchor dists {1,0,1}, conditional measure 1/3 each,
+        // s^2 = 2/3; q^2 = 0.5*2/3 + 0.5*2/3 = 2/3.
+        assert!((q.quantized_eccentricity() - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rep_space_is_valid_mm_space() {
+        let q = quantize_line();
+        let rs = q.rep_space();
+        assert_eq!(rs.len(), 2);
+        assert!((rs.measure().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(rs.dist(0, 1), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in its own block")]
+    fn rep_not_in_own_block_panics() {
+        let rep_d = DenseMatrix::zeros(2, 2);
+        // Representative 0 of block 0 is assigned to block 1 -> invalid.
+        QuantizedSpace::new(
+            vec![0, 1],
+            rep_d,
+            vec![1, 0],
+            vec![0.0, 0.0],
+            vec![0.5, 0.5],
+        );
+    }
+
+    #[test]
+    fn block_diameter_bound() {
+        let q = quantize_line();
+        assert!((q.block_diameter_bound() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,64 @@
+//! `make_blobs`-style planar Gaussian mixtures (scikit-learn [24]) — the
+//! workload of the paper's appendix "Simple Comparison Against GW"
+//! (Figure 4).
+
+use crate::core::PointCloud;
+use crate::prng::{Gaussian, Pcg32, Rng};
+
+/// `n` points from `k` isotropic Gaussian blobs with centers uniform in
+/// `[-center_box, center_box]^2` and the given standard deviation —
+/// mirrors `sklearn.datasets.make_blobs` defaults (k=3, std=1, box=10).
+pub fn make_blobs(n: usize, k: usize, std: f64, center_box: f64, rng: &mut Pcg32) -> PointCloud {
+    let mut g = Gaussian::new();
+    let centers: Vec<[f64; 2]> = (0..k)
+        .map(|_| {
+            [
+                rng.range_f64(-center_box, center_box),
+                rng.range_f64(-center_box, center_box),
+            ]
+        })
+        .collect();
+    let mut coords = Vec::with_capacity(n * 2);
+    for i in 0..n {
+        let c = centers[i % k];
+        coords.push(c[0] + std * g.sample(rng));
+        coords.push(c[1] + std * g.sample(rng));
+    }
+    PointCloud::new(coords, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MmSpace;
+
+    #[test]
+    fn correct_size_and_dim() {
+        let mut rng = Pcg32::seed_from(1);
+        let pc = make_blobs(500, 3, 1.0, 10.0, &mut rng);
+        assert_eq!(pc.len(), 500);
+        assert_eq!(pc.dim(), 2);
+    }
+
+    #[test]
+    fn blobs_are_clustered() {
+        // With tiny std, within-blob distances are far below the typical
+        // between-blob distance.
+        let mut rng = Pcg32::seed_from(2);
+        let pc = make_blobs(300, 3, 0.01, 10.0, &mut rng);
+        // Points i and i+3 share a blob.
+        let within = pc.dist(0, 3);
+        let diam = pc.diameter_estimate();
+        assert!(within < diam / 10.0, "within={within} diam={diam}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut r1 = Pcg32::seed_from(3);
+        let mut r2 = Pcg32::seed_from(3);
+        assert_eq!(
+            make_blobs(100, 3, 1.0, 10.0, &mut r1).coords(),
+            make_blobs(100, 3, 1.0, 10.0, &mut r2).coords()
+        );
+    }
+}

@@ -1,0 +1,127 @@
+//! Export helpers: CSV and PLY point clouds with colors — the Figure 1
+//! color-transfer visualization output.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::core::PointCloud;
+
+/// Write `x y z r g b` CSV rows.
+pub fn write_csv(path: &Path, cloud: &PointCloud, colors: &[[f64; 3]]) -> Result<()> {
+    assert_eq!(crate::core::MmSpace::len(cloud), colors.len());
+    let mut f =
+        std::io::BufWriter::new(std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
+    writeln!(f, "x,y,z,r,g,b")?;
+    for i in 0..colors.len() {
+        let p = cloud.point(i);
+        let c = colors[i];
+        writeln!(
+            f,
+            "{:.6},{:.6},{:.6},{:.4},{:.4},{:.4}",
+            p[0],
+            p.get(1).copied().unwrap_or(0.0),
+            p.get(2).copied().unwrap_or(0.0),
+            c[0],
+            c[1],
+            c[2]
+        )?;
+    }
+    Ok(())
+}
+
+/// Minimal binary-free PLY (ascii) with vertex colors.
+pub fn write_ply(path: &Path, cloud: &PointCloud, colors: &[[f64; 3]]) -> Result<()> {
+    assert_eq!(crate::core::MmSpace::len(cloud), colors.len());
+    let mut f =
+        std::io::BufWriter::new(std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
+    writeln!(f, "ply\nformat ascii 1.0\nelement vertex {}", colors.len())?;
+    writeln!(f, "property float x\nproperty float y\nproperty float z")?;
+    writeln!(f, "property uchar red\nproperty uchar green\nproperty uchar blue")?;
+    writeln!(f, "end_header")?;
+    for i in 0..colors.len() {
+        let p = cloud.point(i);
+        let c = colors[i];
+        writeln!(
+            f,
+            "{:.6} {:.6} {:.6} {} {} {}",
+            p[0],
+            p.get(1).copied().unwrap_or(0.0),
+            p.get(2).copied().unwrap_or(0.0),
+            (c[0] * 255.0).clamp(0.0, 255.0) as u8,
+            (c[1] * 255.0).clamp(0.0, 255.0) as u8,
+            (c[2] * 255.0).clamp(0.0, 255.0) as u8,
+        )?;
+    }
+    Ok(())
+}
+
+/// Rainbow coloring along the first principal axis — how Figure 1 colors
+/// the source shape before transferring through the matching.
+pub fn rainbow_colors(cloud: &PointCloud) -> Vec<[f64; 3]> {
+    let n = crate::core::MmSpace::len(cloud);
+    let (lo, hi) = cloud.bounds();
+    // Use the widest axis.
+    let axis = (0..cloud.dim())
+        .max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap())
+        .unwrap_or(0);
+    let span = (hi[axis] - lo[axis]).max(1e-12);
+    (0..n)
+        .map(|i| {
+            let t = (cloud.point(i)[axis] - lo[axis]) / span;
+            hsv_to_rgb(t * 300.0, 0.85, 0.95)
+        })
+        .collect()
+}
+
+fn hsv_to_rgb(h: f64, s: f64, v: f64) -> [f64; 3] {
+    let c = v * s;
+    let hp = h / 60.0;
+    let x = c * (1.0 - (hp % 2.0 - 1.0).abs());
+    let (r, g, b) = match hp as u32 {
+        0 => (c, x, 0.0),
+        1 => (x, c, 0.0),
+        2 => (0.0, c, x),
+        3 => (0.0, x, c),
+        4 => (x, 0.0, c),
+        _ => (c, 0.0, x),
+    };
+    let m = v - c;
+    [r + m, g + m, b + m]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_ply_roundtrip() {
+        let cloud = PointCloud::new(vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0], 3);
+        let colors = vec![[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]];
+        let dir = std::env::temp_dir();
+        let csv = dir.join("qgw_io_test.csv");
+        let ply = dir.join("qgw_io_test.ply");
+        write_csv(&csv, &cloud, &colors).unwrap();
+        write_ply(&ply, &cloud, &colors).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.lines().count() == 3);
+        let ply_text = std::fs::read_to_string(&ply).unwrap();
+        assert!(ply_text.contains("element vertex 2"));
+        assert!(ply_text.contains("255 0 0"));
+    }
+
+    #[test]
+    fn rainbow_spans_hues() {
+        let cloud = PointCloud::new((0..30).map(|i| i as f64).collect(), 1);
+        let colors = rainbow_colors(&cloud);
+        assert_eq!(colors.len(), 30);
+        assert_ne!(colors[0], colors[29]);
+    }
+
+    #[test]
+    fn hsv_sane() {
+        let red = hsv_to_rgb(0.0, 1.0, 1.0);
+        assert!((red[0] - 1.0).abs() < 1e-9 && red[1].abs() < 1e-9);
+    }
+}

@@ -1,0 +1,24 @@
+//! Synthetic dataset suite — stand-ins for the paper's external datasets
+//! (none are downloadable in this environment; DESIGN.md §5 documents each
+//! substitution):
+//!
+//! * [`shapes`] — parametric 3-D shape families with part labels and
+//!   analytic normals (CAPOD / ShapeNet substitute; Table 1, Figures 1-2);
+//! * [`blobs`] — `make_blobs`-style planar Gaussian mixtures (Figure 4);
+//! * [`meshgraph`] — surface-mesh graphs in multiple deformed poses with
+//!   compatible vertex numbering (TOSCA substitute; Table 2);
+//! * [`rooms`] — ~1M-point labeled indoor scenes with RGB features (S3DIS
+//!   substitute; Figure 3);
+//! * [`perturb`] — the Table-1 evaluation protocol: permuted copies with
+//!   noise bounded by 1% of the diameter;
+//! * [`io`] — CSV / PLY export for the Figure-1 color-transfer visuals.
+
+pub mod blobs;
+pub mod io;
+pub mod meshgraph;
+pub mod perturb;
+pub mod rooms;
+pub mod shapes;
+
+pub use perturb::PerturbedCopy;
+pub use shapes::{sample_shape, LabeledCloud, ShapeClass};

@@ -1,0 +1,113 @@
+//! The Table-1 evaluation protocol: create a copy of a shape whose points
+//! are permuted and perturbed within `noise_frac` (1% in the paper) of the
+//! shape's diameter; the ground-truth correspondence is the permutation.
+
+use crate::core::PointCloud;
+use crate::data::shapes::LabeledCloud;
+use crate::prng::{shuffle, Gaussian, Rng};
+use crate::qgw::FeatureSet;
+
+/// A perturbed permuted copy with its ground truth.
+#[derive(Clone, Debug)]
+pub struct PerturbedCopy {
+    pub cloud: PointCloud,
+    pub labels: Vec<u32>,
+    pub normals: FeatureSet,
+    /// `ground_truth[i]` = index in the copy of original point `i`.
+    pub ground_truth: Vec<usize>,
+}
+
+pub fn perturbed_permuted_copy<R: Rng>(
+    shape: &LabeledCloud,
+    noise_frac: f64,
+    rng: &mut R,
+) -> PerturbedCopy {
+    let n = shape.cloud.len();
+    let diameter = shape.cloud.diameter_estimate();
+    let sigma = noise_frac * diameter;
+    let mut g = Gaussian::new();
+
+    let mut perm: Vec<usize> = (0..n).collect();
+    shuffle(&mut perm, rng);
+    // perm[j] = original index placed at position j; invert for gt.
+    let mut ground_truth = vec![0usize; n];
+    for (j, &orig) in perm.iter().enumerate() {
+        ground_truth[orig] = j;
+    }
+
+    let dim = shape.cloud.dim();
+    let mut coords = vec![0.0; n * dim];
+    let mut labels = vec![0u32; n];
+    let fdim = shape.normals.dim();
+    let mut normals = vec![0.0; n * fdim];
+    for (j, &orig) in perm.iter().enumerate() {
+        let p = shape.cloud.point(orig);
+        for k in 0..dim {
+            // Perturbation bounded (~3 sigma clamp) so the "within 1% of
+            // diameter" protocol stays honest.
+            let noise = (g.sample(rng) * sigma / 3.0).clamp(-sigma, sigma);
+            coords[j * dim + k] = p[k] + noise;
+        }
+        labels[j] = shape.labels[orig];
+        normals[j * fdim..(j + 1) * fdim].copy_from_slice(shape.normals.feature(orig));
+    }
+    PerturbedCopy {
+        cloud: PointCloud::new(coords, dim),
+        labels,
+        normals: FeatureSet::new(normals, fdim),
+        ground_truth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MmSpace;
+    use crate::data::shapes::{sample_shape, ShapeClass};
+    use crate::prng::Pcg32;
+
+    #[test]
+    fn ground_truth_is_permutation() {
+        let mut rng = Pcg32::seed_from(1);
+        let shape = sample_shape(ShapeClass::Human, 300, &mut rng);
+        let copy = perturbed_permuted_copy(&shape, 0.01, &mut rng);
+        let mut sorted = copy.ground_truth.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..300).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn points_move_less_than_bound() {
+        let mut rng = Pcg32::seed_from(2);
+        let shape = sample_shape(ShapeClass::Car, 300, &mut rng);
+        let diam = shape.cloud.diameter_estimate();
+        let copy = perturbed_permuted_copy(&shape, 0.01, &mut rng);
+        for i in 0..300 {
+            let j = copy.ground_truth[i];
+            let p = shape.cloud.point(i);
+            let q = copy.cloud.point(j);
+            let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            // Per-coordinate clamp at 1% diam -> Euclidean bound sqrt(3)%.
+            assert!(d <= 0.01 * diam * 3f64.sqrt() + 1e-12, "point {i} moved {d}");
+        }
+    }
+
+    #[test]
+    fn labels_follow_points() {
+        let mut rng = Pcg32::seed_from(3);
+        let shape = sample_shape(ShapeClass::Plane, 200, &mut rng);
+        let copy = perturbed_permuted_copy(&shape, 0.01, &mut rng);
+        for i in 0..200 {
+            assert_eq!(shape.labels[i], copy.labels[copy.ground_truth[i]]);
+        }
+    }
+
+    #[test]
+    fn copy_is_actually_permuted() {
+        let mut rng = Pcg32::seed_from(4);
+        let shape = sample_shape(ShapeClass::Tree, 200, &mut rng);
+        let copy = perturbed_permuted_copy(&shape, 0.01, &mut rng);
+        let fixed = copy.ground_truth.iter().enumerate().filter(|&(i, &j)| i == j).count();
+        assert!(fixed < 20, "{fixed}/200 fixed points — not a real shuffle");
+    }
+}

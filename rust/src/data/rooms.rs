@@ -1,0 +1,260 @@
+//! Procedural indoor scenes — the S3DIS substitute (Figure 3).
+//!
+//! S3DIS Lobby rooms: ~1M labeled points with RGB colors and 13 semantic
+//! categories; the two rooms in the paper's experiment contain *different*
+//! furniture. We generate rooms of matching scale: floor/ceiling/walls
+//! plus randomly placed furniture (chairs, desks/tables, sofas, boards,
+//! bookcases), each point carrying a semantic label and an RGB-like color
+//! feature keyed to its category (with per-room hue jitter so colors are
+//! informative but not trivially identical across rooms).
+
+use crate::core::PointCloud;
+use crate::prng::{Pcg32, Rng};
+use crate::qgw::FeatureSet;
+
+/// Semantic categories (subset of S3DIS's 13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    Floor = 0,
+    Ceiling = 1,
+    Wall = 2,
+    Chair = 3,
+    Table = 4,
+    Sofa = 5,
+    Board = 6,
+    Bookcase = 7,
+}
+
+pub const NUM_CATEGORIES: usize = 8;
+
+#[derive(Clone, Debug)]
+pub struct Room {
+    pub cloud: PointCloud,
+    pub labels: Vec<u32>,
+    pub colors: FeatureSet,
+}
+
+/// Base color per category (RGB in [0,1]).
+fn base_color(cat: Category) -> [f64; 3] {
+    match cat {
+        Category::Floor => [0.45, 0.35, 0.25],
+        Category::Ceiling => [0.9, 0.9, 0.85],
+        Category::Wall => [0.8, 0.78, 0.7],
+        Category::Chair => [0.2, 0.3, 0.7],
+        Category::Table => [0.55, 0.35, 0.15],
+        Category::Sofa => [0.6, 0.15, 0.2],
+        Category::Board => [0.95, 0.95, 0.95],
+        Category::Bookcase => [0.35, 0.2, 0.1],
+    }
+}
+
+struct Box3 {
+    min: [f64; 3],
+    max: [f64; 3],
+    cat: Category,
+}
+
+fn sample_box_surface(b: &Box3, rng: &mut Pcg32) -> [f64; 3] {
+    // Pick a face weighted by area, sample uniformly on it.
+    let d = [b.max[0] - b.min[0], b.max[1] - b.min[1], b.max[2] - b.min[2]];
+    let areas = [d[1] * d[2], d[0] * d[2], d[0] * d[1]];
+    let total = 2.0 * (areas[0] + areas[1] + areas[2]);
+    let mut pick = rng.next_f64() * total;
+    for axis in 0..3 {
+        for side in 0..2 {
+            if pick < areas[axis] {
+                let mut p = [
+                    b.min[0] + rng.next_f64() * d[0],
+                    b.min[1] + rng.next_f64() * d[1],
+                    b.min[2] + rng.next_f64() * d[2],
+                ];
+                p[axis] = if side == 0 { b.min[axis] } else { b.max[axis] };
+                return p;
+            }
+            pick -= areas[axis];
+        }
+    }
+    [b.min[0], b.min[1], b.min[2]]
+}
+
+/// Furniture inventory; `variant` perturbs which pieces appear (the
+/// paper's caption: "the target room has furniture of different types").
+fn furniture(rng: &mut Pcg32, w: f64, l: f64, variant: u64) -> Vec<Box3> {
+    let mut boxes = Vec::new();
+    let n_chairs = 6 + (variant % 5) as usize;
+    for _ in 0..n_chairs {
+        let x = rng.range_f64(0.5, w - 1.0);
+        let y = rng.range_f64(0.5, l - 1.0);
+        boxes.push(Box3 { min: [x, y, 0.0], max: [x + 0.5, y + 0.5, 0.9], cat: Category::Chair });
+    }
+    let n_tables = 2 + (variant % 3) as usize;
+    for _ in 0..n_tables {
+        let x = rng.range_f64(1.0, w - 2.5);
+        let y = rng.range_f64(1.0, l - 2.0);
+        boxes.push(Box3 { min: [x, y, 0.0], max: [x + 1.8, y + 0.9, 0.75], cat: Category::Table });
+    }
+    if variant % 2 == 0 {
+        let x = rng.range_f64(0.5, w - 3.0);
+        boxes.push(Box3 { min: [x, 0.1, 0.0], max: [x + 2.2, 1.0, 0.8], cat: Category::Sofa });
+    } else {
+        let y = rng.range_f64(0.5, l - 2.0);
+        boxes.push(Box3 {
+            min: [0.05, y, 0.0],
+            max: [0.4, y + 1.5, 2.0],
+            cat: Category::Bookcase,
+        });
+    }
+    boxes.push(Box3 {
+        min: [w / 2.0 - 1.5, l - 0.1, 1.0],
+        max: [w / 2.0 + 1.5, l, 2.2],
+        cat: Category::Board,
+    });
+    boxes
+}
+
+/// Generate a lobby-scale room with `n` labeled, colored points.
+pub fn generate_room(n: usize, seed: u64, variant: u64) -> Room {
+    let mut rng = Pcg32::seed_from(seed);
+    let (w, l, h) = (12.0 + rng.next_f64() * 4.0, 18.0 + rng.next_f64() * 6.0, 3.5);
+    let boxes = furniture(&mut rng, w, l, variant);
+
+    // Point budget: 55% structure (floor/ceiling/walls by area), 45%
+    // furniture (S3DIS-like density on objects).
+    let n_struct = n * 55 / 100;
+    let n_furn = n - n_struct;
+
+    let mut coords = Vec::with_capacity(n * 3);
+    let mut labels = Vec::with_capacity(n);
+    let mut colors = Vec::with_capacity(n * 3);
+    // Per-room hue jitter.
+    let jitter: [f64; 3] = [
+        rng.range_f64(-0.05, 0.05),
+        rng.range_f64(-0.05, 0.05),
+        rng.range_f64(-0.05, 0.05),
+    ];
+    let mut push = |p: [f64; 3], cat: Category, rng: &mut Pcg32| {
+        coords.extend_from_slice(&p);
+        labels.push(cat as u32);
+        let base = base_color(cat);
+        for k in 0..3 {
+            colors.push((base[k] + jitter[k] + rng.range_f64(-0.03, 0.03)).clamp(0.0, 1.0));
+        }
+    };
+
+    // Structure sampling by area weights.
+    let floor_area = w * l;
+    let wall_area = 2.0 * (w + l) * h;
+    let total_area = 2.0 * floor_area + wall_area;
+    for _ in 0..n_struct {
+        let pick = rng.next_f64() * total_area;
+        if pick < floor_area {
+            push([rng.next_f64() * w, rng.next_f64() * l, 0.0], Category::Floor, &mut rng);
+        } else if pick < 2.0 * floor_area {
+            push([rng.next_f64() * w, rng.next_f64() * l, h], Category::Ceiling, &mut rng);
+        } else {
+            let t = rng.next_f64() * 2.0 * (w + l);
+            let z = rng.next_f64() * h;
+            let p = if t < w {
+                [t, 0.0, z]
+            } else if t < w + l {
+                [w, t - w, z]
+            } else if t < 2.0 * w + l {
+                [t - w - l, l, z]
+            } else {
+                [0.0, t - 2.0 * w - l, z]
+            };
+            push(p, Category::Wall, &mut rng);
+        }
+    }
+    // Furniture sampling, proportional to box surface area.
+    let areas: Vec<f64> = boxes
+        .iter()
+        .map(|b| {
+            let d = [b.max[0] - b.min[0], b.max[1] - b.min[1], b.max[2] - b.min[2]];
+            2.0 * (d[0] * d[1] + d[1] * d[2] + d[0] * d[2])
+        })
+        .collect();
+    let furn_total: f64 = areas.iter().sum();
+    for _ in 0..n_furn {
+        let mut pick = rng.next_f64() * furn_total;
+        let mut chosen = 0;
+        for (i, &a) in areas.iter().enumerate() {
+            if pick < a {
+                chosen = i;
+                break;
+            }
+            pick -= a;
+        }
+        let p = sample_box_surface(&boxes[chosen], &mut rng);
+        push(p, boxes[chosen].cat, &mut rng);
+    }
+
+    Room {
+        cloud: PointCloud::new(coords, 3),
+        labels,
+        colors: FeatureSet::new(colors, 3),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MmSpace;
+
+    #[test]
+    fn room_has_requested_size() {
+        let room = generate_room(10_000, 1, 0);
+        assert_eq!(room.cloud.len(), 10_000);
+        assert_eq!(room.labels.len(), 10_000);
+        assert_eq!(room.colors.len(), 10_000);
+    }
+
+    #[test]
+    fn multiple_categories_present() {
+        let room = generate_room(20_000, 2, 0);
+        let mut seen = [false; NUM_CATEGORIES];
+        for &l in &room.labels {
+            seen[l as usize] = true;
+        }
+        let count = seen.iter().filter(|&&s| s).count();
+        assert!(count >= 6, "only {count} categories present");
+    }
+
+    #[test]
+    fn variants_differ_in_furniture() {
+        let a = generate_room(20_000, 3, 0);
+        let b = generate_room(20_000, 3, 1);
+        let has = |room: &Room, cat: Category| room.labels.iter().any(|&l| l == cat as u32);
+        // Variant 0 has a sofa, variant 1 a bookcase.
+        assert!(has(&a, Category::Sofa));
+        assert!(has(&b, Category::Bookcase));
+        assert!(!has(&a, Category::Bookcase));
+    }
+
+    #[test]
+    fn colors_track_categories() {
+        let room = generate_room(5_000, 4, 0);
+        // Two floor points are closer in color than a floor and a chair.
+        let mut floor = Vec::new();
+        let mut chair = Vec::new();
+        for i in 0..room.cloud.len() {
+            if room.labels[i] == Category::Floor as u32 && floor.len() < 2 {
+                floor.push(i);
+            }
+            if room.labels[i] == Category::Chair as u32 && chair.len() < 1 {
+                chair.push(i);
+            }
+        }
+        let d_same = room.colors.dist(floor[0], &room.colors, floor[1]);
+        let d_diff = room.colors.dist(floor[0], &room.colors, chair[0]);
+        assert!(d_same < d_diff);
+    }
+
+    #[test]
+    fn points_inside_room_bounds() {
+        let room = generate_room(5_000, 5, 0);
+        let (lo, hi) = room.cloud.bounds();
+        assert!(lo[2] >= -1e-9 && hi[2] <= 3.5 + 1e-9);
+        assert!(hi[0] < 20.0 && hi[1] < 30.0);
+    }
+}

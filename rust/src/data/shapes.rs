@@ -1,0 +1,345 @@
+//! Parametric 3-D shape families.
+//!
+//! Stand-in for CAPOD (Table 1 / Figure 1) and ShapeNet parts (Figure 2):
+//! seven classes with per-class default sizes matching the paper's Table 1
+//! header (~1.9K .. ~15.8K points), each with distinct rigid geometry,
+//! per-part labels (2-6 parts) and analytic surface normals as features.
+
+use crate::core::PointCloud;
+use crate::prng::{Gaussian, Pcg32, Rng};
+use crate::qgw::FeatureSet;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShapeClass {
+    Human,
+    Plane,
+    Spider,
+    Car,
+    Dog,
+    Tree,
+    Vase,
+}
+
+impl ShapeClass {
+    pub const ALL: [ShapeClass; 7] = [
+        ShapeClass::Human,
+        ShapeClass::Plane,
+        ShapeClass::Spider,
+        ShapeClass::Car,
+        ShapeClass::Dog,
+        ShapeClass::Tree,
+        ShapeClass::Vase,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShapeClass::Human => "Humans",
+            ShapeClass::Plane => "Planes",
+            ShapeClass::Spider => "Spiders",
+            ShapeClass::Car => "Cars",
+            ShapeClass::Dog => "Dogs",
+            ShapeClass::Tree => "Trees",
+            ShapeClass::Vase => "Vases",
+        }
+    }
+
+    /// Default point count per class (Table 1 header).
+    pub fn default_size(&self) -> usize {
+        match self {
+            ShapeClass::Human => 1926,
+            ShapeClass::Plane => 2144,
+            ShapeClass::Spider => 2664,
+            ShapeClass::Car => 5220,
+            ShapeClass::Dog => 8937,
+            ShapeClass::Tree => 10433,
+            ShapeClass::Vase => 15828,
+        }
+    }
+}
+
+/// A sampled shape: point cloud + part labels + unit normals.
+#[derive(Clone, Debug)]
+pub struct LabeledCloud {
+    pub cloud: PointCloud,
+    pub labels: Vec<u32>,
+    pub normals: FeatureSet,
+    pub class: ShapeClass,
+}
+
+impl LabeledCloud {
+    pub fn num_parts(&self) -> usize {
+        (*self.labels.iter().max().unwrap_or(&0) as usize) + 1
+    }
+
+    /// Perturbed + permuted copy per the Table-1 protocol; see
+    /// [`crate::data::perturb`].
+    pub fn perturbed_permuted_copy<R: Rng>(&self, noise_frac: f64, rng: &mut R) -> crate::data::PerturbedCopy {
+        crate::data::perturb::perturbed_permuted_copy(self, noise_frac, rng)
+    }
+}
+
+/// Part primitives: each shape is a union of primitives; every primitive
+/// contributes points proportional to its surface area weight.
+struct Part {
+    label: u32,
+    weight: f64,
+    sampler: Box<dyn Fn(&mut Pcg32, &mut Gaussian) -> ([f64; 3], [f64; 3])>,
+}
+
+fn ellipsoid(center: [f64; 3], radii: [f64; 3], label: u32, weight: f64) -> Part {
+    Part {
+        label,
+        weight,
+        sampler: Box::new(move |rng, g| {
+            // Uniform direction, scaled to the ellipsoid surface.
+            let mut v = [g.sample(rng), g.sample(rng), g.sample(rng)];
+            let norm = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt().max(1e-12);
+            for x in &mut v {
+                *x /= norm;
+            }
+            let p = [
+                center[0] + radii[0] * v[0],
+                center[1] + radii[1] * v[1],
+                center[2] + radii[2] * v[2],
+            ];
+            // Normal of an ellipsoid surface: grad of implicit form.
+            let mut nrm = [v[0] / radii[0], v[1] / radii[1], v[2] / radii[2]];
+            let nn = (nrm[0] * nrm[0] + nrm[1] * nrm[1] + nrm[2] * nrm[2]).sqrt().max(1e-12);
+            for x in &mut nrm {
+                *x /= nn;
+            }
+            (p, nrm)
+        }),
+    }
+}
+
+fn cylinder(base: [f64; 3], axis: [f64; 3], radius: f64, label: u32, weight: f64) -> Part {
+    Part {
+        label,
+        weight,
+        sampler: Box::new(move |rng, _| {
+            let t = rng.next_f64();
+            let theta = rng.next_f64() * std::f64::consts::TAU;
+            // Build an orthonormal frame around the axis.
+            let alen = (axis[0] * axis[0] + axis[1] * axis[1] + axis[2] * axis[2]).sqrt();
+            let a = [axis[0] / alen, axis[1] / alen, axis[2] / alen];
+            let ref_v = if a[0].abs() < 0.9 { [1.0, 0.0, 0.0] } else { [0.0, 1.0, 0.0] };
+            let mut u = [
+                a[1] * ref_v[2] - a[2] * ref_v[1],
+                a[2] * ref_v[0] - a[0] * ref_v[2],
+                a[0] * ref_v[1] - a[1] * ref_v[0],
+            ];
+            let ul = (u[0] * u[0] + u[1] * u[1] + u[2] * u[2]).sqrt().max(1e-12);
+            for x in &mut u {
+                *x /= ul;
+            }
+            let w = [
+                a[1] * u[2] - a[2] * u[1],
+                a[2] * u[0] - a[0] * u[2],
+                a[0] * u[1] - a[1] * u[0],
+            ];
+            let (c, s) = (theta.cos(), theta.sin());
+            let nrm = [
+                c * u[0] + s * w[0],
+                c * u[1] + s * w[1],
+                c * u[2] + s * w[2],
+            ];
+            let p = [
+                base[0] + t * axis[0] + radius * nrm[0],
+                base[1] + t * axis[1] + radius * nrm[1],
+                base[2] + t * axis[2] + radius * nrm[2],
+            ];
+            (p, nrm)
+        }),
+    }
+}
+
+fn surface_of_revolution(
+    profile: fn(f64) -> f64,
+    height: f64,
+    label: u32,
+    weight: f64,
+) -> Part {
+    Part {
+        label,
+        weight,
+        sampler: Box::new(move |rng, _| {
+            let t = rng.next_f64();
+            let theta = rng.next_f64() * std::f64::consts::TAU;
+            let r = profile(t);
+            let p = [r * theta.cos(), r * theta.sin(), t * height];
+            // Approximate normal from profile slope.
+            let dt = 1e-4;
+            let drdz = (profile((t + dt).min(1.0)) - profile((t - dt).max(0.0))) / (2.0 * dt * height);
+            let mut nrm = [theta.cos(), theta.sin(), -drdz];
+            let nl = (nrm[0] * nrm[0] + nrm[1] * nrm[1] + nrm[2] * nrm[2]).sqrt().max(1e-12);
+            for x in &mut nrm {
+                *x /= nl;
+            }
+            (p, nrm)
+        }),
+    }
+}
+
+fn shape_parts(class: ShapeClass) -> Vec<Part> {
+    match class {
+        ShapeClass::Human => vec![
+            ellipsoid([0.0, 0.0, 1.2], [0.25, 0.18, 0.45], 0, 3.0), // torso
+            ellipsoid([0.0, 0.0, 1.85], [0.14, 0.14, 0.16], 1, 1.0), // head
+            cylinder([-0.22, 0.0, 1.55], [-0.25, 0.0, -0.75], 0.06, 2, 1.0), // arm L
+            cylinder([0.22, 0.0, 1.55], [0.25, 0.0, -0.75], 0.06, 2, 1.0),   // arm R
+            cylinder([-0.12, 0.0, 0.8], [-0.03, 0.0, -0.8], 0.08, 3, 1.2),   // leg L
+            cylinder([0.12, 0.0, 0.8], [0.03, 0.0, -0.8], 0.08, 3, 1.2),     // leg R
+        ],
+        ShapeClass::Plane => vec![
+            ellipsoid([0.0, 0.0, 0.0], [1.0, 0.12, 0.12], 0, 2.5), // fuselage
+            ellipsoid([0.1, 0.0, 0.02], [0.25, 1.1, 0.02], 1, 2.5), // main wings
+            ellipsoid([-0.85, 0.0, 0.05], [0.12, 0.4, 0.02], 2, 0.8), // tail wings
+            ellipsoid([-0.9, 0.0, 0.18], [0.1, 0.02, 0.18], 3, 0.5),  // tail fin
+        ],
+        ShapeClass::Spider => {
+            let mut parts = vec![
+                ellipsoid([0.0, 0.0, 0.25], [0.28, 0.22, 0.18], 0, 2.0), // abdomen
+                ellipsoid([0.35, 0.0, 0.25], [0.16, 0.14, 0.12], 1, 1.0), // head
+            ];
+            for k in 0..4 {
+                let y = -0.15 - 0.1 * k as f64;
+                let x = 0.25 - 0.12 * k as f64;
+                parts.push(cylinder([x, -0.1, 0.25], [0.25, y, -0.25], 0.02, 2, 0.6));
+                parts.push(cylinder([x, 0.1, 0.25], [0.25, -y, -0.25], 0.02, 2, 0.6));
+            }
+            parts
+        }
+        ShapeClass::Car => vec![
+            ellipsoid([0.0, 0.0, 0.3], [1.0, 0.42, 0.22], 0, 3.0),   // body
+            ellipsoid([-0.05, 0.0, 0.56], [0.5, 0.36, 0.16], 1, 1.5), // cabin
+            ellipsoid([0.6, 0.38, 0.12], [0.14, 0.05, 0.14], 2, 0.4), // wheels x4
+            ellipsoid([0.6, -0.38, 0.12], [0.14, 0.05, 0.14], 2, 0.4),
+            ellipsoid([-0.6, 0.38, 0.12], [0.14, 0.05, 0.14], 2, 0.4),
+            ellipsoid([-0.6, -0.38, 0.12], [0.14, 0.05, 0.14], 2, 0.4),
+        ],
+        ShapeClass::Dog => vec![
+            ellipsoid([0.0, 0.0, 0.55], [0.5, 0.2, 0.22], 0, 3.0),   // body
+            ellipsoid([0.6, 0.0, 0.75], [0.16, 0.12, 0.13], 1, 1.0), // head
+            ellipsoid([0.78, 0.0, 0.7], [0.12, 0.05, 0.05], 1, 0.3), // snout
+            cylinder([0.35, -0.12, 0.45], [0.02, -0.02, -0.45], 0.05, 2, 0.8), // legs
+            cylinder([0.35, 0.12, 0.45], [0.02, 0.02, -0.45], 0.05, 2, 0.8),
+            cylinder([-0.35, -0.12, 0.45], [-0.02, -0.02, -0.45], 0.05, 2, 0.8),
+            cylinder([-0.35, 0.12, 0.45], [-0.02, 0.02, -0.45], 0.05, 2, 0.8),
+            cylinder([-0.5, 0.0, 0.65], [-0.3, 0.0, 0.25], 0.035, 3, 0.5), // tail
+        ],
+        ShapeClass::Tree => {
+            let mut parts = vec![
+                cylinder([0.0, 0.0, 0.0], [0.0, 0.0, 1.0], 0.1, 0, 2.0), // trunk
+                ellipsoid([0.0, 0.0, 1.35], [0.55, 0.55, 0.45], 1, 3.0), // canopy
+            ];
+            for k in 0..5 {
+                let th = k as f64 * std::f64::consts::TAU / 5.0;
+                parts.push(cylinder(
+                    [0.0, 0.0, 0.55 + 0.08 * k as f64],
+                    [0.45 * th.cos(), 0.45 * th.sin(), 0.35],
+                    0.035,
+                    2,
+                    0.5,
+                ));
+            }
+            parts
+        }
+        ShapeClass::Vase => vec![
+            surface_of_revolution(
+                |t| 0.25 + 0.2 * (std::f64::consts::PI * t).sin() - 0.12 * (2.5 * std::f64::consts::PI * t).cos().max(0.0),
+                1.2,
+                0,
+                4.0,
+            ),
+            surface_of_revolution(|t| 0.33 - 0.28 * t, 0.08, 1, 0.6), // base
+            cylinder([0.32, 0.0, 0.75], [0.12, 0.0, 0.3], 0.03, 2, 0.4), // handle
+        ],
+    }
+}
+
+/// Sample `n` labeled surface points of a shape class.
+pub fn sample_shape(class: ShapeClass, n: usize, rng: &mut Pcg32) -> LabeledCloud {
+    let parts = shape_parts(class);
+    let total_w: f64 = parts.iter().map(|p| p.weight).sum();
+    let mut g = Gaussian::new();
+    let mut coords = Vec::with_capacity(n * 3);
+    let mut labels = Vec::with_capacity(n);
+    let mut normals = Vec::with_capacity(n * 3);
+    // Deterministic allocation of points to parts by weight.
+    let mut counts: Vec<usize> = parts.iter().map(|p| (p.weight / total_w * n as f64) as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    for k in 0..n - assigned {
+        let idx = k % counts.len();
+        counts[idx] += 1;
+    }
+    for (part, &count) in parts.iter().zip(&counts) {
+        for _ in 0..count {
+            let (p, nrm) = (part.sampler)(rng, &mut g);
+            coords.extend_from_slice(&p);
+            normals.extend_from_slice(&nrm);
+            labels.push(part.label);
+        }
+    }
+    LabeledCloud {
+        cloud: PointCloud::new(coords, 3),
+        labels,
+        normals: FeatureSet::new(normals, 3),
+        class,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MmSpace;
+
+    #[test]
+    fn all_classes_sample() {
+        let mut rng = Pcg32::seed_from(1);
+        for class in ShapeClass::ALL {
+            let shape = sample_shape(class, 500, &mut rng);
+            assert_eq!(shape.cloud.len(), 500);
+            assert_eq!(shape.labels.len(), 500);
+            assert_eq!(shape.normals.len(), 500);
+            assert!(shape.num_parts() >= 2 && shape.num_parts() <= 6,
+                "{:?} has {} parts", class, shape.num_parts());
+        }
+    }
+
+    #[test]
+    fn normals_are_unit() {
+        let mut rng = Pcg32::seed_from(2);
+        let shape = sample_shape(ShapeClass::Dog, 200, &mut rng);
+        for i in 0..200 {
+            let nrm = shape.normals.feature(i);
+            let len = (nrm[0] * nrm[0] + nrm[1] * nrm[1] + nrm[2] * nrm[2]).sqrt();
+            assert!((len - 1.0).abs() < 1e-6, "normal {i} has length {len}");
+        }
+    }
+
+    #[test]
+    fn classes_are_geometrically_distinct() {
+        // The diameter / spread differs across classes; a plane is much
+        // wider than tall, a tree much taller than a spider.
+        let mut rng = Pcg32::seed_from(3);
+        let plane = sample_shape(ShapeClass::Plane, 400, &mut rng);
+        let spider = sample_shape(ShapeClass::Spider, 400, &mut rng);
+        assert!(plane.cloud.diameter_estimate() > spider.cloud.diameter_estimate());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut r1 = Pcg32::seed_from(4);
+        let mut r2 = Pcg32::seed_from(4);
+        let s1 = sample_shape(ShapeClass::Car, 100, &mut r1);
+        let s2 = sample_shape(ShapeClass::Car, 100, &mut r2);
+        assert_eq!(s1.cloud.coords(), s2.cloud.coords());
+    }
+
+    #[test]
+    fn default_sizes_match_table1() {
+        assert_eq!(ShapeClass::Human.default_size(), 1926);
+        assert_eq!(ShapeClass::Vase.default_size(), 15828);
+    }
+}

@@ -1,0 +1,212 @@
+//! Evaluation metrics — the paper's experiment protocols.
+//!
+//! * [`distortion_score`] — Table 1: mean squared distance between each
+//!   point's ground-truth copy and its argmax match.
+//! * [`distortion_percent`] — Table 2: summed matching distortion as a
+//!   percentage of the random-matching baseline distortion.
+//! * [`segment_transfer_accuracy`] — Figures 2/3: fraction of points whose
+//!   match carries the same part/semantic label.
+
+use crate::core::{MmSpace, PointCloud, SparseCoupling};
+use crate::prng::{shuffle, Rng};
+
+/// Table-1 distortion: `mean_i ||gt(x_i) - match(x_i)||^2` over points with
+/// non-empty rows, normalized by the squared diameter so scores are
+/// comparable across shape classes (the paper reports raw mean squared
+/// distortion on unit-scale shapes; normalization keeps the same ordering).
+pub fn distortion_score(
+    coupling: &SparseCoupling,
+    target: &PointCloud,
+    ground_truth: &[usize],
+) -> f64 {
+    let assignment = coupling.argmax_assignment();
+    distortion_of_assignment(&assignment, target, ground_truth)
+}
+
+/// Same, over an explicit assignment (used by the service / row queries).
+pub fn distortion_of_assignment(
+    assignment: &[usize],
+    target: &PointCloud,
+    ground_truth: &[usize],
+) -> f64 {
+    let diam2 = target.diameter_estimate().powi(2).max(1e-300);
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for (i, &j) in assignment.iter().enumerate() {
+        if j == usize::MAX {
+            continue;
+        }
+        let gt = ground_truth[i];
+        total += target.sqdist(gt, j);
+        count += 1;
+    }
+    if count == 0 {
+        return f64::INFINITY;
+    }
+    total / count as f64 / diam2
+}
+
+/// Table-2 distortion percentage: summed matched distortion divided by the
+/// average summed distortion of random matchings (x100, lower is better).
+pub fn distortion_percent<R: Rng>(
+    coupling: &SparseCoupling,
+    target: &dyn MmSpace,
+    ground_truth: &[usize],
+    num_random: usize,
+    rng: &mut R,
+) -> f64 {
+    let assignment = coupling.argmax_assignment();
+    let matched: f64 = assignment
+        .iter()
+        .enumerate()
+        .filter(|&(_, &j)| j != usize::MAX)
+        .map(|(i, &j)| target.dist(ground_truth[i], j).powi(2))
+        .sum();
+
+    let n = ground_truth.len();
+    let mut random_total = 0.0;
+    let mut perm: Vec<usize> = (0..target.len()).collect();
+    for _ in 0..num_random {
+        shuffle(&mut perm, rng);
+        random_total += (0..n)
+            .map(|i| target.dist(ground_truth[i], perm[i % perm.len()]).powi(2))
+            .sum::<f64>();
+    }
+    let random_avg = random_total / num_random as f64;
+    100.0 * matched / random_avg.max(1e-300)
+}
+
+/// Figures 2/3: fraction of source points whose match has the same label.
+pub fn segment_transfer_accuracy(
+    coupling: &SparseCoupling,
+    source_labels: &[u32],
+    target_labels: &[u32],
+) -> f64 {
+    let assignment = coupling.argmax_assignment();
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for (i, &j) in assignment.iter().enumerate() {
+        if j == usize::MAX {
+            continue;
+        }
+        total += 1;
+        if source_labels[i] == target_labels[j] {
+            hits += 1;
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    hits as f64 / total as f64
+}
+
+/// Random-matching baseline for segment transfer (Figure 3's 10.0% row).
+pub fn random_transfer_accuracy<R: Rng>(
+    source_labels: &[u32],
+    target_labels: &[u32],
+    rng: &mut R,
+) -> f64 {
+    let mut hits = 0usize;
+    for &sl in source_labels {
+        let j = rng.below(target_labels.len());
+        if sl == target_labels[j] {
+            hits += 1;
+        }
+    }
+    hits as f64 / source_labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::SparseCoupling;
+    use crate::prng::Pcg32;
+
+    fn line_cloud(n: usize) -> PointCloud {
+        PointCloud::new((0..n).map(|i| i as f64).collect(), 1)
+    }
+
+    fn identity_coupling(n: usize) -> SparseCoupling {
+        SparseCoupling::from_rows(
+            n,
+            n,
+            (0..n).map(|i| vec![(i as u32, 1.0 / n as f64)]).collect(),
+        )
+    }
+
+    #[test]
+    fn perfect_match_zero_distortion() {
+        let target = line_cloud(10);
+        let gt: Vec<usize> = (0..10).collect();
+        let c = identity_coupling(10);
+        assert_eq!(distortion_score(&c, &target, &gt), 0.0);
+    }
+
+    #[test]
+    fn off_by_one_distortion() {
+        let target = line_cloud(10);
+        // Ground truth shifts everything by one (point i's true copy is
+        // i+1); the identity matching is off by distance 1 everywhere.
+        let gt: Vec<usize> = (0..10).map(|i| (i + 1) % 10).collect();
+        let c = identity_coupling(10);
+        let d = distortion_score(&c, &target, &gt);
+        assert!(d > 0.0);
+    }
+
+    #[test]
+    fn distortion_percent_perfect_is_zero() {
+        let target = line_cloud(20);
+        let gt: Vec<usize> = (0..20).collect();
+        let c = identity_coupling(20);
+        let mut rng = Pcg32::seed_from(1);
+        assert_eq!(distortion_percent(&c, &target, &gt, 3, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn distortion_percent_random_near_hundred() {
+        let target = line_cloud(200);
+        let gt: Vec<usize> = (0..200).collect();
+        // A "matching" that is itself random should score ~100%.
+        let mut rng = Pcg32::seed_from(2);
+        let mut perm: Vec<usize> = (0..200).collect();
+        shuffle(&mut perm, &mut rng);
+        let c = SparseCoupling::from_rows(
+            200,
+            200,
+            perm.iter().map(|&j| vec![(j as u32, 1.0 / 200.0)]).collect(),
+        );
+        let pct = distortion_percent(&c, &target, &gt, 10, &mut rng);
+        assert!((50.0..150.0).contains(&pct), "pct={pct}");
+    }
+
+    #[test]
+    fn segment_accuracy_bounds() {
+        let labels_a = vec![0u32, 0, 1, 1];
+        let labels_b = vec![0u32, 1, 0, 1];
+        let c = identity_coupling(4);
+        let acc = segment_transfer_accuracy(&c, &labels_a, &labels_b);
+        assert!((acc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_transfer_matches_class_prior() {
+        // Balanced binary labels: random accuracy ~0.5.
+        let labels: Vec<u32> = (0..2000).map(|i| (i % 2) as u32).collect();
+        let mut rng = Pcg32::seed_from(3);
+        let acc = random_transfer_accuracy(&labels, &labels, &mut rng);
+        assert!((acc - 0.5).abs() < 0.05, "acc={acc}");
+    }
+
+    #[test]
+    fn empty_rows_skipped() {
+        let target = line_cloud(4);
+        let gt: Vec<usize> = (0..4).collect();
+        let c = SparseCoupling::from_rows(
+            4,
+            4,
+            vec![vec![(0, 0.25)], vec![], vec![(2, 0.25)], vec![]],
+        );
+        let d = distortion_score(&c, &target, &gt);
+        assert_eq!(d, 0.0); // the two matched rows are exact
+    }
+}

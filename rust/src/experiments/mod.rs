@@ -1,0 +1,73 @@
+//! Experiment harness: one runner per table/figure in the paper's
+//! evaluation. The CLI (`qgw experiment <id>`) and the bench binaries
+//! (`cargo bench`) both drive these, so the rows printed here *are* the
+//! regenerated tables.
+//!
+//! Every runner takes a `scale` in (0, 1] multiplying the paper's dataset
+//! sizes (full-size runs are hours of compute for the slow baselines, just
+//! like the paper's 10-hour timeout column); `--full` means scale = 1.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod scaling;
+pub mod table1;
+pub mod table2;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+
+pub fn run_experiment(args: &Args) -> Result<()> {
+    let Some(which) = args.positional.first() else {
+        bail!("usage: qgw experiment <table1|table2|fig1|fig2|fig3|fig4|scaling> [--scale F] [--full]");
+    };
+    let scale = if args.bool_flag("full") { 1.0 } else { args.f64_or("scale", default_scale(which))? };
+    let seed = args.usize_or("seed", 7)? as u64;
+    match which.as_str() {
+        "table1" => table1::run(scale, seed, &mut std::io::stdout()),
+        "table2" => table2::run(scale, seed, &mut std::io::stdout()),
+        "fig1" => fig1::run(scale, seed, args.flag("out").unwrap_or("fig1_out"), &mut std::io::stdout()),
+        "fig2" => fig2::run(scale, seed, &mut std::io::stdout()),
+        "fig3" => fig3::run(scale, seed, &mut std::io::stdout()),
+        "fig4" => fig4::run(scale, seed, &mut std::io::stdout()),
+        "scaling" => scaling::run(scale, seed, &mut std::io::stdout()),
+        other => bail!("unknown experiment {other:?}"),
+    }
+}
+
+fn default_scale(which: &str) -> f64 {
+    match which {
+        "table1" => 0.15,
+        "table2" => 0.05,
+        "fig1" => 0.25,
+        "fig2" => 0.3,
+        "fig3" => 0.08,
+        "fig4" => 0.25,
+        _ => 0.25,
+    }
+}
+
+/// Format seconds like the paper's tables: `(12.34)`.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("({s:.0})")
+    } else {
+        format!("({s:.2})")
+    }
+}
+
+/// Fully-geodesic dense space for the small-scale graph baselines
+/// (erGW/mbGW/MREC need all-pairs distances; qGW never does).
+pub fn geodesic_dense_space(g: &crate::graph::Graph) -> crate::core::DenseSpace {
+    let n = g.num_nodes();
+    let mut mat = crate::core::DenseMatrix::zeros(n, n);
+    for u in 0..n {
+        let d = crate::graph::dijkstra(g, u);
+        for (v, &dv) in d.iter().enumerate() {
+            mat.set(u, v, if dv.is_finite() { dv } else { 0.0 });
+        }
+    }
+    crate::core::DenseSpace::new(mat, crate::core::uniform_measure(n))
+}

@@ -1,0 +1,108 @@
+//! Proposition 3 — near-linear scaling of qGW.
+//!
+//! Sweep N with m ~ N^(1/3) (the paper's suggested choice giving
+//! O(N log N) total); report per-stage time and verify the growth rate by
+//! a log-log slope fit. The contrast series runs full GW on the sizes
+//! where it is feasible, showing the super-quadratic wall.
+
+use std::io::Write;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::core::MmSpace;
+use crate::data::blobs::make_blobs;
+use crate::gw::cg_gw;
+use crate::prng::Pcg32;
+use crate::qgw::{qgw_match, PartitionSize, QgwConfig};
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub n: usize,
+    pub m: usize,
+    pub qgw_secs: f64,
+    pub gw_secs: Option<f64>,
+}
+
+pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
+    ns.iter()
+        .map(|&n| {
+            let mut rng = Pcg32::seed_from(seed ^ n as u64);
+            let x = make_blobs(n, 4, 1.0, 10.0, &mut rng);
+            let y = make_blobs(n, 4, 1.0, 10.0, &mut rng);
+            let m = ((n as f64).powf(1.0 / 3.0).ceil() as usize * 4).clamp(8, n / 2);
+            let cfg = QgwConfig { size: PartitionSize::Count(m), ..Default::default() };
+            let start = Instant::now();
+            let _ = qgw_match(&x, &y, &cfg, &mut rng);
+            let qgw_secs = start.elapsed().as_secs_f64();
+            let gw_secs = (n <= 1000).then(|| {
+                let start = Instant::now();
+                let _ = cg_gw(
+                    &x.distance_matrix(),
+                    &y.distance_matrix(),
+                    x.measure(),
+                    y.measure(),
+                    30,
+                    1e-9,
+                );
+                start.elapsed().as_secs_f64()
+            });
+            Point { n, m, qgw_secs, gw_secs }
+        })
+        .collect()
+}
+
+/// Least-squares slope of log(time) vs log(n).
+pub fn loglog_slope(points: &[(usize, f64)]) -> f64 {
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for &(x, y) in points {
+        let lx = (x as f64).ln();
+        let ly = y.max(1e-9).ln();
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
+    writeln!(w, "=== Scaling: qGW near-linear growth (Proposition 3; scale={scale}) ===")?;
+    let base: Vec<usize> = vec![500, 1000, 2000, 4000, 8000, 16000, 32000];
+    let ns: Vec<usize> = base.iter().map(|&n| ((n as f64 * scale) as usize).max(100)).collect();
+    let pts = sweep(&ns, seed);
+    writeln!(w, "{:>8} {:>6} {:>10} {:>10}", "N", "m", "qGW time", "GW time")?;
+    for p in &pts {
+        writeln!(
+            w,
+            "{:>8} {:>6} {:>10.3} {:>10}",
+            p.n,
+            p.m,
+            p.qgw_secs,
+            p.gw_secs.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into())
+        )?;
+    }
+    let slope = loglog_slope(&pts.iter().map(|p| (p.n, p.qgw_secs)).collect::<Vec<_>>());
+    writeln!(w, "log-log slope of qGW time vs N: {slope:.2} (near-linear target: ~1; naive GW: >=3)")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_of_linear_data_is_one() {
+        let pts: Vec<(usize, f64)> = (1..=10).map(|k| (k * 100, k as f64 * 0.5)).collect();
+        let s = loglog_slope(&pts);
+        assert!((s - 1.0).abs() < 0.05, "slope={s}");
+    }
+
+    #[test]
+    fn slope_of_quadratic_data_is_two() {
+        let pts: Vec<(usize, f64)> = (1..=10).map(|k| (k * 100, (k * k) as f64)).collect();
+        let s = loglog_slope(&pts);
+        assert!((s - 2.0).abs() < 0.05, "slope={s}");
+    }
+}

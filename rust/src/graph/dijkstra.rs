@@ -1,0 +1,118 @@
+//! Single-source shortest paths (binary-heap Dijkstra).
+//!
+//! The qGW pipeline runs this *only from the m partition representatives*
+//! (O(m |E| log N) total), never from all N nodes — the preprocessing
+//! saving called out in the paper's §2.2 memory discussion.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::Graph;
+
+#[derive(PartialEq)]
+struct HeapItem {
+    dist: f64,
+    node: u32,
+}
+
+impl Eq for HeapItem {}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on dist via reversed comparison; ties on node id keep
+        // the order total (dist is never NaN: weights are checked >= 0).
+        other
+            .dist
+            .partial_cmp(&self.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Shortest path distances from `source` to every node (`f64::INFINITY`
+/// for unreachable nodes).
+pub fn dijkstra(g: &Graph, source: usize) -> Vec<f64> {
+    let n = g.num_nodes();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut heap = BinaryHeap::with_capacity(n);
+    dist[source] = 0.0;
+    heap.push(HeapItem { dist: 0.0, node: source as u32 });
+    while let Some(HeapItem { dist: d, node: u }) = heap.pop() {
+        let u = u as usize;
+        if d > dist[u] {
+            continue; // stale entry
+        }
+        for &(v, w) in g.neighbors(u) {
+            let nd = d + w;
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(HeapItem { dist: nd, node: v });
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_graph_distances() {
+        let g = Graph::from_edges(5, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 4, 1.0)]);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn weighted_shortcut_taken() {
+        // 0-1-2 with weights 1 each, plus direct 0-2 with weight 1.5.
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.5)]);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d[2], 1.5);
+    }
+
+    #[test]
+    fn unreachable_is_infinite() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let d = dijkstra(&g, 0);
+        assert!(d[2].is_infinite());
+    }
+
+    #[test]
+    fn symmetric_distances() {
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1, 0.5), (1, 2, 0.7), (2, 3, 0.2), (3, 4, 0.9), (4, 5, 0.1), (0, 5, 2.0), (1, 4, 1.1)],
+        );
+        for u in 0..6 {
+            let du = dijkstra(&g, u);
+            for v in 0..6 {
+                let dv = dijkstra(&g, v);
+                assert!((du[v] - dv[u]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_holds() {
+        let g = Graph::from_edges(
+            5,
+            &[(0, 1, 0.3), (1, 2, 0.4), (2, 3, 0.5), (3, 4, 0.6), (0, 4, 1.0), (1, 3, 0.2)],
+        );
+        let d: Vec<Vec<f64>> = (0..5).map(|u| dijkstra(&g, u)).collect();
+        for i in 0..5 {
+            for j in 0..5 {
+                for k in 0..5 {
+                    assert!(d[i][j] <= d[i][k] + d[k][j] + 1e-12);
+                }
+            }
+        }
+    }
+}

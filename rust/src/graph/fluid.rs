@@ -1,0 +1,206 @@
+//! Fluid Communities (Parés et al. [23]) — the paper's graph partitioner.
+//!
+//! `k` seed communities expand and contract like fluids: iterate nodes in
+//! random order; each node adopts the community maximizing summed density
+//! (community density = 1 / community size) over itself and its neighbors.
+//! Converges when an entire sweep changes nothing (or `max_iters` sweeps).
+
+use super::Graph;
+use crate::prng::{choose_k, shuffle, Rng};
+
+/// Partition `g` into at most `k` communities. Returns `block_of[node]`.
+/// Communities are guaranteed non-empty and relabeled contiguously; on
+/// disconnected graphs, stranded nodes join their nearest labeled BFS
+/// component so the result is always a full partition.
+pub fn fluid_communities<R: Rng>(g: &Graph, k: usize, max_iters: usize, rng: &mut R) -> Vec<u32> {
+    let n = g.num_nodes();
+    assert!(k >= 1 && k <= n, "k={k} out of range for n={n}");
+    const NONE: u32 = u32::MAX;
+    let mut com = vec![NONE; n];
+    let mut size = vec![0usize; k];
+    for (c, &s) in choose_k(n, k, rng).iter().enumerate() {
+        com[s] = c as u32;
+        size[c] = 1;
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut votes: Vec<f64> = vec![0.0; k];
+    let mut touched: Vec<u32> = Vec::new();
+    for _ in 0..max_iters {
+        shuffle(&mut order, rng);
+        let mut changed = false;
+        for &u in &order {
+            // Tally density votes from self + neighbors.
+            touched.clear();
+            if com[u] != NONE {
+                let c = com[u] as usize;
+                if votes[c] == 0.0 {
+                    touched.push(c as u32);
+                }
+                votes[c] += 1.0 / size[c] as f64;
+            }
+            for &(v, _) in g.neighbors(u) {
+                let cv = com[v as usize];
+                if cv == NONE {
+                    continue;
+                }
+                let c = cv as usize;
+                if votes[c] == 0.0 {
+                    touched.push(c as u32);
+                }
+                votes[c] += 1.0 / size[c] as f64;
+            }
+            if touched.is_empty() {
+                continue; // no labeled neighbors yet
+            }
+            // Argmax with random tie-break among maxima.
+            let mut best = touched[0];
+            let mut best_v = votes[best as usize];
+            let mut ties = 1.0;
+            for &c in &touched[1..] {
+                let v = votes[c as usize];
+                if v > best_v + 1e-12 {
+                    best = c;
+                    best_v = v;
+                    ties = 1.0;
+                } else if (v - best_v).abs() <= 1e-12 {
+                    ties += 1.0;
+                    if rng.next_f64() < 1.0 / ties {
+                        best = c;
+                    }
+                }
+            }
+            for &c in &touched {
+                votes[c as usize] = 0.0;
+            }
+            let old = com[u];
+            if old != best {
+                // Never empty a community (the fluid invariant).
+                if old != NONE {
+                    if size[old as usize] == 1 {
+                        continue;
+                    }
+                    size[old as usize] -= 1;
+                }
+                size[best as usize] += 1;
+                com[u] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Attach any still-unlabeled nodes (disconnected graphs) by BFS waves
+    // from labeled nodes.
+    let mut frontier: Vec<usize> = (0..n).filter(|&u| com[u] != NONE).collect();
+    while frontier.iter().any(|_| true) && com.iter().any(|&c| c == NONE) {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for &(v, _) in g.neighbors(u) {
+                if com[v as usize] == NONE {
+                    com[v as usize] = com[u];
+                    next.push(v as usize);
+                }
+            }
+        }
+        if next.is_empty() {
+            // Fully disconnected leftovers: assign round-robin.
+            let mut c = 0u32;
+            for cu in com.iter_mut() {
+                if *cu == NONE {
+                    *cu = c % k as u32;
+                    c += 1;
+                }
+            }
+            break;
+        }
+        frontier = next;
+    }
+
+    // Relabel contiguously (some communities may have dissolved).
+    let mut remap = vec![NONE; k];
+    let mut next_label = 0u32;
+    for cu in com.iter_mut() {
+        let c = *cu as usize;
+        if remap[c] == NONE {
+            remap[c] = next_label;
+            next_label += 1;
+        }
+        *cu = remap[c];
+    }
+    com
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    fn two_cliques(k: usize) -> Graph {
+        // Two k-cliques joined by one edge.
+        let mut edges = Vec::new();
+        for i in 0..k {
+            for j in i + 1..k {
+                edges.push((i, j, 1.0));
+                edges.push((k + i, k + j, 1.0));
+            }
+        }
+        edges.push((0, k, 1.0));
+        Graph::from_edges(2 * k, &edges)
+    }
+
+    #[test]
+    fn all_nodes_labeled() {
+        let g = two_cliques(8);
+        let mut rng = Pcg32::seed_from(3);
+        let com = fluid_communities(&g, 2, 100, &mut rng);
+        assert_eq!(com.len(), 16);
+        assert!(com.iter().all(|&c| c < 2));
+    }
+
+    #[test]
+    fn recovers_two_cliques() {
+        let g = two_cliques(10);
+        let mut ok = 0;
+        for seed in 0..5 {
+            let mut rng = Pcg32::seed_from(seed);
+            let com = fluid_communities(&g, 2, 200, &mut rng);
+            // Perfect split: all of clique A one label, clique B the other.
+            let a0 = com[..10].iter().all(|&c| c == com[0]);
+            let b0 = com[10..].iter().all(|&c| c == com[10]);
+            if a0 && b0 && com[0] != com[10] {
+                ok += 1;
+            }
+        }
+        assert!(ok >= 3, "recovered split in only {ok}/5 seeds");
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let g = two_cliques(4);
+        let mut rng = Pcg32::seed_from(9);
+        let com = fluid_communities(&g, 1, 50, &mut rng);
+        assert!(com.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn disconnected_graph_fully_labeled() {
+        let g = Graph::from_edges(6, &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 1.0), (4, 5, 1.0)]);
+        let mut rng = Pcg32::seed_from(4);
+        let com = fluid_communities(&g, 2, 100, &mut rng);
+        assert!(com.iter().all(|&c| c < 2));
+    }
+
+    #[test]
+    fn labels_contiguous() {
+        let g = two_cliques(6);
+        let mut rng = Pcg32::seed_from(5);
+        let com = fluid_communities(&g, 3, 100, &mut rng);
+        let max = *com.iter().max().unwrap();
+        for c in 0..=max {
+            assert!(com.iter().any(|&x| x == c), "label {c} missing");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Graph substrate: adjacency-list graphs, shortest paths, PageRank, Fluid
+//! community detection, and Weisfeiler-Lehman features.
+//!
+//! These are the paper's partitioning and feature heuristics for the graph
+//! experiments (§2.2: Fluid communities [23] for blocks, max PageRank [4]
+//! for representatives; §4: WL features for qFGW) plus the geodesic metric
+//! the TOSCA-style meshes use. Sparse Dijkstra *from representatives only*
+//! realizes the O(m|E|log N) preprocessing the paper highlights.
+
+mod dijkstra;
+mod fluid;
+mod pagerank;
+mod wl;
+
+pub use dijkstra::dijkstra;
+pub use fluid::fluid_communities;
+pub use pagerank::pagerank;
+pub use wl::wl_features;
+
+/// Undirected weighted graph, adjacency-list representation.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// `adj[u]` = list of `(v, weight)`.
+    adj: Vec<Vec<(u32, f64)>>,
+    num_edges: usize,
+}
+
+impl Graph {
+    pub fn new(num_nodes: usize) -> Self {
+        Self { adj: vec![Vec::new(); num_nodes], num_edges: 0 }
+    }
+
+    /// Build from an undirected edge list (each pair inserted both ways).
+    pub fn from_edges(num_nodes: usize, edges: &[(usize, usize, f64)]) -> Self {
+        let mut g = Self::new(num_nodes);
+        for &(u, v, w) in edges {
+            g.add_edge(u, v, w);
+        }
+        g
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize, w: f64) {
+        assert!(u < self.adj.len() && v < self.adj.len());
+        assert!(w >= 0.0, "negative edge weight");
+        if u == v {
+            return; // ignore self loops
+        }
+        self.adj[u].push((v as u32, w));
+        self.adj[v].push((u as u32, w));
+        self.num_edges += 1;
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.adj.len()
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> &[(u32, f64)] {
+        &self.adj[u]
+    }
+
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    /// Is the graph connected? (BFS from node 0.)
+    pub fn is_connected(&self) -> bool {
+        let n = self.num_nodes();
+        if n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &(v, _) in &self.adj[u] {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    count += 1;
+                    stack.push(v as usize);
+                }
+            }
+        }
+        count == n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn path_graph(n: usize) -> Graph {
+        Graph::from_edges(n, &(0..n - 1).map(|i| (i, i + 1, 1.0)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn construction_and_degrees() {
+        let g = path_graph(4);
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn self_loops_ignored() {
+        let mut g = Graph::new(2);
+        g.add_edge(0, 0, 1.0);
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(path_graph(5).is_connected());
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        assert!(!g.is_connected());
+    }
+}

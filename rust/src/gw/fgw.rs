@@ -1,0 +1,172 @@
+//! Fused Gromov-Wasserstein (Vayer et al. [32]).
+//!
+//! `FGW_alpha(T) = (1 - alpha) GW(T) + alpha <M, T>` where `M` is the
+//! squared feature-distance matrix. Entropic mirror-descent solver mirrors
+//! [`crate::gw::entropic_gw`]; the AOT `fgw_step` artifact computes the
+//! identical update on-device.
+
+use crate::core::DenseMatrix;
+use crate::gw::loss::{gw_cost_tensor, gw_loss, product_coupling};
+use crate::gw::solvers::GwResult;
+use crate::ot::{round_to_coupling, sinkhorn_log, SinkhornOptions};
+
+#[derive(Clone, Debug)]
+pub struct FgwOptions {
+    /// Structure-vs-feature weight: 0 = pure GW, 1 = pure Wasserstein on
+    /// features.
+    pub alpha: f64,
+    pub eps_schedule: Vec<f64>,
+    pub outer_iters: usize,
+    pub inner_iters: usize,
+    pub tol: f64,
+}
+
+impl Default for FgwOptions {
+    fn default() -> Self {
+        Self {
+            alpha: 0.5,
+            eps_schedule: vec![5e-2, 1e-2, 1e-3],
+            outer_iters: 30,
+            inner_iters: 100,
+            tol: 1e-9,
+        }
+    }
+}
+
+/// FGW loss of a coupling.
+pub fn fgw_loss(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    feat_cost: &DenseMatrix,
+    t: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    alpha: f64,
+) -> f64 {
+    (1.0 - alpha) * gw_loss(cx, cy, t, a, b) + alpha * feat_cost.dot(t)
+}
+
+/// Entropic FGW solver with eps annealing.
+pub fn entropic_fgw(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    feat_cost: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    opts: &FgwOptions,
+) -> GwResult {
+    let mut t = product_coupling(a, b);
+    // Unit-free eps: scale by the mean |combined cost| at the product
+    // coupling (see gw::solvers::cost_scale).
+    let scale = {
+        let gw_cost = gw_cost_tensor(cx, cy, &t, a, b);
+        let mut cost = gw_cost;
+        cost.scale(1.0 - opts.alpha);
+        cost.axpy(opts.alpha, feat_cost);
+        let mean = cost.as_slice().iter().map(|x| x.abs()).sum::<f64>()
+            / cost.as_slice().len().max(1) as f64;
+        mean.max(1e-12)
+    };
+    let mut total_outer = 0;
+    for &eps in &opts.eps_schedule {
+        let sopts =
+            SinkhornOptions { eps: eps * scale, max_iters: opts.inner_iters, tol: 1e-12 };
+        for _ in 0..opts.outer_iters {
+            let gw_cost = gw_cost_tensor(cx, cy, &t, a, b);
+            let mut cost = gw_cost;
+            cost.scale(1.0 - opts.alpha);
+            cost.axpy(opts.alpha, feat_cost);
+            let res = sinkhorn_log(&cost, a, b, &sopts);
+            total_outer += 1;
+            let mut delta = 0.0f64;
+            for (x, y) in res.plan.as_slice().iter().zip(t.as_slice()) {
+                delta = delta.max((x - y).abs());
+            }
+            t = res.plan;
+            if delta < opts.tol {
+                break;
+            }
+        }
+    }
+    round_to_coupling(&mut t, a, b);
+    let loss = fgw_loss(cx, cy, feat_cost, &t, a, b, opts.alpha);
+    GwResult { plan: t, loss, outer_iters: total_outer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{uniform_measure, MmSpace, PointCloud};
+    use crate::gw::entropic_gw;
+    use crate::gw::GwOptions;
+    use crate::ot::check_coupling;
+    use crate::prng::{Gaussian, Pcg32};
+
+    fn cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        PointCloud::new((0..n * 2).map(|_| g.sample(&mut rng)).collect(), 2)
+    }
+
+    #[test]
+    fn alpha_zero_matches_gw() {
+        let pc1 = cloud(12, 1);
+        let pc2 = cloud(12, 2);
+        let (cx, cy) = (pc1.distance_matrix(), pc2.distance_matrix());
+        let a = uniform_measure(12);
+        let feat = DenseMatrix::from_fn(12, 12, |i, j| ((i * j) % 5) as f64);
+        let opts = FgwOptions { alpha: 0.0, ..Default::default() };
+        let f = entropic_fgw(&cx, &cy, &feat, &a, &a, &opts);
+        let g = entropic_gw(&cx, &cy, &a, &a, &GwOptions::default());
+        for (x, y) in f.plan.as_slice().iter().zip(g.plan.as_slice()) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn alpha_one_follows_features_only() {
+        // Features force the anti-diagonal even though structure favors
+        // identity.
+        let pc = cloud(8, 3);
+        let cx = pc.distance_matrix();
+        let a = uniform_measure(8);
+        let feat = DenseMatrix::from_fn(8, 8, |i, j| if i + j == 7 { 0.0 } else { 1.0 });
+        let opts = FgwOptions { alpha: 1.0, eps_schedule: vec![1e-3], ..Default::default() };
+        let res = entropic_fgw(&cx, &cx, &feat, &a, &a, &opts);
+        for i in 0..8 {
+            assert_eq!(res.plan.row_argmax(i), 7 - i);
+        }
+    }
+
+    #[test]
+    fn features_disambiguate_symmetry() {
+        // A symmetric structure (square) has many GW optima; matched
+        // features select the identity one.
+        let coords = vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0];
+        let pc = PointCloud::new(coords, 2);
+        let c = pc.distance_matrix();
+        let a = uniform_measure(4);
+        let feat = DenseMatrix::from_fn(4, 4, |i, j| if i == j { 0.0 } else { 1.0 });
+        let opts = FgwOptions { alpha: 0.5, ..Default::default() };
+        let res = entropic_fgw(&c, &c, &feat, &a, &a, &opts);
+        assert!(check_coupling(&res.plan, &a, &a, 1e-4));
+        for i in 0..4 {
+            assert_eq!(res.plan.row_argmax(i), i);
+        }
+        assert!(res.loss < 1e-4);
+    }
+
+    #[test]
+    fn loss_interpolates() {
+        let pc1 = cloud(10, 4);
+        let pc2 = cloud(10, 5);
+        let (cx, cy) = (pc1.distance_matrix(), pc2.distance_matrix());
+        let a = uniform_measure(10);
+        let feat = DenseMatrix::from_fn(10, 10, |i, j| ((i + j) % 3) as f64);
+        let t = crate::gw::product_coupling(&a, &a);
+        let l0 = fgw_loss(&cx, &cy, &feat, &t, &a, &a, 0.0);
+        let l1 = fgw_loss(&cx, &cy, &feat, &t, &a, &a, 1.0);
+        let lh = fgw_loss(&cx, &cy, &feat, &t, &a, &a, 0.5);
+        assert!((lh - 0.5 * (l0 + l1)).abs() < 1e-10);
+    }
+}

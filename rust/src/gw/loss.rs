@@ -1,0 +1,181 @@
+//! GW loss and its linearization via the Peyre-Cuturi-Solomon
+//! factorization — mirror of the Layer-1 `gw_grad` kernel, for the pure-Rust
+//! path and for evaluating couplings produced by any method.
+
+use crate::core::{DenseMatrix, MmSpace, SparseCoupling};
+
+/// Product coupling `a b^T` — solver initialization and the paper's
+/// "putative maximum" in the Figure 4 relative-error metric.
+pub fn product_coupling(a: &[f64], b: &[f64]) -> DenseMatrix {
+    DenseMatrix::outer(a, b)
+}
+
+/// Square-loss GW cost tensor applied to `t`:
+/// `L(Cx,Cy) (x) T = constC - 2 Cx T Cy^T` with
+/// `constC = (Cx.^2 a) 1^T + 1 (Cy.^2 b)^T`.
+pub fn gw_cost_tensor(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    t: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+) -> DenseMatrix {
+    let n = cx.rows();
+    let m = cy.rows();
+    debug_assert_eq!(t.rows(), n);
+    debug_assert_eq!(t.cols(), m);
+    // f1 = Cx.^2 a ; f2 = Cy.^2 b
+    let mut f1 = vec![0.0; n];
+    for i in 0..n {
+        let row = cx.row(i);
+        f1[i] = row.iter().zip(a).map(|(c, w)| c * c * w).sum();
+    }
+    let mut f2 = vec![0.0; m];
+    for j in 0..m {
+        let row = cy.row(j);
+        f2[j] = row.iter().zip(b).map(|(c, w)| c * c * w).sum();
+    }
+    // A = Cx @ T ; out = f1 + f2^T - 2 A Cy^T  (Cy symmetric in all uses,
+    // but keep the transpose-correct contraction). Both products run
+    // through the parallel blocked kernel — the global alignment spends
+    // most of its time here (EXPERIMENTS.md §Perf).
+    let a_mat = par_matmul(cx, t);
+    let cyt = cy.transpose();
+    let mut out = par_matmul(&a_mat, &cyt);
+    for i in 0..n {
+        let orow = out.row_mut(i);
+        let fi = f1[i];
+        for (o, &fj) in orow.iter_mut().zip(&f2) {
+            *o = fi + fj - 2.0 * *o;
+        }
+    }
+    out
+}
+
+/// Row-parallel blocked matmul (i-k-j order, contiguous axpy rows) — the
+/// Layer-3 mirror of the L1 Pallas `matmul` kernel. Splits output rows
+/// over the thread pool for matrices above a size cutoff.
+pub fn par_matmul(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(k, b.rows(), "matmul shape mismatch");
+    if m * k * n < 64 * 64 * 64 {
+        return a.matmul(b);
+    }
+    let threads = crate::coordinator::parallel_map(
+        &(0..m).collect::<Vec<usize>>(),
+        |&i| {
+            let mut orow = vec![0.0f64; n];
+            let arow = a.row(i);
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kk);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+            orow
+        },
+        0,
+    );
+    let mut out = DenseMatrix::zeros(m, n);
+    for (i, row) in threads.into_iter().enumerate() {
+        out.row_mut(i).copy_from_slice(&row);
+    }
+    out
+}
+
+/// GW loss `sum (Cx_ik - Cy_jl)^2 T_ij T_kl` of a dense coupling.
+pub fn gw_loss(cx: &DenseMatrix, cy: &DenseMatrix, t: &DenseMatrix, a: &[f64], b: &[f64]) -> f64 {
+    gw_cost_tensor(cx, cy, t, a, b).dot(t)
+}
+
+/// GW loss of a *sparse* coupling over implicit metric spaces — evaluates
+/// `sum_{(i,j),(k,l) in supp} (d_X(i,k) - d_Y(j,l))^2 m_ij m_kl` in
+/// O(nnz^2) distance queries without forming any matrix. This is how
+/// large-space couplings (qGW output) are scored.
+pub fn gw_loss_sparse(coupling: &SparseCoupling, x: &dyn MmSpace, y: &dyn MmSpace) -> f64 {
+    let entries: Vec<(usize, usize, f64)> = coupling.iter().collect();
+    let mut total = 0.0;
+    for &(i, j, w1) in &entries {
+        for &(k, l, w2) in &entries {
+            let d = x.dist(i, k) - y.dist(j, l);
+            total += d * d * w1 * w2;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{uniform_measure, DenseSpace, PointCloud};
+
+    fn random_space(seed: u64, n: usize) -> (DenseMatrix, Vec<f64>) {
+        use crate::prng::{Gaussian, Pcg32};
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        let coords: Vec<f64> = (0..n * 3).map(|_| g.sample(&mut rng)).collect();
+        let pc = PointCloud::new(coords, 3);
+        (crate::core::MmSpace::distance_matrix(&pc), uniform_measure(n))
+    }
+
+    #[test]
+    fn loss_zero_on_identity() {
+        let (c, a) = random_space(1, 10);
+        let t = DenseMatrix::from_fn(10, 10, |i, j| if i == j { 0.1 } else { 0.0 });
+        assert!(gw_loss(&c, &c, &t, &a, &a).abs() < 1e-10);
+    }
+
+    #[test]
+    fn loss_positive_generic() {
+        let (cx, a) = random_space(2, 8);
+        let (cy, b) = random_space(3, 8);
+        let t = product_coupling(&a, &b);
+        assert!(gw_loss(&cx, &cy, &t, &a, &b) > 0.0);
+    }
+
+    #[test]
+    fn cost_tensor_matches_bruteforce() {
+        let (cx, a) = random_space(4, 6);
+        let (cy, b) = random_space(5, 7);
+        let t = product_coupling(&a, &b);
+        let tensor = gw_cost_tensor(&cx, &cy, &t, &a, &b);
+        // Brute force: tensor_ij = sum_kl (Cx_ik - Cy_jl)^2 T_kl ... with
+        // the marginal-weighted constant form:
+        for i in 0..6 {
+            for j in 0..7 {
+                let mut want = 0.0;
+                for k in 0..6 {
+                    want += cx.get(i, k).powi(2) * a[k];
+                    for l in 0..7 {
+                        want -= 2.0 * cx.get(i, k) * cy.get(j, l) * t.get(k, l);
+                    }
+                }
+                for l in 0..7 {
+                    want += cy.get(j, l).powi(2) * b[l];
+                }
+                assert!(
+                    (tensor.get(i, j) - want).abs() < 1e-9,
+                    "({i},{j}): {} vs {}",
+                    tensor.get(i, j),
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_loss_matches_dense() {
+        let (cx, a) = random_space(6, 8);
+        let (cy, b) = random_space(7, 8);
+        let t = product_coupling(&a, &b);
+        let dense = gw_loss(&cx, &cy, &t, &a, &b);
+        let sparse = crate::core::SparseCoupling::from_dense(&t, 0.0);
+        let sx = DenseSpace::new(cx, a);
+        let sy = DenseSpace::new(cy, b);
+        let got = gw_loss_sparse(&sparse, &sx, &sy);
+        assert!((dense - got).abs() < 1e-9, "{dense} vs {got}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Gromov-Wasserstein solvers and every baseline from the paper's
+//! evaluation: exact-ish GW via conditional gradient ("GW" rows), entropic
+//! GW ("erGW"), fused GW, minibatch GW ("mbGW"), and the MREC recursive
+//! matcher. The qGW algorithm itself lives in [`crate::qgw`]; it calls into
+//! these solvers for the m-point global alignment.
+
+mod fgw;
+mod loss;
+mod minibatch;
+mod mrec;
+mod solvers;
+
+pub use fgw::{entropic_fgw, fgw_loss, FgwOptions};
+pub use loss::{gw_cost_tensor, gw_loss, gw_loss_sparse, product_coupling};
+pub use minibatch::{minibatch_gw, MbGwOptions};
+pub use mrec::{mrec_match, MrecOptions, SubSpace};
+pub use solvers::{cg_gw, cost_scale, entropic_gw, GwOptions, GwResult};

@@ -1,0 +1,232 @@
+//! GW solvers: conditional gradient (exact inner EMD — the "GW" baseline)
+//! and entropic projected mirror descent (the "erGW" baseline, and the
+//! pure-Rust fallback for qGW's global alignment when no AOT artifacts are
+//! loaded).
+
+use crate::core::DenseMatrix;
+use crate::gw::loss::{gw_cost_tensor, gw_loss, product_coupling};
+use crate::ot::{emd, round_to_coupling, sinkhorn_log, SinkhornOptions};
+
+#[derive(Clone, Debug)]
+pub struct GwOptions {
+    /// Entropic regularization schedule; the solver anneals through these
+    /// values warm-starting each from the previous plan. A single value
+    /// reproduces plain entropic GW (POT-style). Ignored by [`cg_gw`].
+    pub eps_schedule: Vec<f64>,
+    /// Outer (linearization) iterations per eps value.
+    pub outer_iters: usize,
+    /// Sinkhorn iterations per outer step.
+    pub inner_iters: usize,
+    /// Stop an eps stage early when the plan moves less than this (max
+    /// absolute entry change).
+    pub tol: f64,
+}
+
+impl Default for GwOptions {
+    fn default() -> Self {
+        Self { eps_schedule: vec![5e-2, 1e-2, 1e-3], outer_iters: 30, inner_iters: 100, tol: 1e-9 }
+    }
+}
+
+impl GwOptions {
+    pub fn single_eps(eps: f64) -> Self {
+        Self { eps_schedule: vec![eps], ..Self::default() }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GwResult {
+    pub plan: DenseMatrix,
+    pub loss: f64,
+    pub outer_iters: usize,
+}
+
+/// Entropic GW (Peyre-Cuturi-Solomon mirror descent): each outer step
+/// linearizes the loss at the current plan and solves the entropic OT
+/// subproblem in the log domain. Supports eps annealing with warm starts.
+pub fn entropic_gw(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    opts: &GwOptions,
+) -> GwResult {
+    let mut t = product_coupling(a, b);
+    // eps is *relative* to the cost scale (mean |linearized cost| at the
+    // product coupling): the GW cost tensor scales with the square of the
+    // space's diameter, so an absolute eps would make the solver's
+    // behaviour depend on measurement units.
+    let scale = cost_scale(cx, cy, &t, a, b);
+    let mut total_outer = 0;
+    for &eps in &opts.eps_schedule {
+        let sopts =
+            SinkhornOptions { eps: eps * scale, max_iters: opts.inner_iters, tol: 1e-12 };
+        for _ in 0..opts.outer_iters {
+            let cost = gw_cost_tensor(cx, cy, &t, a, b);
+            let res = sinkhorn_log(&cost, a, b, &sopts);
+            total_outer += 1;
+            let mut delta = 0.0f64;
+            for (x, y) in res.plan.as_slice().iter().zip(t.as_slice()) {
+                delta = delta.max((x - y).abs());
+            }
+            t = res.plan;
+            if delta < opts.tol {
+                break;
+            }
+        }
+    }
+    // Sinkhorn leaves O(exp(-k)) marginal slack at small eps; project the
+    // final plan onto the coupling polytope so downstream quantization
+    // couplings inherit exact marginals (Proposition 1).
+    round_to_coupling(&mut t, a, b);
+    let loss = gw_loss(cx, cy, &t, a, b);
+    GwResult { plan: t, loss, outer_iters: total_outer }
+}
+
+/// Mean absolute linearized GW cost at `t` — the scale factor that makes
+/// `eps` unit-free across all solvers (shared with [`crate::runtime`]'s
+/// XLA-driven outer loop so both paths anneal identically).
+pub fn cost_scale(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    t: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+) -> f64 {
+    let tensor = gw_cost_tensor(cx, cy, t, a, b);
+    let mean = tensor.as_slice().iter().map(|x| x.abs()).sum::<f64>()
+        / tensor.as_slice().len().max(1) as f64;
+    mean.max(1e-12)
+}
+
+/// Conditional-gradient (Frank-Wolfe) GW with exact network-simplex inner
+/// LP and closed-form line search — the algorithm behind POT's
+/// `gromov_wasserstein`, i.e. the paper's unregularized "GW" baseline.
+pub fn cg_gw(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    max_iters: usize,
+    tol: f64,
+) -> GwResult {
+    let mut t = product_coupling(a, b);
+    let mut loss = gw_loss(cx, cy, &t, a, b);
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        // Gradient of the quadratic loss is 2 * tensor; the scale does not
+        // change the LP minimizer.
+        let grad = gw_cost_tensor(cx, cy, &t, a, b);
+        let dir = emd(&grad, a, b).plan;
+        // E = D - T; line search f(T + tau E) = f(T) + b tau + c tau^2:
+        //   b = <constC part...> handled via tensors:
+        //   <L(T), E> appears twice (loss is quadratic, symmetric).
+        let mut e = dir.clone();
+        e.axpy(-1.0, &t);
+        // c = -2 <Cx E Cy, E>  (from the -2 CxTCy term).
+        let cx_e_cy = {
+            let tmp = cx.matmul(&e);
+            tmp.matmul(&cy.transpose())
+        };
+        let c2 = -2.0 * cx_e_cy.dot(&e);
+        // b = <constC, E> - 4 <Cx T Cy, E> = <L(T), E> - 2 <CxTCy, E>
+        //   computed as <tensor(T), E> + (-2<CxTCy,E>):
+        let tensor_t = gw_cost_tensor(cx, cy, &t, a, b);
+        let cx_t_cy = cx.matmul(&t).matmul(&cy.transpose());
+        let b1 = tensor_t.dot(&e) - 2.0 * cx_t_cy.dot(&e);
+        let tau = if c2 > 0.0 {
+            (-b1 / (2.0 * c2)).clamp(0.0, 1.0)
+        } else {
+            // Concave along the segment: best endpoint.
+            if b1 + c2 < 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        };
+        if tau <= 0.0 {
+            break;
+        }
+        t.axpy(tau, &e);
+        let new_loss = gw_loss(cx, cy, &t, a, b);
+        let improve = loss - new_loss;
+        loss = new_loss;
+        if improve.abs() < tol {
+            break;
+        }
+    }
+    GwResult { plan: t, loss, outer_iters: iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{uniform_measure, MmSpace, PointCloud};
+    use crate::ot::check_coupling;
+    use crate::prng::{Gaussian, Pcg32};
+
+    fn rotated_pair(n: usize, seed: u64) -> (DenseMatrix, DenseMatrix, Vec<f64>) {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        let coords: Vec<f64> = (0..n * 2).map(|_| g.sample(&mut rng)).collect();
+        let pc = PointCloud::new(coords.clone(), 2);
+        // Rotate 90 degrees.
+        let rot: Vec<f64> = coords.chunks(2).flat_map(|p| [p[1], -p[0]]).collect();
+        let pc2 = PointCloud::new(rot, 2);
+        (pc.distance_matrix(), pc2.distance_matrix(), uniform_measure(n))
+    }
+
+    #[test]
+    fn entropic_gw_recovers_rotation() {
+        let (cx, cy, a) = rotated_pair(24, 1);
+        let res = entropic_gw(&cx, &cy, &a, &a, &GwOptions::default());
+        assert!(check_coupling(&res.plan, &a, &a, 1e-4));
+        for i in 0..24 {
+            assert_eq!(res.plan.row_argmax(i), i, "row {i} mismatched");
+        }
+        assert!(res.loss < 1e-3, "loss={}", res.loss);
+    }
+
+    #[test]
+    fn cg_gw_recovers_rotation() {
+        let (cx, cy, a) = rotated_pair(16, 2);
+        let res = cg_gw(&cx, &cy, &a, &a, 100, 1e-12);
+        assert!(check_coupling(&res.plan, &a, &a, 1e-9));
+        assert!(res.loss < 1e-2, "loss={}", res.loss);
+    }
+
+    #[test]
+    fn cg_monotone_nonincreasing() {
+        let (cx, _, a) = rotated_pair(12, 3);
+        let (_, cy, _) = rotated_pair(12, 4);
+        let l1 = cg_gw(&cx, &cy, &a, &a, 1, 0.0).loss;
+        let l10 = cg_gw(&cx, &cy, &a, &a, 10, 0.0).loss;
+        let l50 = cg_gw(&cx, &cy, &a, &a, 50, 0.0).loss;
+        assert!(l10 <= l1 + 1e-12);
+        assert!(l50 <= l10 + 1e-12);
+    }
+
+    #[test]
+    fn annealing_no_worse_than_single_eps() {
+        let (cx, cy, a) = rotated_pair(20, 5);
+        let annealed = entropic_gw(&cx, &cy, &a, &a, &GwOptions::default()).loss;
+        let single = entropic_gw(&cx, &cy, &a, &a, &GwOptions::single_eps(1e-3)).loss;
+        assert!(annealed <= single + 1e-6, "annealed={annealed} single={single}");
+    }
+
+    #[test]
+    fn identical_spaces_zero_loss() {
+        let (cx, _, a) = rotated_pair(16, 6);
+        let res = entropic_gw(&cx, &cx, &a, &a, &GwOptions::default());
+        assert!(res.loss < 1e-4, "loss={}", res.loss);
+    }
+
+    #[test]
+    fn rectangular_marginals() {
+        let (cx, _, a) = rotated_pair(12, 7);
+        let (cy, _, b) = rotated_pair(18, 8);
+        let res = entropic_gw(&cx, &cy, &a, &b, &GwOptions::single_eps(1e-2));
+        assert!(check_coupling(&res.plan, &a, &b, 1e-4));
+    }
+}

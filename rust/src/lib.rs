@@ -1,0 +1,48 @@
+//! # qgw — Quantized Gromov-Wasserstein
+//!
+//! Production reproduction of *"Quantized Gromov-Wasserstein"* (Chowdhury,
+//! Miller, Needham; 2021) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: partitioned metric-measure
+//!   spaces with sparse quantized storage, the qGW/qFGW matching pipeline
+//!   (global alignment → local linear matchings → quantization coupling),
+//!   every baseline the paper compares against (GW, entropic GW, minibatch
+//!   GW, MREC), and all substrates (optimal transport solvers, graph
+//!   algorithms, partitioners, thread pool, config, CLI, bench harness).
+//! * **Layer 2/1 (python/, build-time only)** — JAX compute graphs composing
+//!   Pallas kernels for the entropic-GW global alignment, AOT-lowered to HLO
+//!   text artifacts executed here through PJRT ([`runtime`]).
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use qgw::data::shapes::{ShapeClass, sample_shape};
+//! use qgw::prng::Pcg32;
+//! use qgw::qgw::{QgwConfig, qgw_match};
+//!
+//! let mut rng = Pcg32::seed_from(7);
+//! let x = sample_shape(ShapeClass::Dog, 2000, &mut rng);
+//! let y = x.perturbed_permuted_copy(0.01, &mut rng);
+//! let result = qgw_match(&x.cloud, &y.cloud, &QgwConfig::with_fraction(0.1), &mut rng);
+//! println!("estimated GW loss: {}", result.gw_loss);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod graph;
+pub mod gw;
+pub mod metric;
+pub mod ot;
+pub mod partition;
+pub mod prng;
+pub mod qgw;
+pub mod runtime;
+pub mod testutil;
+
+pub use crate::core::{DenseMatrix, MmSpace};
+pub use crate::qgw::{qgw_match, qfgw_match, QgwConfig};

@@ -1,0 +1,9 @@
+//! `qgw` binary — Layer-3 leader entrypoint.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(err) = qgw::cli::run(argv) {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,63 @@
+//! Metric backends: Euclidean (point clouds) and geodesic (graphs).
+//!
+//! Both expose exactly the two queries the quantized storage needs —
+//! distances *between representatives* (dense `m x m`) and distances *from
+//! a representative to candidate points* — so neither backend ever forms
+//! the O(N^2) matrix.
+
+use crate::core::{DenseMatrix, PointCloud};
+use crate::graph::{dijkstra, Graph};
+
+/// Dense distances between the selected representative points of a cloud.
+pub fn euclidean_rep_matrix(cloud: &PointCloud, reps: &[usize]) -> DenseMatrix {
+    DenseMatrix::from_fn(reps.len(), reps.len(), |p, q| {
+        crate::core::MmSpace::dist(cloud, reps[p], reps[q])
+    })
+}
+
+/// Geodesic distances between representatives: one Dijkstra per rep,
+/// O(m |E| log N) total (paper §2.2).
+pub fn geodesic_rep_matrix(g: &Graph, reps: &[usize]) -> (DenseMatrix, Vec<Vec<f64>>) {
+    let rows: Vec<Vec<f64>> = reps.iter().map(|&r| dijkstra(g, r)).collect();
+    let m = reps.len();
+    let mat = DenseMatrix::from_fn(m, m, |p, q| rows[p][reps[q]]);
+    (mat, rows)
+}
+
+/// Squared Euclidean distance between feature vectors (rows of a flat
+/// `n x d` feature matrix) — the FGW feature cost.
+pub fn feature_sqdist(fx: &[f64], fy: &[f64], d: usize, i: usize, j: usize) -> f64 {
+    let a = &fx[i * d..(i + 1) * d];
+    let b = &fy[j * d..(j + 1) * d];
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn euclidean_rep_matrix_values() {
+        let cloud = PointCloud::new(vec![0.0, 0.0, 3.0, 4.0, 6.0, 8.0], 2);
+        let m = euclidean_rep_matrix(&cloud, &[0, 2]);
+        assert_eq!(m.get(0, 1), 10.0);
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn geodesic_rep_matrix_path() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        let (m, rows) = geodesic_rep_matrix(&g, &[0, 3]);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(rows[0][2], 2.0);
+        assert_eq!(rows[1][0], 3.0);
+    }
+
+    #[test]
+    fn feature_sqdist_basic() {
+        let fx = vec![0.0, 0.0, 1.0, 1.0];
+        let fy = vec![1.0, 0.0];
+        assert_eq!(feature_sqdist(&fx, &fy, 2, 0, 0), 1.0);
+        assert_eq!(feature_sqdist(&fx, &fy, 2, 1, 0), 1.0);
+    }
+}

@@ -1,0 +1,420 @@
+//! Exact EMD via the transportation network simplex.
+//!
+//! This plays the role of POT's `emd` for the conditional-gradient GW
+//! baseline (the paper's "GW" rows) and for exactness checks on the other
+//! solvers. Classic MODI / u-v potential method on the bipartite
+//! transportation polytope:
+//!
+//! 1. initialize a basic feasible spanning tree with the northwest-corner
+//!    rule (degenerate arcs kept at zero flow to preserve the tree);
+//! 2. compute dual potentials by propagating over the tree;
+//! 3. price out non-basic arcs; entering arc chosen by a *block-search*
+//!    Dantzig rule (best reduced cost within a rotating block — the same
+//!    compromise real network-simplex codes use);
+//! 4. find the unique tree cycle through the entering arc, pivot by the
+//!    minimum flow on its odd arcs (leaving arc ties broken by Bland to
+//!    prevent cycling), update the tree;
+//! 5. repeat until no negative reduced cost.
+//!
+//! Complexity is polynomial in practice for our sizes (global alignments
+//! run at m <= 1000). All flows are kept in f64 with a relative tolerance.
+
+use crate::core::DenseMatrix;
+
+#[derive(Clone, Debug)]
+pub struct EmdResult {
+    pub plan: DenseMatrix,
+    pub cost: f64,
+    pub iters: usize,
+}
+
+/// Exact optimal transport between `(a, b)` under `cost`. `a` and `b` must
+/// be non-negative and sum to the same total (both are renormalized to the
+/// mean of the two sums to absorb rounding).
+pub fn emd(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> EmdResult {
+    let n = a.len();
+    let m = b.len();
+    assert_eq!(cost.rows(), n);
+    assert_eq!(cost.cols(), m);
+    let sa: f64 = a.iter().sum();
+    let sb: f64 = b.iter().sum();
+    assert!(sa > 0.0 && sb > 0.0, "empty marginals");
+    assert!(
+        (sa - sb).abs() <= 1e-9 * sa.max(sb),
+        "marginal sums differ: {sa} vs {sb}"
+    );
+    // Strip zero-mass atoms; the simplex needs strictly positive supplies
+    // for a clean tree (restored on output).
+    let ai: Vec<usize> = (0..n).filter(|&i| a[i] > 0.0).collect();
+    let bj: Vec<usize> = (0..m).filter(|&j| b[j] > 0.0).collect();
+    let av: Vec<f64> = ai.iter().map(|&i| a[i]).collect();
+    let bv: Vec<f64> = bj.iter().map(|&j| b[j] * (sa / sb)).collect();
+    let sub_cost = DenseMatrix::from_fn(ai.len(), bj.len(), |p, q| cost.get(ai[p], bj[q]));
+
+    let (flows, iters) = simplex(&sub_cost, &av, &bv);
+
+    let mut plan = DenseMatrix::zeros(n, m);
+    let mut total = 0.0;
+    for &(p, q, f) in &flows {
+        if f > 0.0 {
+            plan.set(ai[p], bj[q], f);
+            total += f * cost.get(ai[p], bj[q]);
+        }
+    }
+    EmdResult { plan, cost: total, iters }
+}
+
+/// Core network simplex over strictly positive supplies. Returns basic
+/// flows `(i, j, flow)` and the pivot count.
+fn simplex(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> (Vec<(usize, usize, f64)>, usize) {
+    let n = a.len();
+    let m = b.len();
+    // Node ids: rows 0..n, cols n..n+m. Basis = spanning tree with exactly
+    // n + m - 1 arcs.
+    let nodes = n + m;
+
+    // --- Northwest corner initialization ------------------------------
+    // Produces n + m - 1 basic arcs (including degenerate zero-flow arcs).
+    let mut basic: Vec<(usize, usize, f64)> = Vec::with_capacity(nodes - 1);
+    {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut ra = a[0];
+        let mut rb = b[0];
+        loop {
+            let f = ra.min(rb);
+            basic.push((i, j, f));
+            ra -= f;
+            rb -= f;
+            let a_done = i == n - 1;
+            let b_done = j == m - 1;
+            if a_done && b_done {
+                break;
+            }
+            // On ties advance only one side to keep the arc count exact.
+            if ra <= rb && !a_done {
+                i += 1;
+                ra = a[i];
+            } else {
+                j += 1;
+                rb = b[j];
+            }
+        }
+    }
+    debug_assert_eq!(basic.len(), nodes - 1);
+
+    // Tree adjacency: node -> list of (neighbor, basic-arc index).
+    let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nodes];
+    let rebuild_adj = |basic: &[(usize, usize, f64)], adj: &mut Vec<Vec<(usize, usize)>>| {
+        for l in adj.iter_mut() {
+            l.clear();
+        }
+        for (k, &(i, j, _)) in basic.iter().enumerate() {
+            adj[i].push((n + j, k));
+            adj[n + j].push((i, k));
+        }
+    };
+    rebuild_adj(&basic, &mut adj);
+
+    let mut u = vec![0.0f64; n]; // row potentials
+    let mut v = vec![0.0f64; m]; // col potentials
+    let mut stack: Vec<usize> = Vec::with_capacity(nodes);
+    let mut visited = vec![false; nodes];
+    let mut parent_node = vec![usize::MAX; nodes];
+    let mut parent_arc = vec![usize::MAX; nodes];
+
+    let max_iters = 50 * nodes * nodes + 10_000;
+    let mut iters = 0;
+    // Rotating block search start for the entering-arc rule.
+    let mut block_start = 0usize;
+    let total_arcs = n * m;
+    let block = (total_arcs as f64).sqrt() as usize + 1;
+
+    loop {
+        iters += 1;
+        if iters > max_iters {
+            // Practically unreachable; guards against degenerate cycling.
+            break;
+        }
+
+        // --- potentials by tree walk from node 0 (u[0] = 0) -----------
+        for x in visited.iter_mut() {
+            *x = false;
+        }
+        stack.clear();
+        stack.push(0);
+        visited[0] = true;
+        u[0] = 0.0;
+        while let Some(x) = stack.pop() {
+            for &(y, arc) in &adj[x] {
+                if visited[y] {
+                    continue;
+                }
+                visited[y] = true;
+                let (bi, bj, _) = basic[arc];
+                if y >= n {
+                    // y is column node: c_ij = u_i + v_j on basic arcs.
+                    v[y - n] = cost.get(bi, bj) - u[bi];
+                } else {
+                    u[y] = cost.get(bi, bj) - v[bj];
+                }
+                stack.push(y);
+            }
+        }
+
+        // --- entering arc: block-search most negative reduced cost ----
+        let mut best: Option<(usize, usize, f64)> = None;
+        let mut scanned = 0;
+        let mut pos = block_start;
+        while scanned < total_arcs {
+            let hi = (pos + block).min(pos + (total_arcs - scanned));
+            for flat in pos..hi {
+                let idx = flat % total_arcs;
+                let i = idx / m;
+                let j = idx % m;
+                let rc = cost.get(i, j) - u[i] - v[j];
+                if rc < -1e-11 && best.map_or(true, |(_, _, brc)| rc < brc) {
+                    best = Some((i, j, rc));
+                }
+            }
+            scanned += hi - pos;
+            pos = hi % total_arcs;
+            if best.is_some() {
+                break;
+            }
+        }
+        block_start = pos;
+        let Some((ei, ej, _)) = best else {
+            break; // optimal
+        };
+
+        // --- cycle: tree path from row ei to col node n+ej ------------
+        for x in visited.iter_mut() {
+            *x = false;
+        }
+        stack.clear();
+        stack.push(ei);
+        visited[ei] = true;
+        parent_node[ei] = usize::MAX;
+        let target = n + ej;
+        'bfs: while let Some(x) = stack.pop() {
+            for &(y, arc) in &adj[x] {
+                if visited[y] {
+                    continue;
+                }
+                visited[y] = true;
+                parent_node[y] = x;
+                parent_arc[y] = arc;
+                if y == target {
+                    break 'bfs;
+                }
+                stack.push(y);
+            }
+        }
+        debug_assert!(visited[target], "basis is not a spanning tree");
+
+        // Walk back collecting the path arcs; arcs at odd positions along
+        // the cycle (starting with the entering arc as position 0) lose
+        // flow.
+        let mut path_arcs: Vec<usize> = Vec::new();
+        let mut node = target;
+        while parent_node[node] != usize::MAX {
+            path_arcs.push(parent_arc[node]);
+            node = parent_node[node];
+        }
+        // Cycle = entering arc + path (from col back to row). Orientation:
+        // entering arc adds flow (row -> col). Traversing the path from
+        // n+ej back to ei, arcs alternate direction; an arc leaves flow if
+        // it is traversed row->col at an odd step... determine by node
+        // parity along the walk instead:
+        let mut leave_flow = f64::INFINITY;
+        let mut leave_arc_pos: Option<usize> = None;
+        {
+            let mut cur = target;
+            for (step, &arc) in path_arcs.iter().enumerate() {
+                let prev = parent_node[cur];
+                // Arc between `prev` and `cur`. If cur is a column node the
+                // arc is traversed row->col, meaning along the cycle it
+                // runs *counter* to the entering direction on even steps.
+                let arc_is_forward = cur >= n; // prev(row) -> cur(col)
+                // Steps alternate: step 0 touches target (col) via some
+                // row, so the first path arc is row->col (same direction
+                // class as entering) and must LOSE flow? Cycle sign:
+                // entering (ei->target) is +; the path returns target ->
+                // ... -> ei, so an arc traversed (in path direction
+                // cur<-prev) contributes sign depending on bipartite
+                // direction: row->col arcs aligned with entering get "+",
+                // but along the return path orientation flips each time we
+                // pass through a node. For bipartite transportation the
+                // rule simplifies: arcs whose row->col direction agrees
+                // with path direction away from the entering col lose
+                // flow on even path indices. We compute sign directly:
+                let sign_plus = if arc_is_forward {
+                    step % 2 == 1
+                } else {
+                    step % 2 == 1
+                };
+                if !sign_plus {
+                    let f = basic[arc].2;
+                    // Bland-flavored tie-break: strictly smaller flow, or
+                    // equal flow with smaller arc index.
+                    if f < leave_flow - 1e-15
+                        || (f < leave_flow + 1e-15
+                            && leave_arc_pos.map_or(true, |p| arc < path_arcs[p]))
+                    {
+                        leave_flow = f;
+                        leave_arc_pos = Some(step);
+                    }
+                }
+                cur = prev;
+            }
+        }
+        let leave_pos = leave_arc_pos.expect("cycle must contain a leaving arc");
+        let theta = leave_flow;
+
+        // Apply the pivot: entering arc gains theta, alternate arcs along
+        // the path gain/lose.
+        {
+            let mut cur = target;
+            for (step, &arc) in path_arcs.iter().enumerate() {
+                let delta = if step % 2 == 1 { theta } else { -theta };
+                basic[arc].2 += delta;
+                cur = parent_node[cur];
+            }
+            let _ = cur;
+        }
+        // Replace the leaving arc with the entering arc in the basis.
+        let leaving_arc = path_arcs[leave_pos];
+        basic[leaving_arc] = (ei, ej, theta);
+        rebuild_adj(&basic, &mut adj);
+    }
+
+    (basic, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::{check_coupling, emd1d};
+    use crate::prng::{Pcg32, Rng};
+
+    fn unif(n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+
+    #[test]
+    fn identity_cost_zero() {
+        let n = 5;
+        let cost = DenseMatrix::from_fn(n, n, |i, j| if i == j { 0.0 } else { 1.0 });
+        let a = unif(n);
+        let res = emd(&cost, &a, &a);
+        assert!(res.cost.abs() < 1e-12);
+        assert!(check_coupling(&res.plan, &a, &a, 1e-9));
+        for i in 0..n {
+            assert!((res.plan.get(i, i) - 0.2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn two_by_two_exact() {
+        // cost [[0,2],[2,1]] uniform marginals: optimum puts 0.5 on (0,0),
+        // 0.5 on (1,1) -> cost 0.5.
+        let cost = DenseMatrix::from_vec(2, 2, vec![0.0, 2.0, 2.0, 1.0]);
+        let a = unif(2);
+        let res = emd(&cost, &a, &a);
+        assert!((res.cost - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rectangular_mass_split() {
+        let cost = DenseMatrix::from_vec(1, 3, vec![3.0, 1.0, 2.0]);
+        let res = emd(&cost, &[1.0], &[0.2, 0.5, 0.3]);
+        assert!((res.cost - (0.6 + 0.5 + 0.6)).abs() < 1e-12);
+        assert!(check_coupling(&res.plan, &[1.0], &[0.2, 0.5, 0.3], 1e-12));
+    }
+
+    #[test]
+    fn matches_1d_ot_on_line() {
+        // Squared-difference cost on the line: network simplex must agree
+        // with the monotone 1-D solution.
+        let mut rng = Pcg32::seed_from(5);
+        for trial in 0..10 {
+            let n = 4 + (trial % 4);
+            let m = 3 + (trial % 5);
+            let xs: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+            let ys: Vec<f64> = (0..m).map(|_| rng.next_f64()).collect();
+            let mut a: Vec<f64> = (0..n).map(|_| rng.next_f64() + 0.1).collect();
+            let mut b: Vec<f64> = (0..m).map(|_| rng.next_f64() + 0.1).collect();
+            let sa: f64 = a.iter().sum();
+            for x in &mut a {
+                *x /= sa;
+            }
+            let sb: f64 = b.iter().sum();
+            for x in &mut b {
+                *x /= sb;
+            }
+            let cost = DenseMatrix::from_fn(n, m, |i, j| (xs[i] - ys[j]).powi(2));
+            let res = emd(&cost, &a, &b);
+            let p1d = emd1d(&xs, &a, &ys, &b);
+            assert!(
+                (res.cost - p1d.cost).abs() < 1e-9,
+                "trial {trial}: simplex {} vs 1d {}",
+                res.cost,
+                p1d.cost
+            );
+            assert!(check_coupling(&res.plan, &a, &b, 1e-9));
+        }
+    }
+
+    #[test]
+    fn beats_or_ties_every_vertex_on_small_problems() {
+        // Exhaustive check on 3x3 assignment-like problems: EMD cost must
+        // be <= cost of every permutation coupling.
+        let mut rng = Pcg32::seed_from(6);
+        let perms: Vec<[usize; 3]> =
+            vec![[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        for _ in 0..20 {
+            let cost = DenseMatrix::from_fn(3, 3, |_, _| rng.next_f64());
+            let a = unif(3);
+            let res = emd(&cost, &a, &a);
+            for p in &perms {
+                let pc: f64 = (0..3).map(|i| cost.get(i, p[i]) / 3.0).sum();
+                assert!(res.cost <= pc + 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_mass_entries_ok() {
+        let cost = DenseMatrix::from_fn(3, 3, |i, j| ((i + j) % 3) as f64);
+        let a = vec![0.5, 0.0, 0.5];
+        let b = vec![0.3, 0.7, 0.0];
+        let res = emd(&cost, &a, &b);
+        assert!(check_coupling(&res.plan, &a, &b, 1e-9));
+        assert!(res.plan.row(1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn skewed_marginals() {
+        let cost = DenseMatrix::from_fn(4, 4, |i, j| ((i as f64) - (j as f64)).abs());
+        let a = vec![0.7, 0.1, 0.1, 0.1];
+        let b = vec![0.1, 0.1, 0.1, 0.7];
+        let res = emd(&cost, &a, &b);
+        assert!(check_coupling(&res.plan, &a, &b, 1e-9));
+        // Moving 0.6 of mass at least distance 3, plus small moves; exact
+        // optimum computable by 1-D monotone argument = 1.8 + 0.2*... :
+        let p1d = emd1d(&[0.0, 1.0, 2.0, 3.0], &a, &[0.0, 1.0, 2.0, 3.0], &b);
+        // |.| cost vs squared: recompute with abs cost via plan:
+        let mut best = 0.0;
+        for &(i, j, m) in &p1d.entries {
+            best += m * ((i as f64) - (j as f64)).abs();
+        }
+        assert!((res.cost - best).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "marginal sums differ")]
+    fn mismatched_mass_panics() {
+        let cost = DenseMatrix::zeros(2, 2);
+        emd(&cost, &[0.5, 0.5], &[0.5, 0.6]);
+    }
+}

@@ -1,0 +1,218 @@
+//! Exact 1-D optimal transport.
+//!
+//! For real-valued supports and any convex cost (we use squared
+//! difference), the optimal plan is the monotone (northwest-corner on
+//! sorted supports) coupling. This is the engine behind the paper's *local
+//! linear matching* (Proposition 3): each pair of partition blocks is
+//! matched by transporting the pushforward measures of distance-to-anchor,
+//! at O(k log k) for the sort — or O(k) when the inputs are pre-sorted,
+//! which [`crate::core::QuantizedSpace`] guarantees by sorting each block
+//! once at construction.
+
+/// A sparse 1-D transport plan: entries `(i, j, mass)` in source/target
+/// index order. Support size is at most `n + m - 1`.
+#[derive(Clone, Debug, Default)]
+pub struct Plan1d {
+    pub entries: Vec<(u32, u32, f64)>,
+    pub cost: f64,
+}
+
+/// Exact 1-D OT between weighted point sets `(xs, a)` and `(ys, b)` with
+/// squared-difference cost. Weights must be non-negative with equal sums.
+/// O(k log k).
+pub fn emd1d(xs: &[f64], a: &[f64], ys: &[f64], b: &[f64]) -> Plan1d {
+    assert_eq!(xs.len(), a.len());
+    assert_eq!(ys.len(), b.len());
+    let mut xi: Vec<u32> = (0..xs.len() as u32).collect();
+    let mut yi: Vec<u32> = (0..ys.len() as u32).collect();
+    xi.sort_by(|&i, &j| xs[i as usize].partial_cmp(&xs[j as usize]).unwrap());
+    yi.sort_by(|&i, &j| ys[i as usize].partial_cmp(&ys[j as usize]).unwrap());
+    northwest_corner(xs, a, ys, b, &xi, &yi)
+}
+
+/// O(k) variant when both supports are already sorted ascending.
+pub fn emd1d_presorted(xs: &[f64], a: &[f64], ys: &[f64], b: &[f64]) -> Plan1d {
+    debug_assert!(xs.windows(2).all(|w| w[0] <= w[1]));
+    debug_assert!(ys.windows(2).all(|w| w[0] <= w[1]));
+    let xi: Vec<u32> = (0..xs.len() as u32).collect();
+    let yi: Vec<u32> = (0..ys.len() as u32).collect();
+    northwest_corner(xs, a, ys, b, &xi, &yi)
+}
+
+fn northwest_corner(
+    xs: &[f64],
+    a: &[f64],
+    ys: &[f64],
+    b: &[f64],
+    xi: &[u32],
+    yi: &[u32],
+) -> Plan1d {
+    let mut entries = Vec::with_capacity(xs.len() + ys.len());
+    let mut cost = 0.0;
+    let (mut p, mut q) = (0usize, 0usize);
+    if xi.is_empty() || yi.is_empty() {
+        return Plan1d { entries, cost };
+    }
+    let mut rem_a = a[xi[0] as usize];
+    let mut rem_b = b[yi[0] as usize];
+    loop {
+        // Skip zero-mass atoms.
+        while rem_a <= 0.0 {
+            p += 1;
+            if p >= xi.len() {
+                return Plan1d { entries, cost };
+            }
+            rem_a = a[xi[p] as usize];
+        }
+        while rem_b <= 0.0 {
+            q += 1;
+            if q >= yi.len() {
+                return Plan1d { entries, cost };
+            }
+            rem_b = b[yi[q] as usize];
+        }
+        let m = rem_a.min(rem_b);
+        let (i, j) = (xi[p], yi[q]);
+        let d = xs[i as usize] - ys[j as usize];
+        cost += m * d * d;
+        entries.push((i, j, m));
+        rem_a -= m;
+        rem_b -= m;
+        if rem_a <= 0.0 {
+            p += 1;
+            if p >= xi.len() {
+                break;
+            }
+            rem_a = a[xi[p] as usize];
+        }
+        if rem_b <= 0.0 {
+            q += 1;
+            if q >= yi.len() {
+                break;
+            }
+            rem_b = b[yi[q] as usize];
+        }
+    }
+    Plan1d { entries, cost }
+}
+
+impl Plan1d {
+    pub fn total_mass(&self) -> f64 {
+        self.entries.iter().map(|e| e.2).sum()
+    }
+
+    /// Row marginal over `n` source atoms.
+    pub fn row_marginal(&self, n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n];
+        for &(i, _, m) in &self.entries {
+            out[i as usize] += m;
+        }
+        out
+    }
+
+    pub fn col_marginal(&self, m: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m];
+        for &(_, j, w) in &self.entries {
+            out[j as usize] += w;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_supports_identity_plan() {
+        let xs = [0.0, 1.0, 2.0];
+        let w = [1.0 / 3.0; 3];
+        let plan = emd1d(&xs, &w, &xs, &w);
+        assert_eq!(plan.entries.len(), 3);
+        assert!(plan.cost.abs() < 1e-15);
+        for &(i, j, m) in &plan.entries {
+            assert_eq!(i, j);
+            assert!((m - 1.0 / 3.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn unsorted_input_handled() {
+        let xs = [2.0, 0.0, 1.0];
+        let ys = [1.0, 2.0, 0.0];
+        let w = [1.0 / 3.0; 3];
+        let plan = emd1d(&xs, &w, &ys, &w);
+        assert!(plan.cost.abs() < 1e-15);
+        // 2.0 must map to 2.0 etc.
+        for &(i, j, _) in &plan.entries {
+            assert_eq!(xs[i as usize], ys[j as usize]);
+        }
+    }
+
+    #[test]
+    fn shifted_supports_cost() {
+        // Transport uniform on {0,1} to uniform on {1,2}: monotone plan
+        // moves each atom by 1 -> cost = 1.
+        let plan = emd1d(&[0.0, 1.0], &[0.5, 0.5], &[1.0, 2.0], &[0.5, 0.5]);
+        assert!((plan.cost - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mass_splitting() {
+        // One atom of mass 1 vs two atoms of mass 0.5: split.
+        let plan = emd1d(&[0.0], &[1.0], &[-1.0, 1.0], &[0.5, 0.5]);
+        assert_eq!(plan.entries.len(), 2);
+        assert!((plan.cost - 1.0).abs() < 1e-15);
+        assert!((plan.total_mass() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn marginals_are_exact() {
+        let xs = [0.3, 0.1, 0.9, 0.5];
+        let ys = [0.2, 0.8, 0.4];
+        let a = [0.1, 0.4, 0.3, 0.2];
+        let b = [0.5, 0.25, 0.25];
+        let plan = emd1d(&xs, &a, &ys, &b);
+        for (g, w) in plan.row_marginal(4).iter().zip(&a) {
+            assert!((g - w).abs() < 1e-12);
+        }
+        for (g, w) in plan.col_marginal(3).iter().zip(&b) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn presorted_matches_general() {
+        let xs = [0.0, 0.2, 0.5, 0.9];
+        let ys = [0.1, 0.4, 0.8];
+        let a = [0.25; 4];
+        let b = [0.5, 0.25, 0.25];
+        let p1 = emd1d(&xs, &a, &ys, &b);
+        let p2 = emd1d_presorted(&xs, &a, &ys, &b);
+        assert!((p1.cost - p2.cost).abs() < 1e-15);
+        assert_eq!(p1.entries.len(), p2.entries.len());
+    }
+
+    #[test]
+    fn zero_mass_atoms_skipped() {
+        let plan = emd1d(&[0.0, 5.0, 1.0], &[0.5, 0.0, 0.5], &[0.0, 1.0], &[0.5, 0.5]);
+        assert!(plan.cost.abs() < 1e-15);
+        assert!(plan.entries.iter().all(|&(i, _, _)| i != 1));
+    }
+
+    #[test]
+    fn support_size_bound() {
+        let n = 50;
+        let xs: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let ys: Vec<f64> = (0..n).map(|i| i as f64 * 1.1).collect();
+        let a = vec![1.0 / n as f64; n];
+        let plan = emd1d(&xs, &a, &ys, &a);
+        assert!(plan.entries.len() <= 2 * n - 1);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let plan = emd1d(&[], &[], &[0.0], &[1.0]);
+        assert!(plan.entries.is_empty());
+    }
+}

@@ -1,0 +1,56 @@
+//! Optimal transport solvers — the substrate the GW framework stands on.
+//!
+//! * [`emd1d`] — exact 1-D optimal transport in O(k log k) (Proposition 3's
+//!   local linear matching engine).
+//! * [`sinkhorn`] — entropic regularized OT, scaling and log-domain forms.
+//! * [`emd`] — exact EMD via the network simplex on the transportation
+//!   polytope (the role POT plays for the paper's global alignments).
+
+mod emd;
+mod emd1d;
+mod sinkhorn;
+
+pub use emd::{emd, EmdResult};
+pub use emd1d::{emd1d, emd1d_presorted, Plan1d};
+pub use sinkhorn::{round_to_coupling, sinkhorn, sinkhorn_log, SinkhornOptions, SinkhornResult};
+
+use crate::core::DenseMatrix;
+
+/// Verify `plan` is a coupling of `(a, b)` within `tol` (test helper and
+/// runtime debug assertion).
+pub fn check_coupling(plan: &DenseMatrix, a: &[f64], b: &[f64], tol: f64) -> bool {
+    if plan.rows() != a.len() || plan.cols() != b.len() {
+        return false;
+    }
+    let rs = plan.row_sums();
+    let cs = plan.col_sums();
+    rs.iter().zip(a).all(|(x, y)| (x - y).abs() <= tol)
+        && cs.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+        && plan.as_slice().iter().all(|&x| x >= -tol)
+}
+
+/// Transport cost `<cost, plan>`.
+pub fn transport_cost(cost: &DenseMatrix, plan: &DenseMatrix) -> f64 {
+    cost.dot(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_coupling_accepts_product() {
+        let a = vec![0.5, 0.5];
+        let b = vec![0.25, 0.75];
+        let p = DenseMatrix::outer(&a, &b);
+        assert!(check_coupling(&p, &a, &b, 1e-12));
+    }
+
+    #[test]
+    fn check_coupling_rejects_bad_marginal() {
+        let a = vec![0.5, 0.5];
+        let b = vec![0.25, 0.75];
+        let p = DenseMatrix::identity(2);
+        assert!(!check_coupling(&p, &a, &b, 1e-9));
+    }
+}

@@ -1,0 +1,243 @@
+//! Pointed-partition construction (the preprocessing step of qGW).
+//!
+//! The paper's heuristics (§2.2):
+//! * **point clouds** — sample `m` representatives uniformly without
+//!   replacement, take the Voronoi partition ([`voronoi_partition`]);
+//!   optionally refine with k-means++ style reseeding ([`kmeans_partition`]).
+//! * **graphs** — Fluid community detection for blocks, maximum PageRank
+//!   within each block for representatives ([`fluid_partition`]).
+//!
+//! Every constructor returns a [`QuantizedSpace`]: the dense `m x m`
+//! representative matrix plus per-point anchor distances — O(m^2 + N)
+//! memory, never the full matrix.
+
+mod kmeans;
+
+pub use kmeans::kmeans_partition;
+
+use crate::core::{DenseMatrix, MmSpace, PointCloud, QuantizedSpace};
+use crate::graph::{fluid_communities, pagerank, Graph};
+use crate::metric::{euclidean_rep_matrix, geodesic_rep_matrix};
+use crate::prng::{choose_k, Rng};
+
+/// Random-representative Voronoi partition of a Euclidean point cloud.
+/// O(N m) distance evaluations, O(m^2 + N) memory.
+pub fn voronoi_partition<R: Rng>(cloud: &PointCloud, m: usize, rng: &mut R) -> QuantizedSpace {
+    let n = cloud.len();
+    assert!(m >= 1 && m <= n);
+    let reps = choose_k(n, m, rng);
+    voronoi_from_reps(cloud, reps)
+}
+
+/// Voronoi partition with explicit representatives (used by k-means and by
+/// tests that need deterministic blocks).
+pub fn voronoi_from_reps(cloud: &PointCloud, reps: Vec<usize>) -> QuantizedSpace {
+    let n = cloud.len();
+    let _m = reps.len();
+    let mut block_of = vec![0u32; n];
+    let mut anchor = vec![0.0f64; n];
+    for i in 0..n {
+        let mut best = 0usize;
+        let mut bd = f64::INFINITY;
+        for (p, &r) in reps.iter().enumerate() {
+            let d = cloud.sqdist(i, r);
+            if d < bd {
+                bd = d;
+                best = p;
+            }
+        }
+        block_of[i] = best as u32;
+        anchor[i] = bd.sqrt();
+    }
+    // A representative always belongs to its own block (distance 0), but
+    // ties between coincident reps could misassign — pin them explicitly.
+    for (p, &r) in reps.iter().enumerate() {
+        block_of[r] = p as u32;
+        anchor[r] = 0.0;
+    }
+    let rep_d = euclidean_rep_matrix(cloud, &reps);
+    QuantizedSpace::new(reps, rep_d, block_of, anchor, cloud.measure().to_vec())
+}
+
+/// Graph partition: Fluid communities for blocks, max-PageRank node as each
+/// block's representative, geodesic metric from representatives only.
+pub fn fluid_partition<R: Rng>(g: &Graph, measure: &[f64], m: usize, rng: &mut R) -> QuantizedSpace {
+    let n = g.num_nodes();
+    assert_eq!(measure.len(), n);
+    assert!(m >= 1 && m <= n);
+    let com = fluid_communities(g, m, 100, rng);
+    let k = (*com.iter().max().unwrap() as usize) + 1;
+    let pr = pagerank(g, 0.85, 1e-10, 100);
+
+    // Representative = argmax PageRank within each community.
+    let mut rep_of_block = vec![usize::MAX; k];
+    let mut best_pr = vec![f64::NEG_INFINITY; k];
+    for v in 0..n {
+        let c = com[v] as usize;
+        if pr[v] > best_pr[c] {
+            best_pr[c] = pr[v];
+            rep_of_block[c] = v;
+        }
+    }
+    let reps: Vec<usize> = rep_of_block.into_iter().collect();
+    let (rep_d, rows) = geodesic_rep_matrix(g, &reps);
+
+    // Anchor distances from each node to its own block's representative.
+    // Nodes unreachable from their representative (shouldn't happen on
+    // connected meshes) are reassigned to the nearest reachable rep.
+    let mut block_of: Vec<u32> = com.clone();
+    let mut anchor = vec![0.0f64; n];
+    for v in 0..n {
+        let c = block_of[v] as usize;
+        let mut d = rows[c][v];
+        if !d.is_finite() {
+            let (bc, bd) = (0..k)
+                .map(|p| (p, rows[p][v]))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            block_of[v] = bc as u32;
+            d = bd;
+            assert!(d.is_finite(), "node {v} unreachable from all representatives");
+        }
+        anchor[v] = d;
+    }
+    for (p, &r) in reps.iter().enumerate() {
+        block_of[r] = p as u32;
+        anchor[r] = 0.0;
+    }
+    QuantizedSpace::new(reps, rep_d, block_of, anchor, measure.to_vec())
+}
+
+/// Quantize an arbitrary dense mm-space by random reps + Voronoi (used by
+/// MREC recursion and the property tests).
+pub fn dense_voronoi_partition<R: Rng>(
+    space: &dyn MmSpace,
+    m: usize,
+    rng: &mut R,
+) -> QuantizedSpace {
+    let n = space.len();
+    assert!(m >= 1 && m <= n);
+    let reps = choose_k(n, m, rng);
+    let mut block_of = vec![0u32; n];
+    let mut anchor = vec![0.0f64; n];
+    for i in 0..n {
+        let mut best = 0usize;
+        let mut bd = f64::INFINITY;
+        for (p, &r) in reps.iter().enumerate() {
+            let d = space.dist(i, r);
+            if d < bd {
+                bd = d;
+                best = p;
+            }
+        }
+        block_of[i] = best as u32;
+        anchor[i] = bd;
+    }
+    for (p, &r) in reps.iter().enumerate() {
+        block_of[r] = p as u32;
+        anchor[r] = 0.0;
+    }
+    let rep_d = DenseMatrix::from_fn(m, m, |p, q| space.dist(reps[p], reps[q]));
+    QuantizedSpace::new(reps, rep_d, block_of, anchor, space.measure().to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::DenseSpace;
+    use crate::prng::Pcg32;
+
+    fn grid_cloud(side: usize) -> PointCloud {
+        let mut coords = Vec::new();
+        for i in 0..side {
+            for j in 0..side {
+                coords.push(i as f64);
+                coords.push(j as f64);
+            }
+        }
+        PointCloud::new(coords, 2)
+    }
+
+    #[test]
+    fn voronoi_covers_everything() {
+        let cloud = grid_cloud(10);
+        let mut rng = Pcg32::seed_from(1);
+        let q = voronoi_partition(&cloud, 7, &mut rng);
+        assert_eq!(q.num_blocks(), 7);
+        assert_eq!(q.num_points(), 100);
+        let total: usize = (0..7).map(|p| q.block(p).len()).sum();
+        assert_eq!(total, 100);
+        assert!((q.rep_measure().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn voronoi_assigns_nearest() {
+        let cloud = PointCloud::new(vec![0.0, 0.0, 10.0, 0.0, 1.0, 0.0, 9.0, 0.0], 2);
+        let q = voronoi_from_reps(&cloud, vec![0, 1]);
+        assert_eq!(q.block_of(2), 0); // (1,0) nearer to (0,0)
+        assert_eq!(q.block_of(3), 1); // (9,0) nearer to (10,0)
+        assert!((q.anchor_dist(2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_partition_m_equals_n() {
+        let cloud = grid_cloud(4);
+        let mut rng = Pcg32::seed_from(2);
+        let q = voronoi_partition(&cloud, 16, &mut rng);
+        assert_eq!(q.num_blocks(), 16);
+        assert!(q.quantized_eccentricity() < 1e-12);
+    }
+
+    #[test]
+    fn fluid_partition_mesh() {
+        // 2-D grid graph 8x8.
+        let side = 8;
+        let mut edges = Vec::new();
+        for i in 0..side {
+            for j in 0..side {
+                let u = i * side + j;
+                if j + 1 < side {
+                    edges.push((u, u + 1, 1.0));
+                }
+                if i + 1 < side {
+                    edges.push((u, u + side, 1.0));
+                }
+            }
+        }
+        let g = Graph::from_edges(side * side, &edges);
+        let measure = crate::core::uniform_measure(side * side);
+        let mut rng = Pcg32::seed_from(3);
+        let q = fluid_partition(&g, &measure, 4, &mut rng);
+        assert!(q.num_blocks() >= 2 && q.num_blocks() <= 4);
+        assert_eq!(q.num_points(), 64);
+        // Anchor distances are geodesic: integers on a unit grid.
+        for v in 0..64 {
+            assert!((q.anchor_dist(v).round() - q.anchor_dist(v)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_partition_matches_euclidean() {
+        let cloud = grid_cloud(5);
+        let dense = DenseSpace::from_space(&cloud);
+        let mut rng1 = Pcg32::seed_from(7);
+        let mut rng2 = Pcg32::seed_from(7);
+        let q1 = voronoi_partition(&cloud, 5, &mut rng1);
+        let q2 = dense_voronoi_partition(&dense, 5, &mut rng2);
+        assert_eq!(q1.rep_ids(), q2.rep_ids());
+        for i in 0..25 {
+            assert_eq!(q1.block_of(i), q2.block_of(i));
+            assert!((q1.anchor_dist(i) - q2.anchor_dist(i)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eccentricity_decreases_with_m() {
+        let cloud = grid_cloud(12);
+        let mut rng = Pcg32::seed_from(11);
+        let q_small = voronoi_partition(&cloud, 4, &mut rng);
+        let mut rng = Pcg32::seed_from(11);
+        let q_large = voronoi_partition(&cloud, 60, &mut rng);
+        assert!(q_large.quantized_eccentricity() < q_small.quantized_eccentricity());
+    }
+}

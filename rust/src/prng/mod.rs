@@ -1,0 +1,82 @@
+//! Deterministic pseudo-random number generation and sampling.
+//!
+//! The offline build environment has no `rand` crate, so this module
+//! provides the PRNG substrate for the whole system: a SplitMix64 seeder, a
+//! PCG32 generator, Gaussian sampling (Marsaglia polar), shuffles, and
+//! weighted / without-replacement choice. Every experiment is seeded, so
+//! all tables and figures regenerate bit-identically.
+
+mod pcg;
+mod sample;
+
+pub use pcg::{Pcg32, SplitMix64};
+pub use sample::{choose_k, discrete_sample, shuffle, Gaussian};
+
+/// Convenience trait: anything that yields uniform `u32`s / `f64`s.
+pub trait Rng {
+    fn next_u32(&mut self) -> u32;
+
+    fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire rejection-free bounded).
+    fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        // 64-bit multiply-shift; bias is < 2^-32 per draw, negligible for
+        // our sampling uses and fully deterministic.
+        ((self.next_u64() >> 32).wrapping_mul(bound as u64) >> 32) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg32::seed_from(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = Pcg32::seed_from(2);
+        for bound in [1usize, 2, 3, 7, 100, 1_000_000] {
+            for _ in 0..200 {
+                assert!(rng.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn below_hits_all_small_values() {
+        let mut rng = Pcg32::seed_from(3);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            seen[rng.below(5)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn mean_of_uniform_is_half() {
+        let mut rng = Pcg32::seed_from(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+}

@@ -1,0 +1,118 @@
+//! PCG32 (O'Neill 2014) and SplitMix64 (Steele et al. 2014) generators.
+
+use super::Rng;
+
+/// SplitMix64 — used to expand a single `u64` seed into PCG state, and as a
+/// cheap standalone generator for non-statistical uses (hash mixing).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+impl Rng for SplitMix64 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next() >> 32) as u32
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.next()
+    }
+}
+
+/// PCG-XSH-RR 64/32: the workhorse generator for all experiments.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    const MULT: u64 = 6_364_136_223_846_793_005;
+
+    /// Seed both state and stream from a single `u64` via SplitMix64.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self::new(sm.next(), sm.next())
+    }
+
+    pub fn new(init_state: u64, init_seq: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (init_seq << 1) | 1 };
+        rng.step();
+        rng.state = rng.state.wrapping_add(init_state);
+        rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+    }
+
+    /// Derive an independent child stream (for per-thread / per-block rngs).
+    pub fn split(&mut self) -> Pcg32 {
+        Pcg32::new(self.next_u64(), self.next_u64())
+    }
+}
+
+impl Rng for Pcg32 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.step();
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_reference_sequence_is_stable() {
+        // Regression pin: reproducibility of every experiment hangs on this.
+        let mut rng = Pcg32::seed_from(42);
+        let seq: Vec<u32> = (0..4).map(|_| rng.next_u32()).collect();
+        let mut rng2 = Pcg32::seed_from(42);
+        let seq2: Vec<u32> = (0..4).map(|_| rng2.next_u32()).collect();
+        assert_eq!(seq, seq2);
+        let mut rng3 = Pcg32::seed_from(43);
+        assert_ne!(seq, (0..4).map(|_| rng3.next_u32()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn splitmix_known_values() {
+        // Vectors from the reference SplitMix64 implementation, seed=0.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn split_streams_are_decorrelated() {
+        let mut parent = Pcg32::seed_from(7);
+        let mut a = parent.split();
+        let mut b = parent.split();
+        let xs: Vec<u32> = (0..64).map(|_| a.next_u32()).collect();
+        let ys: Vec<u32> = (0..64).map(|_| b.next_u32()).collect();
+        assert_ne!(xs, ys);
+    }
+}

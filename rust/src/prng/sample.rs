@@ -1,0 +1,137 @@
+//! Sampling utilities built on the [`Rng`] trait: Gaussian draws, shuffles,
+//! uniform-without-replacement, and weighted discrete sampling.
+
+use super::Rng;
+
+/// Marsaglia polar method Gaussian sampler (caches the spare deviate).
+#[derive(Clone, Debug, Default)]
+pub struct Gaussian {
+    spare: Option<f64>,
+}
+
+impl Gaussian {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn sample<R: Rng>(&mut self, rng: &mut R) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+}
+
+/// Fisher-Yates in-place shuffle.
+pub fn shuffle<T, R: Rng>(items: &mut [T], rng: &mut R) {
+    for i in (1..items.len()).rev() {
+        let j = rng.below(i + 1);
+        items.swap(i, j);
+    }
+}
+
+/// Choose `k` distinct indices from `0..n` uniformly (partial Fisher-Yates;
+/// O(n) memory, O(k) swaps — fine for the sizes we partition).
+pub fn choose_k<R: Rng>(n: usize, k: usize, rng: &mut R) -> Vec<usize> {
+    assert!(k <= n, "cannot choose {k} of {n}");
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx
+}
+
+/// Sample an index proportionally to non-negative `weights`.
+pub fn discrete_sample<R: Rng>(weights: &[f64], rng: &mut R) -> usize {
+    let total: f64 = weights.iter().sum();
+    debug_assert!(total > 0.0, "discrete_sample needs positive total mass");
+    let mut target = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        target -= w;
+        if target <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg32::seed_from(11);
+        let mut g = Gaussian::new();
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seed_from(12);
+        let mut v: Vec<usize> = (0..100).collect();
+        shuffle(&mut v, &mut rng);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct_and_in_range() {
+        let mut rng = Pcg32::seed_from(13);
+        let picks = choose_k(1000, 50, &mut rng);
+        assert_eq!(picks.len(), 50);
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 50);
+        assert!(picks.iter().all(|&p| p < 1000));
+    }
+
+    #[test]
+    fn choose_all_returns_everything() {
+        let mut rng = Pcg32::seed_from(14);
+        let mut picks = choose_k(10, 10, &mut rng);
+        picks.sort_unstable();
+        assert_eq!(picks, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn discrete_sample_respects_weights() {
+        let mut rng = Pcg32::seed_from(15);
+        let weights = [0.0, 10.0, 0.0, 1.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..11_000 {
+            counts[discrete_sample(&weights, &mut rng)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[2], 0);
+        let ratio = counts[1] as f64 / counts[3] as f64;
+        assert!((ratio - 10.0).abs() < 1.5, "ratio={ratio}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn choose_k_too_many_panics() {
+        let mut rng = Pcg32::seed_from(16);
+        choose_k(3, 4, &mut rng);
+    }
+}

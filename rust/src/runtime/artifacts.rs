@@ -1,0 +1,162 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` lines: `name kind m inner_iters path`
+//! (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ArtifactKind {
+    EgwStep,
+    FgwStep,
+    GwLoss,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "egw_step" => Self::EgwStep,
+            "fgw_step" => Self::FgwStep,
+            "gw_loss" => Self::GwLoss,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub m: usize,
+    pub inner_iters: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest: artifacts indexed by (kind, bucket).
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    by_key: BTreeMap<(ArtifactKind, usize), Artifact>,
+}
+
+impl Manifest {
+    /// Load from an artifacts directory; `Ok(None)` when the directory or
+    /// manifest is absent (the caller falls back to the pure-Rust path).
+    pub fn load(dir: &Path) -> Result<Option<Self>> {
+        let manifest_path = dir.join("manifest.txt");
+        if !manifest_path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}"))?;
+        let mut by_key = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            let kind = ArtifactKind::parse(parts[1])?;
+            let m: usize = parts[2].parse().context("bucket size")?;
+            let inner_iters: usize = parts[3].parse().context("inner iters")?;
+            let path = dir.join(parts[4]);
+            if !path.exists() {
+                bail!("artifact file missing: {path:?}");
+            }
+            by_key.insert(
+                (kind, m),
+                Artifact { name: parts[0].to_string(), kind, m, inner_iters, path },
+            );
+        }
+        Ok(Some(Self { by_key }))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    /// Smallest bucket >= `m` for `kind`.
+    pub fn bucket_for(&self, kind: ArtifactKind, m: usize) -> Option<&Artifact> {
+        self.by_key
+            .range((kind, m)..)
+            .take_while(|((k, _), _)| *k == kind)
+            .map(|(_, a)| a)
+            .next()
+    }
+
+    pub fn buckets(&self, kind: ArtifactKind) -> Vec<usize> {
+        self.by_key.keys().filter(|(k, _)| *k == kind).map(|(_, m)| *m).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Artifact> {
+        self.by_key.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, lines: &[&str], files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        for f in files {
+            std::fs::File::create(dir.join(f)).unwrap().write_all(b"HloModule x").unwrap();
+        }
+        std::fs::write(dir.join("manifest.txt"), lines.join("\n")).unwrap();
+    }
+
+    #[test]
+    fn parses_and_buckets() {
+        let dir = std::env::temp_dir().join("qgw_manifest_test1");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(
+            &dir,
+            &[
+                "egw_step_m32 egw_step 32 50 a.hlo.txt",
+                "egw_step_m128 egw_step 128 50 b.hlo.txt",
+                "gw_loss_m32 gw_loss 32 50 c.hlo.txt",
+            ],
+            &["a.hlo.txt", "b.hlo.txt", "c.hlo.txt"],
+        );
+        let m = Manifest::load(&dir).unwrap().unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.bucket_for(ArtifactKind::EgwStep, 16).unwrap().m, 32);
+        assert_eq!(m.bucket_for(ArtifactKind::EgwStep, 33).unwrap().m, 128);
+        assert_eq!(m.bucket_for(ArtifactKind::EgwStep, 128).unwrap().m, 128);
+        assert!(m.bucket_for(ArtifactKind::EgwStep, 129).is_none());
+        assert!(m.bucket_for(ArtifactKind::FgwStep, 8).is_none());
+    }
+
+    #[test]
+    fn absent_dir_is_none() {
+        let dir = std::env::temp_dir().join("qgw_manifest_absent");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("qgw_manifest_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(&dir, &["x egw_step 32 50 gone.hlo.txt"], &[]);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        let dir = std::env::temp_dir().join("qgw_manifest_test3");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(&dir, &["only three fields"], &[]);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

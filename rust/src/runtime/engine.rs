@@ -1,0 +1,334 @@
+//! The XLA execution engine: compiles manifest artifacts on the PJRT CPU
+//! client (lazily, one executable per (kind, bucket)) and exposes the
+//! entropic-GW / FGW outer step to the coordinator. Implements
+//! [`GlobalAligner`] so the qGW pipeline can swap it in for the pure-Rust
+//! solver transparently.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::core::DenseMatrix;
+use crate::gw::{gw_loss, product_coupling, GwOptions, GwResult};
+use crate::qgw::GlobalAligner;
+
+use super::artifacts::{Artifact, ArtifactKind, Manifest};
+
+/// Pad a row-major `n x n` matrix into an `m x m` zero matrix (f32).
+pub fn pad_square(src: &DenseMatrix, m: usize) -> Vec<f32> {
+    let n = src.rows();
+    debug_assert!(m >= n);
+    let mut out = vec![0.0f32; m * m];
+    for i in 0..n {
+        let row = src.row(i);
+        for (j, &v) in row.iter().enumerate() {
+            out[i * m + j] = v as f32;
+        }
+    }
+    out
+}
+
+/// Pad a vector with zeros to length `m` (f32).
+pub fn pad_vec(src: &[f64], m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m];
+    for (o, &v) in out.iter_mut().zip(src) {
+        *o = v as f32;
+    }
+    out
+}
+
+/// Extract the leading `n x n` block of a row-major `m x m` f32 buffer.
+pub fn unpad_square(data: &[f32], m: usize, n: usize) -> DenseMatrix {
+    DenseMatrix::from_fn(n, n, |i, j| data[i * m + j] as f64)
+}
+
+/// Lazily-compiled PJRT executables over the artifact manifest.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<(ArtifactKind, usize), xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaEngine {
+    /// Load the manifest and create a CPU PJRT client. `Ok(None)` when no
+    /// artifacts exist (callers fall back to pure Rust).
+    pub fn load(artifacts_dir: &Path) -> Result<Option<Self>> {
+        let Some(manifest) = Manifest::load(artifacts_dir)? else {
+            return Ok(None);
+        };
+        if manifest.is_empty() {
+            return Ok(None);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Some(Self { client, manifest, compiled: Mutex::new(HashMap::new()) }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn artifact(&self, kind: ArtifactKind, m: usize) -> Result<Artifact> {
+        self.manifest
+            .bucket_for(kind, m)
+            .cloned()
+            .ok_or_else(|| anyhow!("no {kind:?} artifact bucket >= {m}"))
+    }
+
+    fn ensure_compiled(&self, artifact: &Artifact) -> Result<()> {
+        let key = (artifact.kind, artifact.m);
+        let mut compiled = self.compiled.lock().unwrap();
+        if compiled.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&artifact.path)
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", artifact.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", artifact.name))?;
+        compiled.insert(key, exe);
+        Ok(())
+    }
+
+    fn lit_square(data: &[f32], m: usize) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(&[m as i64, m as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// One entropic-GW outer step on-device. Inputs are logical size `n`;
+    /// padding to the artifact bucket happens here. Returns `(T', loss)`.
+    pub fn egw_step(
+        &self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        t: &DenseMatrix,
+        eps: f64,
+    ) -> Result<(DenseMatrix, f64)> {
+        let n = cx.rows();
+        let artifact = self.artifact(ArtifactKind::EgwStep, n)?;
+        self.ensure_compiled(&artifact)?;
+        let m = artifact.m;
+        let compiled = self.compiled.lock().unwrap();
+        let exe = compiled.get(&(artifact.kind, m)).unwrap();
+        let inputs = [
+            Self::lit_square(&pad_square(cx, m), m)?,
+            Self::lit_square(&pad_square(cy, m), m)?,
+            xla::Literal::vec1(&pad_vec(a, m)),
+            xla::Literal::vec1(&pad_vec(b, m)),
+            Self::lit_square(&pad_square(t, m), m)?,
+            xla::Literal::from(eps as f32),
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", artifact.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (t_lit, loss_lit) = result.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let t_data = t_lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let loss = loss_lit
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss elem: {e:?}"))? as f64;
+        Ok((unpad_square(&t_data, m, n), loss))
+    }
+
+    /// One fused-GW outer step on-device.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fgw_step(
+        &self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        t: &DenseMatrix,
+        feat_cost: &DenseMatrix,
+        alpha: f64,
+        eps: f64,
+    ) -> Result<(DenseMatrix, f64)> {
+        let n = cx.rows();
+        let artifact = self.artifact(ArtifactKind::FgwStep, n)?;
+        self.ensure_compiled(&artifact)?;
+        let m = artifact.m;
+        let compiled = self.compiled.lock().unwrap();
+        let exe = compiled.get(&(artifact.kind, m)).unwrap();
+        let inputs = [
+            Self::lit_square(&pad_square(cx, m), m)?,
+            Self::lit_square(&pad_square(cy, m), m)?,
+            xla::Literal::vec1(&pad_vec(a, m)),
+            xla::Literal::vec1(&pad_vec(b, m)),
+            Self::lit_square(&pad_square(t, m), m)?,
+            Self::lit_square(&pad_square(feat_cost, m), m)?,
+            xla::Literal::from(alpha as f32),
+            xla::Literal::from(eps as f32),
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", artifact.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (t_lit, loss_lit) = result.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let t_data = t_lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let loss = loss_lit
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss elem: {e:?}"))? as f64;
+        Ok((unpad_square(&t_data, m, n), loss))
+    }
+
+    /// GW loss of a coupling on-device.
+    pub fn gw_loss(
+        &self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        t: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+    ) -> Result<f64> {
+        let n = cx.rows();
+        let artifact = self.artifact(ArtifactKind::GwLoss, n)?;
+        self.ensure_compiled(&artifact)?;
+        let m = artifact.m;
+        let compiled = self.compiled.lock().unwrap();
+        let exe = compiled.get(&(artifact.kind, m)).unwrap();
+        let inputs = [
+            Self::lit_square(&pad_square(cx, m), m)?,
+            Self::lit_square(&pad_square(cy, m), m)?,
+            Self::lit_square(&pad_square(t, m), m)?,
+            xla::Literal::vec1(&pad_vec(a, m)),
+            xla::Literal::vec1(&pad_vec(b, m)),
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", artifact.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let loss_lit = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        Ok(loss_lit
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss elem: {e:?}"))? as f64)
+    }
+}
+
+/// [`GlobalAligner`] over the XLA engine: drives the AOT `egw_step` /
+/// `fgw_step` executables with eps annealing and convergence checks —
+/// the same outer loop as the pure-Rust solver, with the inner math on
+/// the compiled artifacts.
+pub struct XlaAligner<'a> {
+    pub engine: &'a XlaEngine,
+    pub opts: GwOptions,
+}
+
+impl XlaAligner<'_> {
+    fn drive(
+        &self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        feat: Option<(&DenseMatrix, f64)>,
+    ) -> Result<GwResult> {
+        let mut t = product_coupling(a, b);
+        // Same unit-free eps convention as the pure-Rust solvers.
+        let scale = crate::gw::cost_scale(cx, cy, &t, a, b);
+        let mut loss = f64::INFINITY;
+        let mut outer = 0;
+        for &eps in &self.opts.eps_schedule {
+            let eps = eps * scale;
+            for _ in 0..self.opts.outer_iters {
+                let (t_new, l) = match feat {
+                    None => self.engine.egw_step(cx, cy, a, b, &t, eps)?,
+                    Some((fc, alpha)) => {
+                        self.engine.fgw_step(cx, cy, a, b, &t, fc, alpha, eps)?
+                    }
+                };
+                outer += 1;
+                let mut delta = 0.0f64;
+                for (x, y) in t_new.as_slice().iter().zip(t.as_slice()) {
+                    delta = delta.max((x - y).abs());
+                }
+                t = t_new;
+                loss = l;
+                if delta < self.opts.tol {
+                    break;
+                }
+            }
+        }
+        crate::ot::round_to_coupling(&mut t, a, b);
+        Ok(GwResult { plan: t, loss, outer_iters: outer })
+    }
+}
+
+impl GlobalAligner for XlaAligner<'_> {
+    fn align(&self, cx: &DenseMatrix, cy: &DenseMatrix, a: &[f64], b: &[f64]) -> GwResult {
+        match self.drive(cx, cy, a, b, None) {
+            Ok(res) => res,
+            Err(err) => {
+                // Fail soft: the artifact path is an accelerator, not a
+                // correctness dependency. Log and fall back.
+                eprintln!("[qgw] XLA aligner failed ({err:#}); falling back to Rust solver");
+                let res = crate::gw::entropic_gw(cx, cy, a, b, &self.opts);
+                GwResult { loss: gw_loss(cx, cy, &res.plan, a, b), ..res }
+            }
+        }
+    }
+
+    fn align_fused(
+        &self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        feat_cost: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        alpha: f64,
+    ) -> GwResult {
+        match self.drive(cx, cy, a, b, Some((feat_cost, alpha))) {
+            Ok(res) => res,
+            Err(err) => {
+                eprintln!("[qgw] XLA fused aligner failed ({err:#}); falling back");
+                let opts = crate::gw::FgwOptions {
+                    alpha,
+                    eps_schedule: self.opts.eps_schedule.clone(),
+                    outer_iters: self.opts.outer_iters,
+                    inner_iters: self.opts.inner_iters,
+                    tol: self.opts.tol,
+                };
+                crate::gw::entropic_fgw(cx, cy, feat_cost, a, b, &opts)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_roundtrip() {
+        let m = DenseMatrix::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let padded = pad_square(&m, 5);
+        assert_eq!(padded.len(), 25);
+        assert_eq!(padded[0], 0.0);
+        assert_eq!(padded[1], 1.0);
+        assert_eq!(padded[5], 3.0); // row 1 starts at 5
+        assert_eq!(padded[3], 0.0); // padding
+        let back = unpad_square(&padded, 5, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(back.get(i, j), m.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn pad_vec_zero_fills() {
+        let v = pad_vec(&[1.0, 2.0], 4);
+        assert_eq!(v, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    // Engine execution tests live in rust/tests/runtime_integration.rs
+    // (they require `make artifacts` to have run).
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Flow per the /opt/xla-example reference: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. One compiled executable per
+//! (graph kind, padding bucket); problem sizes are padded up to the next
+//! bucket with zero mass (sound because the Layer-1/2 kernels guard
+//! zero-mass rows — see test_model.py::test_padding_invariance and the
+//! pad tests here).
+
+mod artifacts;
+mod engine;
+
+pub use artifacts::{Artifact, ArtifactKind, Manifest};
+pub use engine::{pad_square, pad_vec, unpad_square, XlaAligner, XlaEngine};

@@ -1,0 +1,80 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over `n` seeded random cases; on failure it
+//! reports the failing seed so the case replays deterministically:
+//!
+//! ```
+//! use qgw::testutil::forall;
+//! use qgw::prng::Rng;
+//! forall(100, |rng| {
+//!     let x = rng.next_f64();
+//!     assert!(x >= 0.0 && x < 1.0, "x out of range: {x}");
+//! });
+//! ```
+
+use crate::prng::Pcg32;
+
+/// Run `property` over `cases` seeded RNGs; panics with the failing seed.
+pub fn forall(cases: u64, property: impl Fn(&mut Pcg32) + std::panic::RefUnwindSafe) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg32::seed_from(seed.wrapping_mul(0x9E37_79B9) ^ 0xABCD);
+            property(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at case seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Random probability vector of length `n` with all entries positive.
+pub fn random_measure(rng: &mut Pcg32, n: usize) -> Vec<f64> {
+    use crate::prng::Rng;
+    let mut v: Vec<f64> = (0..n).map(|_| rng.next_f64() + 0.05).collect();
+    let s: f64 = v.iter().sum();
+    for x in &mut v {
+        *x /= s;
+    }
+    v
+}
+
+/// Random point cloud with `n` points in `dim` dimensions.
+pub fn random_cloud(rng: &mut Pcg32, n: usize, dim: usize) -> crate::core::PointCloud {
+    let mut g = crate::prng::Gaussian::new();
+    crate::core::PointCloud::new((0..n * dim).map(|_| g.sample(rng)).collect(), dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, |rng| {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case seed")]
+    fn forall_reports_seed_on_failure() {
+        forall(10, |rng| {
+            assert!(rng.next_f64() < 0.0, "always fails");
+        });
+    }
+
+    #[test]
+    fn random_measure_is_probability() {
+        let mut rng = Pcg32::seed_from(1);
+        let m = random_measure(&mut rng, 17);
+        assert!((m.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(m.iter().all(|&x| x > 0.0));
+    }
+}

@@ -1,0 +1,162 @@
+//! Cross-module integration tests: the full qGW/qFGW pipelines over every
+//! substrate combination (clouds / graphs / features / service), plus the
+//! paper's protocol glue (perturbation, distortion, segment transfer).
+
+use qgw::coordinator::{MatchPipeline, MatchService, Metrics, PipelineInput};
+use qgw::core::{uniform_measure, MmSpace};
+use qgw::data::meshgraph::{mesh_pose, MeshFamily};
+use qgw::data::rooms::generate_room;
+use qgw::data::shapes::{sample_shape, ShapeClass};
+use qgw::eval::{distortion_score, random_transfer_accuracy, segment_transfer_accuracy};
+use qgw::graph::wl_features;
+use qgw::prng::Pcg32;
+use qgw::qgw::{qgw_match, FeatureSet, QgwConfig};
+
+#[test]
+fn table1_protocol_end_to_end() {
+    // The core paper claim at test scale: qGW on a perturbed-permuted
+    // shape achieves low distortion, fast.
+    let mut rng = Pcg32::seed_from(7);
+    let shape = sample_shape(ShapeClass::Spider, 800, &mut rng);
+    let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
+    let res = qgw_match(&shape.cloud, &copy.cloud, &QgwConfig::with_fraction(0.2), &mut rng);
+    let sparse = res.coupling.to_sparse();
+    let distortion = distortion_score(&sparse, &copy.cloud, &copy.ground_truth);
+    assert!(distortion < 0.05, "distortion {distortion}");
+    // Marginals are exact couplings (Proposition 1).
+    assert!(res.coupling.check_marginals(shape.cloud.measure(), copy.cloud.measure()) < 1e-7);
+}
+
+#[test]
+fn distortion_improves_with_sampling_fraction() {
+    // Table 1's qGW trend: larger partition fraction -> lower distortion
+    // (on average; we check coarse 0.02 vs fine 0.3).
+    let mut rng = Pcg32::seed_from(11);
+    let shape = sample_shape(ShapeClass::Tree, 900, &mut rng);
+    let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
+    let score = |frac: f64| {
+        let mut rng = Pcg32::seed_from(13);
+        let res = qgw_match(&shape.cloud, &copy.cloud, &QgwConfig::with_fraction(frac), &mut rng);
+        distortion_score(&res.coupling.to_sparse(), &copy.cloud, &copy.ground_truth)
+    };
+    let coarse = score(0.02);
+    let fine = score(0.3);
+    assert!(fine <= coarse + 0.02, "fine {fine} vs coarse {coarse}");
+}
+
+#[test]
+fn graph_pipeline_with_wl_features() {
+    let a = mesh_pose(MeshFamily::Centaur, 900, 0.0);
+    let b = mesh_pose(MeshFamily::Centaur, 900, 0.2);
+    let n = a.graph.num_nodes();
+    let mu = uniform_measure(n);
+    let h = 3;
+    let fa = FeatureSet::new(wl_features(&a.graph, h), h);
+    let fb = FeatureSet::new(wl_features(&b.graph, h), h);
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(QgwConfig::with_count(24), &metrics);
+    pipe.fused = Some((0.5, 0.75));
+    let report = pipe.run(PipelineInput::Graphs {
+        x: &a.graph,
+        y: &b.graph,
+        mu_x: &mu,
+        mu_y: &mu,
+        fx: Some(&fa),
+        fy: Some(&fb),
+    });
+    assert!(report.result.coupling.check_marginals(&mu, &mu) < 1e-7);
+    // Matching should be far better than random: mean matched geodesic
+    // offset along the tube's parameterization is small.
+    let mut close = 0;
+    for i in (0..n).step_by(7) {
+        if let Some(j) = report.result.coupling.map_point(i) {
+            if a.cloud.dist(i, j) < a.cloud.diameter_estimate() * 0.25 {
+                close += 1;
+            }
+        }
+    }
+    let total = (n + 6) / 7;
+    assert!(close * 2 > total, "only {close}/{total} matches near ground truth");
+}
+
+#[test]
+fn segment_transfer_beats_random() {
+    let mut rng = Pcg32::seed_from(21);
+    let a = sample_shape(ShapeClass::Car, 700, &mut rng);
+    let b = sample_shape(ShapeClass::Car, 700, &mut rng);
+    let cfg = qgw::qgw::QfgwConfig {
+        base: QgwConfig::with_fraction(0.1),
+        alpha: 0.5,
+        beta: 0.75,
+    };
+    let res = qgw::qgw::qfgw_match(&a.cloud, &b.cloud, &a.normals, &b.normals, &cfg, &mut rng);
+    let acc = segment_transfer_accuracy(&res.coupling.to_sparse(), &a.labels, &b.labels);
+    let rand_acc = random_transfer_accuracy(&a.labels, &b.labels, &mut rng);
+    assert!(acc > rand_acc + 0.1, "qFGW {acc} vs random {rand_acc}");
+}
+
+#[test]
+fn rooms_pipeline_small_scale() {
+    // Figure-3 path at integration-test scale: sparse storage only.
+    let source = generate_room(6000, 1, 0);
+    let target = generate_room(5000, 2, 1);
+    let mut rng = Pcg32::seed_from(31);
+    let qx = qgw::partition::voronoi_partition(&source.cloud, 64, &mut rng);
+    let qy = qgw::partition::voronoi_partition(&target.cloud, 64, &mut rng);
+    let cfg = qgw::qgw::QfgwConfig {
+        base: QgwConfig::with_count(64),
+        alpha: 0.5,
+        beta: 0.75,
+    };
+    let res = qgw::qgw::qfgw_match_quantized(
+        &qx,
+        &qy,
+        &source.colors,
+        &target.colors,
+        &cfg,
+        &qgw::qgw::RustAligner(cfg.base.gw.clone()),
+    );
+    let acc = segment_transfer_accuracy(&res.coupling.to_sparse(), &source.labels, &target.labels);
+    let rand_acc = random_transfer_accuracy(&source.labels, &target.labels, &mut rng);
+    assert!(acc > rand_acc, "qFGW {acc} vs random {rand_acc}");
+    // Quantized storage stays O(m^2 + N): far below the dense matrix.
+    let dense_bytes = 6000usize * 6000 * 8;
+    assert!(qx.memory_bytes() < dense_bytes / 20);
+}
+
+#[test]
+fn service_row_queries_match_materialized_coupling() {
+    let mut rng = Pcg32::seed_from(41);
+    let shape = sample_shape(ShapeClass::Plane, 500, &mut rng);
+    let res = qgw_match(&shape.cloud, &shape.cloud, &QgwConfig::with_fraction(0.15), &mut rng);
+    let sparse = res.coupling.to_sparse();
+    let svc = MatchService::new(res.coupling);
+    for i in (0..500).step_by(37) {
+        let row = svc.query(i);
+        let (cols, vals) = sparse.row(i);
+        let total_q: f64 = row.iter().map(|e| e.1).sum();
+        let total_s: f64 = vals.iter().sum();
+        assert!((total_q - total_s).abs() < 1e-12, "row {i} mass mismatch");
+        assert_eq!(row.len(), cols.len(), "row {i} support mismatch");
+    }
+}
+
+#[test]
+fn cli_args_and_experiment_dispatch() {
+    // Unknown experiment errors cleanly.
+    let args = qgw::cli::Args::parse(&["nonsense".to_string()]).unwrap();
+    assert!(qgw::experiments::run_experiment(&args).is_err());
+}
+
+#[test]
+fn config_file_drives_pipeline() {
+    let cfg = qgw::config::Config::parse(
+        "[qgw]\nfraction = 0.25\nouter_iters = 10\neps_schedule = [0.05, 0.01]\n",
+    )
+    .unwrap()
+    .qgw_config();
+    let mut rng = Pcg32::seed_from(51);
+    let shape = sample_shape(ShapeClass::Human, 400, &mut rng);
+    let res = qgw_match(&shape.cloud, &shape.cloud, &cfg, &mut rng);
+    assert!(res.coupling.check_marginals(shape.cloud.measure(), shape.cloud.measure()) < 1e-7);
+}

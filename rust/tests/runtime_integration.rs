@@ -1,0 +1,150 @@
+//! Runtime integration: execute the AOT artifacts through PJRT and check
+//! they agree with the pure-Rust solvers — the end-to-end proof that the
+//! three layers compose. Requires `make artifacts`; tests are skipped
+//! (pass vacuously with a notice) when artifacts are absent.
+
+use qgw::core::{uniform_measure, DenseMatrix, MmSpace, PointCloud};
+use qgw::gw::{entropic_gw, gw_loss, product_coupling, GwOptions};
+use qgw::prng::{Gaussian, Pcg32};
+use qgw::qgw::{qgw_match_quantized, GlobalAligner, QgwConfig};
+use qgw::runtime::{XlaAligner, XlaEngine};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Option<XlaEngine> {
+    match XlaEngine::load(&artifacts_dir()) {
+        Ok(Some(e)) => Some(e),
+        Ok(None) => {
+            eprintln!("[runtime_integration] no artifacts — run `make artifacts`; skipping");
+            None
+        }
+        Err(err) => panic!("artifact manifest broken: {err:#}"),
+    }
+}
+
+fn small_problem(n: usize, seed: u64) -> (DenseMatrix, DenseMatrix, Vec<f64>) {
+    let mut rng = Pcg32::seed_from(seed);
+    let mut g = Gaussian::new();
+    let coords: Vec<f64> = (0..n * 2).map(|_| g.sample(&mut rng)).collect();
+    let pc = PointCloud::new(coords.clone(), 2);
+    let rot: Vec<f64> = coords.chunks(2).flat_map(|p| [p[1], -p[0]]).collect();
+    let pc2 = PointCloud::new(rot, 2);
+    (pc.distance_matrix(), pc2.distance_matrix(), uniform_measure(n))
+}
+
+#[test]
+fn egw_step_executes_and_is_a_coupling_step() {
+    let Some(engine) = engine() else { return };
+    let (cx, cy, a) = small_problem(24, 1);
+    let t0 = product_coupling(&a, &a);
+    let (t1, loss) = engine.egw_step(&cx, &cy, &a, &a, &t0, 0.05).expect("egw_step");
+    assert_eq!(t1.rows(), 24);
+    // The artifact's Sinkhorn ends on a column half-step: column marginals
+    // are exact (f32 rounding); rows carry the remaining Sinkhorn residual
+    // (50 inner iterations at eps below the cost spread).
+    let cs = t1.col_sums();
+    for (c, want) in cs.iter().zip(&a) {
+        assert!((c - want).abs() < 1e-5, "col marginal {c} vs {want}");
+    }
+    let rs = t1.row_sums();
+    for (r, want) in rs.iter().zip(&a) {
+        assert!((r - want).abs() < 0.3 * want, "row marginal {r} vs {want}");
+    }
+    assert!(loss.is_finite() && loss >= 0.0);
+}
+
+#[test]
+fn egw_step_matches_rust_solver_loss() {
+    let Some(engine) = engine() else { return };
+    let (cx, cy, a) = small_problem(32, 2);
+    // Drive both solvers one outer step from the product coupling at the
+    // same *effective* eps and compare losses (f32 vs f64 tolerance).
+    // entropic_gw interprets eps relative to the mean linearized cost
+    // (gw::cost_scale); the raw engine takes absolute eps, so scale here
+    // exactly as XlaAligner::drive does.
+    let t0 = product_coupling(&a, &a);
+    let eps_abs = 0.05 * qgw::gw::cost_scale(&cx, &cy, &t0, &a, &a);
+    let (_, loss_xla) = engine.egw_step(&cx, &cy, &a, &a, &t0, eps_abs).unwrap();
+    let opts = GwOptions { eps_schedule: vec![0.05], outer_iters: 1, inner_iters: 50, tol: 0.0 };
+    let rust = entropic_gw(&cx, &cy, &a, &a, &opts);
+    assert!(
+        (loss_xla - rust.loss).abs() < 0.05 * rust.loss.max(0.1),
+        "xla loss {loss_xla} vs rust {}",
+        rust.loss
+    );
+}
+
+#[test]
+fn padding_bucket_execution_matches_exact_size() {
+    let Some(engine) = engine() else { return };
+    // n=24 pads into the m=32 bucket; n=32 runs exact. A 24-point problem
+    // must produce the same answer whether padded or not — compare the
+    // f64 reference on the same inputs.
+    let (cx, cy, a) = small_problem(24, 3);
+    let t0 = product_coupling(&a, &a);
+    let eps_abs = 0.1 * qgw::gw::cost_scale(&cx, &cy, &t0, &a, &a);
+    let (t_pad, _) = engine.egw_step(&cx, &cy, &a, &a, &t0, eps_abs).unwrap();
+    let opts = GwOptions { eps_schedule: vec![0.1], outer_iters: 1, inner_iters: 50, tol: 0.0 };
+    let rust = entropic_gw(&cx, &cy, &a, &a, &opts);
+    for i in 0..24 {
+        for j in 0..24 {
+            assert!(
+                (t_pad.get(i, j) - rust.plan.get(i, j)).abs() < 2e-3,
+                "({i},{j}): {} vs {}",
+                t_pad.get(i, j),
+                rust.plan.get(i, j)
+            );
+        }
+    }
+}
+
+#[test]
+fn gw_loss_artifact_matches_rust() {
+    let Some(engine) = engine() else { return };
+    let (cx, cy, a) = small_problem(32, 4);
+    let t = product_coupling(&a, &a);
+    let xla = engine.gw_loss(&cx, &cy, &t, &a, &a).unwrap();
+    let rust = gw_loss(&cx, &cy, &t, &a, &a);
+    assert!((xla - rust).abs() < 1e-3 * rust.max(1.0), "{xla} vs {rust}");
+}
+
+#[test]
+fn fgw_step_alpha_zero_matches_egw_step() {
+    let Some(engine) = engine() else { return };
+    let (cx, cy, a) = small_problem(32, 5);
+    let t0 = product_coupling(&a, &a);
+    let feat = DenseMatrix::zeros(32, 32);
+    let (t_f, _) = engine.fgw_step(&cx, &cy, &a, &a, &t0, &feat, 0.0, 0.05).unwrap();
+    let (t_g, _) = engine.egw_step(&cx, &cy, &a, &a, &t0, 0.05).unwrap();
+    for (x, y) in t_f.as_slice().iter().zip(t_g.as_slice()) {
+        assert!((x - y).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn full_qgw_pipeline_through_xla_aligner() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg32::seed_from(6);
+    let shape = qgw::data::shapes::sample_shape(qgw::data::shapes::ShapeClass::Dog, 1200, &mut rng);
+    let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
+    let cfg = QgwConfig::with_count(96); // pads into the m=128 bucket
+    let qx = qgw::partition::voronoi_partition(&shape.cloud, 96, &mut rng);
+    let qy = qgw::partition::voronoi_partition(&copy.cloud, 96, &mut rng);
+    let aligner = XlaAligner { engine: &engine, opts: cfg.gw.clone() };
+    let res = qgw_match_quantized(&qx, &qy, &cfg, &aligner);
+    assert!(res.coupling.check_marginals(shape.cloud.measure(), copy.cloud.measure()) < 1e-7);
+    let sparse = res.coupling.to_sparse();
+    let distortion = qgw::eval::distortion_score(&sparse, &copy.cloud, &copy.ground_truth);
+    assert!(distortion < 0.08, "distortion through XLA path: {distortion}");
+    // And the XLA path agrees with the pure-Rust path end-to-end.
+    let rust_res = qgw_match_quantized(&qx, &qy, &cfg, &qgw::qgw::RustAligner(cfg.gw.clone()));
+    let rust_distortion =
+        qgw::eval::distortion_score(&rust_res.coupling.to_sparse(), &copy.cloud, &copy.ground_truth);
+    assert!(
+        (distortion - rust_distortion).abs() < 0.05,
+        "xla {distortion} vs rust {rust_distortion}"
+    );
+    let _ = aligner.align(qx.rep_dists(), qy.rep_dists(), qx.rep_measure(), qy.rep_measure());
+}

@@ -1,6 +1,9 @@
 //! Bench: regenerate paper Figure 3 (large-scale segment transfer on
 //! ~1M-point rooms; random vs qFGW m=1000 vs m=5000, with memory
-//! accounting for the sparse quantized storage).
+//! accounting for the sparse quantized storage), followed by the
+//! flat-vs-hierarchical qGW comparison at equal leaf resolution — the
+//! hierarchy's rep matrices are O(N/leaf) instead of O((N/leaf)^2), so
+//! peak `memory_bytes` and wall time drop.
 //!
 //! `QGW_BENCH_SCALE=1.0 cargo bench --bench large_scale` reproduces the
 //! full 1,155,072 / 909,312-point experiment.
@@ -10,5 +13,6 @@ mod harness;
 
 fn main() -> anyhow::Result<()> {
     let scale = harness::bench_scale(0.03);
-    qgw::experiments::fig3::run(scale, 7, &mut std::io::stdout())
+    qgw::experiments::fig3::run(scale, 7, &mut std::io::stdout())?;
+    qgw::experiments::fig3::run_hier(scale, 7, &mut std::io::stdout())
 }

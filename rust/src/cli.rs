@@ -2,11 +2,19 @@
 //!
 //! ```text
 //! qgw match      --class dog --n 2000 --fraction 0.1 [--fused A,B] [--seed S]
+//!                [--levels L --leaf-size K]   # L>1: hierarchical qGW
 //! qgw experiment table1|table2|fig1|fig2|fig3|fig4|scaling [--scale F] [--full]
 //! qgw serve      --class dog --n 5000 --fraction 0.1 --addr 127.0.0.1:7979
 //! qgw artifacts  [--dir artifacts]     # report loaded AOT artifacts
 //! qgw info
 //! ```
+//!
+//! Hierarchy flags (`match`/`serve`, point clouds): `--levels L` runs the
+//! multi-level recursion of [`crate::qgw::hier_qgw_match`] (supported
+//! block pairs re-quantized by qGW down to `--leaf-size K`-point leaves,
+//! default 64). With `--levels 1` (default) flat qGW runs unchanged. Large
+//! inputs want `--m` near `(N / K)^(1/L)` per level — see
+//! [`crate::qgw::balanced_m`].
 
 use std::collections::BTreeMap;
 
@@ -112,6 +120,8 @@ fn build_config(args: &Args) -> Result<QgwConfig> {
         cfg.kmeans = true;
     }
     cfg.num_threads = args.usize_or("threads", cfg.num_threads)?;
+    cfg.levels = args.usize_or("levels", cfg.levels)?.max(1);
+    cfg.leaf_size = args.usize_or("leaf-size", cfg.leaf_size)?.max(1);
     Ok(cfg)
 }
 
@@ -152,7 +162,14 @@ fn cmd_match(args: &Args) -> Result<()> {
 
     let sparse = report.result.coupling.to_sparse();
     let distortion = distortion_score(&sparse, &copy.cloud, &copy.ground_truth);
-    println!("class={} n={n} m={}x{}", class.name(), report.m_x, report.m_y);
+    println!(
+        "class={} n={n} m={}x{} levels={} leaf={}",
+        class.name(),
+        report.m_x,
+        report.m_y,
+        report.levels,
+        report.leaf_size
+    );
     println!(
         "distortion={distortion:.4} rep_gw_loss={:.6} local_matchings={}",
         report.result.gw_loss, report.result.num_local_matchings
@@ -245,7 +262,13 @@ fn print_usage() {
            serve       compute a matching and serve row queries over TCP\n\
            query       client for serve (QUERY/MAP rows by point id)\n\
            artifacts   report AOT artifacts available to the runtime\n\
-           info        this message"
+           info        this message\n\
+         \n\
+         hierarchy flags (match/serve, point clouds):\n\
+           --levels L     quantization levels (default 1 = flat qGW; L>1 recursively\n\
+                          re-quantizes supported block pairs with qGW at every node)\n\
+           --leaf-size K  block pairs at or below K points use the exact 1-D leaf\n\
+                          matching (default 64); pick --m near (N/K)^(1/L)"
     );
 }
 

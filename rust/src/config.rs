@@ -142,6 +142,8 @@ impl Config {
             },
             mass_threshold: self.f64_or("qgw.mass_threshold", 1e-9),
             num_threads: self.usize_or("qgw.threads", 0),
+            levels: self.usize_or("qgw.levels", 1).max(1),
+            leaf_size: self.usize_or("qgw.leaf_size", 64).max(1),
         }
     }
 }
@@ -234,6 +236,22 @@ full = false
     fn explicit_m_wins() {
         let c = Config::parse("[qgw]\nm = 500\n").unwrap();
         assert!(matches!(c.qgw_config().size, PartitionSize::Count(500)));
+    }
+
+    #[test]
+    fn hierarchy_knobs_parse_and_default() {
+        let c = Config::parse("[qgw]\nlevels = 3\nleaf_size = 300\n").unwrap();
+        let q = c.qgw_config();
+        assert_eq!(q.levels, 3);
+        assert_eq!(q.leaf_size, 300);
+        // Defaults: flat qGW.
+        let d = Config::parse("").unwrap().qgw_config();
+        assert_eq!(d.levels, 1);
+        assert_eq!(d.leaf_size, 64);
+        // Zero is clamped to a sane floor.
+        let z = Config::parse("[qgw]\nlevels = 0\nleaf_size = 0\n").unwrap().qgw_config();
+        assert_eq!(z.levels, 1);
+        assert_eq!(z.leaf_size, 1);
     }
 
     #[test]

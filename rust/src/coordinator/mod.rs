@@ -12,5 +12,5 @@ mod service;
 
 pub use metrics::{Metrics, StageTimer};
 pub use pipeline::{MatchPipeline, PipelineInput, PipelineReport};
-pub use pool::{parallel_map, ThreadPool};
+pub use pool::{effective_threads, parallel_map, ThreadPool};
 pub use service::MatchService;

@@ -1,16 +1,24 @@
 //! The end-to-end match pipeline: partition → global align → local fan-out
 //! → assemble, with per-stage timing — the orchestration layer the CLI,
 //! examples, and benches drive.
+//!
+//! When `qgw.levels > 1` and the input is a point-cloud pair, the local
+//! stage runs the hierarchical recursion
+//! ([`crate::qgw::hier_qgw_match_quantized`]) over the same top-level
+//! partition instead of the flat 1-D local matchings. Fused matching and
+//! graph inputs keep the flat path (hierarchy for those substrates is an
+//! open item), as does an explicit `aligner` override (the recursion
+//! requires a `Sync` aligner and drives the pure-Rust solver).
 
 use std::time::Instant;
 
 use crate::core::{PointCloud, QuantizedSpace};
 use crate::graph::Graph;
-use crate::partition::{fluid_partition, kmeans_partition, voronoi_partition};
-use crate::prng::Pcg32;
+use crate::partition::{fluid_partition, partition_cloud, voronoi_partition};
+use crate::prng::{Pcg32, Rng};
 use crate::qgw::{
-    qfgw_match_quantized, qgw_match_quantized, FeatureSet, GlobalAligner, QfgwConfig, QgwConfig,
-    QgwResult, RustAligner,
+    hier_qgw_match_quantized, qfgw_match_quantized, qgw_match_quantized, FeatureSet,
+    GlobalAligner, QfgwConfig, QgwConfig, QgwResult, RustAligner,
 };
 
 use super::Metrics;
@@ -43,6 +51,12 @@ pub struct PipelineReport {
     pub total_secs: f64,
     pub m_x: usize,
     pub m_y: usize,
+    /// Quantization levels that actually ran (1 = flat qGW, including the
+    /// fused/graph/aligner-override fallbacks).
+    pub levels: usize,
+    /// Leaf size of the hierarchical recursion (meaningful when
+    /// `levels > 1`).
+    pub leaf_size: usize,
 }
 
 /// Configurable qGW/qFGW pipeline with stage metrics.
@@ -67,6 +81,18 @@ impl<'a> MatchPipeline<'a> {
         let rust_aligner = RustAligner(self.qgw.gw.clone());
         let aligner: &dyn GlobalAligner = self.aligner.unwrap_or(&rust_aligner);
 
+        // Hierarchical recursion needs the raw clouds (to re-quantize
+        // blocks) and a Sync aligner; it applies to plain point-cloud
+        // matching only.
+        let hier_clouds: Option<(&PointCloud, &PointCloud)> = match &input {
+            PipelineInput::Clouds { x, y }
+                if self.qgw.levels > 1 && self.fused.is_none() && self.aligner.is_none() =>
+            {
+                Some((*x, *y))
+            }
+            _ => None,
+        };
+
         // --- Stage 1: partition -----------------------------------------
         let part_start = Instant::now();
         let (qx, qy, fx, fy): (QuantizedSpace, QuantizedSpace, Option<&FeatureSet>, Option<&FeatureSet>) =
@@ -74,11 +100,8 @@ impl<'a> MatchPipeline<'a> {
                 PipelineInput::Clouds { x, y } => {
                     let mx = self.qgw.size.resolve(x.len());
                     let my = self.qgw.size.resolve(y.len());
-                    let (qx, qy) = if self.qgw.kmeans {
-                        (kmeans_partition(x, mx, 8, &mut rng), kmeans_partition(y, my, 8, &mut rng))
-                    } else {
-                        (voronoi_partition(x, mx, &mut rng), voronoi_partition(y, my, &mut rng))
-                    };
+                    let qx = partition_cloud(x, mx, self.qgw.kmeans, &mut rng);
+                    let qy = partition_cloud(y, my, self.qgw.kmeans, &mut rng);
                     (qx, qy, None, None)
                 }
                 PipelineInput::CloudsWithFeatures { x, y, fx, fy } => {
@@ -107,12 +130,29 @@ impl<'a> MatchPipeline<'a> {
 
         // --- Stages 2+3: align + assemble (timed inside qgw) -------------
         let global_start = Instant::now();
+        let mut levels_ran = 1;
         let result = match (self.fused, fx, fy) {
             (Some((alpha, beta)), Some(fx), Some(fy)) => {
                 let cfg = QfgwConfig { base: self.qgw.clone(), alpha, beta };
                 qfgw_match_quantized(&qx, &qy, fx, fy, &cfg, aligner)
             }
-            _ => qgw_match_quantized(&qx, &qy, &self.qgw, aligner),
+            _ => match hier_clouds {
+                Some((x, y)) => {
+                    let hres = hier_qgw_match_quantized(
+                        x,
+                        y,
+                        &qx,
+                        &qy,
+                        &self.qgw,
+                        &rust_aligner,
+                        rng.next_u64(),
+                    );
+                    self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
+                    levels_ran = hres.stats.levels_used();
+                    hres.result
+                }
+                None => qgw_match_quantized(&qx, &qy, &self.qgw, aligner),
+            },
         };
         let align_secs = global_start.elapsed().as_secs_f64();
         self.metrics.add_duration("align+assemble", global_start.elapsed());
@@ -121,6 +161,12 @@ impl<'a> MatchPipeline<'a> {
         PipelineReport {
             m_x: qx.num_blocks(),
             m_y: qy.num_blocks(),
+            // Report what actually ran: fused/graph inputs and explicit
+            // aligner overrides fall back to flat matching regardless of
+            // the configured level budget, and a hierarchy whose blocks
+            // all hit the leaf size degenerates to one level.
+            levels: levels_ran,
+            leaf_size: self.qgw.leaf_size,
             result,
             partition_secs,
             // Global/local are not separated inside qgw_match_quantized;
@@ -192,6 +238,20 @@ mod tests {
             fy: &fx,
         });
         assert!(report.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
+    }
+
+    #[test]
+    fn pipeline_hierarchical_clouds_end_to_end() {
+        let x = cloud(300, 9);
+        let metrics = Metrics::new();
+        let cfg = QgwConfig { levels: 2, leaf_size: 12, ..QgwConfig::with_count(6) };
+        let pipe = MatchPipeline::new(cfg, &metrics);
+        let report = pipe.run(PipelineInput::Clouds { x: &x, y: &x });
+        assert!(report.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
+        assert_eq!(report.levels, 2);
+        assert_eq!(report.leaf_size, 12);
+        // Recursion really ran (blocks of ~50 points vs leaf 12).
+        assert!(metrics.counter("hier_nodes") > 1, "no recursion nodes");
     }
 
     #[test]

@@ -143,6 +143,20 @@ impl PointCloud {
         best.sqrt()
     }
 
+    /// Gather a sub-cloud: the listed points, in order, with an explicit
+    /// measure (callers pass an already-normalized conditional measure).
+    /// This is the nested-partition substrate: hierarchical qGW extracts
+    /// each partition block as a standalone cloud and re-quantizes it one
+    /// level down.
+    pub fn subset(&self, ids: &[u32], measure: Vec<f64>) -> PointCloud {
+        assert_eq!(ids.len(), measure.len());
+        let mut coords = Vec::with_capacity(ids.len() * self.dim);
+        for &i in ids {
+            coords.extend_from_slice(self.point(i as usize));
+        }
+        PointCloud::with_measure(coords, self.dim, measure)
+    }
+
     /// Bounding-box extents (used by the room generator and PLY export).
     pub fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
         let n = self.len();
@@ -476,5 +490,16 @@ mod tests {
     fn block_diameter_bound() {
         let q = quantize_line();
         assert!((q.block_diameter_bound() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subset_gathers_points_and_measure() {
+        let pc = line_cloud(6);
+        let sub = pc.subset(&[4, 1, 5], vec![0.5, 0.25, 0.25]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.point(0), &[4.0]);
+        assert_eq!(sub.point(1), &[1.0]);
+        assert_eq!(sub.measure(), &[0.5, 0.25, 0.25]);
+        assert_eq!(sub.dist(0, 2), 1.0);
     }
 }

@@ -17,7 +17,10 @@ use crate::data::rooms::generate_room;
 use crate::eval::{random_transfer_accuracy, segment_transfer_accuracy};
 use crate::partition::voronoi_partition;
 use crate::prng::Pcg32;
-use crate::qgw::{qfgw_match_quantized, QfgwConfig, QgwConfig, PartitionSize, RustAligner};
+use crate::qgw::{
+    balanced_m, hier_qgw_match, qfgw_match_quantized, qgw_match_quantized, QfgwConfig, QgwConfig,
+    PartitionSize, RustAligner,
+};
 
 #[derive(Clone, Debug)]
 pub struct Row {
@@ -83,6 +86,124 @@ pub fn rows(scale: f64, seed: u64, ms: &[usize]) -> Vec<Row> {
         });
     }
     out
+}
+
+/// One row of the flat-vs-hierarchical comparison at equal leaf
+/// resolution.
+#[derive(Clone, Debug)]
+pub struct HierRow {
+    pub method: String,
+    pub accuracy_pct: f64,
+    pub secs: f64,
+    /// Peak tracked sparse-storage bytes: both quantized spaces for flat;
+    /// top-level spaces plus the largest transient recursion node for the
+    /// hierarchy.
+    pub peak_quantized_bytes: usize,
+    /// The `m^2` representative-matrix component alone — the term the
+    /// hierarchy shrinks from O((N/L)^2) to O(N/L).
+    pub peak_rep_bytes: usize,
+}
+
+/// Flat qGW at leaf resolution `leaf` (`m = N/leaf` blocks) vs 2-level
+/// hierarchical qGW at the same leaf (`m_1 = (N/leaf)^(1/2)` per level),
+/// on the Figure-3 rooms. At full scale the flat side would need
+/// `m ~ 17k` (a 2.3e9-entry rep matrix), so its `m` is capped and the cap
+/// is reported — which is exactly the point of the hierarchy.
+pub fn hier_rows(scale: f64, seed: u64) -> Vec<HierRow> {
+    const LEAF: usize = 64;
+    const FLAT_M_CAP: usize = 4000;
+    let n_source = ((1_155_072.0 * scale) as usize).max(2_000);
+    let n_target = ((909_312.0 * scale) as usize).max(2_000);
+    let source = generate_room(n_source, seed, 0);
+    let target = generate_room(n_target, seed + 1, 1);
+    let n_min = n_source.min(n_target);
+    let mut out = Vec::new();
+
+    // Flat qGW at equal leaf resolution.
+    {
+        let m_flat = (n_min / LEAF).clamp(16, FLAT_M_CAP);
+        let capped = if m_flat == FLAT_M_CAP { " (capped)" } else { "" };
+        let mut rng = Pcg32::seed_from(seed ^ 0xF1A7);
+        let start = Instant::now();
+        let qx = voronoi_partition(&source.cloud, m_flat, &mut rng);
+        let qy = voronoi_partition(&target.cloud, m_flat, &mut rng);
+        let cfg = QgwConfig { size: PartitionSize::Count(m_flat), ..QgwConfig::default() };
+        let res = qgw_match_quantized(&qx, &qy, &cfg, &RustAligner(cfg.gw.clone()));
+        let acc =
+            segment_transfer_accuracy(&res.coupling.to_sparse(), &source.labels, &target.labels);
+        out.push(HierRow {
+            method: format!("flat qGW m={m_flat}{capped} leaf~{}", n_min / m_flat),
+            accuracy_pct: 100.0 * acc,
+            secs: start.elapsed().as_secs_f64(),
+            peak_quantized_bytes: qx.memory_bytes() + qy.memory_bytes(),
+            peak_rep_bytes: 2 * m_flat * m_flat * 8,
+        });
+    }
+
+    // 2-level hierarchy at the same leaf.
+    {
+        let m1 = balanced_m(n_min, LEAF, 2);
+        let mut rng = Pcg32::seed_from(seed ^ 0x41E7);
+        let start = Instant::now();
+        let cfg = QgwConfig {
+            size: PartitionSize::Count(m1),
+            levels: 2,
+            leaf_size: LEAF,
+            ..QgwConfig::default()
+        };
+        let hres = hier_qgw_match(&source.cloud, &target.cloud, &cfg, &mut rng);
+        let acc = segment_transfer_accuracy(
+            &hres.result.coupling.to_sparse(),
+            &source.labels,
+            &target.labels,
+        );
+        // Peak accounting is worker-aware: each concurrent worker holds
+        // one transient recursion node.
+        let workers = crate::coordinator::effective_threads(cfg.num_threads);
+        out.push(HierRow {
+            method: format!("hier qGW levels=2 m1={m1} leaf={LEAF}"),
+            accuracy_pct: 100.0 * acc,
+            secs: start.elapsed().as_secs_f64(),
+            peak_quantized_bytes: hres.stats.peak_quantized_bytes(workers),
+            peak_rep_bytes: hres.stats.top_rep_bytes + hres.stats.max_node_rep_bytes,
+        });
+    }
+    out
+}
+
+/// Print the flat-vs-hierarchical comparison (driven by
+/// `benches/large_scale.rs` after the main Figure-3 table).
+pub fn run_hier(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
+    writeln!(
+        w,
+        "=== Figure 3 addendum: flat vs hierarchical qGW at equal leaf resolution (scale={scale}) ==="
+    )?;
+    let rows = hier_rows(scale, seed);
+    writeln!(
+        w,
+        "{:<38} {:>10} {:>10} {:>12} {:>12}",
+        "Method", "accuracy%", "time", "peak MB", "rep MB"
+    )?;
+    for r in &rows {
+        writeln!(
+            w,
+            "{:<38} {:>10.1} {:>10} {:>12.2} {:>12.2}",
+            r.method,
+            r.accuracy_pct,
+            super::fmt_secs(r.secs),
+            r.peak_quantized_bytes as f64 / 1e6,
+            r.peak_rep_bytes as f64 / 1e6
+        )?;
+    }
+    if let [flat, hier] = &rows[..] {
+        writeln!(
+            w,
+            "hierarchy peak memory {:.1}x lower, rep matrices {:.1}x lower",
+            flat.peak_quantized_bytes as f64 / hier.peak_quantized_bytes.max(1) as f64,
+            flat.peak_rep_bytes as f64 / hier.peak_rep_bytes.max(1) as f64
+        )?;
+    }
+    Ok(())
 }
 
 pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {

@@ -3,7 +3,10 @@
 //! Sweep N with m ~ N^(1/3) (the paper's suggested choice giving
 //! O(N log N) total); report per-stage time and verify the growth rate by
 //! a log-log slope fit. The contrast series runs full GW on the sizes
-//! where it is feasible, showing the super-quadratic wall.
+//! where it is feasible, showing the super-quadratic wall. A third series
+//! runs the 2-level hierarchical recursion at a fixed leaf resolution
+//! (`m_1 ~ (N/leaf)^(1/2)` per level), whose rep matrices grow like
+//! `sqrt(N)` instead of flat qGW's `N^(2/3)` under this sweep.
 
 use std::io::Write;
 use std::time::Instant;
@@ -14,7 +17,10 @@ use crate::core::MmSpace;
 use crate::data::blobs::make_blobs;
 use crate::gw::cg_gw;
 use crate::prng::Pcg32;
-use crate::qgw::{qgw_match, PartitionSize, QgwConfig};
+use crate::qgw::{balanced_m, hier_qgw_match, qgw_match, PartitionSize, QgwConfig};
+
+/// Leaf resolution of the hierarchical series.
+pub const HIER_LEAF: usize = 32;
 
 #[derive(Clone, Debug)]
 pub struct Point {
@@ -22,6 +28,10 @@ pub struct Point {
     pub m: usize,
     pub qgw_secs: f64,
     pub gw_secs: Option<f64>,
+    /// 2-level hierarchical qGW at leaf [`HIER_LEAF`].
+    pub hier_secs: f64,
+    /// Top-level (= per-level) partition size of the hierarchical run.
+    pub hier_m: usize,
 }
 
 pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
@@ -47,7 +57,17 @@ pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
                 );
                 start.elapsed().as_secs_f64()
             });
-            Point { n, m, qgw_secs, gw_secs }
+            let hier_m = balanced_m(n, HIER_LEAF, 2);
+            let hier_cfg = QgwConfig {
+                size: PartitionSize::Count(hier_m),
+                levels: 2,
+                leaf_size: HIER_LEAF,
+                ..Default::default()
+            };
+            let start = Instant::now();
+            let _ = hier_qgw_match(&x, &y, &hier_cfg, &mut rng);
+            let hier_secs = start.elapsed().as_secs_f64();
+            Point { n, m, qgw_secs, gw_secs, hier_secs, hier_m }
         })
         .collect()
 }
@@ -72,19 +92,30 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
     let base: Vec<usize> = vec![500, 1000, 2000, 4000, 8000, 16000, 32000];
     let ns: Vec<usize> = base.iter().map(|&n| ((n as f64 * scale) as usize).max(100)).collect();
     let pts = sweep(&ns, seed);
-    writeln!(w, "{:>8} {:>6} {:>10} {:>10}", "N", "m", "qGW time", "GW time")?;
+    writeln!(
+        w,
+        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10}",
+        "N", "m", "qGW time", "GW time", "hier m", "hier time"
+    )?;
     for p in &pts {
         writeln!(
             w,
-            "{:>8} {:>6} {:>10.3} {:>10}",
+            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3}",
             p.n,
             p.m,
             p.qgw_secs,
-            p.gw_secs.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into())
+            p.gw_secs.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+            p.hier_m,
+            p.hier_secs
         )?;
     }
     let slope = loglog_slope(&pts.iter().map(|p| (p.n, p.qgw_secs)).collect::<Vec<_>>());
     writeln!(w, "log-log slope of qGW time vs N: {slope:.2} (near-linear target: ~1; naive GW: >=3)")?;
+    let hslope = loglog_slope(&pts.iter().map(|p| (p.n, p.hier_secs)).collect::<Vec<_>>());
+    writeln!(
+        w,
+        "log-log slope of 2-level hier qGW (leaf {HIER_LEAF}) time vs N: {hslope:.2}"
+    )?;
     Ok(())
 }
 

@@ -6,9 +6,12 @@
 //! * **Layer 3 (this crate)** — the coordinator: partitioned metric-measure
 //!   spaces with sparse quantized storage, the qGW/qFGW matching pipeline
 //!   (global alignment → local linear matchings → quantization coupling),
-//!   every baseline the paper compares against (GW, entropic GW, minibatch
-//!   GW, MREC), and all substrates (optimal transport solvers, graph
-//!   algorithms, partitioners, thread pool, config, CLI, bench harness).
+//!   the **hierarchical multi-level qGW** recursion ([`qgw::hier_qgw_match`]:
+//!   qGW at every recursion node, exact 1-D matchings at the leaves — the
+//!   paper's "adding recursion as needed"), every baseline the paper
+//!   compares against (GW, entropic GW, minibatch GW, MREC), and all
+//!   substrates (optimal transport solvers, graph algorithms, partitioners,
+//!   thread pool, config, CLI, bench harness).
 //! * **Layer 2/1 (python/, build-time only)** — JAX compute graphs composing
 //!   Pallas kernels for the entropic-GW global alignment, AOT-lowered to HLO
 //!   text artifacts executed here through PJRT ([`runtime`]).
@@ -26,6 +29,28 @@
 //! let result = qgw_match(&x.cloud, &y.cloud, &QgwConfig::with_fraction(0.1), &mut rng);
 //! println!("estimated GW loss: {}", result.gw_loss);
 //! ```
+//!
+//! At large scale, flat qGW's leaf resolution `L` forces `m = N/L`
+//! representatives and an O((N/L)^2) global stage. The hierarchy caps that:
+//!
+//! ```no_run
+//! use qgw::prng::Pcg32;
+//! use qgw::qgw::{balanced_m, hier_qgw_match, PartitionSize, QgwConfig};
+//! # let mut rng = Pcg32::seed_from(7);
+//! # let x = qgw::data::shapes::sample_shape(qgw::data::shapes::ShapeClass::Dog, 2000, &mut rng);
+//! # let y = x.perturbed_permuted_copy(0.01, &mut rng);
+//! let cfg = QgwConfig {
+//!     size: PartitionSize::Count(balanced_m(x.cloud.len(), 64, 2)),
+//!     levels: 2,     // qgw.levels in config files, --levels on the CLI
+//!     leaf_size: 64, // qgw.leaf_size / --leaf-size
+//!     ..QgwConfig::default()
+//! };
+//! let hier = hier_qgw_match(&x.cloud, &y.cloud, &cfg, &mut rng);
+//! println!("composed multi-level bound: {}", hier.result.error_bound);
+//! ```
+//!
+//! Rep matrices then grow as O((N/L)^(2/levels)) per level while the
+//! coupling keeps flat qGW's exact marginals and factored row queries.
 
 pub mod cli;
 pub mod config;
@@ -45,4 +70,4 @@ pub mod runtime;
 pub mod testutil;
 
 pub use crate::core::{DenseMatrix, MmSpace};
-pub use crate::qgw::{qgw_match, qfgw_match, QgwConfig};
+pub use crate::qgw::{hier_qgw_match, qgw_match, qfgw_match, HierQgwResult, QgwConfig};

@@ -108,6 +108,36 @@ pub fn fluid_partition<R: Rng>(g: &Graph, measure: &[f64], m: usize, rng: &mut R
     QuantizedSpace::new(reps, rep_d, block_of, anchor, measure.to_vec())
 }
 
+/// The standard partitioner choice every qGW entry point shares: k-means++
+/// refinement (8 Lloyd iterations) when requested, random-representative
+/// Voronoi otherwise. Centralized so flat and hierarchical runs can never
+/// silently diverge in how they partition.
+pub fn partition_cloud<R: Rng>(
+    cloud: &PointCloud,
+    m: usize,
+    kmeans: bool,
+    rng: &mut R,
+) -> QuantizedSpace {
+    if kmeans {
+        kmeans_partition(cloud, m, 8, rng)
+    } else {
+        voronoi_partition(cloud, m, rng)
+    }
+}
+
+/// Nested-partition support: extract block `p` of a quantized partition of
+/// `cloud` as a standalone point cloud carrying the block-conditional
+/// measure `mu_{U^p}` — the substrate hierarchical qGW re-quantizes one
+/// recursion level down. Point order matches `q.block(p)` (sorted by
+/// anchor distance), so index `k` of the returned cloud is position `k`
+/// in the block's local plans.
+pub fn block_cloud(cloud: &PointCloud, q: &QuantizedSpace, p: usize) -> PointCloud {
+    assert_eq!(q.num_points(), cloud.len());
+    let ids = q.block(p);
+    let measure: Vec<f64> = ids.iter().map(|&i| q.conditional_measure(i as usize)).collect();
+    cloud.subset(ids, measure)
+}
+
 /// Quantize an arbitrary dense mm-space by random reps + Voronoi (used by
 /// MREC recursion and the property tests).
 pub fn dense_voronoi_partition<R: Rng>(
@@ -228,6 +258,23 @@ mod tests {
         for i in 0..25 {
             assert_eq!(q1.block_of(i), q2.block_of(i));
             assert!((q1.anchor_dist(i) - q2.anchor_dist(i)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn block_cloud_is_conditional_subspace() {
+        let cloud = grid_cloud(8);
+        let mut rng = Pcg32::seed_from(5);
+        let q = voronoi_partition(&cloud, 4, &mut rng);
+        for p in 0..q.num_blocks() {
+            let sub = block_cloud(&cloud, &q, p);
+            assert_eq!(sub.len(), q.block(p).len());
+            // Conditional measure sums to one per block.
+            assert!((sub.measure().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            // Point k is the k-th (anchor-sorted) member of the block.
+            for (k, &i) in q.block(p).iter().enumerate() {
+                assert_eq!(sub.point(k), cloud.point(i as usize));
+            }
         }
     }
 

@@ -19,7 +19,7 @@ use crate::coordinator::parallel_map;
 use crate::core::{DenseMatrix, PointCloud, QuantizedSpace, SparseCoupling};
 use crate::gw::{entropic_gw, gw_loss, GwOptions, GwResult};
 use crate::ot::emd1d_presorted;
-use crate::partition::{kmeans_partition, voronoi_partition};
+use crate::partition::partition_cloud;
 use crate::prng::Rng;
 use crate::qgw::coupling::{LocalPlan, QuantizationCoupling};
 
@@ -54,6 +54,14 @@ pub struct QgwConfig {
     pub mass_threshold: f64,
     /// Worker threads for the local-matching fan-out (0 = all cores).
     pub num_threads: usize,
+    /// Quantization levels. `1` is flat qGW (this module); `> 1` enables
+    /// the hierarchical recursion of [`crate::qgw::hier_qgw_match`]:
+    /// supported block pairs larger than `leaf_size` are re-quantized and
+    /// matched by qGW again instead of the 1-D local linear matching.
+    pub levels: usize,
+    /// Block pairs at or below this size bottom out at the presorted
+    /// `emd1d` leaf when `levels > 1`. Ignored by flat qGW.
+    pub leaf_size: usize,
 }
 
 impl Default for QgwConfig {
@@ -64,6 +72,8 @@ impl Default for QgwConfig {
             gw: GwOptions::default(),
             mass_threshold: 1e-9,
             num_threads: 0,
+            levels: 1,
+            leaf_size: 64,
         }
     }
 }
@@ -149,11 +159,8 @@ pub fn qgw_match<R: Rng>(
 ) -> QgwResult {
     let mx = cfg.size.resolve(x.len());
     let my = cfg.size.resolve(y.len());
-    let (qx, qy) = if cfg.kmeans {
-        (kmeans_partition(x, mx, 8, rng), kmeans_partition(y, my, 8, rng))
-    } else {
-        (voronoi_partition(x, mx, rng), voronoi_partition(y, my, rng))
-    };
+    let qx = partition_cloud(x, mx, cfg.kmeans, rng);
+    let qy = partition_cloud(y, my, cfg.kmeans, rng);
     qgw_match_quantized(&qx, &qy, cfg, &RustAligner(cfg.gw.clone()))
 }
 
@@ -251,6 +258,7 @@ pub fn rep_space_loss(qx: &QuantizedSpace, qy: &QuantizedSpace, plan: &DenseMatr
 mod tests {
     use super::*;
     use crate::core::MmSpace;
+    use crate::partition::voronoi_partition;
     use crate::prng::{Gaussian, Pcg32};
 
     fn gaussian_cloud(n: usize, seed: u64) -> PointCloud {

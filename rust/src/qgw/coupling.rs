@@ -86,6 +86,19 @@ impl QuantizationCoupling {
         self.locals.len()
     }
 
+    /// The local plan of representative pair `(p, q)`, if supported —
+    /// diagnostics and the hierarchy property tests use this to verify
+    /// per-pair plan mass.
+    pub fn local_plan(&self, p: usize, q: usize) -> Option<&LocalPlan> {
+        self.locals.get(&(p as u32, q as u32))
+    }
+
+    /// Iterate the supported `(p, q)` representative pairs (arbitrary
+    /// order).
+    pub fn local_pairs(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.locals.keys().map(|&(p, q)| (p as usize, q as usize))
+    }
+
     /// `mu(x_i, .)` — the full row of the coupling for source point `i`,
     /// as `(target_id, mass)` pairs. Touches only `x_i`'s block's plans:
     /// O(sum of local-plan rows for the supported (p, q) pairs), never O(N).

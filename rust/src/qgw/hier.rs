@@ -1,0 +1,642 @@
+//! Hierarchical (multi-level) qGW — the paper's "adding recursion as
+//! needed" (§2.2), with qGW at every recursion node.
+//!
+//! Flat qGW quantizes once: an `m`-block partition, one global alignment
+//! over the `m x m` representatives, and a 1-D *local linear matching*
+//! inside every supported block pair. At large scale that forces a
+//! trade-off: a leaf resolution of `L` points per block needs `m = N/L`
+//! representatives, so the global stage pays O((N/L)^2) memory and an
+//! entropic-GW solve of that size.
+//!
+//! The hierarchy breaks the trade-off. Each side is quantized into `m_1`
+//! blocks and the representatives are globally aligned exactly as in flat
+//! qGW — but instead of matching each supported block pair with the 1-D
+//! leaf directly, the pair is *re-quantized* (each block extracted once as
+//! a standalone cloud carrying its block-conditional measure, via
+//! [`crate::partition::block_cloud`], and shared by every pair the block
+//! participates in) and matched by qGW again, bottoming out at the
+//! presorted [`crate::ot::emd1d_presorted`] leaf once a block pair falls
+//! to [`QgwConfig::leaf_size`] or the level budget ([`QgwConfig::levels`])
+//! is spent. With `l` levels the same leaf resolution costs
+//! `m_i ~ (N/L)^(1/l)` per level: the biggest rep matrix shrinks from
+//! O((N/L)^2) to O((N/L)^(2/l)) and the global solves shrink accordingly,
+//! while every intermediate structure stays O(m_i^2 + n_i).
+//!
+//! Contrast with the MREC baseline ([`crate::gw::mrec_match`]): MREC pays
+//! a full entropic-GW solve at every recursion node *and leaf*; here each
+//! node pays one small rep-space solve and all leaves are exact O(k) 1-D
+//! matchings, the same cost model the fast-gradient line of work targets.
+//!
+//! The output is the same factored [`QuantizationCoupling`] as flat qGW —
+//! exact marginals (Proposition 1 applies level by level, because every
+//! recursive sub-coupling is itself an exact coupling of the block
+//! conditional measures), O(1)-ish `map_point` row queries, `to_sparse` —
+//! so every consumer (service, eval, experiments) works unchanged. The
+//! a-priori error bound composes across levels: each node contributes its
+//! Theorem-6 term `2 (q_X + q_Y) + 8 eps`, and the bound accumulates the
+//! worst child chain per level (leaves are exact and contribute 0).
+//!
+//! Work fans out over [`crate::coordinator::parallel_map`] twice at the
+//! top level: block extraction + re-partitioning (one task per distinct
+//! block of a recursing pair) and then pair alignment + recursion (one
+//! task per supported pair). Every task derives its RNG from
+//! `(base seed, level, side/pair ids)` — never from shared mutable state —
+//! so the coupling is byte-identical for any thread count (guarded by the
+//! determinism regression test in `rust/tests/properties.rs`).
+
+use std::collections::HashMap;
+
+use crate::coordinator::parallel_map;
+use crate::core::{PointCloud, QuantizedSpace, SparseCoupling};
+use crate::partition::{block_cloud, partition_cloud};
+use crate::prng::{Pcg32, Rng, SplitMix64};
+use crate::qgw::algorithm::{
+    local_linear_matching, GlobalAligner, QgwConfig, QgwResult, RustAligner,
+};
+use crate::qgw::coupling::{LocalPlan, QuantizationCoupling};
+
+/// Per-level diagnostics of a hierarchical match (level 0 = the top
+/// alignment; level `k` = pairs solved `k` recursions down).
+#[derive(Clone, Debug, Default)]
+pub struct HierStats {
+    /// Supported block pairs solved at each level.
+    pub pairs_per_level: Vec<usize>,
+    /// Worst `|total plan mass - 1|` over the pairs of each level (every
+    /// local plan is a coupling of conditional measures, so this is float
+    /// noise plus pruned mass).
+    pub max_mass_err_per_level: Vec<f64>,
+    /// Worst per-node Theorem-6 term `2 (q_X + q_Y) + 8 eps` at each level.
+    pub bound_term_per_level: Vec<f64>,
+    /// Exact 1-D leaf matchings executed (across all levels).
+    pub leaf_matchings: usize,
+    /// Recursion nodes (global alignments) executed, including the top.
+    pub nodes: usize,
+    /// Sparse-storage bytes of the two top-level quantized spaces.
+    pub top_quantized_bytes: usize,
+    /// `m^2` representative-matrix bytes of the two top-level spaces.
+    pub top_rep_bytes: usize,
+    /// Largest transient child node: sparse-storage bytes of its two
+    /// quantized sub-spaces (0 when no recursion happened). See
+    /// [`HierStats::peak_quantized_bytes`] for the worker-aware peak.
+    pub max_node_quantized_bytes: usize,
+    /// Largest transient child representative matrices, bytes — the
+    /// biggest rep matrix pair the algorithm ever materializes below the
+    /// top (scheduler-independent, unlike the concurrent-peak estimate).
+    pub max_node_rep_bytes: usize,
+    /// Bytes of the top node's block caches (every recursing block's
+    /// extracted sub-cloud + nested quantized space), resident for the
+    /// whole pair fan-out.
+    pub top_cache_bytes: usize,
+    /// Worst per-pair transient below the top caches: a recursing pair's
+    /// own nested block caches plus its deepest descendant's (0 for
+    /// 2-level runs — level-1 pairs only solve leaves).
+    pub max_pair_transient_bytes: usize,
+}
+
+impl HierStats {
+    fn grow(&mut self, level: usize) {
+        while self.pairs_per_level.len() <= level {
+            self.pairs_per_level.push(0);
+            self.max_mass_err_per_level.push(0.0);
+            self.bound_term_per_level.push(0.0);
+        }
+    }
+
+    fn record_pair(&mut self, level: usize, mass_err: f64) {
+        self.grow(level);
+        self.pairs_per_level[level] += 1;
+        if mass_err > self.max_mass_err_per_level[level] {
+            self.max_mass_err_per_level[level] = mass_err;
+        }
+    }
+
+    fn record_node(&mut self, level: usize, bound_term: f64) {
+        self.grow(level);
+        self.nodes += 1;
+        if bound_term > self.bound_term_per_level[level] {
+            self.bound_term_per_level[level] = bound_term;
+        }
+    }
+
+    fn merge(&mut self, other: &HierStats) {
+        self.grow(other.pairs_per_level.len().saturating_sub(1));
+        for (l, &n) in other.pairs_per_level.iter().enumerate() {
+            self.pairs_per_level[l] += n;
+        }
+        for (l, &e) in other.max_mass_err_per_level.iter().enumerate() {
+            if e > self.max_mass_err_per_level[l] {
+                self.max_mass_err_per_level[l] = e;
+            }
+        }
+        for (l, &b) in other.bound_term_per_level.iter().enumerate() {
+            if b > self.bound_term_per_level[l] {
+                self.bound_term_per_level[l] = b;
+            }
+        }
+        self.leaf_matchings += other.leaf_matchings;
+        self.nodes += other.nodes;
+        self.max_node_quantized_bytes =
+            self.max_node_quantized_bytes.max(other.max_node_quantized_bytes);
+        self.max_node_rep_bytes = self.max_node_rep_bytes.max(other.max_node_rep_bytes);
+    }
+
+    /// Number of levels that actually ran (top + recursion depths).
+    pub fn levels_used(&self) -> usize {
+        self.pairs_per_level.len()
+    }
+
+    /// Upper bound on peak tracked storage: the resident top-level spaces,
+    /// plus the top node's block caches (alive for the whole fan-out),
+    /// plus one worst-case pair transient per concurrent worker (nested
+    /// caches below level 1 — zero for 2-level runs).
+    pub fn peak_quantized_bytes(&self, workers: usize) -> usize {
+        self.top_quantized_bytes
+            + self.top_cache_bytes
+            + self.max_pair_transient_bytes.saturating_mul(workers.max(1))
+    }
+}
+
+/// Result of a hierarchical match: the flat-compatible [`QgwResult`]
+/// (whose `error_bound` is the *composed* multi-level bound and whose
+/// `num_local_matchings` counts the exact 1-D leaves) plus per-level
+/// diagnostics.
+#[derive(Debug)]
+pub struct HierQgwResult {
+    pub result: QgwResult,
+    pub stats: HierStats,
+    /// The configured level budget (levels actually used may be smaller
+    /// when blocks hit the leaf size early; see `stats.levels_used()`).
+    pub levels: usize,
+}
+
+/// Partition size per level that reaches `leaf_size`-point blocks after
+/// `levels` nested quantizations: `ceil((n / leaf)^(1/levels))`.
+///
+/// With it, an `l`-level hierarchy at equal leaf resolution keeps every
+/// rep matrix at O((n/leaf)^(2/l)) instead of flat qGW's O((n/leaf)^2).
+pub fn balanced_m(n: usize, leaf_size: usize, levels: usize) -> usize {
+    if n <= 2 {
+        return n.max(1);
+    }
+    let cells = (n as f64 / leaf_size.max(1) as f64).max(1.0);
+    // powf is not correctly rounded; nudge below the ceil so exact integer
+    // roots (e.g. 100^(1/2)) do not round up to the next block count.
+    let m = (cells.powf(1.0 / levels.max(1) as f64) - 1e-9).ceil() as usize;
+    m.clamp(2, n)
+}
+
+/// Hierarchical qGW between point clouds: top-level partition from `rng`
+/// (same construction as flat [`crate::qgw::qgw_match`], so `levels = 1`
+/// reproduces flat qGW exactly), recursion seeds derived deterministically.
+pub fn hier_qgw_match<R: Rng>(
+    x: &PointCloud,
+    y: &PointCloud,
+    cfg: &QgwConfig,
+    rng: &mut R,
+) -> HierQgwResult {
+    let mx = cfg.size.resolve(x.len());
+    let my = cfg.size.resolve(y.len());
+    let qx = partition_cloud(x, mx, cfg.kmeans, rng);
+    let qy = partition_cloud(y, my, cfg.kmeans, rng);
+    let seed = rng.next_u64();
+    hier_qgw_match_quantized(x, y, &qx, &qy, cfg, &RustAligner(cfg.gw.clone()), seed)
+}
+
+/// Hierarchical qGW over a pre-built top-level partition (what the
+/// pipeline and the flat-vs-hier comparisons use: sharing `qx`/`qy` with a
+/// flat run makes the two differ only below the top level).
+///
+/// `seed` drives the recursive re-partitioning; each block and each pair
+/// derives its own stream from `(seed, level, ids)`, so results do not
+/// depend on `cfg.num_threads`.
+pub fn hier_qgw_match_quantized(
+    x: &PointCloud,
+    y: &PointCloud,
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    cfg: &QgwConfig,
+    aligner: &(dyn GlobalAligner + Sync),
+    seed: u64,
+) -> HierQgwResult {
+    assert_eq!(qx.num_points(), x.len());
+    assert_eq!(qy.num_points(), y.len());
+    let levels = cfg.levels.max(1);
+
+    // Step 1: global alignment of the top-level representatives — exactly
+    // as flat qGW.
+    let global_res =
+        aligner.align(qx.rep_dists(), qy.rep_dists(), qx.rep_measure(), qy.rep_measure());
+    let global = SparseCoupling::from_dense(&global_res.plan, cfg.mass_threshold);
+    let pairs: Vec<(u32, u32)> = global.iter().map(|(p, q, _)| (p as u32, q as u32)).collect();
+
+    // Step 2: solve every supported pair (leaf 1-D matching or a nested
+    // qGW node), fanned out over the pool.
+    let node = solve_pairs(x, y, qx, qy, &pairs, levels - 1, 0, cfg, aligner, seed, true);
+
+    // Step 3: assemble the factored coupling and compose the bound.
+    let q_x = qx.quantized_eccentricity();
+    let q_y = qy.quantized_eccentricity();
+    let eps = qx.block_diameter_bound().max(qy.block_diameter_bound());
+    let top_term = 2.0 * (q_x + q_y) + 8.0 * eps;
+
+    let mut stats = node.stats;
+    stats.top_quantized_bytes = qx.memory_bytes() + qy.memory_bytes();
+    stats.top_rep_bytes = rep_matrix_bytes(qx) + rep_matrix_bytes(qy);
+    stats.top_cache_bytes = node.cache_bytes;
+    stats.max_pair_transient_bytes = node.max_pair_transient;
+    stats.record_node(0, top_term);
+
+    let locals: HashMap<(u32, u32), LocalPlan> =
+        pairs.iter().copied().zip(node.plans).collect();
+    let num_leaves = stats.leaf_matchings;
+    let coupling = QuantizationCoupling::new(qx, qy, global, locals);
+    HierQgwResult {
+        result: QgwResult {
+            coupling,
+            gw_loss: global_res.loss,
+            q_x,
+            q_y,
+            error_bound: top_term + node.child_bound,
+            num_local_matchings: num_leaves,
+        },
+        stats,
+        levels,
+    }
+}
+
+/// Outcome of one supported block pair: a local plan over block positions
+/// (mass 1), the composed bound of everything below it, and diagnostics.
+struct PairOutcome {
+    plan: LocalPlan,
+    bound: f64,
+    /// Transient bytes this pair held while solving: its nested block
+    /// caches plus its deepest descendant's (0 for leaves).
+    transient_bytes: usize,
+    stats: HierStats,
+}
+
+/// All pairs of one alignment node, solved: plans in `pairs` order.
+struct NodeOutcome {
+    plans: Vec<LocalPlan>,
+    /// Max over pairs of the composed bound below that pair.
+    child_bound: f64,
+    /// Bytes of this node's block caches (sub-clouds + nested spaces).
+    cache_bytes: usize,
+    /// Max over pairs of `PairOutcome::transient_bytes`.
+    max_pair_transient: usize,
+    stats: HierStats,
+}
+
+/// Deterministic per-pair stream: mixes `(base, level, p, q)` through
+/// SplitMix64 so sibling pairs decorrelate regardless of scheduling.
+fn pair_seed(base: u64, level: usize, p: usize, q: usize) -> u64 {
+    let mut sm = SplitMix64::new(
+        base ^ ((level as u64) << 48) ^ ((p as u64) << 24) ^ (q as u64),
+    );
+    sm.next()
+}
+
+/// Deterministic per-block stream for the shared re-partitioning.
+fn block_seed(base: u64, level: usize, side: u64, block: usize) -> u64 {
+    let mut sm = SplitMix64::new(
+        base ^ ((level as u64) << 48) ^ (side << 40) ^ 0x5EED ^ (block as u64),
+    );
+    sm.next()
+}
+
+/// One extracted + re-partitioned block per entry, keyed by block id.
+type BlockCache = HashMap<u32, (PointCloud, QuantizedSpace)>;
+
+/// Extract and re-partition each listed block exactly once — blocks
+/// typically support 2-3 partner pairs, and this is the node's dominant
+/// per-block cost, so it must not repeat per pair. Parallel at the top
+/// level, sequential inside recursion workers.
+#[allow(clippy::too_many_arguments)]
+fn build_block_cache(
+    cloud: &PointCloud,
+    q: &QuantizedSpace,
+    blocks: &[u32],
+    levels_left: usize,
+    pair_level: usize,
+    side: u64,
+    cfg: &QgwConfig,
+    seed: u64,
+    parallel: bool,
+) -> BlockCache {
+    let leaf = cfg.leaf_size.max(1);
+    let build_one = |p: &u32| {
+        let pu = *p as usize;
+        let sub = block_cloud(cloud, q, pu);
+        let m = balanced_m(sub.len(), leaf, levels_left);
+        let mut rng = Pcg32::seed_from(block_seed(seed, pair_level, side, pu));
+        let qsub = partition_cloud(&sub, m, cfg.kmeans, &mut rng);
+        (sub, qsub)
+    };
+    let built: Vec<(PointCloud, QuantizedSpace)> = if parallel {
+        parallel_map(blocks, build_one, cfg.num_threads)
+    } else {
+        blocks.iter().map(build_one).collect()
+    };
+    blocks.iter().copied().zip(built).collect()
+}
+
+/// Solve every supported pair of one alignment node. `levels_left` counts
+/// quantization levels remaining below the node's partition; `pair_level`
+/// is the level index of these pairs (0 = top). Only the top call fans
+/// out over the pool; recursive calls run inside their worker.
+#[allow(clippy::too_many_arguments)]
+fn solve_pairs(
+    x: &PointCloud,
+    y: &PointCloud,
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    pairs: &[(u32, u32)],
+    levels_left: usize,
+    pair_level: usize,
+    cfg: &QgwConfig,
+    aligner: &(dyn GlobalAligner + Sync),
+    seed: u64,
+    parallel: bool,
+) -> NodeOutcome {
+    let leaf = cfg.leaf_size.max(1);
+    let recurses = |p: usize, q: usize| {
+        let (bx, by) = (qx.block(p).len(), qy.block(q).len());
+        levels_left > 0 && bx > leaf && by > leaf && bx >= 4 && by >= 4
+    };
+
+    // Blocks that any recursing pair touches, deduped across pairs.
+    let mut need_x: Vec<u32> = pairs
+        .iter()
+        .filter(|&&(p, q)| recurses(p as usize, q as usize))
+        .map(|&(p, _)| p)
+        .collect();
+    need_x.sort_unstable();
+    need_x.dedup();
+    let mut need_y: Vec<u32> = pairs
+        .iter()
+        .filter(|&&(p, q)| recurses(p as usize, q as usize))
+        .map(|&(_, q)| q)
+        .collect();
+    need_y.sort_unstable();
+    need_y.dedup();
+    let cache_x =
+        build_block_cache(x, qx, &need_x, levels_left, pair_level, 0, cfg, seed, parallel);
+    let cache_y =
+        build_block_cache(y, qy, &need_y, levels_left, pair_level, 1, cfg, seed, parallel);
+    let cache_bytes: usize = cache_x
+        .values()
+        .chain(cache_y.values())
+        .map(|(sub, qsub)| cloud_bytes(sub) + qsub.memory_bytes())
+        .sum();
+
+    let solve_one = |pair: &(u32, u32)| -> PairOutcome {
+        let (pu, qu) = (pair.0 as usize, pair.1 as usize);
+        if !recurses(pu, qu) {
+            // Leaf: the presorted exact 1-D matching, as in flat qGW.
+            let plan = local_linear_matching(qx, qy, pu, qu);
+            let stats = HierStats { leaf_matchings: 1, ..HierStats::default() };
+            return PairOutcome { plan, bound: 0.0, transient_bytes: 0, stats };
+        }
+
+        // Nested node: align the cached sub-partitions' representatives,
+        // then solve the supported sub-pairs one level down.
+        let (sub_x, sqx) = &cache_x[&pair.0];
+        let (sub_y, sqy) = &cache_y[&pair.1];
+        let res =
+            aligner.align(sqx.rep_dists(), sqy.rep_dists(), sqx.rep_measure(), sqy.rep_measure());
+        let global = SparseCoupling::from_dense(&res.plan, cfg.mass_threshold);
+        let mut child_pairs: Vec<(u32, u32)> = Vec::new();
+        let mut gmass: Vec<f64> = Vec::new();
+        for (cp, cq, w) in global.iter() {
+            child_pairs.push((cp as u32, cq as u32));
+            gmass.push(w);
+        }
+
+        let node_term = 2.0 * (sqx.quantized_eccentricity() + sqy.quantized_eccentricity())
+            + 8.0 * sqx.block_diameter_bound().max(sqy.block_diameter_bound());
+
+        let child = solve_pairs(
+            sub_x,
+            sub_y,
+            sqx,
+            sqy,
+            &child_pairs,
+            levels_left - 1,
+            pair_level + 1,
+            cfg,
+            aligner,
+            pair_seed(seed, pair_level, pu, qu),
+            false,
+        );
+
+        let mut stats = child.stats;
+        stats.record_node(pair_level + 1, node_term);
+        stats.max_node_quantized_bytes = stats
+            .max_node_quantized_bytes
+            .max(sqx.memory_bytes() + sqy.memory_bytes());
+        stats.max_node_rep_bytes =
+            stats.max_node_rep_bytes.max(rep_matrix_bytes(sqx) + rep_matrix_bytes(sqy));
+
+        // Flatten: child plans are positions within sqx/sqy blocks, whose
+        // entries are sub-cloud indices — and sub-cloud index k IS parent
+        // block position k (block_cloud preserves the anchor-sorted
+        // order), so the flattened plan stays in the parent's LocalPlan
+        // convention.
+        let mut plan: LocalPlan = Vec::new();
+        for (k, child_plan) in child.plans.iter().enumerate() {
+            let bx = sqx.block(child_pairs[k].0 as usize);
+            let by = sqy.block(child_pairs[k].1 as usize);
+            for &(pi, pj, w) in child_plan {
+                plan.push((bx[pi as usize], by[pj as usize], gmass[k] * w));
+            }
+        }
+        PairOutcome {
+            plan,
+            bound: node_term + child.child_bound,
+            transient_bytes: child.cache_bytes + child.max_pair_transient,
+            stats,
+        }
+    };
+
+    let outcomes: Vec<PairOutcome> = if parallel {
+        parallel_map(pairs, solve_one, cfg.num_threads)
+    } else {
+        pairs.iter().map(solve_one).collect()
+    };
+
+    let mut stats = HierStats::default();
+    let mut child_bound = 0.0f64;
+    let mut max_pair_transient = 0usize;
+    let mut plans = Vec::with_capacity(outcomes.len());
+    for outcome in outcomes {
+        let mass: f64 = outcome.plan.iter().map(|e| e.2).sum();
+        stats.record_pair(pair_level, (mass - 1.0).abs());
+        if outcome.bound > child_bound {
+            child_bound = outcome.bound;
+        }
+        max_pair_transient = max_pair_transient.max(outcome.transient_bytes);
+        stats.merge(&outcome.stats);
+        plans.push(outcome.plan);
+    }
+    NodeOutcome { plans, child_bound, cache_bytes, max_pair_transient, stats }
+}
+
+fn rep_matrix_bytes(q: &QuantizedSpace) -> usize {
+    q.num_blocks() * q.num_blocks() * 8
+}
+
+fn cloud_bytes(c: &PointCloud) -> usize {
+    // Coordinates + measure (both f64).
+    c.coords().len() * 8 + c.len() * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MmSpace;
+    use crate::partition::voronoi_partition;
+    use crate::prng::{Gaussian, Pcg32};
+    use crate::qgw::{qgw_match, qgw_match_quantized};
+
+    fn gaussian_cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        PointCloud::new((0..n * 3).map(|_| g.sample(&mut rng)).collect(), 3)
+    }
+
+    #[test]
+    fn balanced_m_reaches_leaf_resolution() {
+        assert_eq!(balanced_m(1000, 10, 1), 100);
+        // Two levels: 100 cells -> 10 per level.
+        assert_eq!(balanced_m(1000, 10, 2), 10);
+        // Degenerate inputs clamp sanely.
+        assert_eq!(balanced_m(1, 10, 2), 1);
+        assert_eq!(balanced_m(2, 1, 3), 2);
+        assert!(balanced_m(50, 100, 2) >= 2);
+    }
+
+    #[test]
+    fn single_level_reproduces_flat_qgw() {
+        let x = gaussian_cloud(150, 1);
+        let cfg = QgwConfig::with_fraction(0.15);
+        let mut r1 = Pcg32::seed_from(9);
+        let mut r2 = Pcg32::seed_from(9);
+        let flat = qgw_match(&x, &x, &cfg, &mut r1);
+        let hier = hier_qgw_match(&x, &x, &cfg, &mut r2);
+        // levels = 1: identical partitions, identical global plan,
+        // identical (all-leaf) locals -> identical sparse coupling.
+        let sf = flat.coupling.to_sparse();
+        let sh = hier.result.coupling.to_sparse();
+        assert_eq!(sf.nnz(), sh.nnz());
+        for ((i1, j1, v1), (i2, j2, v2)) in sf.iter().zip(sh.iter()) {
+            assert_eq!((i1, j1), (i2, j2));
+            assert_eq!(v1.to_bits(), v2.to_bits());
+        }
+        assert_eq!(hier.stats.leaf_matchings, flat.num_local_matchings);
+        assert_eq!(hier.stats.levels_used(), 1);
+    }
+
+    #[test]
+    fn two_level_marginals_exact_and_recursion_happens() {
+        let x = gaussian_cloud(300, 2);
+        let cfg = QgwConfig {
+            levels: 2,
+            leaf_size: 8,
+            ..QgwConfig::with_count(6)
+        };
+        let mut rng = Pcg32::seed_from(11);
+        let res = hier_qgw_match(&x, &x, &cfg, &mut rng);
+        let err = res.result.coupling.check_marginals(x.measure(), x.measure());
+        assert!(err < 1e-7, "marginal err {err}");
+        // Blocks of ~50 points against leaf 8 must recurse.
+        assert!(res.stats.levels_used() >= 2, "no recursion: {:?}", res.stats);
+        assert!(res.stats.pairs_per_level[1] > 0);
+        assert!(res.stats.leaf_matchings > 0);
+        assert!(res.stats.max_node_quantized_bytes > 0);
+        assert!(res.stats.peak_quantized_bytes(4) > res.stats.top_quantized_bytes);
+        for err in &res.stats.max_mass_err_per_level {
+            assert!(*err < 1e-7, "pair mass err {err}");
+        }
+    }
+
+    #[test]
+    fn composed_bound_dominates_flat_bound_on_shared_partition() {
+        let x = gaussian_cloud(220, 3);
+        let y = gaussian_cloud(200, 4);
+        let mut rng = Pcg32::seed_from(13);
+        let qx = voronoi_partition(&x, 5, &mut rng);
+        let qy = voronoi_partition(&y, 5, &mut rng);
+        let cfg = QgwConfig::default();
+        let flat = qgw_match_quantized(&qx, &qy, &cfg, &RustAligner(cfg.gw.clone()));
+        let hcfg = QgwConfig { levels: 3, leaf_size: 6, ..QgwConfig::default() };
+        let hier = hier_qgw_match_quantized(
+            &x,
+            &y,
+            &qx,
+            &qy,
+            &hcfg,
+            &RustAligner(hcfg.gw.clone()),
+            77,
+        );
+        // Same top partition: identical top-level Theorem-6 term, plus
+        // non-negative child terms.
+        assert!((hier.result.q_x - flat.q_x).abs() < 1e-12);
+        assert!((hier.result.q_y - flat.q_y).abs() < 1e-12);
+        assert!(hier.result.error_bound >= flat.error_bound - 1e-12);
+        assert!(hier.result.error_bound >= 2.0 * (flat.q_x + flat.q_y) - 1e-12);
+    }
+
+    #[test]
+    fn deeper_hierarchy_self_match_stays_accurate() {
+        let mut rng = Pcg32::seed_from(5);
+        let shape = crate::data::shapes::sample_shape(
+            crate::data::shapes::ShapeClass::Dog,
+            600,
+            &mut rng,
+        );
+        let x = shape.cloud;
+        let cfg = QgwConfig { levels: 2, leaf_size: 12, ..QgwConfig::with_count(10) };
+        let res = hier_qgw_match(&x, &x, &cfg, &mut rng);
+        assert!(res.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
+        // Most points should land near themselves (structured shape).
+        let diam = x.diameter_estimate();
+        let mut close = 0usize;
+        for i in 0..x.len() {
+            if let Some(j) = res.result.coupling.map_point(i) {
+                if x.dist(i, j) < 0.3 * diam {
+                    close += 1;
+                }
+            }
+        }
+        assert!(close * 2 > x.len(), "only {close}/{} close matches", x.len());
+    }
+
+    #[test]
+    fn shared_block_partitions_are_consistent_across_partners() {
+        // A block supported by several partner pairs is extracted and
+        // re-partitioned once; the plans for (p, q1) and (p, q2) must both
+        // be exact couplings of the same conditional measure (mass 1), and
+        // marginal exactness must survive the sharing.
+        let x = gaussian_cloud(240, 21);
+        let y = gaussian_cloud(240, 22);
+        let mut rng = Pcg32::seed_from(23);
+        let qx = voronoi_partition(&x, 4, &mut rng);
+        let qy = voronoi_partition(&y, 4, &mut rng);
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::default() };
+        let hier = hier_qgw_match_quantized(
+            &x,
+            &y,
+            &qx,
+            &qy,
+            &cfg,
+            &RustAligner(cfg.gw.clone()),
+            31,
+        );
+        assert!(hier.result.coupling.check_marginals(x.measure(), y.measure()) < 1e-7);
+        for (p, q) in hier.result.coupling.local_pairs() {
+            let mass: f64 =
+                hier.result.coupling.local_plan(p, q).unwrap().iter().map(|e| e.2).sum();
+            assert!((mass - 1.0).abs() < 1e-7, "pair ({p},{q}) mass {mass}");
+        }
+    }
+}

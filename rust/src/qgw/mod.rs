@@ -9,11 +9,17 @@
 //!   (Proposition 3), coupling assembly.
 //! * [`fused`] — the qFGW variant with global weight `alpha` and local
 //!   blend `beta` (§2.3).
+//! * [`hier`] — multi-level qGW: supported block pairs are recursively
+//!   re-quantized and matched by qGW again (paper §2.2 "adding recursion
+//!   as needed"), bottoming out at the 1-D leaf below
+//!   [`QgwConfig::leaf_size`]. Same factored coupling, composed
+//!   multi-level error bound, O((N/L)^(2/levels)) rep matrices.
 
 mod ablation;
 mod algorithm;
 mod coupling;
 mod fused;
+mod hier;
 
 pub use algorithm::{
     local_linear_matching, qgw_match, qgw_match_quantized, rep_space_loss, GlobalAligner,
@@ -22,3 +28,4 @@ pub use algorithm::{
 pub use ablation::{local_gw_plan, local_product_plan, qgw_match_with_matcher, LocalMatcher};
 pub use coupling::{LocalPlan, QuantizationCoupling};
 pub use fused::{qfgw_match, qfgw_match_quantized, FeatureSet, QfgwConfig};
+pub use hier::{balanced_m, hier_qgw_match, hier_qgw_match_quantized, HierQgwResult, HierStats};

@@ -11,14 +11,57 @@
 //!     assert!(x >= 0.0 && x < 1.0, "x out of range: {x}");
 //! });
 //! ```
+//!
+//! Environment knobs (honored by every property that routes its case
+//! count through [`forall_cases`]):
+//!
+//! * `QGW_PROPTEST_CASES=N` — override the case count (crank up for a
+//!   soak run, down for a smoke pass).
+//! * `QGW_PROPTEST_SEED=S` — replay exactly one failing case: [`forall`]
+//!   runs only seed `S` with the same derived RNG stream as the original
+//!   failure ([`replay`] does the same outside `forall`).
 
 use crate::prng::Pcg32;
 
-/// Run `property` over `cases` seeded RNGs; panics with the failing seed.
+/// Case count for a property, honoring the `QGW_PROPTEST_CASES` env
+/// override.
+pub fn forall_cases(default_cases: u64) -> u64 {
+    std::env::var("QGW_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+        .max(1)
+}
+
+/// The failing-seed override, if `QGW_PROPTEST_SEED` is set.
+pub fn replay_seed() -> Option<u64> {
+    std::env::var("QGW_PROPTEST_SEED").ok().and_then(|s| s.parse().ok())
+}
+
+/// The exact RNG [`forall`] hands the property for case `seed` — public so
+/// a failing case can be rebuilt in isolation (unit tests, debuggers).
+pub fn case_rng(seed: u64) -> Pcg32 {
+    Pcg32::seed_from(seed.wrapping_mul(0x9E37_79B9) ^ 0xABCD)
+}
+
+/// Run `property` once with case `seed`'s RNG stream (the replay helper:
+/// paste the seed from a `forall` failure message).
+pub fn replay(seed: u64, mut property: impl FnMut(&mut Pcg32)) {
+    let mut rng = case_rng(seed);
+    property(&mut rng);
+}
+
+/// Run `property` over `cases` seeded RNGs; panics with the failing seed
+/// (and the env incantation that replays it). When `QGW_PROPTEST_SEED` is
+/// set, only that case runs.
 pub fn forall(cases: u64, property: impl Fn(&mut Pcg32) + std::panic::RefUnwindSafe) {
-    for seed in 0..cases {
+    let seeds: Vec<u64> = match replay_seed() {
+        Some(seed) => vec![seed],
+        None => (0..cases).collect(),
+    };
+    for seed in seeds {
         let result = std::panic::catch_unwind(|| {
-            let mut rng = Pcg32::seed_from(seed.wrapping_mul(0x9E37_79B9) ^ 0xABCD);
+            let mut rng = case_rng(seed);
             property(&mut rng);
         });
         if let Err(err) = result {
@@ -27,7 +70,10 @@ pub fn forall(cases: u64, property: impl Fn(&mut Pcg32) + std::panic::RefUnwindS
                 .cloned()
                 .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".to_string());
-            panic!("property failed at case seed {seed}: {msg}");
+            panic!(
+                "property failed at case seed {seed}: {msg} \
+                 (replay with QGW_PROPTEST_SEED={seed})"
+            );
         }
     }
 }
@@ -76,5 +122,25 @@ mod tests {
         let m = random_measure(&mut rng, 17);
         assert!((m.iter().sum::<f64>() - 1.0).abs() < 1e-12);
         assert!(m.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn forall_cases_defaults_without_env() {
+        // The suite never sets QGW_PROPTEST_CASES itself, so the default
+        // passes through (setting env vars in-process would race parallel
+        // tests).
+        if std::env::var("QGW_PROPTEST_CASES").is_err() {
+            assert_eq!(forall_cases(25), 25);
+        }
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        // The replay helper hands out exactly the stream forall used.
+        let mut direct = case_rng(3);
+        let want = direct.next_f64();
+        let mut got = None;
+        replay(3, |rng| got = Some(rng.next_f64()));
+        assert_eq!(got, Some(want));
     }
 }

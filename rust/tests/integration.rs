@@ -10,7 +10,10 @@ use qgw::data::shapes::{sample_shape, ShapeClass};
 use qgw::eval::{distortion_score, random_transfer_accuracy, segment_transfer_accuracy};
 use qgw::graph::wl_features;
 use qgw::prng::Pcg32;
-use qgw::qgw::{qgw_match, FeatureSet, QgwConfig};
+use qgw::qgw::{
+    hier_qgw_match_quantized, qgw_match, qgw_match_quantized, FeatureSet, PartitionSize,
+    QgwConfig, RustAligner,
+};
 
 #[test]
 fn table1_protocol_end_to_end() {
@@ -122,6 +125,78 @@ fn rooms_pipeline_small_scale() {
     // Quantized storage stays O(m^2 + N): far below the dense matrix.
     let dense_bytes = 6000usize * 6000 * 8;
     assert!(qx.memory_bytes() < dense_bytes / 20);
+}
+
+#[test]
+fn hier_matches_large_rooms_and_beats_flat_at_equal_budget() {
+    // Figure-3-scale integration of the hierarchy: two ≥50k-point rooms
+    // of the same layout (same generator seed/variant, different sampling
+    // densities), matched with 2-level hierarchical qGW.
+    let source = generate_room(52_000, 11, 0);
+    let target = generate_room(50_000, 11, 0);
+
+    // Shared top-level partition (m = 200, blocks of ~250-260 points): the
+    // flat and hierarchical runs then see the identical global alignment
+    // and differ only in how each supported block pair is matched —
+    // flat's 1-D radial matching vs the hierarchy's nested qGW down to
+    // 64-point leaves.
+    let m_top = 200;
+    let mut rng = Pcg32::seed_from(71);
+    let qx = qgw::partition::voronoi_partition(&source.cloud, m_top, &mut rng);
+    let qy = qgw::partition::voronoi_partition(&target.cloud, m_top, &mut rng);
+    let cfg = QgwConfig { size: PartitionSize::Count(m_top), ..QgwConfig::default() };
+    let aligner = RustAligner(cfg.gw.clone());
+    let flat = qgw_match_quantized(&qx, &qy, &cfg, &aligner);
+    let hcfg = QgwConfig { levels: 2, leaf_size: 64, ..cfg.clone() };
+    let hier = hier_qgw_match_quantized(
+        &source.cloud,
+        &target.cloud,
+        &qx,
+        &qy,
+        &hcfg,
+        &aligner,
+        7,
+    );
+
+    // Exact coupling at 50k+ scale, and the recursion really engaged.
+    let merr = hier
+        .result
+        .coupling
+        .check_marginals(source.cloud.measure(), target.cloud.measure());
+    assert!(merr < 1e-7, "marginal err {merr}");
+    assert!(hier.stats.levels_used() >= 2, "no recursion: {:?}", hier.stats);
+    assert!(hier.stats.pairs_per_level[1] > 0);
+
+    // Segment transfer: the refined locals must not lose to flat's 1-D
+    // locals under the identical global alignment, and both must beat
+    // random.
+    let acc_flat =
+        segment_transfer_accuracy(&flat.coupling.to_sparse(), &source.labels, &target.labels);
+    let acc_hier = segment_transfer_accuracy(
+        &hier.result.coupling.to_sparse(),
+        &source.labels,
+        &target.labels,
+    );
+    let mut rng2 = Pcg32::seed_from(72);
+    let acc_rand = random_transfer_accuracy(&source.labels, &target.labels, &mut rng2);
+    assert!(acc_hier > acc_rand, "hier {acc_hier} vs random {acc_rand}");
+    assert!(acc_hier >= acc_flat, "hier {acc_hier} < flat {acc_flat}");
+
+    // Equal leaf resolution (64-point blocks) would cost flat qGW an
+    // m = N/64 partition; the hierarchy's peak tracked storage (top-level
+    // spaces + one transient recursion node per concurrent worker) stays
+    // strictly below it.
+    let m_eq = 50_000 / 64;
+    let mut rng3 = Pcg32::seed_from(73);
+    let qx_eq = qgw::partition::voronoi_partition(&source.cloud, m_eq, &mut rng3);
+    let qy_eq = qgw::partition::voronoi_partition(&target.cloud, m_eq, &mut rng3);
+    let workers = qgw::coordinator::effective_threads(hcfg.num_threads);
+    let hier_peak = hier.stats.peak_quantized_bytes(workers);
+    let flat_eq_bytes = qx_eq.memory_bytes() + qy_eq.memory_bytes();
+    assert!(
+        hier_peak < flat_eq_bytes,
+        "hier peak {hier_peak} ({workers} workers) not below equal-leaf flat {flat_eq_bytes}"
+    );
 }
 
 #[test]

@@ -7,9 +7,12 @@ use qgw::core::{DenseSpace, MmSpace, SparseCoupling};
 use qgw::gw::{cg_gw, entropic_gw, gw_loss, gw_loss_sparse, product_coupling, GwOptions};
 use qgw::ot::{check_coupling, emd, emd1d, round_to_coupling, sinkhorn_log, SinkhornOptions};
 use qgw::partition::{dense_voronoi_partition, voronoi_partition};
-use qgw::prng::Rng;
-use qgw::qgw::{qgw_match_quantized, QgwConfig, RustAligner};
-use qgw::testutil::{forall, random_cloud, random_measure};
+use qgw::prng::{Pcg32, Rng};
+use qgw::qgw::{
+    hier_qgw_match, hier_qgw_match_quantized, qgw_match, qgw_match_quantized, QgwConfig,
+    RustAligner,
+};
+use qgw::testutil::{forall, forall_cases, random_cloud, random_measure};
 
 // ---------------------------------------------------------------------------
 // Proposition 1: quantization couplings are couplings.
@@ -123,6 +126,114 @@ fn prop_self_distance_is_zero_for_identical_pointed_partitions() {
         let res = qgw_match_quantized(&qx, &qx, &cfg, &RustAligner(cfg.gw.clone()));
         assert!(res.gw_loss < 1e-3, "self qGW loss {}", res.gw_loss);
     });
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical qGW: for any clouds/configs, the multi-level coupling keeps
+// flat qGW's guarantees — marginals agree to 1e-7, every supported pair at
+// every level carries a mass-1 local plan, and the composed multi-level
+// error bound dominates the flat bound's leading term 2(q_X + q_Y).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hier_matches_flat_marginals_masses_and_bound() {
+    forall(forall_cases(10), |rng| {
+        let n = 60 + rng.below(60);
+        let x = random_cloud(rng, n, 3);
+        let ny = 60 + rng.below(60);
+        let y = random_cloud(rng, ny, 3);
+        let m = 4 + rng.below(4);
+        let qx = voronoi_partition(&x, m, rng);
+        let qy = voronoi_partition(&y, m, rng);
+        let cfg = QgwConfig::default();
+        let flat = qgw_match_quantized(&qx, &qy, &cfg, &RustAligner(cfg.gw.clone()));
+        let levels = 2 + rng.below(2); // 2 or 3
+        let hcfg = QgwConfig { levels, leaf_size: 6, ..QgwConfig::default() };
+        let hier = hier_qgw_match_quantized(
+            &x,
+            &y,
+            &qx,
+            &qy,
+            &hcfg,
+            &RustAligner(hcfg.gw.clone()),
+            rng.next_u64(),
+        );
+
+        // Marginals match flat's to 1e-7 entrywise (both are exact
+        // couplings of the same measures up to pruning noise).
+        let sf = flat.coupling.to_sparse();
+        let sh = hier.result.coupling.to_sparse();
+        for (a, b) in sf.row_marginal().iter().zip(sh.row_marginal().iter()) {
+            assert!((a - b).abs() < 1e-7, "row marginal drift {a} vs {b}");
+        }
+        for (a, b) in sf.col_marginal().iter().zip(sh.col_marginal().iter()) {
+            assert!((a - b).abs() < 1e-7, "col marginal drift {a} vs {b}");
+        }
+
+        // Mass 1 per supported pair at every level: top-level plans
+        // directly, deeper levels through the recursion diagnostics.
+        for (p, q) in hier.result.coupling.local_pairs() {
+            let mass: f64 =
+                hier.result.coupling.local_plan(p, q).unwrap().iter().map(|e| e.2).sum();
+            assert!((mass - 1.0).abs() < 1e-7, "pair ({p},{q}) mass {mass}");
+        }
+        for (level, err) in hier.stats.max_mass_err_per_level.iter().enumerate() {
+            assert!(*err < 1e-7, "level {level} pair mass err {err}");
+        }
+
+        // Composed bound >= flat's leading term (same top partition).
+        assert!(
+            hier.result.error_bound >= 2.0 * (flat.q_x + flat.q_y) - 1e-12,
+            "composed bound {} below flat leading term {}",
+            hier.result.error_bound,
+            2.0 * (flat.q_x + flat.q_y)
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Determinism regression: same seed => byte-identical sparse coupling for
+// num_threads 1 and 4, for both the flat fan-out and the hierarchical
+// recursion (guards the parallel_map ordering and the per-pair seed
+// derivation).
+// ---------------------------------------------------------------------------
+
+fn assert_bitwise_equal(a: &SparseCoupling, b: &SparseCoupling) {
+    assert_eq!(a.rows(), b.rows());
+    assert_eq!(a.cols(), b.cols());
+    assert_eq!(a.nnz(), b.nnz());
+    for ((i1, j1, v1), (i2, j2, v2)) in a.iter().zip(b.iter()) {
+        assert_eq!((i1, j1), (i2, j2), "support differs");
+        assert_eq!(v1.to_bits(), v2.to_bits(), "mass differs at ({i1},{j1}): {v1} vs {v2}");
+    }
+}
+
+#[test]
+fn determinism_across_thread_counts_flat_and_hier() {
+    let mut srng = Pcg32::seed_from(17);
+    let x = random_cloud(&mut srng, 400, 3);
+    let y = random_cloud(&mut srng, 380, 3);
+
+    let flat_run = |threads: usize| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QgwConfig { num_threads: threads, ..QgwConfig::with_fraction(0.1) };
+        qgw_match(&x, &y, &cfg, &mut rng).coupling.to_sparse()
+    };
+    assert_bitwise_equal(&flat_run(1), &flat_run(4));
+
+    let hier_run = |threads: usize| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QgwConfig {
+            num_threads: threads,
+            levels: 2,
+            leaf_size: 16,
+            ..QgwConfig::with_fraction(0.03)
+        };
+        let res = hier_qgw_match(&x, &y, &cfg, &mut rng);
+        assert!(res.stats.levels_used() >= 2, "recursion must engage for the guard to bite");
+        res.result.coupling.to_sparse()
+    };
+    assert_bitwise_equal(&hier_run(1), &hier_run(4));
 }
 
 // ---------------------------------------------------------------------------

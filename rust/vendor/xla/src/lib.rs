@@ -1,0 +1,144 @@
+//! Offline stub of the XLA/PJRT bindings (`xla` crate) used by
+//! `qgw::runtime`.
+//!
+//! The real bindings require the PJRT CPU plugin shared library, which is
+//! unavailable in the offline build environment. Every runtime entry point
+//! here returns an [`Error`]; `qgw`'s `XlaAligner` fails soft on such
+//! errors and falls back to the pure-Rust solvers, so linking this stub
+//! only disables the accelerator path — it never changes results. Swap
+//! this path dependency for the real crate to re-enable PJRT execution of
+//! the AOT artifacts.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: every fallible entry point returns this.
+pub struct Error(String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT runtime not available in this offline build (stub `xla` crate)"
+    ))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle (stub: execution always fails).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal (stub: constructors succeed so input staging type-checks;
+/// every accessor fails).
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_v: f32) -> Self {
+        Literal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = format!("{err:?}");
+        assert!(msg.contains("stub"), "{msg}");
+    }
+
+    #[test]
+    fn literal_staging_typechecks() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2, 1]).is_err());
+        let s: Literal = 0.5f32.into();
+        assert!(s.to_tuple1().is_err());
+    }
+}

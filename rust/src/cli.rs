@@ -2,19 +2,21 @@
 //!
 //! ```text
 //! qgw match      --class dog --n 2000 --fraction 0.1 [--fused A,B] [--seed S]
-//!                [--levels L --leaf-size K]   # L>1: hierarchical qGW
+//!                [--levels L --leaf-size K]   # L>1: hierarchical qGW/qFGW
 //! qgw experiment table1|table2|fig1|fig2|fig3|fig4|scaling [--scale F] [--full]
 //! qgw serve      --class dog --n 5000 --fraction 0.1 --addr 127.0.0.1:7979
 //! qgw artifacts  [--dir artifacts]     # report loaded AOT artifacts
 //! qgw info
 //! ```
 //!
-//! Hierarchy flags (`match`/`serve`, point clouds): `--levels L` runs the
-//! multi-level recursion of [`crate::qgw::hier_qgw_match`] (supported
-//! block pairs re-quantized by qGW down to `--leaf-size K`-point leaves,
-//! default 64). With `--levels 1` (default) flat qGW runs unchanged. Large
-//! inputs want `--m` near `(N / K)^(1/L)` per level — see
-//! [`crate::qgw::balanced_m`].
+//! Hierarchy flags (`match`/`serve`): `--levels L` runs the multi-level
+//! recursion of [`crate::qgw::hier_match_quantized`] (supported block
+//! pairs re-quantized down to `--leaf-size K`-point leaves, default 64)
+//! on **every substrate** — plain clouds, `--fused A,B` feature blends,
+//! and graphs all recurse. With `--levels 1` (default) flat matching runs
+//! unchanged. Large inputs want `--m` near `(N / K)^(1/L)` per level —
+//! see [`crate::qgw::balanced_m`]. Fused weights can also come from the
+//! config file's `[fused]` section (`--fused` wins).
 
 use std::collections::BTreeMap;
 
@@ -105,11 +107,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     }
 }
 
-fn build_config(args: &Args) -> Result<QgwConfig> {
+fn build_config(args: &Args) -> Result<(QgwConfig, Option<(f64, f64)>)> {
     // Optional config file, overridden by flags.
-    let mut cfg = match args.flag("config") {
-        Some(path) => Config::load(std::path::Path::new(path))?.qgw_config(),
-        None => QgwConfig::default(),
+    let (mut cfg, mut fused) = match args.flag("config") {
+        Some(path) => {
+            let file = Config::load(std::path::Path::new(path))?;
+            (file.qgw_config(), file.fused_config())
+        }
+        None => (QgwConfig::default(), None),
     };
     if let Some(m) = args.flag("m") {
         cfg.size = crate::qgw::PartitionSize::Count(m.parse().context("--m")?);
@@ -122,14 +127,25 @@ fn build_config(args: &Args) -> Result<QgwConfig> {
     cfg.num_threads = args.usize_or("threads", cfg.num_threads)?;
     cfg.levels = args.usize_or("levels", cfg.levels)?.max(1);
     cfg.leaf_size = args.usize_or("leaf-size", cfg.leaf_size)?.max(1);
-    Ok(cfg)
+    if let Some(spec) = args.flag("fused") {
+        let parts: Vec<f64> = spec
+            .split(',')
+            .map(|p| p.parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .context("--fused A,B")?;
+        if parts.len() != 2 {
+            bail!("--fused expects alpha,beta");
+        }
+        fused = Some((parts[0], parts[1]));
+    }
+    Ok((cfg, fused))
 }
 
 fn cmd_match(args: &Args) -> Result<()> {
     let class = shape_class_by_name(args.flag("class").unwrap_or("dogs"))?;
     let n = args.usize_or("n", 2000)?;
     let seed = args.usize_or("seed", 7)? as u64;
-    let cfg = build_config(args)?;
+    let (cfg, fused) = build_config(args)?;
 
     let mut rng = Pcg32::seed_from(seed);
     let shape = sample_shape(class, n, &mut rng);
@@ -138,17 +154,7 @@ fn cmd_match(args: &Args) -> Result<()> {
     let metrics = Metrics::new();
     let mut pipe = MatchPipeline::new(cfg, &metrics);
     pipe.seed = seed;
-    if let Some(fused) = args.flag("fused") {
-        let parts: Vec<f64> = fused
-            .split(',')
-            .map(|p| p.parse::<f64>())
-            .collect::<std::result::Result<_, _>>()
-            .context("--fused A,B")?;
-        if parts.len() != 2 {
-            bail!("--fused expects alpha,beta");
-        }
-        pipe.fused = Some((parts[0], parts[1]));
-    }
+    pipe.fused = fused;
     let report = if pipe.fused.is_some() {
         pipe.run(PipelineInput::CloudsWithFeatures {
             x: &shape.cloud,
@@ -179,8 +185,8 @@ fn cmd_match(args: &Args) -> Result<()> {
         report.result.q_x, report.result.q_y, report.result.error_bound
     );
     println!(
-        "partition={:.3}s align+assemble={:.3}s total={:.3}s",
-        report.partition_secs, report.global_secs, report.total_secs
+        "partition={:.3}s global={:.3}s local+assemble={:.3}s total={:.3}s",
+        report.partition_secs, report.global_secs, report.local_secs, report.total_secs
     );
     println!("metrics: {}", metrics.summary());
     Ok(())
@@ -191,14 +197,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 5000)?;
     let seed = args.usize_or("seed", 7)? as u64;
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7979").to_string();
-    let cfg = build_config(args)?;
+    let (cfg, fused) = build_config(args)?;
 
     let mut rng = Pcg32::seed_from(seed);
     let shape = sample_shape(class, n, &mut rng);
     let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
     let metrics = Metrics::new();
-    let pipe = MatchPipeline::new(cfg, &metrics);
-    let report = pipe.run(PipelineInput::Clouds { x: &shape.cloud, y: &copy.cloud });
+    let mut pipe = MatchPipeline::new(cfg, &metrics);
+    pipe.seed = seed;
+    pipe.fused = fused;
+    let report = if pipe.fused.is_some() {
+        pipe.run(PipelineInput::CloudsWithFeatures {
+            x: &shape.cloud,
+            y: &copy.cloud,
+            fx: &shape.normals,
+            fy: &copy.normals,
+        })
+    } else {
+        pipe.run(PipelineInput::Clouds { x: &shape.cloud, y: &copy.cloud })
+    };
 
     let svc = std::sync::Arc::new(MatchService::new(report.result.coupling));
     let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -264,9 +281,11 @@ fn print_usage() {
            artifacts   report AOT artifacts available to the runtime\n\
            info        this message\n\
          \n\
-         hierarchy flags (match/serve, point clouds):\n\
-           --levels L     quantization levels (default 1 = flat qGW; L>1 recursively\n\
-                          re-quantizes supported block pairs with qGW at every node)\n\
+         hierarchy flags (match/serve — clouds, fused, and graphs all recurse):\n\
+           --levels L     quantization levels (default 1 = flat; L>1 recursively\n\
+                          re-quantizes supported block pairs at every node, with\n\
+                          the fused feature blend / nested Fluid graph partitions\n\
+                          threaded through every level)\n\
            --leaf-size K  block pairs at or below K points use the exact 1-D leaf\n\
                           matching (default 64); pick --m near (N/K)^(1/L)"
     );

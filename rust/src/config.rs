@@ -146,6 +146,17 @@ impl Config {
             leaf_size: self.usize_or("qgw.leaf_size", 64).max(1),
         }
     }
+
+    /// Fused (qFGW) weights from the `[fused]` section: `Some((alpha,
+    /// beta))` when either key is present, missing keys taking the paper
+    /// defaults (0.5, 0.75). `None` when the section is absent — plain
+    /// qGW.
+    pub fn fused_config(&self) -> Option<(f64, f64)> {
+        if self.get("fused.alpha").is_none() && self.get("fused.beta").is_none() {
+            return None;
+        }
+        Some((self.f64_or("fused.alpha", 0.5), self.f64_or("fused.beta", 0.75)))
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -252,6 +263,16 @@ full = false
         let z = Config::parse("[qgw]\nlevels = 0\nleaf_size = 0\n").unwrap().qgw_config();
         assert_eq!(z.levels, 1);
         assert_eq!(z.leaf_size, 1);
+    }
+
+    #[test]
+    fn fused_section_parses_with_defaults() {
+        let c = Config::parse("[fused]\nalpha = 0.3\n").unwrap();
+        assert_eq!(c.fused_config(), Some((0.3, 0.75)));
+        let both = Config::parse("[fused]\nalpha = 0.2\nbeta = 0.9\n").unwrap();
+        assert_eq!(both.fused_config(), Some((0.2, 0.9)));
+        // Absent section: plain qGW.
+        assert_eq!(Config::parse("").unwrap().fused_config(), None);
     }
 
     #[test]

@@ -2,23 +2,26 @@
 //! → assemble, with per-stage timing — the orchestration layer the CLI,
 //! examples, and benches drive.
 //!
-//! When `qgw.levels > 1` and the input is a point-cloud pair, the local
-//! stage runs the hierarchical recursion
-//! ([`crate::qgw::hier_qgw_match_quantized`]) over the same top-level
-//! partition instead of the flat 1-D local matchings. Fused matching and
-//! graph inputs keep the flat path (hierarchy for those substrates is an
-//! open item), as does an explicit `aligner` override (the recursion
-//! requires a `Sync` aligner and drives the pure-Rust solver).
+//! Every input substrate — plain clouds, feature-carrying clouds, graphs —
+//! routes through the substrate-generic hierarchical recursion
+//! ([`crate::qgw::hier_match_quantized`]) over the top-level partition
+//! built here. With `qgw.levels = 1` the recursion degenerates to flat
+//! qGW/qFGW bit-for-bit; with `levels > 1` supported block pairs are
+//! re-quantized level by level (fused blend and nested Fluid graph
+//! partitions included). The only remaining flat fallback is an explicit
+//! `aligner` override (the recursion requires a `Sync` aligner); that
+//! downgrade is surfaced through the `hier_fallbacks` metric and a
+//! warning instead of being silently absorbed.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::core::{PointCloud, QuantizedSpace};
 use crate::graph::Graph;
 use crate::partition::{fluid_partition, partition_cloud, voronoi_partition};
 use crate::prng::{Pcg32, Rng};
 use crate::qgw::{
-    hier_qgw_match_quantized, qfgw_match_quantized, qgw_match_quantized, FeatureSet,
-    GlobalAligner, QfgwConfig, QgwConfig, QgwResult, RustAligner,
+    assemble, hier_match_quantized, qfgw_align, qfgw_assemble, FeatureSet, GlobalAligner,
+    QfgwConfig, QgwConfig, QgwResult, RustAligner, Substrate,
 };
 
 use super::Metrics;
@@ -46,13 +49,17 @@ pub enum PipelineInput<'a> {
 pub struct PipelineReport {
     pub result: QgwResult,
     pub partition_secs: f64,
+    /// Wall time of the top-level global alignment alone.
     pub global_secs: f64,
+    /// Wall time of the local stage: block extraction, recursion
+    /// (including nested alignments), leaf matchings, and coupling
+    /// assembly.
     pub local_secs: f64,
     pub total_secs: f64,
     pub m_x: usize,
     pub m_y: usize,
-    /// Quantization levels that actually ran (1 = flat qGW, including the
-    /// fused/graph/aligner-override fallbacks).
+    /// Quantization levels that actually ran (1 = flat; a hierarchy whose
+    /// blocks all hit the leaf size also degenerates to 1).
     pub levels: usize,
     /// Leaf size of the hierarchical recursion (meaningful when
     /// `levels > 1`).
@@ -66,7 +73,8 @@ pub struct MatchPipeline<'a> {
     pub seed: u64,
     pub metrics: &'a Metrics,
     /// Global aligner override (e.g. the PJRT runtime); defaults to the
-    /// pure-Rust solver.
+    /// pure-Rust solver. Overrides are not `Sync`, so they force flat
+    /// matching — see `hier_fallbacks`.
     pub aligner: Option<&'a dyn GlobalAligner>,
 }
 
@@ -79,101 +87,119 @@ impl<'a> MatchPipeline<'a> {
         let total_start = Instant::now();
         let mut rng = Pcg32::seed_from(self.seed);
         let rust_aligner = RustAligner(self.qgw.gw.clone());
-        let aligner: &dyn GlobalAligner = self.aligner.unwrap_or(&rust_aligner);
 
-        // Hierarchical recursion needs the raw clouds (to re-quantize
-        // blocks) and a Sync aligner; it applies to plain point-cloud
-        // matching only.
-        let hier_clouds: Option<(&PointCloud, &PointCloud)> = match &input {
-            PipelineInput::Clouds { x, y }
-                if self.qgw.levels > 1 && self.fused.is_none() && self.aligner.is_none() =>
-            {
-                Some((*x, *y))
-            }
-            _ => None,
-        };
-
-        // --- Stage 1: partition -----------------------------------------
+        // --- Stage 1: partition + substrate capture ----------------------
         let part_start = Instant::now();
-        let (qx, qy, fx, fy): (QuantizedSpace, QuantizedSpace, Option<&FeatureSet>, Option<&FeatureSet>) =
+        let (sx, sy, qx, qy): (Substrate<'_>, Substrate<'_>, QuantizedSpace, QuantizedSpace) =
             match input {
                 PipelineInput::Clouds { x, y } => {
                     let mx = self.qgw.size.resolve(x.len());
                     let my = self.qgw.size.resolve(y.len());
                     let qx = partition_cloud(x, mx, self.qgw.kmeans, &mut rng);
                     let qy = partition_cloud(y, my, self.qgw.kmeans, &mut rng);
-                    (qx, qy, None, None)
+                    (Substrate::cloud(x), Substrate::cloud(y), qx, qy)
                 }
                 PipelineInput::CloudsWithFeatures { x, y, fx, fy } => {
                     let mx = self.qgw.size.resolve(x.len());
                     let my = self.qgw.size.resolve(y.len());
+                    let qx = voronoi_partition(x, mx, &mut rng);
+                    let qy = voronoi_partition(y, my, &mut rng);
                     (
-                        voronoi_partition(x, mx, &mut rng),
-                        voronoi_partition(y, my, &mut rng),
-                        Some(fx),
-                        Some(fy),
+                        Substrate::cloud(x).with_features(fx),
+                        Substrate::cloud(y).with_features(fy),
+                        qx,
+                        qy,
                     )
                 }
                 PipelineInput::Graphs { x, y, mu_x, mu_y, fx, fy } => {
                     let mx = self.qgw.size.resolve(x.num_nodes());
                     let my = self.qgw.size.resolve(y.num_nodes());
-                    (
-                        fluid_partition(x, mu_x, mx, &mut rng),
-                        fluid_partition(y, mu_y, my, &mut rng),
-                        fx,
-                        fy,
-                    )
+                    let qx = fluid_partition(x, mu_x, mx, &mut rng);
+                    let qy = fluid_partition(y, mu_y, my, &mut rng);
+                    let mut sx = Substrate::graph(x, mu_x);
+                    let mut sy = Substrate::graph(y, mu_y);
+                    if let (Some(fx), Some(fy)) = (fx, fy) {
+                        sx = sx.with_features(fx);
+                        sy = sy.with_features(fy);
+                    }
+                    (sx, sy, qx, qy)
                 }
             };
         let partition_secs = part_start.elapsed().as_secs_f64();
         self.metrics.add_duration("partition", part_start.elapsed());
 
-        // --- Stages 2+3: align + assemble (timed inside qgw) -------------
-        let global_start = Instant::now();
-        let mut levels_ran = 1;
-        let result = match (self.fused, fx, fy) {
-            (Some((alpha, beta)), Some(fx), Some(fy)) => {
-                let cfg = QfgwConfig { base: self.qgw.clone(), alpha, beta };
-                qfgw_match_quantized(&qx, &qy, fx, fy, &cfg, aligner)
+        // --- Stages 2+3: every substrate goes through the hierarchy ------
+        // (`hier_match_quantized` gates the fused blend itself: `self.fused`
+        // only engages when both substrates actually carry features, and the
+        // flat-fallback match below applies the same rule by pattern.)
+        let (result, levels_ran, global_secs, local_secs) = match self.aligner {
+            None => {
+                let hres = hier_match_quantized(
+                    &sx,
+                    &sy,
+                    &qx,
+                    &qy,
+                    &self.qgw,
+                    self.fused,
+                    &rust_aligner,
+                    rng.next_u64(),
+                );
+                self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
+                (hres.result, hres.stats.levels_used(), hres.global_secs, hres.local_secs)
             }
-            _ => match hier_clouds {
-                Some((x, y)) => {
-                    let hres = hier_qgw_match_quantized(
-                        x,
-                        y,
-                        &qx,
-                        &qy,
-                        &self.qgw,
-                        &rust_aligner,
-                        rng.next_u64(),
+            Some(aligner) => {
+                // Aligner overrides are not `Sync`, so the recursion cannot
+                // fan out over them: flat matching runs instead. Surface
+                // the downgrade instead of silently absorbing it.
+                if self.qgw.levels > 1 {
+                    self.metrics.incr("hier_fallbacks", 1);
+                    eprintln!(
+                        "warn: qgw.levels={} requested but the aligner override forces flat \
+                         matching (hier_fallbacks metric bumped)",
+                        self.qgw.levels
                     );
-                    self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
-                    levels_ran = hres.stats.levels_used();
-                    hres.result
                 }
-                None => qgw_match_quantized(&qx, &qy, &self.qgw, aligner),
-            },
+                let align_start = Instant::now();
+                let (global_res, fused_ctx) = match (self.fused, sx.features(), sy.features()) {
+                    (Some((alpha, beta)), Some(fx), Some(fy)) => {
+                        let cfg = QfgwConfig { base: self.qgw.clone(), alpha, beta };
+                        (qfgw_align(&qx, &qy, fx, fy, &cfg, aligner), Some((cfg, fx, fy)))
+                    }
+                    _ => (
+                        aligner.align(
+                            qx.rep_dists(),
+                            qy.rep_dists(),
+                            qx.rep_measure(),
+                            qy.rep_measure(),
+                        ),
+                        None,
+                    ),
+                };
+                let global_secs = align_start.elapsed().as_secs_f64();
+                let local_start = Instant::now();
+                let result = match fused_ctx {
+                    Some((cfg, fx, fy)) => qfgw_assemble(&qx, &qy, fx, fy, global_res, &cfg),
+                    None => assemble(&qx, &qy, global_res, &self.qgw),
+                };
+                (result, 1, global_secs, local_start.elapsed().as_secs_f64())
+            }
         };
-        let align_secs = global_start.elapsed().as_secs_f64();
-        self.metrics.add_duration("align+assemble", global_start.elapsed());
+        self.metrics.add_duration("global_align", Duration::from_secs_f64(global_secs));
+        self.metrics.add_duration("local+assemble", Duration::from_secs_f64(local_secs));
         self.metrics.incr("local_matchings", result.num_local_matchings as u64);
 
         PipelineReport {
             m_x: qx.num_blocks(),
             m_y: qy.num_blocks(),
-            // Report what actually ran: fused/graph inputs and explicit
-            // aligner overrides fall back to flat matching regardless of
-            // the configured level budget, and a hierarchy whose blocks
-            // all hit the leaf size degenerates to one level.
+            // Report what actually ran: a hierarchy whose blocks all hit
+            // the leaf size degenerates to one level, and an aligner
+            // override forces flat matching.
             levels: levels_ran,
             leaf_size: self.qgw.leaf_size,
             result,
             partition_secs,
-            // Global/local are not separated inside qgw_match_quantized;
-            // report the combined stage (benches that need the split use
-            // the solver APIs directly).
-            global_secs: align_secs,
-            local_secs: 0.0,
+            global_secs,
+            local_secs,
             total_secs: total_start.elapsed().as_secs_f64(),
         }
     }
@@ -184,6 +210,7 @@ mod tests {
     use super::*;
     use crate::core::MmSpace;
     use crate::prng::{Gaussian, Rng};
+    use crate::testutil::ring_graph as ring;
 
     fn cloud(n: usize, seed: u64) -> PointCloud {
         let mut rng = Pcg32::seed_from(seed);
@@ -206,10 +233,7 @@ mod tests {
     #[test]
     fn pipeline_graphs_end_to_end() {
         // Ring graph matched to itself.
-        let n = 60;
-        let edges: Vec<(usize, usize, f64)> = (0..n).map(|i| (i, (i + 1) % n, 1.0)).collect();
-        let g = Graph::from_edges(n, &edges);
-        let mu = crate::core::uniform_measure(n);
+        let (g, mu) = ring(60);
         let metrics = Metrics::new();
         let pipe = MatchPipeline::new(QgwConfig::with_count(6), &metrics);
         let report = pipe.run(PipelineInput::Graphs {
@@ -252,6 +276,78 @@ mod tests {
         assert_eq!(report.leaf_size, 12);
         // Recursion really ran (blocks of ~50 points vs leaf 12).
         assert!(metrics.counter("hier_nodes") > 1, "no recursion nodes");
+    }
+
+    #[test]
+    fn pipeline_hierarchical_graphs_no_longer_fall_back() {
+        let (g, mu) = ring(150);
+        let metrics = Metrics::new();
+        let cfg = QgwConfig { levels: 2, leaf_size: 6, ..QgwConfig::with_count(5) };
+        let pipe = MatchPipeline::new(cfg, &metrics);
+        let report = pipe.run(PipelineInput::Graphs {
+            x: &g,
+            y: &g,
+            mu_x: &mu,
+            mu_y: &mu,
+            fx: None,
+            fy: None,
+        });
+        assert!(report.result.coupling.check_marginals(&mu, &mu) < 1e-7);
+        assert!(report.levels >= 2, "graph input fell back to flat: levels={}", report.levels);
+        assert!(metrics.counter("hier_nodes") > 1, "no graph recursion nodes");
+        assert_eq!(metrics.counter("hier_fallbacks"), 0);
+    }
+
+    #[test]
+    fn pipeline_hierarchical_fused_no_longer_falls_back() {
+        let x = cloud(300, 12);
+        let feats: Vec<f64> = (0..x.len()).map(|i| x.point(i)[0]).collect();
+        let fx = FeatureSet::new(feats, 1);
+        let metrics = Metrics::new();
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(6) };
+        let mut pipe = MatchPipeline::new(cfg, &metrics);
+        pipe.fused = Some((0.5, 0.75));
+        let report = pipe.run(PipelineInput::CloudsWithFeatures {
+            x: &x,
+            y: &x,
+            fx: &fx,
+            fy: &fx,
+        });
+        assert!(report.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
+        assert!(report.levels >= 2, "fused input fell back to flat: levels={}", report.levels);
+        assert!(metrics.counter("hier_nodes") > 1, "no fused recursion nodes");
+        assert_eq!(metrics.counter("hier_fallbacks"), 0);
+    }
+
+    #[test]
+    fn pipeline_aligner_override_falls_back_with_metric() {
+        let x = cloud(120, 4);
+        let metrics = Metrics::new();
+        let cfg = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) };
+        let rust = RustAligner(cfg.gw.clone());
+        let mut pipe = MatchPipeline::new(cfg, &metrics);
+        pipe.aligner = Some(&rust);
+        let report = pipe.run(PipelineInput::Clouds { x: &x, y: &x });
+        assert_eq!(report.levels, 1);
+        assert_eq!(metrics.counter("hier_fallbacks"), 1);
+        assert!(report.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
+    }
+
+    #[test]
+    fn pipeline_reports_honest_stage_split() {
+        let x = cloud(200, 5);
+        let metrics = Metrics::new();
+        let pipe = MatchPipeline::new(QgwConfig::with_fraction(0.1), &metrics);
+        let report = pipe.run(PipelineInput::Clouds { x: &x, y: &x });
+        // The local stage is timed, not hard-coded to zero, and the parts
+        // never exceed the total.
+        assert!(report.global_secs > 0.0);
+        assert!(report.local_secs > 0.0);
+        assert!(
+            report.partition_secs + report.global_secs + report.local_secs
+                <= report.total_secs + 1e-6
+        );
+        assert!(metrics.duration("local+assemble").as_secs_f64() > 0.0);
     }
 
     #[test]

@@ -18,8 +18,8 @@ use crate::eval::{random_transfer_accuracy, segment_transfer_accuracy};
 use crate::partition::voronoi_partition;
 use crate::prng::Pcg32;
 use crate::qgw::{
-    balanced_m, hier_qgw_match, qfgw_match_quantized, qgw_match_quantized, QfgwConfig, QgwConfig,
-    PartitionSize, RustAligner,
+    balanced_m, hier_qfgw_match, hier_qgw_match, qfgw_match_quantized, qgw_match_quantized,
+    QfgwConfig, QgwConfig, PartitionSize, RustAligner,
 };
 
 #[derive(Clone, Debug)]
@@ -168,6 +168,47 @@ pub fn hier_rows(scale: f64, seed: u64) -> Vec<HierRow> {
             peak_rep_bytes: hres.stats.top_rep_bytes + hres.stats.max_node_rep_bytes,
         });
     }
+
+    // 2-level hierarchical qFGW with point colors as features — the fused
+    // substrate recursing end to end (segment transfer is the paper's
+    // feature-driven workload, so this is the row that used to be
+    // impossible while fused inputs fell back to flat).
+    {
+        let m1 = balanced_m(n_min, LEAF, 2);
+        let mut rng = Pcg32::seed_from(seed ^ 0x41E8);
+        let start = Instant::now();
+        let cfg = QfgwConfig {
+            base: QgwConfig {
+                size: PartitionSize::Count(m1),
+                levels: 2,
+                leaf_size: LEAF,
+                ..QgwConfig::default()
+            },
+            alpha: 0.5,
+            beta: 0.75,
+        };
+        let hres = hier_qfgw_match(
+            &source.cloud,
+            &target.cloud,
+            &source.colors,
+            &target.colors,
+            &cfg,
+            &mut rng,
+        );
+        let acc = segment_transfer_accuracy(
+            &hres.result.coupling.to_sparse(),
+            &source.labels,
+            &target.labels,
+        );
+        let workers = crate::coordinator::effective_threads(cfg.base.num_threads);
+        out.push(HierRow {
+            method: format!("hier qFGW levels=2 m1={m1} leaf={LEAF}"),
+            accuracy_pct: 100.0 * acc,
+            secs: start.elapsed().as_secs_f64(),
+            peak_quantized_bytes: hres.stats.peak_quantized_bytes(workers),
+            peak_rep_bytes: hres.stats.top_rep_bytes + hres.stats.max_node_rep_bytes,
+        });
+    }
     out
 }
 
@@ -195,7 +236,8 @@ pub fn run_hier(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
             r.peak_rep_bytes as f64 / 1e6
         )?;
     }
-    if let [flat, hier] = &rows[..] {
+    if rows.len() >= 2 {
+        let (flat, hier) = (&rows[0], &rows[1]);
         writeln!(
             w,
             "hierarchy peak memory {:.1}x lower, rep matrices {:.1}x lower",

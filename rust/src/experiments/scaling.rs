@@ -6,7 +6,9 @@
 //! where it is feasible, showing the super-quadratic wall. A third series
 //! runs the 2-level hierarchical recursion at a fixed leaf resolution
 //! (`m_1 ~ (N/leaf)^(1/2)` per level), whose rep matrices grow like
-//! `sqrt(N)` instead of flat qGW's `N^(2/3)` under this sweep.
+//! `sqrt(N)` instead of flat qGW's `N^(2/3)` under this sweep; a fourth
+//! runs the same hierarchy fused (1-D synthetic features blended at every
+//! node and leaf), showing the feature path rides the same growth curve.
 
 use std::io::Write;
 use std::time::Instant;
@@ -17,7 +19,10 @@ use crate::core::MmSpace;
 use crate::data::blobs::make_blobs;
 use crate::gw::cg_gw;
 use crate::prng::Pcg32;
-use crate::qgw::{balanced_m, hier_qgw_match, qgw_match, PartitionSize, QgwConfig};
+use crate::qgw::{
+    balanced_m, hier_qfgw_match, hier_qgw_match, qgw_match, PartitionSize, QfgwConfig, QgwConfig,
+};
+use crate::testutil::coord_feature;
 
 /// Leaf resolution of the hierarchical series.
 pub const HIER_LEAF: usize = 32;
@@ -30,6 +35,9 @@ pub struct Point {
     pub gw_secs: Option<f64>,
     /// 2-level hierarchical qGW at leaf [`HIER_LEAF`].
     pub hier_secs: f64,
+    /// 2-level hierarchical qFGW (1-D synthetic features) at the same
+    /// leaf — the fused substrate recursing, not falling back to flat.
+    pub hier_fused_secs: f64,
     /// Top-level (= per-level) partition size of the hierarchical run.
     pub hier_m: usize,
 }
@@ -67,7 +75,13 @@ pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
             let start = Instant::now();
             let _ = hier_qgw_match(&x, &y, &hier_cfg, &mut rng);
             let hier_secs = start.elapsed().as_secs_f64();
-            Point { n, m, qgw_secs, gw_secs, hier_secs, hier_m }
+            let fx = coord_feature(&x);
+            let fy = coord_feature(&y);
+            let fused_cfg = QfgwConfig { base: hier_cfg.clone(), alpha: 0.5, beta: 0.75 };
+            let start = Instant::now();
+            let _ = hier_qfgw_match(&x, &y, &fx, &fy, &fused_cfg, &mut rng);
+            let hier_fused_secs = start.elapsed().as_secs_f64();
+            Point { n, m, qgw_secs, gw_secs, hier_secs, hier_fused_secs, hier_m }
         })
         .collect()
 }
@@ -94,19 +108,20 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
     let pts = sweep(&ns, seed);
     writeln!(
         w,
-        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10}",
-        "N", "m", "qGW time", "GW time", "hier m", "hier time"
+        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10} {:>12}",
+        "N", "m", "qGW time", "GW time", "hier m", "hier time", "hier qFGW"
     )?;
     for p in &pts {
         writeln!(
             w,
-            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3}",
+            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3} {:>12.3}",
             p.n,
             p.m,
             p.qgw_secs,
             p.gw_secs.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
             p.hier_m,
-            p.hier_secs
+            p.hier_secs,
+            p.hier_fused_secs
         )?;
     }
     let slope = loglog_slope(&pts.iter().map(|p| (p.n, p.qgw_secs)).collect::<Vec<_>>());
@@ -115,6 +130,11 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
     writeln!(
         w,
         "log-log slope of 2-level hier qGW (leaf {HIER_LEAF}) time vs N: {hslope:.2}"
+    )?;
+    let fslope = loglog_slope(&pts.iter().map(|p| (p.n, p.hier_fused_secs)).collect::<Vec<_>>());
+    writeln!(
+        w,
+        "log-log slope of 2-level hier qFGW (leaf {HIER_LEAF}, 1-D features) time vs N: {fslope:.2}"
     )?;
     Ok(())
 }

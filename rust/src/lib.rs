@@ -6,12 +6,15 @@
 //! * **Layer 3 (this crate)** — the coordinator: partitioned metric-measure
 //!   spaces with sparse quantized storage, the qGW/qFGW matching pipeline
 //!   (global alignment → local linear matchings → quantization coupling),
-//!   the **hierarchical multi-level qGW** recursion ([`qgw::hier_qgw_match`]:
-//!   qGW at every recursion node, exact 1-D matchings at the leaves — the
-//!   paper's "adding recursion as needed"), every baseline the paper
-//!   compares against (GW, entropic GW, minibatch GW, MREC), and all
-//!   substrates (optimal transport solvers, graph algorithms, partitioners,
-//!   thread pool, config, CLI, bench harness).
+//!   the **hierarchical multi-level** recursion ([`qgw::hier_qgw_match`],
+//!   [`qgw::hier_qfgw_match`], [`qgw::hier_graph_match`]: a quantized
+//!   match at every recursion node, exact 1-D matchings at the leaves —
+//!   the paper's "adding recursion as needed" — for every substrate:
+//!   plain clouds, feature-carrying clouds with the fused blend threaded
+//!   through all levels, and graphs with nested Fluid partitions), every
+//!   baseline the paper compares against (GW, entropic GW, minibatch GW,
+//!   MREC), and all substrates (optimal transport solvers, graph
+//!   algorithms, partitioners, thread pool, config, CLI, bench harness).
 //! * **Layer 2/1 (python/, build-time only)** — JAX compute graphs composing
 //!   Pallas kernels for the entropic-GW global alignment, AOT-lowered to HLO
 //!   text artifacts executed here through PJRT ([`runtime`]).

@@ -61,19 +61,52 @@ pub fn voronoi_from_reps(cloud: &PointCloud, reps: Vec<usize>) -> QuantizedSpace
 
 /// Graph partition: Fluid communities for blocks, max-PageRank node as each
 /// block's representative, geodesic metric from representatives only.
+///
+/// The block count is the *actual* number of communities the detection
+/// produced, which on adversarial graphs can be smaller than `m` — callers
+/// must read `num_blocks()` off the result instead of assuming `m`.
 pub fn fluid_partition<R: Rng>(g: &Graph, measure: &[f64], m: usize, rng: &mut R) -> QuantizedSpace {
     let n = g.num_nodes();
     assert_eq!(measure.len(), n);
     assert!(m >= 1 && m <= n);
     let com = fluid_communities(g, m, 100, rng);
-    let k = (*com.iter().max().unwrap() as usize) + 1;
+    partition_from_communities(g, measure, &com)
+}
+
+/// Quantize a graph from an explicit community labeling: max-PageRank
+/// representative per community, geodesic anchors via Dijkstra from the
+/// representatives only.
+///
+/// Tolerates *any* labeling — non-contiguous labels and fewer non-empty
+/// communities than a caller originally requested are relabeled away, so
+/// the block count is always the count of labels that actually occur.
+/// ([`fluid_communities`] relabels contiguously today, but quantization
+/// must not silently corrupt if a partitioner breaks that contract.)
+pub fn partition_from_communities(g: &Graph, measure: &[f64], com: &[u32]) -> QuantizedSpace {
+    let n = g.num_nodes();
+    assert_eq!(measure.len(), n);
+    assert_eq!(com.len(), n);
+    assert!(n >= 1, "empty graph");
+
+    // Defensive relabel: contiguous 0..k over the labels that occur, in
+    // first-seen node order. The remap is keyed by label value, so even
+    // sparse labelings (hash-derived or sentinel label ids) stay
+    // O(distinct labels), not O(max label value).
+    let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut labels = vec![0u32; n];
+    for (v, &c) in com.iter().enumerate() {
+        let next = remap.len() as u32;
+        labels[v] = *remap.entry(c).or_insert(next);
+    }
+    let k = remap.len();
+
     let pr = pagerank(g, 0.85, 1e-10, 100);
 
     // Representative = argmax PageRank within each community.
     let mut rep_of_block = vec![usize::MAX; k];
     let mut best_pr = vec![f64::NEG_INFINITY; k];
     for v in 0..n {
-        let c = com[v] as usize;
+        let c = labels[v] as usize;
         if pr[v] > best_pr[c] {
             best_pr[c] = pr[v];
             rep_of_block[c] = v;
@@ -85,7 +118,7 @@ pub fn fluid_partition<R: Rng>(g: &Graph, measure: &[f64], m: usize, rng: &mut R
     // Anchor distances from each node to its own block's representative.
     // Nodes unreachable from their representative (shouldn't happen on
     // connected meshes) are reassigned to the nearest reachable rep.
-    let mut block_of: Vec<u32> = com.clone();
+    let mut block_of: Vec<u32> = labels;
     let mut anchor = vec![0.0f64; n];
     for v in 0..n {
         let c = block_of[v] as usize;
@@ -136,6 +169,88 @@ pub fn block_cloud(cloud: &PointCloud, q: &QuantizedSpace, p: usize) -> PointClo
     let ids = q.block(p);
     let measure: Vec<f64> = ids.iter().map(|&i| q.conditional_measure(i as usize)).collect();
     cloud.subset(ids, measure)
+}
+
+/// Nested-partition support for graphs: extract block `p` of a graph
+/// quantization as (node-induced subgraph, block-conditional measure) —
+/// the substrate hierarchical graph matching re-partitions with nested
+/// Fluid communities, so Dijkstra distances below the top level are
+/// restricted to the block.
+///
+/// Subgraph node `k` is `q.block(p)[k]` (the anchor-sorted order, with a
+/// distance-0 node — normally the representative — at position 0), so
+/// subgraph node ids line up with block positions exactly like
+/// [`block_cloud`]. Induced-subgraph components cut off from position 0
+/// are re-attached through it by a bridge edge whose weight is the
+/// component's smallest full-graph anchor distance (the geodesic that
+/// runs through the representative), keeping every nested Dijkstra
+/// distance finite.
+pub fn block_graph(g: &Graph, q: &QuantizedSpace, p: usize) -> (Graph, Vec<f64>) {
+    assert_eq!(q.num_points(), g.num_nodes());
+    let ids = q.block(p);
+    let nb = ids.len();
+    let mut index: std::collections::HashMap<u32, u32> =
+        std::collections::HashMap::with_capacity(nb);
+    for (k, &i) in ids.iter().enumerate() {
+        index.insert(i, k as u32);
+    }
+    let mut sub = Graph::new(nb);
+    for (k, &i) in ids.iter().enumerate() {
+        for &(v, w) in g.neighbors(i as usize) {
+            if let Some(&kv) = index.get(&v) {
+                // Each undirected edge appears under both endpoints; insert
+                // it once, from the smaller block position.
+                if (kv as usize) > k {
+                    sub.add_edge(k, kv as usize, w);
+                }
+            }
+        }
+    }
+
+    // Bridge components that lost their path to position 0.
+    if nb > 1 {
+        let mut seen = vec![false; nb];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(u) = stack.pop() {
+            for &(v, _) in sub.neighbors(u) {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    stack.push(v as usize);
+                }
+            }
+        }
+        // Stranded positions, nearest-the-rep first (ties by position):
+        // one sorted pass bridges every component, instead of rescanning
+        // all unvisited nodes per component — O(nb log nb) even on the
+        // adversarial near-edgeless blocks.
+        let mut stranded: Vec<usize> = (0..nb).filter(|&k| !seen[k]).collect();
+        stranded.sort_unstable_by(|&a, &b| {
+            q.anchor_dist(ids[a] as usize)
+                .partial_cmp(&q.anchor_dist(ids[b] as usize))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for &entry in &stranded {
+            if seen[entry] {
+                continue; // absorbed into an earlier-bridged component
+            }
+            sub.add_edge(0, entry, q.anchor_dist(ids[entry] as usize));
+            seen[entry] = true;
+            let mut stack = vec![entry];
+            while let Some(u) = stack.pop() {
+                for &(v, _) in sub.neighbors(u) {
+                    if !seen[v as usize] {
+                        seen[v as usize] = true;
+                        stack.push(v as usize);
+                    }
+                }
+            }
+        }
+    }
+
+    let measure: Vec<f64> = ids.iter().map(|&i| q.conditional_measure(i as usize)).collect();
+    (sub, measure)
 }
 
 /// Quantize an arbitrary dense mm-space by random reps + Voronoi (used by
@@ -276,6 +391,88 @@ mod tests {
                 assert_eq!(sub.point(k), cloud.point(i as usize));
             }
         }
+    }
+
+    #[test]
+    fn partition_tolerates_fewer_communities_than_requested() {
+        // Regression: adversarial labelings with label gaps (i.e. fewer
+        // non-empty communities than the requested k, non-contiguous ids)
+        // must still quantize — the block count is the actual community
+        // count, not the requested one.
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 4, 1.0), (4, 5, 1.0)],
+        );
+        let measure = crate::core::uniform_measure(6);
+        let com = vec![0u32, 7, 7, 0, 3, 3];
+        let q = partition_from_communities(&g, &measure, &com);
+        assert_eq!(q.num_blocks(), 3);
+        assert_eq!(q.num_points(), 6);
+        let total: usize = (0..3).map(|p| q.block(p).len()).sum();
+        assert_eq!(total, 6);
+        assert!((q.rep_measure().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for v in 0..6 {
+            assert!(q.anchor_dist(v).is_finite());
+        }
+    }
+
+    #[test]
+    fn block_graph_preserves_block_order_and_induced_edges() {
+        // 8-node path; 2 fluid blocks; each block's subgraph must carry the
+        // induced edges with node k = block(p)[k].
+        let g = Graph::from_edges(8, &(0..7).map(|i| (i, i + 1, 1.0)).collect::<Vec<_>>());
+        let measure = crate::core::uniform_measure(8);
+        let mut rng = Pcg32::seed_from(9);
+        let q = fluid_partition(&g, &measure, 2, &mut rng);
+        for p in 0..q.num_blocks() {
+            let (sub, mu) = block_graph(&g, &q, p);
+            let ids = q.block(p);
+            assert_eq!(sub.num_nodes(), ids.len());
+            assert_eq!(mu.len(), ids.len());
+            assert!((mu.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            // Position 0 carries anchor distance 0 (the representative).
+            assert_eq!(q.anchor_dist(ids[0] as usize), 0.0);
+            // Every subgraph is connected (bridged if the induced edges
+            // were not enough).
+            assert!(sub.is_connected(), "block {p} subgraph disconnected");
+            // Induced edges connect exactly the in-block neighbor pairs.
+            for (k, &i) in ids.iter().enumerate() {
+                let expect = g
+                    .neighbors(i as usize)
+                    .iter()
+                    .filter(|&&(v, _)| ids.contains(&v))
+                    .count();
+                assert!(sub.degree(k) >= expect, "missing induced edges at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_graph_bridges_stranded_components() {
+        // Block {0, 2, 4} of a path 0-1-2-3-4 has no induced edges at all;
+        // the bridge edges must reconnect it through position 0 with
+        // full-graph anchor weights.
+        let g = Graph::from_edges(5, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 4, 1.0)]);
+        let (rep_d, rows) = crate::metric::geodesic_rep_matrix(&g, &[0, 1]);
+        let block_of = vec![0u32, 1, 0, 1, 0];
+        let anchor: Vec<f64> = (0..5)
+            .map(|v| rows[block_of[v] as usize][v])
+            .collect();
+        let q = QuantizedSpace::new(
+            vec![0, 1],
+            rep_d,
+            block_of,
+            anchor,
+            crate::core::uniform_measure(5),
+        );
+        let (sub, _) = block_graph(&g, &q, 0);
+        assert_eq!(sub.num_nodes(), 3); // nodes 0, 2, 4
+        assert!(sub.is_connected(), "bridging failed");
+        // Bridge weights are the stranded nodes' anchor distances (2, 4).
+        let total_weight: f64 = (0..3)
+            .flat_map(|u| sub.neighbors(u).iter().map(|&(_, w)| w))
+            .sum();
+        assert!((total_weight - 2.0 * (2.0 + 4.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   blended as `(1-beta) mu0 + beta mu1`.
 
 use crate::core::{DenseMatrix, PointCloud, QuantizedSpace};
+use crate::gw::GwResult;
 use crate::ot::emd1d;
 use crate::partition::voronoi_partition;
 use crate::prng::Rng;
@@ -54,6 +55,40 @@ impl FeatureSet {
         let (a, b) = (self.feature(i), other.feature(j));
         a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
     }
+
+    /// Gather the listed rows as a standalone feature set — the
+    /// nested-partition substrate: hierarchical qFGW restricts features to
+    /// a block exactly like [`PointCloud::subset`] restricts coordinates,
+    /// so row `k` of the result is position `k` in the block's local plans.
+    pub fn subset(&self, ids: &[u32]) -> FeatureSet {
+        let mut data = Vec::with_capacity(ids.len() * self.dim);
+        for &i in ids {
+            data.extend_from_slice(self.feature(i as usize));
+        }
+        FeatureSet { data, dim: self.dim }
+    }
+}
+
+/// Feature-space analogue of the quantized eccentricity: block-wise RMS
+/// feature distance to the block representative, weighted by block mass —
+/// `qf(P)^2 = sum_p mu(U^p) sum_{i in U^p} d_f(i, rep_p)^2 mu_{U^p}(i)`.
+/// This is the feature term each node of the composed hierarchical qFGW
+/// error bound contributes (the geometric Theorem-6 term covers only the
+/// metric; blending features perturbs the coupling by at most the feature
+/// spread the quantization ignores).
+pub fn feature_quantized_eccentricity(q: &QuantizedSpace, f: &FeatureSet) -> f64 {
+    assert_eq!(q.num_points(), f.len());
+    let mut total = 0.0;
+    for p in 0..q.num_blocks() {
+        let rep = q.rep_ids()[p];
+        let mut s2 = 0.0;
+        for &i in q.block(p) {
+            let i = i as usize;
+            s2 += f.dist(i, f, rep).powi(2) * q.conditional_measure(i);
+        }
+        total += q.rep_measure()[p] * s2;
+    }
+    total.sqrt()
 }
 
 #[derive(Clone, Debug)]
@@ -99,36 +134,75 @@ pub fn qfgw_match_quantized(
     cfg: &QfgwConfig,
     aligner: &dyn GlobalAligner,
 ) -> QgwResult {
-    // Global: FGW over representatives with rep-restricted feature cost.
+    let res = qfgw_align(qx, qy, fx, fy, cfg, aligner);
+    qfgw_assemble(qx, qy, fx, fy, res, cfg)
+}
+
+/// Rep-restricted squared feature-distance cost — the FGW `W` term over
+/// representatives, shared by flat qFGW and every hierarchical recursion
+/// node.
+pub(crate) fn rep_feature_cost(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    fx: &FeatureSet,
+    fy: &FeatureSet,
+) -> DenseMatrix {
     let reps_x = qx.rep_ids();
     let reps_y = qy.rep_ids();
-    let feat_cost = DenseMatrix::from_fn(reps_x.len(), reps_y.len(), |p, q| {
+    DenseMatrix::from_fn(reps_x.len(), reps_y.len(), |p, q| {
         let d = fx.dist(reps_x[p], fy, reps_y[q]);
         d * d
-    });
-    let res = aligner.align_fused(
+    })
+}
+
+/// Global stage alone: FGW over representatives with the rep-restricted
+/// feature cost (split out so the pipeline can time it separately).
+pub(crate) fn qfgw_align(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    fx: &FeatureSet,
+    fy: &FeatureSet,
+    cfg: &QfgwConfig,
+    aligner: &dyn GlobalAligner,
+) -> GwResult {
+    let feat_cost = rep_feature_cost(qx, qy, fx, fy);
+    aligner.align_fused(
         qx.rep_dists(),
         qy.rep_dists(),
         &feat_cost,
         qx.rep_measure(),
         qy.rep_measure(),
         cfg.alpha,
-    );
+    )
+}
 
-    // Local: blend geometric and feature local linear matchings.
+/// Local + assembly stage: beta-blended local plans, plus the feature term
+/// `2 (qf_X + qf_Y)` in the a-priori bound (the geometric Theorem-6 term
+/// alone understates the error once features steer the coupling).
+pub(crate) fn qfgw_assemble(
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    fx: &FeatureSet,
+    fy: &FeatureSet,
+    global_res: GwResult,
+    cfg: &QfgwConfig,
+) -> QgwResult {
     let beta = cfg.beta;
-    assemble_with(qx, qy, res, &cfg.base, move |p, q, geo_plan| {
+    let mut out = assemble_with(qx, qy, global_res, &cfg.base, move |p, q, geo_plan| {
         if beta <= 0.0 {
             return geo_plan;
         }
         let feat_plan = local_feature_matching(qx, qy, fx, fy, p, q);
         blend_plans(geo_plan, feat_plan, beta)
-    })
+    });
+    out.error_bound +=
+        2.0 * (feature_quantized_eccentricity(qx, fx) + feature_quantized_eccentricity(qy, fy));
+    out
 }
 
 /// Local linear matching in feature space: 1-D OT between pushforwards of
 /// the block measures under feature-distance-to-anchor-feature.
-fn local_feature_matching(
+pub(crate) fn local_feature_matching(
     qx: &QuantizedSpace,
     qy: &QuantizedSpace,
     fx: &FeatureSet,
@@ -148,7 +222,7 @@ fn local_feature_matching(
 }
 
 /// `(1-beta) mu0 + beta mu1`, merging duplicate support entries.
-fn blend_plans(geo: LocalPlan, feat: LocalPlan, beta: f64) -> LocalPlan {
+pub(crate) fn blend_plans(geo: LocalPlan, feat: LocalPlan, beta: f64) -> LocalPlan {
     if beta >= 1.0 {
         return feat;
     }
@@ -244,5 +318,46 @@ mod tests {
         assert_eq!(f.len(), 2);
         assert_eq!(f.feature(1), &[3.0, 4.0]);
         assert!((f.dist(0, &f, 1) - (8.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feature_subset_gathers_rows() {
+        let f = FeatureSet::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2);
+        let sub = f.subset(&[2, 0]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.dim(), 2);
+        assert_eq!(sub.feature(0), &[5.0, 6.0]);
+        assert_eq!(sub.feature(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn feature_eccentricity_zero_iff_constant_within_blocks() {
+        let (x, fx) = cloud_with_features(80, 9);
+        let mut rng = Pcg32::seed_from(10);
+        let q = crate::partition::voronoi_partition(&x, 8, &mut rng);
+        // Real features: positive spread.
+        assert!(feature_quantized_eccentricity(&q, &fx) > 0.0);
+        // Constant features: every block concentrates at its rep's value.
+        let constant = FeatureSet::new(vec![0.5; x.len()], 1);
+        assert!(feature_quantized_eccentricity(&q, &constant) < 1e-12);
+    }
+
+    #[test]
+    fn fused_bound_includes_feature_term() {
+        let (x, fx) = cloud_with_features(100, 11);
+        let mut rng = Pcg32::seed_from(12);
+        let q = crate::partition::voronoi_partition(&x, 10, &mut rng);
+        let cfg = QfgwConfig { base: QgwConfig::with_count(10), alpha: 0.5, beta: 0.5 };
+        let fused =
+            qfgw_match_quantized(&q, &q, &fx, &fx, &cfg, &RustAligner(cfg.base.gw.clone()));
+        let flat = crate::qgw::qgw_match_quantized(&q, &q, &cfg.base, &RustAligner(cfg.base.gw.clone()));
+        let feat_term = 2.0 * 2.0 * feature_quantized_eccentricity(&q, &fx);
+        assert!(
+            (fused.error_bound - (flat.error_bound + feat_term)).abs() < 1e-9,
+            "fused bound {} vs geometric {} + feature {}",
+            fused.error_bound,
+            flat.error_bound,
+            feat_term
+        );
     }
 }

@@ -1,5 +1,7 @@
-//! Hierarchical (multi-level) qGW — the paper's "adding recursion as
-//! needed" (§2.2), with qGW at every recursion node.
+//! Hierarchical (multi-level) qGW/qFGW — the paper's "adding recursion as
+//! needed" (§2.2), with a quantized match at every recursion node, for
+//! **every substrate**: plain point clouds, feature-carrying clouds
+//! (fused/qFGW), and graphs.
 //!
 //! Flat qGW quantizes once: an `m`-block partition, one global alignment
 //! over the `m x m` representatives, and a 1-D *local linear matching*
@@ -12,15 +14,29 @@
 //! blocks and the representatives are globally aligned exactly as in flat
 //! qGW — but instead of matching each supported block pair with the 1-D
 //! leaf directly, the pair is *re-quantized* (each block extracted once as
-//! a standalone cloud carrying its block-conditional measure, via
-//! [`crate::partition::block_cloud`], and shared by every pair the block
-//! participates in) and matched by qGW again, bottoming out at the
-//! presorted [`crate::ot::emd1d_presorted`] leaf once a block pair falls
-//! to [`QgwConfig::leaf_size`] or the level budget ([`QgwConfig::levels`])
-//! is spent. With `l` levels the same leaf resolution costs
-//! `m_i ~ (N/L)^(1/l)` per level: the biggest rep matrix shrinks from
-//! O((N/L)^2) to O((N/L)^(2/l)) and the global solves shrink accordingly,
-//! while every intermediate structure stays O(m_i^2 + n_i).
+//! a standalone [`Substrate`] carrying its block-conditional measure, and
+//! shared by every pair the block participates in) and matched by qGW
+//! again, bottoming out at the presorted [`crate::ot::emd1d_presorted`]
+//! leaf once a block pair falls to [`QgwConfig::leaf_size`] or the level
+//! budget ([`QgwConfig::levels`]) is spent. With `l` levels the same leaf
+//! resolution costs `m_i ~ (N/L)^(1/l)` per level: the biggest rep matrix
+//! shrinks from O((N/L)^2) to O((N/L)^(2/l)) and the global solves shrink
+//! accordingly, while every intermediate structure stays O(m_i^2 + n_i).
+//!
+//! **Substrate coverage** (all three hierarchical since PR 2):
+//!
+//! * *Point clouds* — blocks extracted via [`crate::partition::block_cloud`],
+//!   re-partitioned with the shared k-means/Voronoi partitioner.
+//! * *Fused clouds (qFGW)* — [`FeatureSet`] slices thread through block
+//!   extraction, every node's global alignment runs `align_fused` with the
+//!   rep-restricted feature cost, and every leaf blends the geometric and
+//!   feature local plans `(1-beta) mu0 + beta mu1` exactly as flat
+//!   [`crate::qgw::qfgw_match_quantized`] does.
+//! * *Graphs* — blocks extracted via [`crate::partition::block_graph`]
+//!   (node-induced subgraph, stranded components bridged through the
+//!   representative) and re-partitioned with nested Fluid communities +
+//!   max-PageRank representatives, Dijkstra distances restricted to the
+//!   block.
 //!
 //! Contrast with the MREC baseline ([`crate::gw::mrec_match`]): MREC pays
 //! a full entropic-GW solve at every recursion node *and leaf*; here each
@@ -30,30 +46,161 @@
 //! The output is the same factored [`QuantizationCoupling`] as flat qGW —
 //! exact marginals (Proposition 1 applies level by level, because every
 //! recursive sub-coupling is itself an exact coupling of the block
-//! conditional measures), O(1)-ish `map_point` row queries, `to_sparse` —
-//! so every consumer (service, eval, experiments) works unchanged. The
-//! a-priori error bound composes across levels: each node contributes its
-//! Theorem-6 term `2 (q_X + q_Y) + 8 eps`, and the bound accumulates the
-//! worst child chain per level (leaves are exact and contribute 0).
+//! conditional measures — the beta-blend preserves this, being a convex
+//! combination of two exact couplings), O(1)-ish `map_point` row queries,
+//! `to_sparse` — so every consumer (service, eval, experiments) works
+//! unchanged. The a-priori error bound composes across levels: each node
+//! contributes its Theorem-6 term `2 (q_X + q_Y) + 8 eps`, **plus, when
+//! features are in play, the feature term `2 (qf_X + qf_Y)`** (the
+//! feature-space quantized eccentricity of
+//! [`crate::qgw::feature_quantized_eccentricity`]), and the bound
+//! accumulates the worst child chain per level (leaves are exact and
+//! contribute 0).
 //!
 //! Work fans out over [`crate::coordinator::parallel_map`] twice at the
 //! top level: block extraction + re-partitioning (one task per distinct
 //! block of a recursing pair) and then pair alignment + recursion (one
 //! task per supported pair). Every task derives its RNG from
 //! `(base seed, level, side/pair ids)` — never from shared mutable state —
-//! so the coupling is byte-identical for any thread count (guarded by the
-//! determinism regression test in `rust/tests/properties.rs`).
+//! so the coupling is byte-identical for any thread count on every
+//! substrate (guarded by the determinism regression tests in
+//! `rust/tests/properties.rs`).
 
+use std::borrow::Cow;
 use std::collections::HashMap;
+use std::time::Instant;
 
 use crate::coordinator::parallel_map;
 use crate::core::{PointCloud, QuantizedSpace, SparseCoupling};
-use crate::partition::{block_cloud, partition_cloud};
+use crate::graph::Graph;
+use crate::gw::GwResult;
+use crate::partition::{
+    block_cloud, block_graph, fluid_partition, partition_cloud, voronoi_partition,
+};
 use crate::prng::{Pcg32, Rng, SplitMix64};
 use crate::qgw::algorithm::{
     local_linear_matching, GlobalAligner, QgwConfig, QgwResult, RustAligner,
 };
 use crate::qgw::coupling::{LocalPlan, QuantizationCoupling};
+use crate::qgw::fused::{
+    blend_plans, feature_quantized_eccentricity, local_feature_matching, rep_feature_cost,
+    FeatureSet, QfgwConfig,
+};
+
+// ---------------------------------------------------------------------------
+// Substrate: what a recursion node re-quantizes
+// ---------------------------------------------------------------------------
+
+/// One side of a hierarchical match: the raw data a recursion node can
+/// extract blocks from and re-quantize, plus optional per-point features
+/// (hierarchical qFGW threads these through every level).
+///
+/// The top level borrows the caller's data; extracted blocks own theirs
+/// (`Cow` keeps the recursion allocation-honest either way).
+pub struct Substrate<'a> {
+    data: SubstrateData<'a>,
+    features: Option<Cow<'a, FeatureSet>>,
+}
+
+enum SubstrateData<'a> {
+    Cloud(Cow<'a, PointCloud>),
+    Graph { graph: Cow<'a, Graph>, measure: Cow<'a, [f64]> },
+}
+
+impl<'a> Substrate<'a> {
+    /// Plain point-cloud side.
+    pub fn cloud(x: &'a PointCloud) -> Self {
+        Self { data: SubstrateData::Cloud(Cow::Borrowed(x)), features: None }
+    }
+
+    /// Graph side with its node measure.
+    pub fn graph(g: &'a Graph, measure: &'a [f64]) -> Self {
+        assert_eq!(g.num_nodes(), measure.len());
+        Self {
+            data: SubstrateData::Graph {
+                graph: Cow::Borrowed(g),
+                measure: Cow::Borrowed(measure),
+            },
+            features: None,
+        }
+    }
+
+    /// Attach per-point features (enables the fused path when the caller
+    /// also passes `(alpha, beta)` weights).
+    pub fn with_features(mut self, f: &'a FeatureSet) -> Self {
+        assert_eq!(f.len(), self.len());
+        self.features = Some(Cow::Borrowed(f));
+        self
+    }
+
+    /// Number of points / nodes.
+    pub fn len(&self) -> usize {
+        match &self.data {
+            SubstrateData::Cloud(c) => c.len(),
+            SubstrateData::Graph { measure, .. } => measure.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The attached features, if any.
+    pub fn features(&self) -> Option<&FeatureSet> {
+        self.features.as_deref()
+    }
+
+    /// Quantize with the substrate's partitioner: the shared
+    /// k-means/Voronoi partitioner for clouds, Fluid communities +
+    /// max-PageRank representatives + Dijkstra anchors for graphs.
+    fn partition<R: Rng>(&self, m: usize, kmeans: bool, rng: &mut R) -> QuantizedSpace {
+        match &self.data {
+            SubstrateData::Cloud(c) => partition_cloud(c, m, kmeans, rng),
+            SubstrateData::Graph { graph, measure } => {
+                fluid_partition(graph, measure, m.min(measure.len()).max(1), rng)
+            }
+        }
+    }
+
+    /// Extract block `p` as a standalone substrate carrying the
+    /// block-conditional measure — and, when `keep_features` (the fused
+    /// blend is active), the block's feature rows; with the blend off the
+    /// rows would be dead weight in every recursion cache. Index `k` of
+    /// the result is position `k` in the block's local plans for every
+    /// substrate kind.
+    fn extract_block(&self, q: &QuantizedSpace, p: usize, keep_features: bool) -> Substrate<'static> {
+        let data = match &self.data {
+            SubstrateData::Cloud(c) => SubstrateData::Cloud(Cow::Owned(block_cloud(c, q, p))),
+            SubstrateData::Graph { graph, .. } => {
+                let (sub, measure) = block_graph(graph, q, p);
+                SubstrateData::Graph { graph: Cow::Owned(sub), measure: Cow::Owned(measure) }
+            }
+        };
+        let features = if keep_features {
+            self.features.as_deref().map(|f| Cow::Owned(f.subset(q.block(p))))
+        } else {
+            None
+        };
+        Substrate { data, features }
+    }
+
+    /// Tracked bytes of the raw substrate data (for the peak-memory
+    /// accounting in [`HierStats`]).
+    fn memory_bytes(&self) -> usize {
+        let base = match &self.data {
+            SubstrateData::Cloud(c) => c.coords().len() * 8 + c.len() * 8,
+            SubstrateData::Graph { graph, measure } => {
+                // Each undirected edge stored twice as (u32, f64).
+                graph.num_edges() * 2 * 16 + measure.len() * 8
+            }
+        };
+        base + self.features().map_or(0, |f| f.len() * f.dim() * 8)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------------
 
 /// Per-level diagnostics of a hierarchical match (level 0 = the top
 /// alignment; level `k` = pairs solved `k` recursions down).
@@ -65,7 +212,9 @@ pub struct HierStats {
     /// local plan is a coupling of conditional measures, so this is float
     /// noise plus pruned mass).
     pub max_mass_err_per_level: Vec<f64>,
-    /// Worst per-node Theorem-6 term `2 (q_X + q_Y) + 8 eps` at each level.
+    /// Worst per-node bound term at each level: the Theorem-6 term
+    /// `2 (q_X + q_Y) + 8 eps`, plus the feature term `2 (qf_X + qf_Y)`
+    /// when the node aligned fused.
     pub bound_term_per_level: Vec<f64>,
     /// Exact 1-D leaf matchings executed (across all levels).
     pub leaf_matchings: usize,
@@ -84,7 +233,7 @@ pub struct HierStats {
     /// top (scheduler-independent, unlike the concurrent-peak estimate).
     pub max_node_rep_bytes: usize,
     /// Bytes of the top node's block caches (every recursing block's
-    /// extracted sub-cloud + nested quantized space), resident for the
+    /// extracted sub-substrate + nested quantized space), resident for the
     /// whole pair fan-out.
     pub top_cache_bytes: usize,
     /// Worst per-pair transient below the top caches: a recursing pair's
@@ -159,7 +308,7 @@ impl HierStats {
 /// Result of a hierarchical match: the flat-compatible [`QgwResult`]
 /// (whose `error_bound` is the *composed* multi-level bound and whose
 /// `num_local_matchings` counts the exact 1-D leaves) plus per-level
-/// diagnostics.
+/// diagnostics and the honest per-stage wall times.
 #[derive(Debug)]
 pub struct HierQgwResult {
     pub result: QgwResult,
@@ -167,6 +316,12 @@ pub struct HierQgwResult {
     /// The configured level budget (levels actually used may be smaller
     /// when blocks hit the leaf size early; see `stats.levels_used()`).
     pub levels: usize,
+    /// Wall time of the top-level global alignment alone.
+    pub global_secs: f64,
+    /// Wall time of everything below it: block extraction, recursion
+    /// (including nested alignments), leaf matchings, and coupling
+    /// assembly.
+    pub local_secs: f64,
 }
 
 /// Partition size per level that reaches `leaf_size`-point blocks after
@@ -185,6 +340,10 @@ pub fn balanced_m(n: usize, leaf_size: usize, levels: usize) -> usize {
     m.clamp(2, n)
 }
 
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
 /// Hierarchical qGW between point clouds: top-level partition from `rng`
 /// (same construction as flat [`crate::qgw::qgw_match`], so `levels = 1`
 /// reproduces flat qGW exactly), recursion seeds derived deterministically.
@@ -202,13 +361,70 @@ pub fn hier_qgw_match<R: Rng>(
     hier_qgw_match_quantized(x, y, &qx, &qy, cfg, &RustAligner(cfg.gw.clone()), seed)
 }
 
-/// Hierarchical qGW over a pre-built top-level partition (what the
-/// pipeline and the flat-vs-hier comparisons use: sharing `qx`/`qy` with a
-/// flat run makes the two differ only below the top level).
-///
-/// `seed` drives the recursive re-partitioning; each block and each pair
-/// derives its own stream from `(seed, level, ids)`, so results do not
-/// depend on `cfg.num_threads`.
+/// Hierarchical qFGW between featured point clouds: Voronoi top partition
+/// (exactly like flat [`crate::qgw::qfgw_match`]), `align_fused` with the
+/// rep-restricted feature cost at every recursion node, beta-blended
+/// geometric/feature local plans at every leaf.
+pub fn hier_qfgw_match<R: Rng>(
+    x: &PointCloud,
+    y: &PointCloud,
+    fx: &FeatureSet,
+    fy: &FeatureSet,
+    cfg: &QfgwConfig,
+    rng: &mut R,
+) -> HierQgwResult {
+    assert_eq!(fx.len(), x.len());
+    assert_eq!(fy.len(), y.len());
+    let mx = cfg.base.size.resolve(x.len());
+    let my = cfg.base.size.resolve(y.len());
+    let qx = voronoi_partition(x, mx, rng);
+    let qy = voronoi_partition(y, my, rng);
+    let seed = rng.next_u64();
+    hier_match_quantized(
+        &Substrate::cloud(x).with_features(fx),
+        &Substrate::cloud(y).with_features(fy),
+        &qx,
+        &qy,
+        &cfg.base,
+        Some((cfg.alpha, cfg.beta)),
+        &RustAligner(cfg.base.gw.clone()),
+        seed,
+    )
+}
+
+/// Hierarchical graph matching: Fluid-community top partition (max
+/// PageRank representatives, Dijkstra anchors), nested Fluid
+/// re-partitioning at every recursion node, optional WL-style features
+/// for a fused blend when `fused = Some((alpha, beta))`.
+#[allow(clippy::too_many_arguments)]
+pub fn hier_graph_match<R: Rng>(
+    x: &Graph,
+    y: &Graph,
+    mu_x: &[f64],
+    mu_y: &[f64],
+    features: Option<(&FeatureSet, &FeatureSet)>,
+    fused: Option<(f64, f64)>,
+    cfg: &QgwConfig,
+    rng: &mut R,
+) -> HierQgwResult {
+    let mx = cfg.size.resolve(x.num_nodes());
+    let my = cfg.size.resolve(y.num_nodes());
+    let qx = fluid_partition(x, mu_x, mx, rng);
+    let qy = fluid_partition(y, mu_y, my, rng);
+    let seed = rng.next_u64();
+    let mut sx = Substrate::graph(x, mu_x);
+    let mut sy = Substrate::graph(y, mu_y);
+    if let Some((fx, fy)) = features {
+        sx = sx.with_features(fx);
+        sy = sy.with_features(fy);
+    }
+    hier_match_quantized(&sx, &sy, &qx, &qy, cfg, fused, &RustAligner(cfg.gw.clone()), seed)
+}
+
+/// Hierarchical qGW over a pre-built top-level point-cloud partition (what
+/// the flat-vs-hier comparisons use: sharing `qx`/`qy` with a flat run
+/// makes the two differ only below the top level). Thin wrapper around the
+/// substrate-generic [`hier_match_quantized`].
 pub fn hier_qgw_match_quantized(
     x: &PointCloud,
     y: &PointCloud,
@@ -218,26 +434,62 @@ pub fn hier_qgw_match_quantized(
     aligner: &(dyn GlobalAligner + Sync),
     seed: u64,
 ) -> HierQgwResult {
+    hier_match_quantized(&Substrate::cloud(x), &Substrate::cloud(y), qx, qy, cfg, None, aligner, seed)
+}
+
+/// The substrate-generic hierarchical match over a pre-built top-level
+/// partition — the single recursion every pipeline input routes through.
+///
+/// `fused` enables the qFGW blend (`align_fused` at every node, beta-blend
+/// at every leaf) and is ignored unless *both* substrates carry features.
+/// `seed` drives the recursive re-partitioning; each block and each pair
+/// derives its own stream from `(seed, level, ids)`, so results do not
+/// depend on `cfg.num_threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn hier_match_quantized(
+    x: &Substrate<'_>,
+    y: &Substrate<'_>,
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    cfg: &QgwConfig,
+    fused: Option<(f64, f64)>,
+    aligner: &(dyn GlobalAligner + Sync),
+    seed: u64,
+) -> HierQgwResult {
     assert_eq!(qx.num_points(), x.len());
     assert_eq!(qy.num_points(), y.len());
     let levels = cfg.levels.max(1);
+    // The fused blend needs features on both sides.
+    let fused = match (fused, x.features(), y.features()) {
+        (Some(ab), Some(_), Some(_)) => Some(ab),
+        _ => None,
+    };
 
     // Step 1: global alignment of the top-level representatives — exactly
-    // as flat qGW.
-    let global_res =
-        aligner.align(qx.rep_dists(), qy.rep_dists(), qx.rep_measure(), qy.rep_measure());
-    let global = SparseCoupling::from_dense(&global_res.plan, cfg.mass_threshold);
-    let pairs: Vec<(u32, u32)> = global.iter().map(|(p, q, _)| (p as u32, q as u32)).collect();
+    // as flat qGW/qFGW.
+    let align_start = Instant::now();
+    let global_res = align_node(x, y, qx, qy, fused, aligner);
+    let global_secs = align_start.elapsed().as_secs_f64();
 
     // Step 2: solve every supported pair (leaf 1-D matching or a nested
-    // qGW node), fanned out over the pool.
-    let node = solve_pairs(x, y, qx, qy, &pairs, levels - 1, 0, cfg, aligner, seed, true);
+    // quantized node), fanned out over the pool.
+    let local_start = Instant::now();
+    let global = SparseCoupling::from_dense(&global_res.plan, cfg.mass_threshold);
+    let pairs: Vec<(u32, u32)> = global.iter().map(|(p, q, _)| (p as u32, q as u32)).collect();
+    let node =
+        solve_pairs(x, y, qx, qy, &pairs, levels - 1, 0, cfg, fused, aligner, seed, true);
 
     // Step 3: assemble the factored coupling and compose the bound.
     let q_x = qx.quantized_eccentricity();
     let q_y = qy.quantized_eccentricity();
-    let eps = qx.block_diameter_bound().max(qy.block_diameter_bound());
-    let top_term = 2.0 * (q_x + q_y) + 8.0 * eps;
+    let top_feat = match (fused, x.features(), y.features()) {
+        (Some(_), Some(fx), Some(fy)) => {
+            feature_quantized_eccentricity(qx, fx) + feature_quantized_eccentricity(qy, fy)
+        }
+        _ => 0.0,
+    };
+    let top_eps = qx.block_diameter_bound().max(qy.block_diameter_bound());
+    let top_term = bound_term(q_x, q_y, top_eps, top_feat);
 
     let mut stats = node.stats;
     stats.top_quantized_bytes = qx.memory_bytes() + qy.memory_bytes();
@@ -261,7 +513,70 @@ pub fn hier_qgw_match_quantized(
         },
         stats,
         levels,
+        global_secs,
+        local_secs: local_start.elapsed().as_secs_f64(),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Recursion internals
+// ---------------------------------------------------------------------------
+
+/// One node's global alignment: `align_fused` with the rep-restricted
+/// feature cost when the fused blend is active, plain `align` otherwise.
+fn align_node(
+    sx: &Substrate<'_>,
+    sy: &Substrate<'_>,
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    fused: Option<(f64, f64)>,
+    aligner: &(dyn GlobalAligner + Sync),
+) -> GwResult {
+    match (fused, sx.features(), sy.features()) {
+        (Some((alpha, _)), Some(fx), Some(fy)) => {
+            let feat_cost = rep_feature_cost(qx, qy, fx, fy);
+            aligner.align_fused(
+                qx.rep_dists(),
+                qy.rep_dists(),
+                &feat_cost,
+                qx.rep_measure(),
+                qy.rep_measure(),
+                alpha,
+            )
+        }
+        _ => aligner.align(qx.rep_dists(), qy.rep_dists(), qx.rep_measure(), qy.rep_measure()),
+    }
+}
+
+/// One leaf's local plan: the exact 1-D geometric matching, beta-blended
+/// with the feature matching when the fused blend is active — identical to
+/// flat qFGW's per-pair construction.
+fn leaf_plan(
+    sx: &Substrate<'_>,
+    sy: &Substrate<'_>,
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    p: usize,
+    q: usize,
+    fused: Option<(f64, f64)>,
+) -> LocalPlan {
+    let geo = local_linear_matching(qx, qy, p, q);
+    match (fused, sx.features(), sy.features()) {
+        (Some((_, beta)), Some(fx), Some(fy)) if beta > 0.0 => {
+            let feat = local_feature_matching(qx, qy, fx, fy, p, q);
+            blend_plans(geo, feat, beta)
+        }
+        _ => geo,
+    }
+}
+
+/// One node's contribution to the composed a-priori bound: the Theorem-6
+/// term `2 (q_X + q_Y) + 8 eps` plus the (already-summed) feature
+/// eccentricity term. All inputs are scalars computed once per block —
+/// they are O(block) scans, and a block typically serves several partner
+/// pairs.
+fn bound_term(q_x: f64, q_y: f64, eps: f64, feat_ecc: f64) -> f64 {
+    2.0 * (q_x + q_y) + 8.0 * eps + 2.0 * feat_ecc
 }
 
 /// Outcome of one supported block pair: a local plan over block positions
@@ -280,7 +595,7 @@ struct NodeOutcome {
     plans: Vec<LocalPlan>,
     /// Max over pairs of the composed bound below that pair.
     child_bound: f64,
-    /// Bytes of this node's block caches (sub-clouds + nested spaces).
+    /// Bytes of this node's block caches (sub-substrates + nested spaces).
     cache_bytes: usize,
     /// Max over pairs of `PairOutcome::transient_bytes`.
     max_pair_transient: usize,
@@ -304,8 +619,24 @@ fn block_seed(base: u64, level: usize, side: u64, block: usize) -> u64 {
     sm.next()
 }
 
+/// Per-block data shared by every partner pair of an alignment node: the
+/// extracted substrate, its nested partition, and the eccentricity
+/// scalars the bound term needs — computed once per block (a block
+/// typically supports 2-3 partner pairs).
+struct CachedBlock {
+    sub: Substrate<'static>,
+    q: QuantizedSpace,
+    /// Geometric quantized eccentricity of the nested partition.
+    q_ecc: f64,
+    /// Block-diameter bound (the Theorem-6 `eps`) of the nested partition.
+    diam: f64,
+    /// Feature-space quantized eccentricity (0 unless the fused blend is
+    /// active and features are attached).
+    feat_ecc: f64,
+}
+
 /// One extracted + re-partitioned block per entry, keyed by block id.
-type BlockCache = HashMap<u32, (PointCloud, QuantizedSpace)>;
+type BlockCache = HashMap<u32, CachedBlock>;
 
 /// Extract and re-partition each listed block exactly once — blocks
 /// typically support 2-3 partner pairs, and this is the node's dominant
@@ -313,26 +644,33 @@ type BlockCache = HashMap<u32, (PointCloud, QuantizedSpace)>;
 /// level, sequential inside recursion workers.
 #[allow(clippy::too_many_arguments)]
 fn build_block_cache(
-    cloud: &PointCloud,
+    sub: &Substrate<'_>,
     q: &QuantizedSpace,
     blocks: &[u32],
     levels_left: usize,
     pair_level: usize,
     side: u64,
     cfg: &QgwConfig,
+    fused: bool,
     seed: u64,
     parallel: bool,
 ) -> BlockCache {
     let leaf = cfg.leaf_size.max(1);
     let build_one = |p: &u32| {
         let pu = *p as usize;
-        let sub = block_cloud(cloud, q, pu);
-        let m = balanced_m(sub.len(), leaf, levels_left);
+        let child = sub.extract_block(q, pu, fused);
+        let m = balanced_m(child.len(), leaf, levels_left);
         let mut rng = Pcg32::seed_from(block_seed(seed, pair_level, side, pu));
-        let qsub = partition_cloud(&sub, m, cfg.kmeans, &mut rng);
-        (sub, qsub)
+        let qsub = child.partition(m, cfg.kmeans, &mut rng);
+        let q_ecc = qsub.quantized_eccentricity();
+        let diam = qsub.block_diameter_bound();
+        let feat_ecc = match (fused, child.features()) {
+            (true, Some(f)) => feature_quantized_eccentricity(&qsub, f),
+            _ => 0.0,
+        };
+        CachedBlock { sub: child, q: qsub, q_ecc, diam, feat_ecc }
     };
-    let built: Vec<(PointCloud, QuantizedSpace)> = if parallel {
+    let built: Vec<CachedBlock> = if parallel {
         parallel_map(blocks, build_one, cfg.num_threads)
     } else {
         blocks.iter().map(build_one).collect()
@@ -346,14 +684,15 @@ fn build_block_cache(
 /// out over the pool; recursive calls run inside their worker.
 #[allow(clippy::too_many_arguments)]
 fn solve_pairs(
-    x: &PointCloud,
-    y: &PointCloud,
+    x: &Substrate<'_>,
+    y: &Substrate<'_>,
     qx: &QuantizedSpace,
     qy: &QuantizedSpace,
     pairs: &[(u32, u32)],
     levels_left: usize,
     pair_level: usize,
     cfg: &QgwConfig,
+    fused: Option<(f64, f64)>,
     aligner: &(dyn GlobalAligner + Sync),
     seed: u64,
     parallel: bool,
@@ -379,31 +718,36 @@ fn solve_pairs(
         .collect();
     need_y.sort_unstable();
     need_y.dedup();
-    let cache_x =
-        build_block_cache(x, qx, &need_x, levels_left, pair_level, 0, cfg, seed, parallel);
-    let cache_y =
-        build_block_cache(y, qy, &need_y, levels_left, pair_level, 1, cfg, seed, parallel);
+    let is_fused = fused.is_some();
+    let cache_x = build_block_cache(
+        x, qx, &need_x, levels_left, pair_level, 0, cfg, is_fused, seed, parallel,
+    );
+    let cache_y = build_block_cache(
+        y, qy, &need_y, levels_left, pair_level, 1, cfg, is_fused, seed, parallel,
+    );
     let cache_bytes: usize = cache_x
         .values()
         .chain(cache_y.values())
-        .map(|(sub, qsub)| cloud_bytes(sub) + qsub.memory_bytes())
+        .map(|c| c.sub.memory_bytes() + c.q.memory_bytes())
         .sum();
 
     let solve_one = |pair: &(u32, u32)| -> PairOutcome {
         let (pu, qu) = (pair.0 as usize, pair.1 as usize);
         if !recurses(pu, qu) {
-            // Leaf: the presorted exact 1-D matching, as in flat qGW.
-            let plan = local_linear_matching(qx, qy, pu, qu);
+            // Leaf: the presorted exact 1-D matching (beta-blended with the
+            // feature matching when fused), as in flat qGW/qFGW.
+            let plan = leaf_plan(x, y, qx, qy, pu, qu, fused);
             let stats = HierStats { leaf_matchings: 1, ..HierStats::default() };
             return PairOutcome { plan, bound: 0.0, transient_bytes: 0, stats };
         }
 
         // Nested node: align the cached sub-partitions' representatives,
         // then solve the supported sub-pairs one level down.
-        let (sub_x, sqx) = &cache_x[&pair.0];
-        let (sub_y, sqy) = &cache_y[&pair.1];
-        let res =
-            aligner.align(sqx.rep_dists(), sqy.rep_dists(), sqx.rep_measure(), sqy.rep_measure());
+        let cx = &cache_x[&pair.0];
+        let cy = &cache_y[&pair.1];
+        let (sub_x, sqx) = (&cx.sub, &cx.q);
+        let (sub_y, sqy) = (&cy.sub, &cy.q);
+        let res = align_node(sub_x, sub_y, sqx, sqy, fused, aligner);
         let global = SparseCoupling::from_dense(&res.plan, cfg.mass_threshold);
         let mut child_pairs: Vec<(u32, u32)> = Vec::new();
         let mut gmass: Vec<f64> = Vec::new();
@@ -412,8 +756,8 @@ fn solve_pairs(
             gmass.push(w);
         }
 
-        let node_term = 2.0 * (sqx.quantized_eccentricity() + sqy.quantized_eccentricity())
-            + 8.0 * sqx.block_diameter_bound().max(sqy.block_diameter_bound());
+        let node_term =
+            bound_term(cx.q_ecc, cy.q_ecc, cx.diam.max(cy.diam), cx.feat_ecc + cy.feat_ecc);
 
         let child = solve_pairs(
             sub_x,
@@ -424,6 +768,7 @@ fn solve_pairs(
             levels_left - 1,
             pair_level + 1,
             cfg,
+            fused,
             aligner,
             pair_seed(seed, pair_level, pu, qu),
             false,
@@ -438,10 +783,10 @@ fn solve_pairs(
             stats.max_node_rep_bytes.max(rep_matrix_bytes(sqx) + rep_matrix_bytes(sqy));
 
         // Flatten: child plans are positions within sqx/sqy blocks, whose
-        // entries are sub-cloud indices — and sub-cloud index k IS parent
-        // block position k (block_cloud preserves the anchor-sorted
-        // order), so the flattened plan stays in the parent's LocalPlan
-        // convention.
+        // entries are sub-substrate indices — and sub-substrate index k IS
+        // parent block position k (block extraction preserves the
+        // anchor-sorted order), so the flattened plan stays in the
+        // parent's LocalPlan convention.
         let mut plan: LocalPlan = Vec::new();
         for (k, child_plan) in child.plans.iter().enumerate() {
             let bx = sqx.block(child_pairs[k].0 as usize);
@@ -485,18 +830,13 @@ fn rep_matrix_bytes(q: &QuantizedSpace) -> usize {
     q.num_blocks() * q.num_blocks() * 8
 }
 
-fn cloud_bytes(c: &PointCloud) -> usize {
-    // Coordinates + measure (both f64).
-    c.coords().len() * 8 + c.len() * 8
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::MmSpace;
-    use crate::partition::voronoi_partition;
     use crate::prng::{Gaussian, Pcg32};
-    use crate::qgw::{qgw_match, qgw_match_quantized};
+    use crate::qgw::{qfgw_match_quantized, qgw_match, qgw_match_quantized};
+    use crate::testutil::{assert_sparse_bitwise_equal, coord_feature as x_feature, ring_graph};
 
     fn gaussian_cloud(n: usize, seed: u64) -> PointCloud {
         let mut rng = Pcg32::seed_from(seed);
@@ -525,15 +865,11 @@ mod tests {
         let hier = hier_qgw_match(&x, &x, &cfg, &mut r2);
         // levels = 1: identical partitions, identical global plan,
         // identical (all-leaf) locals -> identical sparse coupling.
-        let sf = flat.coupling.to_sparse();
-        let sh = hier.result.coupling.to_sparse();
-        assert_eq!(sf.nnz(), sh.nnz());
-        for ((i1, j1, v1), (i2, j2, v2)) in sf.iter().zip(sh.iter()) {
-            assert_eq!((i1, j1), (i2, j2));
-            assert_eq!(v1.to_bits(), v2.to_bits());
-        }
+        assert_sparse_bitwise_equal(&flat.coupling.to_sparse(), &hier.result.coupling.to_sparse());
         assert_eq!(hier.stats.leaf_matchings, flat.num_local_matchings);
         assert_eq!(hier.stats.levels_used(), 1);
+        assert!(hier.global_secs > 0.0);
+        assert!(hier.local_secs > 0.0);
     }
 
     #[test]
@@ -638,5 +974,113 @@ mod tests {
                 hier.result.coupling.local_plan(p, q).unwrap().iter().map(|e| e.2).sum();
             assert!((mass - 1.0).abs() < 1e-7, "pair ({p},{q}) mass {mass}");
         }
+    }
+
+    // -- fused substrate ----------------------------------------------------
+
+    #[test]
+    fn fused_single_level_reproduces_flat_qfgw() {
+        let x = gaussian_cloud(120, 31);
+        let fx = x_feature(&x);
+        let mut rng = Pcg32::seed_from(32);
+        let qx = voronoi_partition(&x, 12, &mut rng);
+        let cfg = QfgwConfig { base: QgwConfig::with_count(12), alpha: 0.4, beta: 0.6 };
+        let flat =
+            qfgw_match_quantized(&qx, &qx, &fx, &fx, &cfg, &RustAligner(cfg.base.gw.clone()));
+        let hier = hier_match_quantized(
+            &Substrate::cloud(&x).with_features(&fx),
+            &Substrate::cloud(&x).with_features(&fx),
+            &qx,
+            &qx,
+            &cfg.base,
+            Some((cfg.alpha, cfg.beta)),
+            &RustAligner(cfg.base.gw.clone()),
+            9,
+        );
+        // levels = 1: identical fused global plan, identical blended
+        // leaves, identical feature-extended bound.
+        assert_sparse_bitwise_equal(&flat.coupling.to_sparse(), &hier.result.coupling.to_sparse());
+        assert!((hier.result.error_bound - flat.error_bound).abs() < 1e-9);
+        assert_eq!(hier.stats.levels_used(), 1);
+    }
+
+    #[test]
+    fn fused_two_level_keeps_marginals_and_extends_bound() {
+        let x = gaussian_cloud(300, 41);
+        let fx = x_feature(&x);
+        let cfg = QfgwConfig {
+            base: QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) },
+            alpha: 0.5,
+            beta: 0.75,
+        };
+        let mut rng = Pcg32::seed_from(42);
+        let res = hier_qfgw_match(&x, &x, &fx, &fx, &cfg, &mut rng);
+        let err = res.result.coupling.check_marginals(x.measure(), x.measure());
+        assert!(err < 1e-7, "marginal err {err}");
+        assert!(res.stats.levels_used() >= 2, "no recursion: {:?}", res.stats);
+        assert!(res.stats.pairs_per_level[1] > 0);
+        for e in &res.stats.max_mass_err_per_level {
+            assert!(*e < 1e-7, "pair mass err {e}");
+        }
+        // The composed bound includes a positive feature term at the top.
+        assert!(res.stats.bound_term_per_level[0] > 0.0);
+    }
+
+    // -- graph substrate ----------------------------------------------------
+
+    #[test]
+    fn graph_single_level_reproduces_flat() {
+        let (g, mu) = ring_graph(40);
+        let mut rng = Pcg32::seed_from(3);
+        let q = fluid_partition(&g, &mu, 4, &mut rng);
+        let cfg = QgwConfig::with_count(4);
+        let flat = qgw_match_quantized(&q, &q, &cfg, &RustAligner(cfg.gw.clone()));
+        let hier = hier_match_quantized(
+            &Substrate::graph(&g, &mu),
+            &Substrate::graph(&g, &mu),
+            &q,
+            &q,
+            &cfg,
+            None,
+            &RustAligner(cfg.gw.clone()),
+            5,
+        );
+        assert_sparse_bitwise_equal(&flat.coupling.to_sparse(), &hier.result.coupling.to_sparse());
+        assert_eq!(hier.stats.levels_used(), 1);
+    }
+
+    #[test]
+    fn graph_two_level_recursion_marginals_exact() {
+        let (g, mu) = ring_graph(150);
+        let cfg = QgwConfig { levels: 2, leaf_size: 6, ..QgwConfig::with_count(5) };
+        let mut rng = Pcg32::seed_from(8);
+        let res = hier_graph_match(&g, &g, &mu, &mu, None, None, &cfg, &mut rng);
+        assert!(res.result.coupling.check_marginals(&mu, &mu) < 1e-7);
+        assert!(res.stats.levels_used() >= 2, "no graph recursion: {:?}", res.stats);
+        assert!(res.stats.pairs_per_level[1] > 0);
+        for e in &res.stats.max_mass_err_per_level {
+            assert!(*e < 1e-7, "pair mass err {e}");
+        }
+    }
+
+    #[test]
+    fn graph_hier_with_wl_features_fused() {
+        let (g, mu) = ring_graph(120);
+        let h = 3;
+        let f = FeatureSet::new(crate::graph::wl_features(&g, h), h);
+        let cfg = QgwConfig { levels: 2, leaf_size: 6, ..QgwConfig::with_count(5) };
+        let mut rng = Pcg32::seed_from(14);
+        let res = hier_graph_match(
+            &g,
+            &g,
+            &mu,
+            &mu,
+            Some((&f, &f)),
+            Some((0.5, 0.75)),
+            &cfg,
+            &mut rng,
+        );
+        assert!(res.result.coupling.check_marginals(&mu, &mu) < 1e-7);
+        assert!(res.stats.levels_used() >= 2, "no fused graph recursion");
     }
 }

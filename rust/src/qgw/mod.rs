@@ -9,11 +9,15 @@
 //!   (Proposition 3), coupling assembly.
 //! * [`fused`] — the qFGW variant with global weight `alpha` and local
 //!   blend `beta` (§2.3).
-//! * [`hier`] — multi-level qGW: supported block pairs are recursively
-//!   re-quantized and matched by qGW again (paper §2.2 "adding recursion
-//!   as needed"), bottoming out at the 1-D leaf below
-//!   [`QgwConfig::leaf_size`]. Same factored coupling, composed
-//!   multi-level error bound, O((N/L)^(2/levels)) rep matrices.
+//! * [`hier`] — multi-level qGW/qFGW: supported block pairs are
+//!   recursively re-quantized and matched again (paper §2.2 "adding
+//!   recursion as needed"), bottoming out at the 1-D leaf below
+//!   [`QgwConfig::leaf_size`] — for **every substrate**: point clouds,
+//!   feature-carrying clouds (fused blend at every node and leaf), and
+//!   graphs (nested Fluid partitions, Dijkstra restricted to the block).
+//!   Same factored coupling, composed multi-level error bound (geometric
+//!   Theorem-6 term plus the feature term when fused),
+//!   O((N/L)^(2/levels)) rep matrices.
 
 mod ablation;
 mod algorithm;
@@ -25,7 +29,14 @@ pub use algorithm::{
     local_linear_matching, qgw_match, qgw_match_quantized, rep_space_loss, GlobalAligner,
     PartitionSize, QgwConfig, QgwResult, RustAligner,
 };
+pub(crate) use algorithm::assemble;
 pub use ablation::{local_gw_plan, local_product_plan, qgw_match_with_matcher, LocalMatcher};
 pub use coupling::{LocalPlan, QuantizationCoupling};
-pub use fused::{qfgw_match, qfgw_match_quantized, FeatureSet, QfgwConfig};
-pub use hier::{balanced_m, hier_qgw_match, hier_qgw_match_quantized, HierQgwResult, HierStats};
+pub use fused::{
+    feature_quantized_eccentricity, qfgw_match, qfgw_match_quantized, FeatureSet, QfgwConfig,
+};
+pub(crate) use fused::{qfgw_align, qfgw_assemble};
+pub use hier::{
+    balanced_m, hier_graph_match, hier_match_quantized, hier_qfgw_match, hier_qgw_match,
+    hier_qgw_match_quantized, HierQgwResult, HierStats, Substrate,
+};

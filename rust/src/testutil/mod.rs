@@ -95,6 +95,37 @@ pub fn random_cloud(rng: &mut Pcg32, n: usize, dim: usize) -> crate::core::Point
     crate::core::PointCloud::new((0..n * dim).map(|_| g.sample(rng)).collect(), dim)
 }
 
+/// Ring graph (cycle of unit-weight edges) with a uniform node measure —
+/// the standard graph-substrate fixture of the hierarchy tests.
+pub fn ring_graph(n: usize) -> (crate::graph::Graph, Vec<f64>) {
+    let edges: Vec<(usize, usize, f64)> = (0..n).map(|i| (i, (i + 1) % n, 1.0)).collect();
+    (crate::graph::Graph::from_edges(n, &edges), crate::core::uniform_measure(n))
+}
+
+/// 1-D feature set from each point's first coordinate: deterministic and
+/// matched across identical clouds, so fused tests exercise the blend
+/// without feature noise.
+pub fn coord_feature(cloud: &crate::core::PointCloud) -> crate::qgw::FeatureSet {
+    crate::qgw::FeatureSet::new((0..cloud.len()).map(|i| cloud.point(i)[0]).collect(), 1)
+}
+
+/// Assert two sparse couplings are byte-identical: same support in the
+/// same order and bit-equal masses. The thread-count determinism
+/// regressions (flat, hierarchical, fused, graph) all compare through
+/// this single helper.
+pub fn assert_sparse_bitwise_equal(
+    a: &crate::core::SparseCoupling,
+    b: &crate::core::SparseCoupling,
+) {
+    assert_eq!(a.rows(), b.rows());
+    assert_eq!(a.cols(), b.cols());
+    assert_eq!(a.nnz(), b.nnz());
+    for ((i1, j1, v1), (i2, j2, v2)) in a.iter().zip(b.iter()) {
+        assert_eq!((i1, j1), (i2, j2), "support differs");
+        assert_eq!(v1.to_bits(), v2.to_bits(), "mass differs at ({i1},{j1}): {v1} vs {v2}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

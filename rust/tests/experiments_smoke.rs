@@ -83,19 +83,27 @@ fn fig3_rows_tiny() {
 #[test]
 fn fig3_hier_rows_tiny() {
     let rows = fig3::hier_rows(0.004, 7);
-    assert_eq!(rows.len(), 2); // flat + hierarchical
+    assert_eq!(rows.len(), 3); // flat + hierarchical + hierarchical qFGW
     for r in &rows {
         assert!((0.0..=100.0).contains(&r.accuracy_pct), "{r:?}");
         assert!(r.peak_quantized_bytes > 0 && r.peak_rep_bytes > 0);
     }
     // The hierarchy's rep matrices are O(N/leaf) vs flat's O((N/leaf)^2):
-    // the reduction must show even at smoke scale.
+    // the reduction must show even at smoke scale, for both the plain and
+    // the fused (color-feature) hierarchical runs.
     assert!(
         rows[1].peak_rep_bytes < rows[0].peak_rep_bytes,
         "hier rep bytes {} not below flat {}",
         rows[1].peak_rep_bytes,
         rows[0].peak_rep_bytes
     );
+    assert!(
+        rows[2].peak_rep_bytes < rows[0].peak_rep_bytes,
+        "hier qFGW rep bytes {} not below flat {}",
+        rows[2].peak_rep_bytes,
+        rows[0].peak_rep_bytes
+    );
+    assert!(rows[2].method.contains("qFGW"), "{:?}", rows[2].method);
 }
 
 #[test]

@@ -199,6 +199,72 @@ fn hier_matches_large_rooms_and_beats_flat_at_equal_budget() {
     );
 }
 
+// PR-2 acceptance: the pipeline no longer falls back to flat for fused or
+// graph inputs — with `levels >= 2` both substrates recurse (report.levels
+// >= 2), keep exact marginals to 1e-7, and stay byte-identical across
+// thread counts.
+#[test]
+fn pipeline_hierarchy_covers_fused_and_graph_substrates() {
+    use qgw::testutil::assert_sparse_bitwise_equal as assert_bitwise;
+
+    // Fused input: a shape with its normals as features.
+    let mut rng = Pcg32::seed_from(51);
+    let shape = sample_shape(ShapeClass::Dog, 600, &mut rng);
+    let fused_run = |threads: usize| {
+        let metrics = Metrics::new();
+        let cfg = QgwConfig {
+            levels: 2,
+            leaf_size: 12,
+            num_threads: threads,
+            ..QgwConfig::with_count(8)
+        };
+        let mut pipe = MatchPipeline::new(cfg, &metrics);
+        pipe.fused = Some((0.5, 0.75));
+        let report = pipe.run(PipelineInput::CloudsWithFeatures {
+            x: &shape.cloud,
+            y: &shape.cloud,
+            fx: &shape.normals,
+            fy: &shape.normals,
+        });
+        let merr = report
+            .result
+            .coupling
+            .check_marginals(shape.cloud.measure(), shape.cloud.measure());
+        assert!(merr < 1e-7, "fused marginal err {merr}");
+        assert!(report.levels >= 2, "fused input fell back: levels={}", report.levels);
+        assert_eq!(metrics.counter("hier_fallbacks"), 0);
+        report.result.coupling.to_sparse()
+    };
+    assert_bitwise(&fused_run(1), &fused_run(4));
+
+    // Graph input: a ring with uniform measure.
+    let (g, mu) = qgw::testutil::ring_graph(180);
+    let graph_run = |threads: usize| {
+        let metrics = Metrics::new();
+        let cfg = QgwConfig {
+            levels: 2,
+            leaf_size: 6,
+            num_threads: threads,
+            ..QgwConfig::with_count(5)
+        };
+        let pipe = MatchPipeline::new(cfg, &metrics);
+        let report = pipe.run(PipelineInput::Graphs {
+            x: &g,
+            y: &g,
+            mu_x: &mu,
+            mu_y: &mu,
+            fx: None,
+            fy: None,
+        });
+        let merr = report.result.coupling.check_marginals(&mu, &mu);
+        assert!(merr < 1e-7, "graph marginal err {merr}");
+        assert!(report.levels >= 2, "graph input fell back: levels={}", report.levels);
+        assert_eq!(metrics.counter("hier_fallbacks"), 0);
+        report.result.coupling.to_sparse()
+    };
+    assert_bitwise(&graph_run(1), &graph_run(4));
+}
+
 #[test]
 fn service_row_queries_match_materialized_coupling() {
     let mut rng = Pcg32::seed_from(41);

@@ -9,10 +9,13 @@ use qgw::ot::{check_coupling, emd, emd1d, round_to_coupling, sinkhorn_log, Sinkh
 use qgw::partition::{dense_voronoi_partition, voronoi_partition};
 use qgw::prng::{Pcg32, Rng};
 use qgw::qgw::{
-    hier_qgw_match, hier_qgw_match_quantized, qgw_match, qgw_match_quantized, QgwConfig,
-    RustAligner,
+    hier_graph_match, hier_qfgw_match, hier_qgw_match, hier_qgw_match_quantized, qgw_match,
+    qgw_match_quantized, QfgwConfig, QgwConfig, RustAligner,
 };
-use qgw::testutil::{forall, forall_cases, random_cloud, random_measure};
+use qgw::testutil::{
+    assert_sparse_bitwise_equal as assert_bitwise_equal, coord_feature, forall, forall_cases,
+    random_cloud, random_measure, ring_graph,
+};
 
 // ---------------------------------------------------------------------------
 // Proposition 1: quantization couplings are couplings.
@@ -192,21 +195,54 @@ fn prop_hier_matches_flat_marginals_masses_and_bound() {
 }
 
 // ---------------------------------------------------------------------------
+// Hierarchical qFGW: for any beta in [0, 1] and any level budget, every
+// blended local plan stays an exact coupling of the block-conditional
+// measures — marginals hold to 1e-7 at every level (the blend is a convex
+// combination of two exact couplings, so Proposition 1 survives the
+// feature term level by level).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hier_qfgw_blended_marginals_exact_any_beta() {
+    forall(forall_cases(8), |rng| {
+        let n = 60 + rng.below(60);
+        let x = random_cloud(rng, n, 3);
+        let ny = 60 + rng.below(60);
+        let y = random_cloud(rng, ny, 3);
+        let fx = coord_feature(&x);
+        let fy = coord_feature(&y);
+        // beta sweeps [0, 1] including both endpoints.
+        let beta = match rng.below(8) {
+            0 => 0.0,
+            1 => 1.0,
+            _ => rng.next_f64(),
+        };
+        let levels = 2 + rng.below(2); // 2 or 3
+        let cfg = QfgwConfig {
+            base: QgwConfig { levels, leaf_size: 6, ..QgwConfig::with_fraction(0.1) },
+            alpha: 0.5,
+            beta,
+        };
+        let res = hier_qfgw_match(&x, &y, &fx, &fy, &cfg, rng);
+        let err = res.result.coupling.check_marginals(x.measure(), y.measure());
+        assert!(err < 1e-7, "beta={beta} levels={levels}: marginal err {err}");
+        for (level, e) in res.stats.max_mass_err_per_level.iter().enumerate() {
+            assert!(*e < 1e-7, "beta={beta}: level {level} pair mass err {e}");
+        }
+        assert!(
+            res.result.error_bound.is_finite() && res.result.error_bound >= 0.0,
+            "bad composed bound {}",
+            res.result.error_bound
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Determinism regression: same seed => byte-identical sparse coupling for
 // num_threads 1 and 4, for both the flat fan-out and the hierarchical
 // recursion (guards the parallel_map ordering and the per-pair seed
 // derivation).
 // ---------------------------------------------------------------------------
-
-fn assert_bitwise_equal(a: &SparseCoupling, b: &SparseCoupling) {
-    assert_eq!(a.rows(), b.rows());
-    assert_eq!(a.cols(), b.cols());
-    assert_eq!(a.nnz(), b.nnz());
-    for ((i1, j1, v1), (i2, j2, v2)) in a.iter().zip(b.iter()) {
-        assert_eq!((i1, j1), (i2, j2), "support differs");
-        assert_eq!(v1.to_bits(), v2.to_bits(), "mass differs at ({i1},{j1}): {v1} vs {v2}");
-    }
-}
 
 #[test]
 fn determinism_across_thread_counts_flat_and_hier() {
@@ -234,6 +270,53 @@ fn determinism_across_thread_counts_flat_and_hier() {
         res.result.coupling.to_sparse()
     };
     assert_bitwise_equal(&hier_run(1), &hier_run(4));
+}
+
+// Mirrors the cloud-path determinism guard on the two substrates the
+// hierarchy gained in PR 2: the fused (feature-blended) recursion and the
+// nested-Fluid graph recursion must also be byte-identical across thread
+// counts.
+#[test]
+fn determinism_across_thread_counts_fused_and_graph() {
+    // Fused hierarchical path.
+    let mut srng = Pcg32::seed_from(29);
+    let x = random_cloud(&mut srng, 300, 3);
+    let y = random_cloud(&mut srng, 280, 3);
+    let fx = coord_feature(&x);
+    let fy = coord_feature(&y);
+    let fused_run = |threads: usize| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QfgwConfig {
+            base: QgwConfig {
+                num_threads: threads,
+                levels: 2,
+                leaf_size: 12,
+                ..QgwConfig::with_fraction(0.05)
+            },
+            alpha: 0.5,
+            beta: 0.75,
+        };
+        let res = hier_qfgw_match(&x, &y, &fx, &fy, &cfg, &mut rng);
+        assert!(res.stats.levels_used() >= 2, "fused recursion must engage");
+        res.result.coupling.to_sparse()
+    };
+    assert_bitwise_equal(&fused_run(1), &fused_run(4));
+
+    // Graph hierarchical path (nested Fluid partitions on a ring).
+    let (g, mu) = ring_graph(240);
+    let graph_run = |threads: usize| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QgwConfig {
+            num_threads: threads,
+            levels: 2,
+            leaf_size: 8,
+            ..QgwConfig::with_count(6)
+        };
+        let res = hier_graph_match(&g, &g, &mu, &mu, None, None, &cfg, &mut rng);
+        assert!(res.stats.levels_used() >= 2, "graph recursion must engage");
+        res.result.coupling.to_sparse()
+    };
+    assert_bitwise_equal(&graph_run(1), &graph_run(4));
 }
 
 // ---------------------------------------------------------------------------

@@ -2,7 +2,10 @@
 //! TOSCA-style mesh family, Fluid-community partitions with max-PageRank
 //! representatives, geodesic metric from representatives only, WL node
 //! features, and the alpha/beta fused matching — flat, then the 2-level
-//! hierarchy (nested Fluid partitions, Dijkstra restricted to each block).
+//! hierarchy (nested Fluid partitions, Dijkstra restricted to each block),
+//! then the adaptive tolerance-driven hierarchy ("recursion as needed":
+//! block pairs already within the tolerance budget prune to the exact
+//! leaf).
 //!
 //! ```bash
 //! cargo run --release --example graph_matching -- [n_vertices]
@@ -87,6 +90,10 @@ fn main() {
         leaf_size: leaf,
         ..Default::default()
     };
+    // Dedicated seed for the two hierarchy runs: the adaptive run below
+    // reuses it so both see the identical top partition and recursion
+    // seeds, making its bound directly comparable.
+    let mut hrng = Pcg32::seed_from(1234);
     let start = std::time::Instant::now();
     let hres = hier_graph_match(
         &a.graph,
@@ -96,7 +103,7 @@ fn main() {
         Some((&fa, &fb)),
         Some((0.5, 0.75)),
         &hier_cfg,
-        &mut rng,
+        &mut hrng,
     );
     let hier_secs = start.elapsed().as_secs_f64();
     let hier_pct =
@@ -107,6 +114,41 @@ fn main() {
         hres.levels,
         hres.stats.levels_used(),
         hres.result.coupling.check_marginals(&mu, &mu)
+    );
+
+    // Adaptive "recursion as needed": keep the 2-level cap but let the
+    // tolerance decide which block pairs re-quantize — the shared
+    // mid-bound heuristic, so well-quantized communities prune to the
+    // exact 1-D leaf while coarse ones still recurse.
+    let tol = hres.mid_tolerance();
+    let adapt_cfg = QgwConfig { tolerance: tol, ..hier_cfg.clone() };
+    let mut arng = Pcg32::seed_from(1234);
+    let start = std::time::Instant::now();
+    let ares = hier_graph_match(
+        &a.graph,
+        &b.graph,
+        &mu,
+        &mu,
+        Some((&fa, &fb)),
+        Some((0.5, 0.75)),
+        &adapt_cfg,
+        &mut arng,
+    );
+    let adapt_secs = start.elapsed().as_secs_f64();
+    let adapt_pct =
+        distortion_percent(&ares.result.coupling.to_sparse(), &b.cloud, &gt, 5, &mut rng);
+    println!(
+        "adaptive hier qFGW (cap 2, tolerance {tol:.3}): distortion {adapt_pct:.1}% of random, \
+         {adapt_secs:.2}s, split {} / pruned {}, bound {:.3} (fixed-depth {:.3}), marginal err {:.1e}",
+        ares.stats.split_pairs,
+        ares.stats.pruned_pairs,
+        ares.result.error_bound,
+        hres.result.error_bound,
+        ares.result.coupling.check_marginals(&mu, &mu)
+    );
+    assert!(
+        ares.result.error_bound <= hres.result.error_bound + 1e-9,
+        "adaptive bound must not exceed the fixed-depth bound"
     );
     println!("graph_matching OK");
 }

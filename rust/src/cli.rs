@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! qgw match      --class dog --n 2000 --fraction 0.1 [--fused A,B] [--seed S]
-//!                [--levels L --leaf-size K]   # L>1: hierarchical qGW/qFGW
+//!                [--levels L --leaf-size K --tolerance T]  # L>1: hierarchical
 //! qgw experiment table1|table2|fig1|fig2|fig3|fig4|scaling [--scale F] [--full]
 //! qgw serve      --class dog --n 5000 --fraction 0.1 --addr 127.0.0.1:7979
 //! qgw artifacts  [--dir artifacts]     # report loaded AOT artifacts
@@ -14,9 +14,14 @@
 //! pairs re-quantized down to `--leaf-size K`-point leaves, default 64)
 //! on **every substrate** — plain clouds, `--fused A,B` feature blends,
 //! and graphs all recurse. With `--levels 1` (default) flat matching runs
-//! unchanged. Large inputs want `--m` near `(N / K)^(1/L)` per level —
-//! see [`crate::qgw::balanced_m`]. Fused weights can also come from the
-//! config file's `[fused]` section (`--fused` wins).
+//! unchanged. `--tolerance T` (default 0 = fixed depth) makes the
+//! recursion adaptive: `L` becomes a hard cap and a block pair is
+//! re-quantized only while its Theorem-6 bound term still exceeds the
+//! remaining tolerance budget — pairs already fine enough bottom out at
+//! the exact 1-D leaf (reported as `pruned_pairs`). Large inputs want
+//! `--m` near `(N / K)^(1/L)` per level — see [`crate::qgw::balanced_m`].
+//! Fused weights can also come from the config file's `[fused]` section
+//! (`--fused` wins).
 
 use std::collections::BTreeMap;
 
@@ -127,6 +132,7 @@ fn build_config(args: &Args) -> Result<(QgwConfig, Option<(f64, f64)>)> {
     cfg.num_threads = args.usize_or("threads", cfg.num_threads)?;
     cfg.levels = args.usize_or("levels", cfg.levels)?.max(1);
     cfg.leaf_size = args.usize_or("leaf-size", cfg.leaf_size)?.max(1);
+    cfg.tolerance = args.f64_or("tolerance", cfg.tolerance)?.max(0.0);
     if let Some(spec) = args.flag("fused") {
         let parts: Vec<f64> = spec
             .split(',')
@@ -146,6 +152,7 @@ fn cmd_match(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 2000)?;
     let seed = args.usize_or("seed", 7)? as u64;
     let (cfg, fused) = build_config(args)?;
+    let tolerance = cfg.tolerance;
 
     let mut rng = Pcg32::seed_from(seed);
     let shape = sample_shape(class, n, &mut rng);
@@ -169,12 +176,13 @@ fn cmd_match(args: &Args) -> Result<()> {
     let sparse = report.result.coupling.to_sparse();
     let distortion = distortion_score(&sparse, &copy.cloud, &copy.ground_truth);
     println!(
-        "class={} n={n} m={}x{} levels={} leaf={}",
+        "class={} n={n} m={}x{} levels={} leaf={} tolerance={tolerance} pruned_pairs={}",
         class.name(),
         report.m_x,
         report.m_y,
         report.levels,
-        report.leaf_size
+        report.leaf_size,
+        report.pruned_pairs
     );
     println!(
         "distortion={distortion:.4} rep_gw_loss={:.6} local_matchings={}",
@@ -287,7 +295,12 @@ fn print_usage() {
                           the fused feature blend / nested Fluid graph partitions\n\
                           threaded through every level)\n\
            --leaf-size K  block pairs at or below K points use the exact 1-D leaf\n\
-                          matching (default 64); pick --m near (N/K)^(1/L)"
+                          matching (default 64); pick --m near (N/K)^(1/L)\n\
+           --tolerance T  adaptive recursion (default 0 = fixed depth): with T>0,\n\
+                          --levels is a hard cap and a block pair re-quantizes only\n\
+                          while its Theorem-6 bound term exceeds the remaining\n\
+                          budget; pairs already within budget bottom out at the\n\
+                          exact 1-D leaf (reported as pruned_pairs)"
     );
 }
 

@@ -144,6 +144,7 @@ impl Config {
             num_threads: self.usize_or("qgw.threads", 0),
             levels: self.usize_or("qgw.levels", 1).max(1),
             leaf_size: self.usize_or("qgw.leaf_size", 64).max(1),
+            tolerance: self.f64_or("qgw.tolerance", 0.0).max(0.0),
         }
     }
 
@@ -251,18 +252,24 @@ full = false
 
     #[test]
     fn hierarchy_knobs_parse_and_default() {
-        let c = Config::parse("[qgw]\nlevels = 3\nleaf_size = 300\n").unwrap();
+        let c = Config::parse("[qgw]\nlevels = 3\nleaf_size = 300\ntolerance = 0.25\n").unwrap();
         let q = c.qgw_config();
         assert_eq!(q.levels, 3);
         assert_eq!(q.leaf_size, 300);
-        // Defaults: flat qGW.
+        assert_eq!(q.tolerance, 0.25);
+        // Defaults: flat qGW, fixed-depth recursion.
         let d = Config::parse("").unwrap().qgw_config();
         assert_eq!(d.levels, 1);
         assert_eq!(d.leaf_size, 64);
-        // Zero is clamped to a sane floor.
-        let z = Config::parse("[qgw]\nlevels = 0\nleaf_size = 0\n").unwrap().qgw_config();
+        assert_eq!(d.tolerance, 0.0);
+        // Zero is clamped to a sane floor; a negative tolerance clamps to
+        // fixed-depth mode.
+        let z = Config::parse("[qgw]\nlevels = 0\nleaf_size = 0\ntolerance = -0.5\n")
+            .unwrap()
+            .qgw_config();
         assert_eq!(z.levels, 1);
         assert_eq!(z.leaf_size, 1);
+        assert_eq!(z.tolerance, 0.0);
     }
 
     #[test]

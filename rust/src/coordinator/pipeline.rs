@@ -8,7 +8,11 @@
 //! built here. With `qgw.levels = 1` the recursion degenerates to flat
 //! qGW/qFGW bit-for-bit; with `levels > 1` supported block pairs are
 //! re-quantized level by level (fused blend and nested Fluid graph
-//! partitions included). The only remaining flat fallback is an explicit
+//! partitions included), and `qgw.tolerance > 0` turns `levels` into a
+//! hard cap: pairs whose Theorem-6 term already fits the remaining
+//! tolerance budget are pruned to the exact leaf (reported through
+//! [`PipelineReport::pruned_pairs`] and the `hier_pruned_pairs` metric).
+//! The only remaining flat fallback is an explicit
 //! `aligner` override (the recursion requires a `Sync` aligner); that
 //! downgrade is surfaced through the `hier_fallbacks` metric and a
 //! warning instead of being silently absorbed.
@@ -64,6 +68,10 @@ pub struct PipelineReport {
     /// Leaf size of the hierarchical recursion (meaningful when
     /// `levels > 1`).
     pub leaf_size: usize,
+    /// Recursion-eligible block pairs the adaptive tolerance pruned to
+    /// the exact 1-D leaf (0 in fixed-depth mode, i.e. `tolerance = 0`,
+    /// and on the flat fallback path).
+    pub pruned_pairs: usize,
 }
 
 /// Configurable qGW/qFGW pipeline with stage metrics.
@@ -132,7 +140,7 @@ impl<'a> MatchPipeline<'a> {
         // (`hier_match_quantized` gates the fused blend itself: `self.fused`
         // only engages when both substrates actually carry features, and the
         // flat-fallback match below applies the same rule by pattern.)
-        let (result, levels_ran, global_secs, local_secs) = match self.aligner {
+        let (result, levels_ran, pruned_pairs, global_secs, local_secs) = match self.aligner {
             None => {
                 let hres = hier_match_quantized(
                     &sx,
@@ -145,7 +153,14 @@ impl<'a> MatchPipeline<'a> {
                     rng.next_u64(),
                 );
                 self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
-                (hres.result, hres.stats.levels_used(), hres.global_secs, hres.local_secs)
+                self.metrics.incr("hier_pruned_pairs", hres.stats.pruned_pairs as u64);
+                (
+                    hres.result,
+                    hres.stats.levels_used(),
+                    hres.stats.pruned_pairs,
+                    hres.global_secs,
+                    hres.local_secs,
+                )
             }
             Some(aligner) => {
                 // Aligner overrides are not `Sync`, so the recursion cannot
@@ -181,7 +196,7 @@ impl<'a> MatchPipeline<'a> {
                     Some((cfg, fx, fy)) => qfgw_assemble(&qx, &qy, fx, fy, global_res, &cfg),
                     None => assemble(&qx, &qy, global_res, &self.qgw),
                 };
-                (result, 1, global_secs, local_start.elapsed().as_secs_f64())
+                (result, 1, 0, global_secs, local_start.elapsed().as_secs_f64())
             }
         };
         self.metrics.add_duration("global_align", Duration::from_secs_f64(global_secs));
@@ -196,6 +211,7 @@ impl<'a> MatchPipeline<'a> {
             // override forces flat matching.
             levels: levels_ran,
             leaf_size: self.qgw.leaf_size,
+            pruned_pairs,
             result,
             partition_secs,
             global_secs,
@@ -317,6 +333,36 @@ mod tests {
         assert!(report.levels >= 2, "fused input fell back to flat: levels={}", report.levels);
         assert!(metrics.counter("hier_nodes") > 1, "no fused recursion nodes");
         assert_eq!(metrics.counter("hier_fallbacks"), 0);
+    }
+
+    #[test]
+    fn pipeline_adaptive_tolerance_reports_pruning() {
+        let x = cloud(300, 9);
+        let cfg = QgwConfig { levels: 2, leaf_size: 12, ..QgwConfig::with_count(6) };
+
+        // Fixed-depth reference run sizes the tolerance.
+        let metrics = Metrics::new();
+        let fixed = MatchPipeline::new(cfg.clone(), &metrics).run(PipelineInput::Clouds {
+            x: &x,
+            y: &x,
+        });
+        assert_eq!(fixed.pruned_pairs, 0);
+        assert!(fixed.levels >= 2, "fixture must recurse");
+
+        // Tolerance above the fixed-depth composed bound prunes every
+        // eligible pair (same pipeline seed => same partitions/terms) and
+        // the report + metrics surface it.
+        let metrics = Metrics::new();
+        let acfg = QgwConfig { tolerance: fixed.result.error_bound + 1e-9, ..cfg };
+        let adapt = MatchPipeline::new(acfg.clone(), &metrics).run(PipelineInput::Clouds {
+            x: &x,
+            y: &x,
+        });
+        assert!(adapt.pruned_pairs > 0, "no pairs pruned");
+        assert_eq!(adapt.levels, 1, "pruning everything must realize a flat match");
+        assert_eq!(metrics.counter("hier_pruned_pairs"), adapt.pruned_pairs as u64);
+        assert!(adapt.result.error_bound <= acfg.tolerance);
+        assert!(adapt.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
     }
 
     #[test]

@@ -70,8 +70,9 @@ impl MatchService {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let svc = Arc::clone(&svc);
+                        let shutdown = Arc::clone(&shutdown);
                         std::thread::spawn(move || {
-                            let _ = svc.handle_conn(stream);
+                            let _ = svc.handle_conn(stream, &shutdown);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -84,11 +85,38 @@ impl MatchService {
         Ok(local)
     }
 
-    fn handle_conn(&self, stream: TcpStream) -> std::io::Result<()> {
+    /// One connection's request loop. Reads carry a short timeout and the
+    /// shutdown flag is re-checked between them, so a connected-but-silent
+    /// keep-alive client cannot pin this thread (or the process) after
+    /// `serve` shutdown is signalled — the connection is dropped and the
+    /// client sees EOF. Writes carry a timeout too: a client that streams
+    /// requests without ever reading replies fills the send buffer, and
+    /// the timed-out write tears the connection down instead of blocking
+    /// the thread forever.
+    fn handle_conn(&self, stream: TcpStream, shutdown: &AtomicBool) -> std::io::Result<()> {
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(50)))?;
+        stream.set_write_timeout(Some(std::time::Duration::from_secs(1)))?;
         let mut writer = stream.try_clone()?;
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = line?;
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        while !shutdown.load(Ordering::Relaxed) {
+            match reader.read_line(&mut line) {
+                Ok(0) => break, // EOF: client closed the connection.
+                Ok(_) => {}
+                // Timeout (or signal): keep any partial line already read
+                // and re-check the shutdown flag.
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
             let mut parts = line.split_whitespace();
             let response = match (parts.next(), parts.next()) {
                 (Some("QUERY"), Some(i)) => match i.parse::<usize>() {
@@ -113,6 +141,7 @@ impl MatchService {
                 _ => "ERR unknown command".to_string(),
             };
             writeln!(writer, "{response}")?;
+            line.clear();
         }
         Ok(())
     }
@@ -166,5 +195,33 @@ mod tests {
         assert!(lines[0].parse::<usize>().is_ok(), "MAP reply: {}", lines[0]);
         assert!(lines[1].contains("points=100x100"), "STATS reply: {}", lines[1]);
         shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn silent_client_does_not_outlive_shutdown() {
+        use std::io::{BufRead, BufReader, Write};
+        let (_, svc) = service();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = svc.serve("127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+
+        // Live connection that proves the handler is up...
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(stream, "STATS").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("points="), "STATS reply: {reply}");
+
+        // ...then goes silent. Signalling shutdown must close it: the
+        // handler re-checks the flag between timed reads and drops the
+        // stream, so the client sees EOF well before this 5s deadline
+        // instead of the connection pinning a server thread forever.
+        shutdown.store(true, Ordering::Relaxed);
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        let mut tail = String::new();
+        let n = reader.read_line(&mut tail).expect("server never closed the silent connection");
+        assert_eq!(n, 0, "expected EOF after shutdown, got {tail:?}");
     }
 }

@@ -106,6 +106,7 @@ pub struct HierRow {
 
 /// Flat qGW at leaf resolution `leaf` (`m = N/leaf` blocks) vs 2-level
 /// hierarchical qGW at the same leaf (`m_1 = (N/leaf)^(1/2)` per level),
+/// plus the adaptive ("recursion as needed") hierarchy at the same cap,
 /// on the Figure-3 rooms. At full scale the flat side would need
 /// `m ~ 17k` (a 2.3e9-entry rep matrix), so its `m` is capped and the cap
 /// is reported — which is exactly the point of the hierarchy.
@@ -141,7 +142,7 @@ pub fn hier_rows(scale: f64, seed: u64) -> Vec<HierRow> {
     }
 
     // 2-level hierarchy at the same leaf.
-    {
+    let fixed_mid_tolerance = {
         let m1 = balanced_m(n_min, LEAF, 2);
         let mut rng = Pcg32::seed_from(seed ^ 0x41E7);
         let start = Instant::now();
@@ -162,6 +163,41 @@ pub fn hier_rows(scale: f64, seed: u64) -> Vec<HierRow> {
         let workers = crate::coordinator::effective_threads(cfg.num_threads);
         out.push(HierRow {
             method: format!("hier qGW levels=2 m1={m1} leaf={LEAF}"),
+            accuracy_pct: 100.0 * acc,
+            secs: start.elapsed().as_secs_f64(),
+            peak_quantized_bytes: hres.stats.peak_quantized_bytes(workers),
+            peak_rep_bytes: hres.stats.top_rep_bytes + hres.stats.max_node_rep_bytes,
+        });
+        hres.mid_tolerance()
+    };
+
+    // Adaptive "recursion as needed" at the same cap/leaf and the same
+    // seeds (identical top partition): the shared mid-bound tolerance
+    // heuristic, so only the coarse block pairs re-quantize and the rest
+    // prune to the exact leaf.
+    {
+        let m1 = balanced_m(n_min, LEAF, 2);
+        let mut rng = Pcg32::seed_from(seed ^ 0x41E7);
+        let start = Instant::now();
+        let cfg = QgwConfig {
+            size: PartitionSize::Count(m1),
+            levels: 2,
+            leaf_size: LEAF,
+            tolerance: fixed_mid_tolerance,
+            ..QgwConfig::default()
+        };
+        let hres = hier_qgw_match(&source.cloud, &target.cloud, &cfg, &mut rng);
+        let acc = segment_transfer_accuracy(
+            &hres.result.coupling.to_sparse(),
+            &source.labels,
+            &target.labels,
+        );
+        let workers = crate::coordinator::effective_threads(cfg.num_threads);
+        out.push(HierRow {
+            method: format!(
+                "adaptive hier cap=2 leaf={LEAF} (pruned {}, split {})",
+                hres.stats.pruned_pairs, hres.stats.split_pairs
+            ),
             accuracy_pct: 100.0 * acc,
             secs: start.elapsed().as_secs_f64(),
             peak_quantized_bytes: hres.stats.peak_quantized_bytes(workers),

@@ -7,8 +7,12 @@
 //! runs the 2-level hierarchical recursion at a fixed leaf resolution
 //! (`m_1 ~ (N/leaf)^(1/2)` per level), whose rep matrices grow like
 //! `sqrt(N)` instead of flat qGW's `N^(2/3)` under this sweep; a fourth
-//! runs the same hierarchy fused (1-D synthetic features blended at every
-//! node and leaf), showing the feature path rides the same growth curve.
+//! runs the same hierarchy *adaptively* (tolerance halfway between the
+//! top Theorem-6 term and the fixed-depth composed bound, so only the
+//! coarse block pairs re-quantize — the pruned-pair count is reported);
+//! a fifth runs the fixed hierarchy fused (1-D synthetic features
+//! blended at every node and leaf), showing the feature path rides the
+//! same growth curve.
 
 use std::io::Write;
 use std::time::Instant;
@@ -35,6 +39,15 @@ pub struct Point {
     pub gw_secs: Option<f64>,
     /// 2-level hierarchical qGW at leaf [`HIER_LEAF`].
     pub hier_secs: f64,
+    /// Adaptive ("recursion as needed") hierarchy at the same cap/leaf:
+    /// tolerance halfway between the top term and the fixed-depth
+    /// composed bound.
+    pub adapt_secs: f64,
+    /// Recursion-eligible pairs the adaptive tolerance pruned to the
+    /// exact 1-D leaf.
+    pub adapt_pruned: usize,
+    /// Pairs the adaptive run still re-quantized.
+    pub adapt_split: usize,
     /// 2-level hierarchical qFGW (1-D synthetic features) at the same
     /// leaf — the fused substrate recursing, not falling back to flat.
     pub hier_fused_secs: f64,
@@ -72,16 +85,41 @@ pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
                 leaf_size: HIER_LEAF,
                 ..Default::default()
             };
+            // The adaptive run below replays this exact RNG stream so it
+            // sees the same top partition (and per-node bound terms) the
+            // tolerance is sized from.
+            let mut adapt_rng = rng.clone();
             let start = Instant::now();
-            let _ = hier_qgw_match(&x, &y, &hier_cfg, &mut rng);
+            let hres = hier_qgw_match(&x, &y, &hier_cfg, &mut rng);
             let hier_secs = start.elapsed().as_secs_f64();
+            // Adaptive series at the same cap and leaf: the shared
+            // mid-bound tolerance heuristic, so well-quantized pairs
+            // prune to the exact leaf while coarse ones still re-quantize.
+            let adapt_cfg =
+                QgwConfig { tolerance: hres.mid_tolerance(), ..hier_cfg.clone() };
+            let start = Instant::now();
+            let ares = hier_qgw_match(&x, &y, &adapt_cfg, &mut adapt_rng);
+            let adapt_secs = start.elapsed().as_secs_f64();
+            let adapt_pruned = ares.stats.pruned_pairs;
+            let adapt_split = ares.stats.split_pairs;
             let fx = coord_feature(&x);
             let fy = coord_feature(&y);
             let fused_cfg = QfgwConfig { base: hier_cfg.clone(), alpha: 0.5, beta: 0.75 };
             let start = Instant::now();
             let _ = hier_qfgw_match(&x, &y, &fx, &fy, &fused_cfg, &mut rng);
             let hier_fused_secs = start.elapsed().as_secs_f64();
-            Point { n, m, qgw_secs, gw_secs, hier_secs, hier_fused_secs, hier_m }
+            Point {
+                n,
+                m,
+                qgw_secs,
+                gw_secs,
+                hier_secs,
+                adapt_secs,
+                adapt_pruned,
+                adapt_split,
+                hier_fused_secs,
+                hier_m,
+            }
         })
         .collect()
 }
@@ -108,19 +146,21 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
     let pts = sweep(&ns, seed);
     writeln!(
         w,
-        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10} {:>12}",
-        "N", "m", "qGW time", "GW time", "hier m", "hier time", "hier qFGW"
+        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10} {:>10} {:>13} {:>12}",
+        "N", "m", "qGW time", "GW time", "hier m", "hier time", "adapt time", "pruned/split", "hier qFGW"
     )?;
     for p in &pts {
         writeln!(
             w,
-            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3} {:>12.3}",
+            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3} {:>10.3} {:>13} {:>12.3}",
             p.n,
             p.m,
             p.qgw_secs,
             p.gw_secs.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
             p.hier_m,
             p.hier_secs,
+            p.adapt_secs,
+            format!("{}/{}", p.adapt_pruned, p.adapt_split),
             p.hier_fused_secs
         )?;
     }
@@ -130,6 +170,11 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
     writeln!(
         w,
         "log-log slope of 2-level hier qGW (leaf {HIER_LEAF}) time vs N: {hslope:.2}"
+    )?;
+    let aslope = loglog_slope(&pts.iter().map(|p| (p.n, p.adapt_secs)).collect::<Vec<_>>());
+    writeln!(
+        w,
+        "log-log slope of adaptive hier qGW (leaf {HIER_LEAF}, mid tolerance) time vs N: {aslope:.2}"
     )?;
     let fslope = loglog_slope(&pts.iter().map(|p| (p.n, p.hier_fused_secs)).collect::<Vec<_>>());
     writeln!(

@@ -54,6 +54,10 @@
 //!
 //! Rep matrices then grow as O((N/L)^(2/levels)) per level while the
 //! coupling keeps flat qGW's exact marginals and factored row queries.
+//! Setting `tolerance > 0` (`qgw.tolerance` / `--tolerance`) makes the
+//! recursion adaptive — "recursion as needed": `levels` becomes a hard
+//! cap and a block pair is only re-quantized while its Theorem-6 bound
+//! term still exceeds the remaining tolerance budget.
 
 pub mod cli;
 pub mod config;

@@ -25,8 +25,11 @@ pub fn emd1d(xs: &[f64], a: &[f64], ys: &[f64], b: &[f64]) -> Plan1d {
     assert_eq!(ys.len(), b.len());
     let mut xi: Vec<u32> = (0..xs.len() as u32).collect();
     let mut yi: Vec<u32> = (0..ys.len() as u32).collect();
-    xi.sort_by(|&i, &j| xs[i as usize].partial_cmp(&xs[j as usize]).unwrap());
-    yi.sort_by(|&i, &j| ys[i as usize].partial_cmp(&ys[j as usize]).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): this comparator sits on the
+    // hot leaf path and must not panic on NaN coordinates (a NaN sorts
+    // after +inf under the IEEE total order, deterministically).
+    xi.sort_by(|&i, &j| xs[i as usize].total_cmp(&xs[j as usize]));
+    yi.sort_by(|&i, &j| ys[i as usize].total_cmp(&ys[j as usize]));
     northwest_corner(xs, a, ys, b, &xi, &yi)
 }
 
@@ -214,5 +217,31 @@ mod tests {
     fn empty_inputs() {
         let plan = emd1d(&[], &[], &[0.0], &[1.0]);
         assert!(plan.entries.is_empty());
+    }
+
+    #[test]
+    fn nan_coordinate_sorts_deterministically_instead_of_panicking() {
+        // partial_cmp().unwrap() used to panic here; total_cmp sorts the
+        // (positive) NaN after every finite coordinate, so the plan is
+        // still a deterministic full-mass coupling.
+        let xs = [0.5, f64::NAN, 0.1];
+        let a = [0.25, 0.5, 0.25];
+        let ys = [0.0, 1.0];
+        let b = [0.5, 0.5];
+        let p1 = emd1d(&xs, &a, &ys, &b);
+        let p2 = emd1d(&xs, &a, &ys, &b);
+        assert_eq!(p1.entries.len(), p2.entries.len());
+        for (e1, e2) in p1.entries.iter().zip(&p2.entries) {
+            assert_eq!((e1.0, e1.1), (e2.0, e2.1));
+            assert_eq!(e1.2.to_bits(), e2.2.to_bits());
+        }
+        assert!((p1.total_mass() - 1.0).abs() < 1e-12);
+        // The NaN atom (index 1) is last in the monotone order, so it
+        // consumes the tail of the target mass.
+        assert_eq!(p1.entries.last().unwrap().0, 1);
+        // Marginals stay exact — NaN only poisons the cost, not the mass.
+        for (g, w) in p1.row_marginal(3).iter().zip(&a) {
+            assert!((g - w).abs() < 1e-12);
+        }
     }
 }

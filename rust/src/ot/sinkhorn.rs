@@ -13,7 +13,8 @@ use crate::core::DenseMatrix;
 pub struct SinkhornOptions {
     pub eps: f64,
     pub max_iters: usize,
-    /// Stop when the max row-marginal violation drops below this.
+    /// Stop when the larger of the max row- and column-marginal
+    /// violations drops below this.
     pub tol: f64,
 }
 
@@ -65,7 +66,7 @@ pub fn sinkhorn(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOptions
         }
         iters += 1;
         if iters % 20 == 0 || iters == opts.max_iters {
-            err = marginal_error(&k, &u, &v, a);
+            err = marginal_error(&k, &kt, &u, &v, a, b);
             if err < opts.tol {
                 break;
             }
@@ -81,11 +82,28 @@ pub fn sinkhorn(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOptions
     SinkhornResult { plan: k, cost: c, iters, marginal_err: err }
 }
 
-fn marginal_error(k: &DenseMatrix, u: &[f64], v: &[f64], a: &[f64]) -> f64 {
+/// Max violation over *both* marginals of the scaled plan
+/// `diag(u) K diag(v)`. The alternating updates leave the last-updated
+/// side exact in exact arithmetic, but degenerate kernels (a column of
+/// `K` underflowing to zero while `b` still carries mass there) violate
+/// the other side arbitrarily while the one-sided row check converges —
+/// so both sides are measured and the max reported.
+fn marginal_error(
+    k: &DenseMatrix,
+    kt: &DenseMatrix,
+    u: &[f64],
+    v: &[f64],
+    a: &[f64],
+    b: &[f64],
+) -> f64 {
     let mut err = 0.0f64;
     for i in 0..k.rows() {
         let s: f64 = k.row(i).iter().zip(v).map(|(x, y)| x * y).sum::<f64>() * u[i];
         err = err.max((s - a[i]).abs());
+    }
+    for j in 0..kt.rows() {
+        let s: f64 = kt.row(j).iter().zip(u).map(|(x, y)| x * y).sum::<f64>() * v[j];
+        err = err.max((s - b[j]).abs());
     }
     err
 }
@@ -119,7 +137,10 @@ pub fn sinkhorn_log(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOpt
         lse_half_step(&ct, n, &f, &logb, &mut g, &mut scratch);
         iters += 1;
         if iters % 20 == 0 || iters == opts.max_iters {
-            // Row marginal of exp(f + g - C/eps).
+            // Max violation over both marginals of exp(f + g - C/eps):
+            // the g half-step leaves columns exact in exact arithmetic,
+            // but potentials pinned at NEG_BIG can strand a marginal the
+            // row-only check never sees.
             err = 0.0;
             for i in 0..n {
                 if loga[i] <= NEG_BIG / 2.0 {
@@ -134,6 +155,20 @@ pub fn sinkhorn_log(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOpt
                     }
                 }
                 err = err.max((s - a[i]).abs());
+            }
+            for j in 0..m {
+                if logb[j] <= NEG_BIG / 2.0 {
+                    continue;
+                }
+                let mut s = 0.0;
+                let col = &ct[j * n..(j + 1) * n];
+                for i in 0..n {
+                    let e = f[i] + g[j] - col[i];
+                    if e > NEG_BIG / 2.0 {
+                        s += e.exp();
+                    }
+                }
+                err = err.max((s - b[j]).abs());
             }
             if err < opts.tol {
                 break;
@@ -304,6 +339,58 @@ mod tests {
             assert!(res.plan.row(1).iter().all(|&x| x == 0.0));
             assert!(check_coupling(&res.plan, &a, &b, 1e-6));
         }
+    }
+
+    #[test]
+    fn reported_error_covers_stranded_column_marginals() {
+        // Column 1's kernel entries underflow to zero (cost 1000 at
+        // eps 1), so no mass can ever reach it even though b[1] = 0.5.
+        // The old row-only check saw a steady violation of 0.25, declared
+        // convergence at tol = 0.3, and reported marginal_err = 0.25 —
+        // silently hiding the 0.5 column violation. The two-sided check
+        // must report at least the column violation and refuse to
+        // converge at this tol.
+        let cost = DenseMatrix::from_vec(2, 2, vec![0.0, 1000.0, 0.0, 1000.0]);
+        let a = vec![0.5, 0.5];
+        let b = vec![0.5, 0.5];
+        let res =
+            sinkhorn(&cost, &a, &b, &SinkhornOptions { eps: 1.0, max_iters: 200, tol: 0.3 });
+        let col1: f64 = res.plan.get(0, 1) + res.plan.get(1, 1);
+        assert!(col1 < 0.1, "column 1 unexpectedly received mass: {col1}");
+        assert!(
+            res.marginal_err >= 0.4,
+            "marginal_err {} under-reports the column violation (b[1] = 0.5 got {col1})",
+            res.marginal_err
+        );
+    }
+
+    #[test]
+    fn log_domain_reported_error_bounds_both_marginals() {
+        // On a healthy asymmetric problem the reported error must bound
+        // the realized violation of *both* marginals of the returned plan.
+        let cost = DenseMatrix::from_fn(4, 3, |i, j| ((i * 5 + j * 2) % 7) as f64 / 7.0);
+        let a = unif(4);
+        let b = vec![0.5, 0.3, 0.2];
+        let res = sinkhorn_log(
+            &cost,
+            &a,
+            &b,
+            &SinkhornOptions { eps: 0.05, max_iters: 5000, tol: 1e-10 },
+        );
+        let mut worst = 0.0f64;
+        for i in 0..4 {
+            let s: f64 = res.plan.row(i).iter().sum();
+            worst = worst.max((s - a[i]).abs());
+        }
+        for j in 0..3 {
+            let s: f64 = (0..4).map(|i| res.plan.get(i, j)).sum();
+            worst = worst.max((s - b[j]).abs());
+        }
+        assert!(
+            worst <= res.marginal_err + 1e-9,
+            "plan violates marginals by {worst} but reported err is {}",
+            res.marginal_err
+        );
     }
 
     #[test]

@@ -62,6 +62,19 @@ pub struct QgwConfig {
     /// Block pairs at or below this size bottom out at the presorted
     /// `emd1d` leaf when `levels > 1`. Ignored by flat qGW.
     pub leaf_size: usize,
+    /// Adaptive-recursion tolerance on the composed multi-level error
+    /// bound ("recursion as needed"; meaningful when `levels > 1`).
+    ///
+    /// `0.0` (the default) keeps fixed-depth semantics: every eligible
+    /// block pair recurses until `levels` or `leaf_size` stops it. With a
+    /// positive tolerance, a supported block pair is re-quantized only
+    /// while its per-node Theorem-6 term `2 (q_X + q_Y) + 8 eps`
+    /// (plus `2 (qf_X + qf_Y)` when fused) still exceeds the remaining
+    /// budget — the tolerance minus the terms already committed above the
+    /// pair; a pair whose term already fits the budget bottoms out at the
+    /// exact 1-D leaf instead. `levels` then acts as a hard depth cap
+    /// rather than the driver. Ignored by flat qGW.
+    pub tolerance: f64,
 }
 
 impl Default for QgwConfig {
@@ -74,6 +87,7 @@ impl Default for QgwConfig {
             num_threads: 0,
             levels: 1,
             leaf_size: 64,
+            tolerance: 0.0,
         }
     }
 }

@@ -38,6 +38,23 @@
 //!   max-PageRank representatives, Dijkstra distances restricted to the
 //!   block.
 //!
+//! **Adaptive recursion** ([`QgwConfig::tolerance`], the paper's
+//! "recursion as needed"): with a positive tolerance the level budget
+//! stops being the driver and becomes a hard cap. Each eligible block
+//! pair is re-quantized only while its per-node Theorem-6 term still
+//! exceeds the remaining tolerance budget (the tolerance minus the terms
+//! committed by the top partition and every split above the pair); a pair
+//! whose term already fits the budget is *pruned* — it bottoms out at the
+//! exact 1-D leaf, skipping the nested alignment and everything below it.
+//! Because adaptive splits are a subset of the fixed-depth splits over
+//! the same seeds, the realized composed bound never exceeds the
+//! fixed-depth bound at the same cap, and a tolerance at or above that
+//! fixed-depth bound prunes every pair (the match degenerates to flat
+//! qGW on the top partition, whose bound is the top term alone). The
+//! split decision is a pure function of per-node scalars, so adaptive
+//! couplings stay byte-identical across thread counts; `tolerance = 0`
+//! (default) preserves fixed-depth semantics exactly.
+//!
 //! Contrast with the MREC baseline ([`crate::gw::mrec_match`]): MREC pays
 //! a full entropic-GW solve at every recursion node *and leaf*; here each
 //! node pays one small rep-space solve and all leaves are exact O(k) 1-D
@@ -218,6 +235,17 @@ pub struct HierStats {
     pub bound_term_per_level: Vec<f64>,
     /// Exact 1-D leaf matchings executed (across all levels).
     pub leaf_matchings: usize,
+    /// Realized depth histogram: exact 1-D leaf matchings executed at
+    /// each level (entry `l` counts pairs that bottomed out `l`
+    /// recursions down; fixed-depth runs concentrate mass at the deepest
+    /// levels, adaptive runs spread it wherever the budget was met).
+    pub leaves_per_level: Vec<usize>,
+    /// Supported pairs that re-quantized and recursed (one nested
+    /// alignment each, across all levels).
+    pub split_pairs: usize,
+    /// Recursion-eligible pairs the adaptive tolerance pruned to the
+    /// exact 1-D leaf instead (always 0 when `tolerance = 0`).
+    pub pruned_pairs: usize,
     /// Recursion nodes (global alignments) executed, including the top.
     pub nodes: usize,
     /// Sparse-storage bytes of the two top-level quantized spaces.
@@ -248,6 +276,7 @@ impl HierStats {
             self.pairs_per_level.push(0);
             self.max_mass_err_per_level.push(0.0);
             self.bound_term_per_level.push(0.0);
+            self.leaves_per_level.push(0);
         }
     }
 
@@ -267,8 +296,14 @@ impl HierStats {
         }
     }
 
+    fn record_leaf(&mut self, level: usize) {
+        self.grow(level);
+        self.leaf_matchings += 1;
+        self.leaves_per_level[level] += 1;
+    }
+
     fn merge(&mut self, other: &HierStats) {
-        self.grow(other.pairs_per_level.len().saturating_sub(1));
+        self.grow(other.pairs_per_level.len().max(other.leaves_per_level.len()).saturating_sub(1));
         for (l, &n) in other.pairs_per_level.iter().enumerate() {
             self.pairs_per_level[l] += n;
         }
@@ -282,7 +317,12 @@ impl HierStats {
                 self.bound_term_per_level[l] = b;
             }
         }
+        for (l, &n) in other.leaves_per_level.iter().enumerate() {
+            self.leaves_per_level[l] += n;
+        }
         self.leaf_matchings += other.leaf_matchings;
+        self.split_pairs += other.split_pairs;
+        self.pruned_pairs += other.pruned_pairs;
         self.nodes += other.nodes;
         self.max_node_quantized_bytes =
             self.max_node_quantized_bytes.max(other.max_node_quantized_bytes);
@@ -322,6 +362,20 @@ pub struct HierQgwResult {
     /// (including nested alignments), leaf matchings, and coupling
     /// assembly.
     pub local_secs: f64,
+}
+
+impl HierQgwResult {
+    /// Mid-bound tolerance heuristic for adaptive reruns: halfway between
+    /// the top-level Theorem-6 term and this run's composed bound,
+    /// floored at a tiny positive value so adaptive mode engages even
+    /// when the two coincide. Derived from a fixed-depth run and replayed
+    /// with the same seeds, it splits roughly the coarser half of the
+    /// eligible pairs — the shared knob of the experiment series, the
+    /// graph-matching example, and the adaptive property tests.
+    pub fn mid_tolerance(&self) -> f64 {
+        let t0 = self.stats.bound_term_per_level.first().copied().unwrap_or(0.0);
+        (t0 + 0.5 * (self.result.error_bound - t0)).max(1e-300)
+    }
 }
 
 /// Partition size per level that reaches `leaf_size`-point blocks after
@@ -465,21 +519,9 @@ pub fn hier_match_quantized(
         _ => None,
     };
 
-    // Step 1: global alignment of the top-level representatives — exactly
-    // as flat qGW/qFGW.
-    let align_start = Instant::now();
-    let global_res = align_node(x, y, qx, qy, fused, aligner);
-    let global_secs = align_start.elapsed().as_secs_f64();
-
-    // Step 2: solve every supported pair (leaf 1-D matching or a nested
-    // quantized node), fanned out over the pool.
-    let local_start = Instant::now();
-    let global = SparseCoupling::from_dense(&global_res.plan, cfg.mass_threshold);
-    let pairs: Vec<(u32, u32)> = global.iter().map(|(p, q, _)| (p as u32, q as u32)).collect();
-    let node =
-        solve_pairs(x, y, qx, qy, &pairs, levels - 1, 0, cfg, fused, aligner, seed, true);
-
-    // Step 3: assemble the factored coupling and compose the bound.
+    // Top-level Theorem-6 scalars, computed up front: the adaptive budget
+    // below subtracts the committed top term before the first split
+    // decision.
     let q_x = qx.quantized_eccentricity();
     let q_y = qy.quantized_eccentricity();
     let top_feat = match (fused, x.features(), y.features()) {
@@ -491,6 +533,34 @@ pub fn hier_match_quantized(
     let top_eps = qx.block_diameter_bound().max(qy.block_diameter_bound());
     let top_term = bound_term(q_x, q_y, top_eps, top_feat);
 
+    // Step 1: global alignment of the top-level representatives — exactly
+    // as flat qGW/qFGW.
+    let align_start = Instant::now();
+    let global_res = align_node(x, y, qx, qy, fused, aligner);
+    let global_secs = align_start.elapsed().as_secs_f64();
+
+    // Step 2: solve every supported pair (leaf 1-D matching or a nested
+    // quantized node), fanned out over the pool.
+    let local_start = Instant::now();
+    let global = SparseCoupling::from_dense(&global_res.plan, cfg.mass_threshold);
+    let pairs: Vec<(u32, u32)> = global.iter().map(|(p, q, _)| (p as u32, q as u32)).collect();
+    let node = solve_pairs(
+        x,
+        y,
+        qx,
+        qy,
+        &pairs,
+        levels - 1,
+        0,
+        cfg.tolerance - top_term,
+        cfg,
+        fused,
+        aligner,
+        seed,
+        true,
+    );
+
+    // Step 3: assemble the factored coupling and compose the bound.
     let mut stats = node.stats;
     stats.top_quantized_bytes = qx.memory_bytes() + qy.memory_bytes();
     stats.top_rep_bytes = rep_matrix_bytes(qx) + rep_matrix_bytes(qy);
@@ -680,8 +750,11 @@ fn build_block_cache(
 
 /// Solve every supported pair of one alignment node. `levels_left` counts
 /// quantization levels remaining below the node's partition; `pair_level`
-/// is the level index of these pairs (0 = top). Only the top call fans
-/// out over the pool; recursive calls run inside their worker.
+/// is the level index of these pairs (0 = top). `budget` is the remaining
+/// adaptive tolerance (the configured tolerance minus every bound term
+/// committed above these pairs) — consulted only when `cfg.tolerance > 0`.
+/// Only the top call fans out over the pool; recursive calls run inside
+/// their worker.
 #[allow(clippy::too_many_arguments)]
 fn solve_pairs(
     x: &Substrate<'_>,
@@ -691,6 +764,7 @@ fn solve_pairs(
     pairs: &[(u32, u32)],
     levels_left: usize,
     pair_level: usize,
+    budget: f64,
     cfg: &QgwConfig,
     fused: Option<(f64, f64)>,
     aligner: &(dyn GlobalAligner + Sync),
@@ -698,22 +772,41 @@ fn solve_pairs(
     parallel: bool,
 ) -> NodeOutcome {
     let leaf = cfg.leaf_size.max(1);
-    let recurses = |p: usize, q: usize| {
+    let adaptive = cfg.tolerance > 0.0;
+    // Size/level eligibility — the fixed-depth split rule. In adaptive
+    // mode an eligible pair must additionally fail the tolerance check
+    // below before it actually recurses.
+    let may_recurse = |p: usize, q: usize| {
         let (bx, by) = (qx.block(p).len(), qy.block(q).len());
         levels_left > 0 && bx > leaf && by > leaf && bx >= 4 && by >= 4
     };
+    // Exact 1-D bottom-out for one pair (beta-blended with the feature
+    // matching when fused), as in flat qGW/qFGW.
+    let leaf_outcome = |pu: usize, qu: usize, pruned: bool| -> PairOutcome {
+        let plan = leaf_plan(x, y, qx, qy, pu, qu, fused);
+        let mut stats = HierStats::default();
+        stats.record_leaf(pair_level);
+        if pruned {
+            stats.pruned_pairs = 1;
+        }
+        PairOutcome { plan, bound: 0.0, transient_bytes: 0, stats }
+    };
 
-    // Blocks that any recursing pair touches, deduped across pairs.
+    // Blocks that any recursion-eligible pair touches, deduped across
+    // pairs. Adaptive mode still extracts + re-partitions these — the
+    // nested partition is what the split decision's bound term is read
+    // from — but pruned pairs skip the nested alignment and everything
+    // below it, which is where the real cost lives.
     let mut need_x: Vec<u32> = pairs
         .iter()
-        .filter(|&&(p, q)| recurses(p as usize, q as usize))
+        .filter(|&&(p, q)| may_recurse(p as usize, q as usize))
         .map(|&(p, _)| p)
         .collect();
     need_x.sort_unstable();
     need_x.dedup();
     let mut need_y: Vec<u32> = pairs
         .iter()
-        .filter(|&&(p, q)| recurses(p as usize, q as usize))
+        .filter(|&&(p, q)| may_recurse(p as usize, q as usize))
         .map(|&(_, q)| q)
         .collect();
     need_y.sort_unstable();
@@ -733,18 +826,26 @@ fn solve_pairs(
 
     let solve_one = |pair: &(u32, u32)| -> PairOutcome {
         let (pu, qu) = (pair.0 as usize, pair.1 as usize);
-        if !recurses(pu, qu) {
-            // Leaf: the presorted exact 1-D matching (beta-blended with the
-            // feature matching when fused), as in flat qGW/qFGW.
-            let plan = leaf_plan(x, y, qx, qy, pu, qu, fused);
-            let stats = HierStats { leaf_matchings: 1, ..HierStats::default() };
-            return PairOutcome { plan, bound: 0.0, transient_bytes: 0, stats };
+        if !may_recurse(pu, qu) {
+            return leaf_outcome(pu, qu, false);
+        }
+
+        let cx = &cache_x[&pair.0];
+        let cy = &cache_y[&pair.1];
+        let node_term =
+            bound_term(cx.q_ecc, cy.q_ecc, cx.diam.max(cy.diam), cx.feat_ecc + cy.feat_ecc);
+
+        // Adaptive split decision: a pair whose Theorem-6 term already
+        // fits the remaining budget is accurate enough as-is — prune it
+        // to the exact leaf. Only pairs still too coarse for the budget
+        // pay for the nested alignment (deterministic: the decision is a
+        // pure function of per-node scalars).
+        if adaptive && node_term <= budget {
+            return leaf_outcome(pu, qu, true);
         }
 
         // Nested node: align the cached sub-partitions' representatives,
         // then solve the supported sub-pairs one level down.
-        let cx = &cache_x[&pair.0];
-        let cy = &cache_y[&pair.1];
         let (sub_x, sqx) = (&cx.sub, &cx.q);
         let (sub_y, sqy) = (&cy.sub, &cy.q);
         let res = align_node(sub_x, sub_y, sqx, sqy, fused, aligner);
@@ -756,9 +857,6 @@ fn solve_pairs(
             gmass.push(w);
         }
 
-        let node_term =
-            bound_term(cx.q_ecc, cy.q_ecc, cx.diam.max(cy.diam), cx.feat_ecc + cy.feat_ecc);
-
         let child = solve_pairs(
             sub_x,
             sub_y,
@@ -767,6 +865,7 @@ fn solve_pairs(
             &child_pairs,
             levels_left - 1,
             pair_level + 1,
+            budget - node_term,
             cfg,
             fused,
             aligner,
@@ -776,6 +875,7 @@ fn solve_pairs(
 
         let mut stats = child.stats;
         stats.record_node(pair_level + 1, node_term);
+        stats.split_pairs += 1;
         stats.max_node_quantized_bytes = stats
             .max_node_quantized_bytes
             .max(sqx.memory_bytes() + sqy.memory_bytes());
@@ -974,6 +1074,79 @@ mod tests {
                 hier.result.coupling.local_plan(p, q).unwrap().iter().map(|e| e.2).sum();
             assert!((mass - 1.0).abs() < 1e-7, "pair ({p},{q}) mass {mass}");
         }
+    }
+
+    // -- adaptive recursion (tolerance) -------------------------------------
+
+    #[test]
+    fn adaptive_tolerance_above_fixed_bound_prunes_to_flat() {
+        let x = gaussian_cloud(300, 2);
+        let cfg = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) };
+        let mut r1 = Pcg32::seed_from(11);
+        let fixed = hier_qgw_match(&x, &x, &cfg, &mut r1);
+        assert!(fixed.stats.levels_used() >= 2, "fixture must recurse: {:?}", fixed.stats);
+        assert!(fixed.stats.split_pairs > 0);
+        assert_eq!(fixed.stats.pruned_pairs, 0, "fixed depth must never prune");
+
+        // Tolerance above the fixed-depth composed bound: every eligible
+        // pair's term fits the budget, so everything prunes to the exact
+        // leaf and the match degenerates to flat qGW on the same top
+        // partition.
+        let acfg = QgwConfig { tolerance: fixed.result.error_bound + 1e-9, ..cfg.clone() };
+        let mut r2 = Pcg32::seed_from(11);
+        let adapt = hier_qgw_match(&x, &x, &acfg, &mut r2);
+        assert!(adapt.stats.pruned_pairs > 0, "nothing pruned: {:?}", adapt.stats);
+        assert_eq!(adapt.stats.split_pairs, 0);
+        assert_eq!(adapt.stats.levels_used(), 1);
+        assert!(adapt.result.error_bound <= acfg.tolerance);
+
+        let mut r3 = Pcg32::seed_from(11);
+        let flat = qgw_match(&x, &x, &QgwConfig::with_count(6), &mut r3);
+        assert_sparse_bitwise_equal(
+            &flat.coupling.to_sparse(),
+            &adapt.result.coupling.to_sparse(),
+        );
+    }
+
+    #[test]
+    fn adaptive_mid_tolerance_splits_subset_and_tightens_bound() {
+        let x = gaussian_cloud(260, 5);
+        let y = gaussian_cloud(240, 6);
+        let mut rng = Pcg32::seed_from(13);
+        let qx = voronoi_partition(&x, 5, &mut rng);
+        let qy = voronoi_partition(&y, 5, &mut rng);
+        let cfg = QgwConfig { levels: 3, leaf_size: 6, ..QgwConfig::default() };
+        let fixed =
+            hier_qgw_match_quantized(&x, &y, &qx, &qy, &cfg, &RustAligner(cfg.gw.clone()), 77);
+        assert!(fixed.stats.split_pairs > 0, "fixture must recurse: {:?}", fixed.stats);
+
+        // Budget halfway between the top term and the fixed-depth bound:
+        // coarse pairs still split, well-quantized ones prune.
+        let acfg = QgwConfig { tolerance: fixed.mid_tolerance(), ..cfg.clone() };
+        let adapt =
+            hier_qgw_match_quantized(&x, &y, &qx, &qy, &acfg, &RustAligner(acfg.gw.clone()), 77);
+
+        // Adaptive splits are a subset of the fixed-depth splits over the
+        // same seeds, so the composed bound can only tighten, and every
+        // eligible pair was either split or pruned.
+        assert!(
+            adapt.result.error_bound <= fixed.result.error_bound + 1e-12,
+            "adaptive bound {} above fixed {}",
+            adapt.result.error_bound,
+            fixed.result.error_bound
+        );
+        assert!(adapt.stats.split_pairs + adapt.stats.pruned_pairs > 0);
+        assert!(adapt.stats.split_pairs + adapt.stats.pruned_pairs <= fixed.stats.split_pairs);
+        assert!(adapt.result.coupling.check_marginals(x.measure(), y.measure()) < 1e-7);
+        // The realized depth histogram accounts for every leaf matching.
+        assert_eq!(
+            adapt.stats.leaves_per_level.iter().sum::<usize>(),
+            adapt.stats.leaf_matchings
+        );
+        assert_eq!(
+            fixed.stats.leaves_per_level.iter().sum::<usize>(),
+            fixed.stats.leaf_matchings
+        );
     }
 
     // -- fused substrate ----------------------------------------------------

@@ -17,7 +17,10 @@
 //!   graphs (nested Fluid partitions, Dijkstra restricted to the block).
 //!   Same factored coupling, composed multi-level error bound (geometric
 //!   Theorem-6 term plus the feature term when fused),
-//!   O((N/L)^(2/levels)) rep matrices.
+//!   O((N/L)^(2/levels)) rep matrices. With [`QgwConfig::tolerance`]
+//!   `> 0` the recursion is adaptive: `levels` caps the depth and a pair
+//!   re-quantizes only while its bound term exceeds the remaining
+//!   tolerance budget.
 
 mod ablation;
 mod algorithm;

@@ -83,27 +83,26 @@ fn fig3_rows_tiny() {
 #[test]
 fn fig3_hier_rows_tiny() {
     let rows = fig3::hier_rows(0.004, 7);
-    assert_eq!(rows.len(), 3); // flat + hierarchical + hierarchical qFGW
+    // flat + hierarchical + adaptive hierarchical + hierarchical qFGW
+    assert_eq!(rows.len(), 4);
     for r in &rows {
         assert!((0.0..=100.0).contains(&r.accuracy_pct), "{r:?}");
         assert!(r.peak_quantized_bytes > 0 && r.peak_rep_bytes > 0);
     }
     // The hierarchy's rep matrices are O(N/leaf) vs flat's O((N/leaf)^2):
-    // the reduction must show even at smoke scale, for both the plain and
-    // the fused (color-feature) hierarchical runs.
-    assert!(
-        rows[1].peak_rep_bytes < rows[0].peak_rep_bytes,
-        "hier rep bytes {} not below flat {}",
-        rows[1].peak_rep_bytes,
-        rows[0].peak_rep_bytes
-    );
-    assert!(
-        rows[2].peak_rep_bytes < rows[0].peak_rep_bytes,
-        "hier qFGW rep bytes {} not below flat {}",
-        rows[2].peak_rep_bytes,
-        rows[0].peak_rep_bytes
-    );
-    assert!(rows[2].method.contains("qFGW"), "{:?}", rows[2].method);
+    // the reduction must show even at smoke scale, for the plain, the
+    // adaptive, and the fused (color-feature) hierarchical runs.
+    for i in [1, 2, 3] {
+        assert!(
+            rows[i].peak_rep_bytes < rows[0].peak_rep_bytes,
+            "row {i} ({}) rep bytes {} not below flat {}",
+            rows[i].method,
+            rows[i].peak_rep_bytes,
+            rows[0].peak_rep_bytes
+        );
+    }
+    assert!(rows[2].method.contains("adaptive"), "{:?}", rows[2].method);
+    assert!(rows[3].method.contains("qFGW"), "{:?}", rows[3].method);
 }
 
 #[test]

@@ -238,6 +238,98 @@ fn prop_hier_qfgw_blended_marginals_exact_any_beta() {
 }
 
 // ---------------------------------------------------------------------------
+// Adaptive recursion ("recursion as needed"): for ANY tolerance the
+// coupling stays an exact coupling, and — because adaptive splits are a
+// subset of the fixed-depth splits over the same seeds — the realized
+// composed bound never exceeds the fixed-depth bound at the same cap and
+// leaf size. A tolerance at or above the fixed-depth bound prunes every
+// eligible pair and therefore meets the requested tolerance.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_adaptive_any_tolerance_marginals_exact_and_bound_dominated() {
+    forall(forall_cases(8), |rng| {
+        let n = 80 + rng.below(80);
+        let x = random_cloud(rng, n, 3);
+        let ny = 80 + rng.below(80);
+        let y = random_cloud(rng, ny, 3);
+        let m = 4 + rng.below(3);
+        let qx = voronoi_partition(&x, m, rng);
+        let qy = voronoi_partition(&y, m, rng);
+        let seed = rng.next_u64();
+        let cap = 2 + rng.below(2); // 2 or 3
+        let fixed_cfg = QgwConfig { levels: cap, leaf_size: 6, ..QgwConfig::default() };
+        let fixed = hier_qgw_match_quantized(
+            &x,
+            &y,
+            &qx,
+            &qy,
+            &fixed_cfg,
+            &RustAligner(fixed_cfg.gw.clone()),
+            seed,
+        );
+
+        // Any tolerance: tiny (split everything eligible), mid (mixed),
+        // or at/above the fixed-depth bound (prune everything).
+        let t0 = fixed.stats.bound_term_per_level[0];
+        let tol = match rng.below(3) {
+            0 => 1e-12,
+            1 => t0 + rng.next_f64() * (fixed.result.error_bound - t0).max(1e-9),
+            _ => fixed.result.error_bound + 1e-9,
+        };
+        let acfg = QgwConfig { tolerance: tol, ..fixed_cfg.clone() };
+        let adapt = hier_qgw_match_quantized(
+            &x,
+            &y,
+            &qx,
+            &qy,
+            &acfg,
+            &RustAligner(acfg.gw.clone()),
+            seed,
+        );
+
+        let err = adapt.result.coupling.check_marginals(x.measure(), y.measure());
+        assert!(err < 1e-7, "tol={tol}: marginal err {err}");
+        for (level, e) in adapt.stats.max_mass_err_per_level.iter().enumerate() {
+            assert!(*e < 1e-7, "tol={tol}: level {level} pair mass err {e}");
+        }
+        assert!(
+            adapt.result.error_bound <= fixed.result.error_bound + 1e-9,
+            "tol={tol}: adaptive bound {} above fixed-depth bound {}",
+            adapt.result.error_bound,
+            fixed.result.error_bound
+        );
+        // Every split/pruned pair corresponds to a fixed-depth split.
+        assert!(
+            adapt.stats.split_pairs + adapt.stats.pruned_pairs <= fixed.stats.split_pairs,
+            "tol={tol}: {} splits + {} prunes vs fixed {} splits",
+            adapt.stats.split_pairs,
+            adapt.stats.pruned_pairs,
+            fixed.stats.split_pairs
+        );
+        // The realized depth histogram accounts for every executed leaf.
+        assert_eq!(
+            adapt.stats.leaves_per_level.iter().sum::<usize>(),
+            adapt.stats.leaf_matchings
+        );
+        if tol >= fixed.result.error_bound {
+            // Budget covers the worst fixed-depth chain: everything
+            // prunes, the match is flat on the top partition, and the
+            // requested tolerance is met.
+            assert_eq!(adapt.stats.split_pairs, 0, "tol={tol} above bound but split");
+            assert!(
+                adapt.result.error_bound <= tol,
+                "tol={tol} not met: bound {}",
+                adapt.result.error_bound
+            );
+            if fixed.stats.split_pairs > 0 {
+                assert!(adapt.stats.pruned_pairs > 0, "tol={tol}: nothing pruned");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Determinism regression: same seed => byte-identical sparse coupling for
 // num_threads 1 and 4, for both the flat fan-out and the hierarchical
 // recursion (guards the parallel_map ordering and the per-pair seed
@@ -315,6 +407,75 @@ fn determinism_across_thread_counts_fused_and_graph() {
         let res = hier_graph_match(&g, &g, &mu, &mu, None, None, &cfg, &mut rng);
         assert!(res.stats.levels_used() >= 2, "graph recursion must engage");
         res.result.coupling.to_sparse()
+    };
+    assert_bitwise_equal(&graph_run(1), &graph_run(4));
+}
+
+// Adaptive-mode mirror of the determinism guards: the tolerance-driven
+// split decision is a pure function of per-node scalars, so adaptive
+// couplings must also be byte-identical across thread counts on every
+// substrate (cloud, fused, graph). Each substrate derives a mid
+// tolerance from a fixed-depth reference run so both splitting and
+// pruning are in play.
+#[test]
+fn determinism_across_thread_counts_adaptive_all_substrates() {
+    // Cloud path.
+    let mut srng = Pcg32::seed_from(91);
+    let x = random_cloud(&mut srng, 360, 3);
+    let y = random_cloud(&mut srng, 340, 3);
+    let base = QgwConfig { levels: 3, leaf_size: 16, ..QgwConfig::with_fraction(0.03) };
+    let fixed = {
+        let mut rng = Pcg32::seed_from(7);
+        hier_qgw_match(&x, &y, &base, &mut rng)
+    };
+    assert!(fixed.stats.split_pairs > 0, "cloud fixture must recurse");
+    let tol = fixed.mid_tolerance();
+    let cloud_run = |threads: usize| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QgwConfig { num_threads: threads, tolerance: tol, ..base.clone() };
+        hier_qgw_match(&x, &y, &cfg, &mut rng).result.coupling.to_sparse()
+    };
+    assert_bitwise_equal(&cloud_run(1), &cloud_run(4));
+
+    // Fused path.
+    let fx = coord_feature(&x);
+    let fy = coord_feature(&y);
+    let fbase = QfgwConfig {
+        base: QgwConfig { levels: 2, leaf_size: 12, ..QgwConfig::with_fraction(0.05) },
+        alpha: 0.5,
+        beta: 0.75,
+    };
+    let ffixed = {
+        let mut rng = Pcg32::seed_from(7);
+        hier_qfgw_match(&x, &y, &fx, &fy, &fbase, &mut rng)
+    };
+    let ftol = ffixed.mid_tolerance();
+    let fused_run = |threads: usize| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QfgwConfig {
+            base: QgwConfig { num_threads: threads, tolerance: ftol, ..fbase.base.clone() },
+            alpha: fbase.alpha,
+            beta: fbase.beta,
+        };
+        hier_qfgw_match(&x, &y, &fx, &fy, &cfg, &mut rng).result.coupling.to_sparse()
+    };
+    assert_bitwise_equal(&fused_run(1), &fused_run(4));
+
+    // Graph path.
+    let (g, mu) = ring_graph(240);
+    let gbase = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) };
+    let gfixed = {
+        let mut rng = Pcg32::seed_from(7);
+        hier_graph_match(&g, &g, &mu, &mu, None, None, &gbase, &mut rng)
+    };
+    let gtol = gfixed.mid_tolerance();
+    let graph_run = |threads: usize| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QgwConfig { num_threads: threads, tolerance: gtol, ..gbase.clone() };
+        hier_graph_match(&g, &g, &mu, &mu, None, None, &cfg, &mut rng)
+            .result
+            .coupling
+            .to_sparse()
     };
     assert_bitwise_equal(&graph_run(1), &graph_run(4));
 }

@@ -16,6 +16,21 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Assemble the summary statistics from raw per-iteration timings
+    /// (sorts `times`; at least one sample required).
+    pub fn from_times(name: String, mut times: Vec<Duration>) -> Self {
+        times.sort_unstable();
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        Self {
+            name,
+            iters: times.len(),
+            mean,
+            median: times[times.len() / 2],
+            p95: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+            min: times[0],
+        }
+    }
+
     pub fn report(&self) {
         println!(
             "{:<44} iters={:<3} min={:>10.3?} median={:>10.3?} mean={:>10.3?} p95={:>10.3?}",
@@ -35,16 +50,7 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
         std::hint::black_box(f());
         times.push(start.elapsed());
     }
-    times.sort_unstable();
-    let mean = times.iter().sum::<Duration>() / times.len() as u32;
-    let stats = BenchStats {
-        name: name.to_string(),
-        iters: times.len(),
-        mean,
-        median: times[times.len() / 2],
-        p95: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
-        min: times[0],
-    };
+    let stats = BenchStats::from_times(name.to_string(), times);
     stats.report();
     stats
 }

@@ -2,87 +2,345 @@
 //! cost tensor, network-simplex EMD, partitioning, and the qGW stage
 //! breakdown (partition / global / local) — the profile that drives the
 //! §Perf optimization loop in EXPERIMENTS.md.
+//!
+//! Since PR 4 the binary also profiles the allocation-free solver core
+//! (workspace vs alloc-per-call gradient kernel, Sinkhorn buffer reuse,
+//! the symmetry-halved parallel sparse scorer) under a counting global
+//! allocator, and emits the machine-readable `BENCH_4.json` perf
+//! trajectory (op, size, ns/iter, allocs/iter, peak transient bytes) at
+//! the repository root so future PRs can regress against it.
+//!
+//! `QGW_BENCH_TEST_MODE=1` shrinks every size and runs one iteration per
+//! op — the CI quick-profile step uses it to assert the kernel signatures
+//! (and the workspace-vs-alloc allocation win) without paying for a full
+//! bench run. `QGW_BENCH_JSON` overrides the output path.
 
 #[path = "harness.rs"]
 mod harness;
 
-use harness::bench;
-use qgw::core::{uniform_measure, DenseMatrix, MmSpace};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use harness::BenchStats;
+use qgw::core::{uniform_measure, DenseMatrix, MmSpace, SparseCoupling};
 use qgw::data::blobs::make_blobs;
-use qgw::gw::{entropic_gw, gw_cost_tensor, product_coupling, GwOptions};
-use qgw::ot::{emd, emd1d, emd1d_presorted, sinkhorn_log, SinkhornOptions};
+use qgw::gw::{
+    entropic_gw, gw_cost_tensor, gw_loss_sparse, product_coupling, GwOptions, GwWorkspace,
+};
+use qgw::ot::{
+    emd, emd1d, emd1d_presorted, sinkhorn_log, sinkhorn_log_into, SinkhornOptions,
+    SinkhornWorkspace,
+};
 use qgw::partition::voronoi_partition;
 use qgw::prng::{Pcg32, Rng};
 use qgw::qgw::{local_linear_matching, qgw_match, QgwConfig};
 
+// ---------------------------------------------------------------------------
+// Counting allocator: alloc events + live bytes + peak, for the transient
+// profile of each op. Measures this binary only.
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+static LIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
+static PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        let live = LIVE_BYTES.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+        PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE_BYTES.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        if new_size >= layout.size() {
+            let live =
+                LIVE_BYTES.fetch_add(new_size - layout.size(), Ordering::Relaxed) + new_size
+                    - layout.size();
+            PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+        } else {
+            LIVE_BYTES.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// One BENCH_4.json record.
+struct Record {
+    op: String,
+    size: usize,
+    ns_per_iter: u128,
+    allocs_per_iter: f64,
+    peak_transient_bytes: usize,
+}
+
+/// Time `f` for `iters` iterations while tracking allocation events and
+/// the peak of transient (live-above-entry) bytes. The timed loop is
+/// inlined (not delegated to `harness::bench`) so the counting window
+/// contains only the op's own allocations — no format/report traffic.
+fn profiled<T>(
+    records: &mut Vec<Record>,
+    op: &str,
+    size: usize,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let name = format!("{op} size={size}");
+    let mut times: Vec<Duration> = Vec::with_capacity(iters.max(1));
+    let live0 = LIVE_BYTES.load(Ordering::Relaxed);
+    PEAK_BYTES.store(live0, Ordering::Relaxed);
+    let allocs0 = ALLOC_EVENTS.load(Ordering::Relaxed);
+    for _ in 0..iters.max(1) {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        times.push(start.elapsed());
+    }
+    let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - allocs0;
+    let peak_transient = PEAK_BYTES.load(Ordering::Relaxed).saturating_sub(live0);
+    let stats = BenchStats::from_times(name, times);
+    stats.report();
+    records.push(Record {
+        op: op.to_string(),
+        size,
+        ns_per_iter: stats.median.as_nanos(),
+        allocs_per_iter: allocs as f64 / stats.iters.max(1) as f64,
+        peak_transient_bytes: peak_transient,
+    });
+}
+
+fn write_json(records: &[Record], test_mode: bool) {
+    // Test-mode numbers must never clobber the committed full-run
+    // trajectory: without an explicit QGW_BENCH_JSON they land in the
+    // temp dir instead of the repo root.
+    let path = std::env::var("QGW_BENCH_JSON").unwrap_or_else(|_| {
+        if test_mode {
+            std::env::temp_dir().join("BENCH_smoke.json").to_string_lossy().into_owned()
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_4.json").to_string()
+        }
+    });
+    let mut out = String::from("[\n");
+    out.push_str(&format!(
+        "  {{\"op\": \"_meta\", \"note\": \"measured by cargo bench --bench micro ({} mode); \
+         allocs_per_iter is deterministic, timings are machine-dependent\"}}{}\n",
+        if test_mode { "test" } else { "full" },
+        if records.is_empty() { "" } else { "," }
+    ));
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"op\": \"{}\", \"size\": {}, \"ns_per_iter\": {}, \"allocs_per_iter\": {:.1}, \
+             \"peak_transient_bytes\": {}}}{}\n",
+            r.op,
+            r.size,
+            r.ns_per_iter,
+            r.allocs_per_iter,
+            r.peak_transient_bytes,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// The pre-PR-4 O(nnz^2) serial double loop — kept as the sparse-scoring
+/// reference the parallel halved kernel is benched against.
+fn gw_loss_sparse_reference(
+    coupling: &SparseCoupling,
+    x: &dyn MmSpace,
+    y: &dyn MmSpace,
+) -> f64 {
+    let entries: Vec<(usize, usize, f64)> = coupling.iter().collect();
+    let mut total = 0.0;
+    for &(i, j, w1) in &entries {
+        for &(k, l, w2) in &entries {
+            let d = x.dist(i, k) - y.dist(j, l);
+            total += d * d * w1 * w2;
+        }
+    }
+    total
+}
+
 fn main() {
+    let test_mode = std::env::var("QGW_BENCH_TEST_MODE").map_or(false, |v| v == "1");
+    // (warmup, iters) for the cheap / expensive op classes.
+    let (w_cheap, i_cheap) = if test_mode { (0, 1) } else { (2, 20) };
+    let (w_mid, i_mid) = if test_mode { (0, 1) } else { (1, 10) };
+    let (w_big, i_big) = if test_mode { (0, 1) } else { (0, 3) };
+    let mut records: Vec<Record> = Vec::new();
     let mut rng = Pcg32::seed_from(7);
 
     println!("--- 1-D OT (Proposition 3 kernel) ---");
-    for k in [100usize, 1000, 10_000] {
+    let emd1d_sizes: &[usize] = if test_mode { &[100] } else { &[100, 1000, 10_000] };
+    for &k in emd1d_sizes {
         let xs: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
         let w = vec![1.0 / k as f64; k];
         let mut xs_sorted = xs.clone();
         xs_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        bench(&format!("emd1d k={k}"), 2, 20, || emd1d(&xs, &w, &xs, &w));
-        bench(&format!("emd1d_presorted k={k}"), 2, 20, || {
+        profiled(&mut records, "emd1d", k, w_cheap, i_cheap, || emd1d(&xs, &w, &xs, &w));
+        profiled(&mut records, "emd1d_presorted", k, w_cheap, i_cheap, || {
             emd1d_presorted(&xs_sorted, &w, &xs_sorted, &w)
         });
     }
 
-    println!("--- Sinkhorn (log-domain) ---");
-    for m in [64usize, 256] {
+    println!("--- Sinkhorn (log-domain): alloc-per-call vs workspace reuse ---");
+    let sink_sizes: &[usize] = if test_mode { &[16] } else { &[64, 256] };
+    for &m in sink_sizes {
         let cost = DenseMatrix::from_fn(m, m, |i, j| ((i * 31 + j * 17) % 97) as f64 / 97.0);
         let a = uniform_measure(m);
         let opts = SinkhornOptions { eps: 0.05, max_iters: 100, tol: 1e-9 };
-        bench(&format!("sinkhorn_log m={m} iters<=100"), 1, 10, || {
+        profiled(&mut records, "sinkhorn_log[alloc]", m, w_mid, i_mid, || {
             sinkhorn_log(&cost, &a, &a, &opts)
+        });
+        let mut sws = SinkhornWorkspace::default();
+        let mut plan = DenseMatrix::zeros(0, 0);
+        profiled(&mut records, "sinkhorn_log[workspace]", m, w_mid, i_mid, || {
+            sinkhorn_log_into(&cost, &a, &a, &opts, &mut sws, &mut plan)
         });
     }
 
-    println!("--- GW cost tensor (L3 mirror of the L1 kernel) ---");
-    for m in [64usize, 256, 512] {
+    println!("--- GW gradient kernel (L3 mirror of the L1 kernel) ---");
+    let tensor_sizes: &[usize] = if test_mode { &[24] } else { &[64, 256, 512] };
+    for &m in tensor_sizes {
         let x = make_blobs(m, 3, 1.0, 10.0, &mut rng);
         let c = x.distance_matrix();
         let a = uniform_measure(m);
         let t = product_coupling(&a, &a);
-        bench(&format!("gw_cost_tensor m={m}"), 1, 10, || {
+        profiled(&mut records, "gw_cost_tensor[alloc]", m, w_mid, i_mid, || {
             gw_cost_tensor(&c, &c, &t, &a, &a)
+        });
+        let mut gws = GwWorkspace::new();
+        profiled(&mut records, "gw_cost_tensor[workspace]", m, w_mid, i_mid, || {
+            gws.cost_tensor(&c, &c, &t, &a, &a).as_slice()[0]
         });
     }
 
+    println!("--- entropic GW outer iteration: allocation profile ---");
+    {
+        // Serial-matmul size so thread-spawn allocations do not blur the
+        // per-iteration buffer accounting (EXPERIMENTS.md §Perf).
+        let m = if test_mode { 16 } else { 48 };
+        let x = make_blobs(m, 3, 1.0, 10.0, &mut rng);
+        let c = x.distance_matrix();
+        let a = uniform_measure(m);
+        let t = product_coupling(&a, &a);
+        let sopts = SinkhornOptions { eps: 0.05, max_iters: 20, tol: 1e-12 };
+        // One warmup even in test mode: the workspace path's first call
+        // grows its buffers, and the profile measures the steady state the
+        // outer loop actually runs in.
+        let i_prof = if test_mode { 1 } else { 10 };
+        profiled(&mut records, "egw_outer_iter[alloc]", m, 1, i_prof, || {
+            let cost = gw_cost_tensor(&c, &c, &t, &a, &a);
+            sinkhorn_log(&cost, &a, &a, &sopts)
+        });
+        let mut gws = GwWorkspace::new();
+        let mut sws = SinkhornWorkspace::default();
+        let mut plan = DenseMatrix::zeros(0, 0);
+        profiled(&mut records, "egw_outer_iter[workspace]", m, 1, i_prof, || {
+            let cost = gws.cost_tensor(&c, &c, &t, &a, &a);
+            sinkhorn_log_into(cost, &a, &a, &sopts, &mut sws, &mut plan)
+        });
+        let alloc = records
+            .iter()
+            .find(|r| r.op == "egw_outer_iter[alloc]")
+            .map(|r| r.allocs_per_iter)
+            .unwrap_or(0.0);
+        let reused = records
+            .iter()
+            .find(|r| r.op == "egw_outer_iter[workspace]")
+            .map(|r| r.allocs_per_iter)
+            .unwrap_or(0.0);
+        println!(
+            "egw outer-iteration allocs/iter: alloc-per-call {alloc:.1} vs workspace {reused:.1}"
+        );
+        // The PR-4 contract: the workspace path must hold at least a 2x
+        // allocation win per outer iteration (it is allocation-free in
+        // steady state; the alloc path pays f1/f2/Cy^T/Sinkhorn buffers
+        // every iteration). Asserted in CI's quick-profile run.
+        assert!(
+            reused * 2.0 <= alloc.max(1.0),
+            "workspace path lost its allocation win: {reused} vs {alloc} allocs/iter"
+        );
+    }
+
     println!("--- entropic GW global alignment ---");
-    for m in [64usize, 128] {
+    let egw_sizes: &[usize] = if test_mode { &[16] } else { &[64, 128] };
+    for &m in egw_sizes {
         let x = make_blobs(m, 3, 1.0, 10.0, &mut rng);
         let y = make_blobs(m, 3, 1.0, 10.0, &mut rng);
         let (cx, cy) = (x.distance_matrix(), y.distance_matrix());
         let a = uniform_measure(m);
         let opts = GwOptions::default();
-        bench(&format!("entropic_gw m={m}"), 0, 3, || entropic_gw(&cx, &cy, &a, &a, &opts));
+        profiled(&mut records, "entropic_gw", m, w_big, i_big, || {
+            entropic_gw(&cx, &cy, &a, &a, &opts)
+        });
     }
 
-    println!("--- network simplex EMD ---");
-    for m in [32usize, 64, 128] {
-        let cost = DenseMatrix::from_fn(m, m, |i, j| ((i * 13 + j * 7) % 101) as f64);
-        let a = uniform_measure(m);
-        bench(&format!("emd m={m}"), 1, 5, || emd(&cost, &a, &a));
+    println!("--- sparse coupling scoring: serial reference vs parallel halved ---");
+    let score_sizes: &[usize] = if test_mode { &[64] } else { &[500, 2000] };
+    for &n in score_sizes {
+        let x = make_blobs(n, 3, 1.0, 10.0, &mut rng);
+        // Near-diagonal support with two entries per row — the shape of a
+        // qGW coupling after argmax sharpening.
+        let sparse = SparseCoupling::from_rows(
+            n,
+            n,
+            (0..n)
+                .map(|i| vec![(i as u32, 0.7 / n as f64), (((i + 1) % n) as u32, 0.3 / n as f64)])
+                .collect(),
+        );
+        profiled(&mut records, "gw_loss_sparse[serial-ref]", n, w_big, i_big, || {
+            gw_loss_sparse_reference(&sparse, &x, &x)
+        });
+        profiled(&mut records, "gw_loss_sparse[parallel]", n, w_big, i_big, || {
+            gw_loss_sparse(&sparse, &x, &x)
+        });
     }
 
-    println!("--- qGW stage breakdown (N=20000, 10% partition) ---");
-    let n = 20_000;
-    let x = make_blobs(n, 4, 1.0, 10.0, &mut rng);
-    bench("voronoi_partition N=20000 m=2000", 0, 3, || {
+    if !test_mode {
+        println!("--- network simplex EMD ---");
+        for m in [32usize, 64, 128] {
+            let cost = DenseMatrix::from_fn(m, m, |i, j| ((i * 13 + j * 7) % 101) as f64);
+            let a = uniform_measure(m);
+            profiled(&mut records, "emd", m, 1, 5, || emd(&cost, &a, &a));
+        }
+
+        println!("--- qGW stage breakdown (N=20000, 10% partition) ---");
+        let n = 20_000;
+        let x = make_blobs(n, 4, 1.0, 10.0, &mut rng);
+        profiled(&mut records, "voronoi_partition", n, 0, 3, || {
+            let mut r = Pcg32::seed_from(1);
+            voronoi_partition(&x, 2000, &mut r)
+        });
         let mut r = Pcg32::seed_from(1);
-        voronoi_partition(&x, 2000, &mut r)
-    });
-    let mut r = Pcg32::seed_from(1);
-    let qx = voronoi_partition(&x, 2000, &mut r);
-    let qy = voronoi_partition(&x, 2000, &mut r);
-    bench("local_linear_matching (single pair)", 10, 100, || {
-        local_linear_matching(&qx, &qy, 0, 0)
-    });
-    bench("qgw_match end-to-end N=20000 p=0.02", 0, 3, || {
-        let mut r = Pcg32::seed_from(2);
-        qgw_match(&x, &x, &QgwConfig::with_fraction(0.02), &mut r)
-    });
+        let qx = voronoi_partition(&x, 2000, &mut r);
+        let qy = voronoi_partition(&x, 2000, &mut r);
+        profiled(&mut records, "local_linear_matching", 2000, 10, 100, || {
+            local_linear_matching(&qx, &qy, 0, 0)
+        });
+        profiled(&mut records, "qgw_match_e2e", n, 0, 3, || {
+            let mut r = Pcg32::seed_from(2);
+            qgw_match(&x, &x, &QgwConfig::with_fraction(0.02), &mut r)
+        });
+    }
+
+    write_json(&records, test_mode);
 }

@@ -176,13 +176,15 @@ fn cmd_match(args: &Args) -> Result<()> {
     let sparse = report.result.coupling.to_sparse();
     let distortion = distortion_score(&sparse, &copy.cloud, &copy.ground_truth);
     println!(
-        "class={} n={n} m={}x{} levels={} leaf={} tolerance={tolerance} pruned_pairs={}",
+        "class={} n={n} m={}x{} levels={} leaf={} tolerance={tolerance} pruned_pairs={} \
+         preskipped_pairs={}",
         class.name(),
         report.m_x,
         report.m_y,
         report.levels,
         report.leaf_size,
-        report.pruned_pairs
+        report.pruned_pairs,
+        report.preskipped_pairs
     );
     println!(
         "distortion={distortion:.4} rep_gw_loss={:.6} local_matchings={}",

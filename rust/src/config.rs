@@ -145,6 +145,7 @@ impl Config {
             levels: self.usize_or("qgw.levels", 1).max(1),
             leaf_size: self.usize_or("qgw.leaf_size", 64).max(1),
             tolerance: self.f64_or("qgw.tolerance", 0.0).max(0.0),
+            prune_ahead: self.bool_or("qgw.prune_ahead", true),
         }
     }
 
@@ -252,16 +253,21 @@ full = false
 
     #[test]
     fn hierarchy_knobs_parse_and_default() {
-        let c = Config::parse("[qgw]\nlevels = 3\nleaf_size = 300\ntolerance = 0.25\n").unwrap();
+        let c = Config::parse(
+            "[qgw]\nlevels = 3\nleaf_size = 300\ntolerance = 0.25\nprune_ahead = false\n",
+        )
+        .unwrap();
         let q = c.qgw_config();
         assert_eq!(q.levels, 3);
         assert_eq!(q.leaf_size, 300);
         assert_eq!(q.tolerance, 0.25);
-        // Defaults: flat qGW, fixed-depth recursion.
+        assert!(!q.prune_ahead);
+        // Defaults: flat qGW, fixed-depth recursion, prune-ahead armed.
         let d = Config::parse("").unwrap().qgw_config();
         assert_eq!(d.levels, 1);
         assert_eq!(d.leaf_size, 64);
         assert_eq!(d.tolerance, 0.0);
+        assert!(d.prune_ahead);
         // Zero is clamped to a sane floor; a negative tolerance clamps to
         // fixed-depth mode.
         let z = Config::parse("[qgw]\nlevels = 0\nleaf_size = 0\ntolerance = -0.5\n")

@@ -70,8 +70,13 @@ pub struct PipelineReport {
     pub leaf_size: usize,
     /// Recursion-eligible block pairs the adaptive tolerance pruned to
     /// the exact 1-D leaf (0 in fixed-depth mode, i.e. `tolerance = 0`,
-    /// and on the flat fallback path).
+    /// and on the flat fallback path). Includes `preskipped_pairs`.
     pub pruned_pairs: usize,
+    /// The prune-ahead subset of `pruned_pairs`: pairs whose
+    /// parent-diameter bound certified the prune before block extraction,
+    /// so they never paid the nested partition (see
+    /// `QgwConfig::prune_ahead`).
+    pub preskipped_pairs: usize,
 }
 
 /// Configurable qGW/qFGW pipeline with stage metrics.
@@ -140,65 +145,73 @@ impl<'a> MatchPipeline<'a> {
         // (`hier_match_quantized` gates the fused blend itself: `self.fused`
         // only engages when both substrates actually carry features, and the
         // flat-fallback match below applies the same rule by pattern.)
-        let (result, levels_ran, pruned_pairs, global_secs, local_secs) = match self.aligner {
-            None => {
-                let hres = hier_match_quantized(
-                    &sx,
-                    &sy,
-                    &qx,
-                    &qy,
-                    &self.qgw,
-                    self.fused,
-                    &rust_aligner,
-                    rng.next_u64(),
-                );
-                self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
-                self.metrics.incr("hier_pruned_pairs", hres.stats.pruned_pairs as u64);
-                (
-                    hres.result,
-                    hres.stats.levels_used(),
-                    hres.stats.pruned_pairs,
-                    hres.global_secs,
-                    hres.local_secs,
-                )
-            }
-            Some(aligner) => {
-                // Aligner overrides are not `Sync`, so the recursion cannot
-                // fan out over them: flat matching runs instead. Surface
-                // the downgrade instead of silently absorbing it.
-                if self.qgw.levels > 1 {
-                    self.metrics.incr("hier_fallbacks", 1);
-                    eprintln!(
-                        "warn: qgw.levels={} requested but the aligner override forces flat \
-                         matching (hier_fallbacks metric bumped)",
-                        self.qgw.levels
+        let (result, levels_ran, pruned_pairs, preskipped_pairs, global_secs, local_secs) =
+            match self.aligner {
+                None => {
+                    let hres = hier_match_quantized(
+                        &sx,
+                        &sy,
+                        &qx,
+                        &qy,
+                        &self.qgw,
+                        self.fused,
+                        &rust_aligner,
+                        rng.next_u64(),
                     );
+                    self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
+                    self.metrics.incr("hier_pruned_pairs", hres.stats.pruned_pairs as u64);
+                    self.metrics
+                        .incr("hier_preskipped_pairs", hres.stats.preskipped_pairs as u64);
+                    (
+                        hres.result,
+                        hres.stats.levels_used(),
+                        hres.stats.pruned_pairs,
+                        hres.stats.preskipped_pairs,
+                        hres.global_secs,
+                        hres.local_secs,
+                    )
                 }
-                let align_start = Instant::now();
-                let (global_res, fused_ctx) = match (self.fused, sx.features(), sy.features()) {
-                    (Some((alpha, beta)), Some(fx), Some(fy)) => {
-                        let cfg = QfgwConfig { base: self.qgw.clone(), alpha, beta };
-                        (qfgw_align(&qx, &qy, fx, fy, &cfg, aligner), Some((cfg, fx, fy)))
+                Some(aligner) => {
+                    // Aligner overrides are not `Sync`, so the recursion
+                    // cannot fan out over them: flat matching runs instead.
+                    // Surface the downgrade instead of silently absorbing it.
+                    if self.qgw.levels > 1 {
+                        self.metrics.incr("hier_fallbacks", 1);
+                        eprintln!(
+                            "warn: qgw.levels={} requested but the aligner override forces flat \
+                             matching (hier_fallbacks metric bumped)",
+                            self.qgw.levels
+                        );
                     }
-                    _ => (
-                        aligner.align(
-                            qx.rep_dists(),
-                            qy.rep_dists(),
-                            qx.rep_measure(),
-                            qy.rep_measure(),
-                        ),
-                        None,
-                    ),
-                };
-                let global_secs = align_start.elapsed().as_secs_f64();
-                let local_start = Instant::now();
-                let result = match fused_ctx {
-                    Some((cfg, fx, fy)) => qfgw_assemble(&qx, &qy, fx, fy, global_res, &cfg),
-                    None => assemble(&qx, &qy, global_res, &self.qgw),
-                };
-                (result, 1, 0, global_secs, local_start.elapsed().as_secs_f64())
-            }
-        };
+                    let align_start = Instant::now();
+                    let (global_res, fused_ctx) =
+                        match (self.fused, sx.features(), sy.features()) {
+                            (Some((alpha, beta)), Some(fx), Some(fy)) => {
+                                let cfg = QfgwConfig { base: self.qgw.clone(), alpha, beta };
+                                (
+                                    qfgw_align(&qx, &qy, fx, fy, &cfg, aligner),
+                                    Some((cfg, fx, fy)),
+                                )
+                            }
+                            _ => (
+                                aligner.align(
+                                    qx.rep_dists(),
+                                    qy.rep_dists(),
+                                    qx.rep_measure(),
+                                    qy.rep_measure(),
+                                ),
+                                None,
+                            ),
+                        };
+                    let global_secs = align_start.elapsed().as_secs_f64();
+                    let local_start = Instant::now();
+                    let result = match fused_ctx {
+                        Some((cfg, fx, fy)) => qfgw_assemble(&qx, &qy, fx, fy, global_res, &cfg),
+                        None => assemble(&qx, &qy, global_res, &self.qgw),
+                    };
+                    (result, 1, 0, 0, global_secs, local_start.elapsed().as_secs_f64())
+                }
+            };
         self.metrics.add_duration("global_align", Duration::from_secs_f64(global_secs));
         self.metrics.add_duration("local+assemble", Duration::from_secs_f64(local_secs));
         self.metrics.incr("local_matchings", result.num_local_matchings as u64);
@@ -212,6 +225,7 @@ impl<'a> MatchPipeline<'a> {
             levels: levels_ran,
             leaf_size: self.qgw.leaf_size,
             pruned_pairs,
+            preskipped_pairs,
             result,
             partition_secs,
             global_secs,
@@ -361,8 +375,26 @@ mod tests {
         assert!(adapt.pruned_pairs > 0, "no pairs pruned");
         assert_eq!(adapt.levels, 1, "pruning everything must realize a flat match");
         assert_eq!(metrics.counter("hier_pruned_pairs"), adapt.pruned_pairs as u64);
+        assert_eq!(metrics.counter("hier_preskipped_pairs"), adapt.preskipped_pairs as u64);
         assert!(adapt.result.error_bound <= acfg.tolerance);
         assert!(adapt.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
+
+        // A budget far above every parent-diameter bound: the prune-ahead
+        // certificate fires before any block extraction, and the report +
+        // metrics surface the pre-skip separately from the prune total.
+        let metrics = Metrics::new();
+        let gcfg = QgwConfig { tolerance: fixed.result.error_bound * 64.0, ..acfg };
+        let generous = MatchPipeline::new(gcfg, &metrics).run(PipelineInput::Clouds {
+            x: &x,
+            y: &x,
+        });
+        assert!(generous.preskipped_pairs > 0, "prune-ahead never fired");
+        assert_eq!(generous.preskipped_pairs, generous.pruned_pairs);
+        assert_eq!(
+            metrics.counter("hier_preskipped_pairs"),
+            generous.preskipped_pairs as u64
+        );
+        assert!(generous.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use std::fmt;
 
-#[derive(Clone, PartialEq)]
+#[derive(Clone, Default, PartialEq)]
 pub struct DenseMatrix {
     rows: usize,
     cols: usize,
@@ -91,21 +91,64 @@ impl DenseMatrix {
         &mut self.data
     }
 
+    /// Copy `other`'s shape and contents into `self`, reusing the existing
+    /// allocation (no heap traffic once `self` has grown).
+    pub fn copy_from(&mut self, other: &DenseMatrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+
+    /// Reshape to `rows x cols` reusing the existing allocation (growing it
+    /// at most once); every entry is reset to 0. The resize primitive the
+    /// reusable solver workspaces are built on (EXPERIMENTS.md §Perf).
+    pub fn reset_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape for a *full overwrite*: like [`DenseMatrix::reset_zeroed`]
+    /// but existing entries are left stale (only a grown tail is
+    /// zero-filled), skipping the memset on paths that write every element
+    /// anyway. Callers must overwrite the entire matrix.
+    pub(crate) fn reset_unwritten(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     pub fn transpose(&self) -> Self {
-        let mut out = Self::zeros(self.cols, self.rows);
+        let mut out = Self::zeros(0, 0);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a caller buffer (no allocation once `out` has grown).
+    pub fn transpose_into(&self, out: &mut DenseMatrix) {
+        out.reset_unwritten(self.cols, self.rows);
         for i in 0..self.rows {
             for j in 0..self.cols {
                 out.data[j * self.rows + i] = self.data[i * self.cols + j];
             }
         }
-        out
     }
 
     /// `self @ other`, blocked i-k-j loop order (streaming-friendly).
     pub fn matmul(&self, other: &DenseMatrix) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(0, 0);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// `self @ other` into a caller buffer — identical arithmetic to
+    /// [`DenseMatrix::matmul`], zero allocations once `out` has grown.
+    pub fn matmul_into(&self, other: &DenseMatrix, out: &mut DenseMatrix) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = DenseMatrix::zeros(m, n);
+        out.reset_zeroed(m, n);
         for i in 0..m {
             let arow = self.row(i);
             let orow = &mut out.data[i * n..(i + 1) * n];
@@ -119,15 +162,23 @@ impl DenseMatrix {
                 }
             }
         }
-        out
     }
 
     /// `self @ v`.
     pub fn gemv(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.gemv_into(v, &mut out);
+        out
+    }
+
+    /// `self @ v` into a caller buffer — same per-row arithmetic as
+    /// [`DenseMatrix::gemv`].
+    pub fn gemv_into(&self, v: &[f64], out: &mut Vec<f64>) {
         assert_eq!(self.cols, v.len(), "gemv shape mismatch");
-        (0..self.rows)
-            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
-            .collect()
+        out.clear();
+        out.extend((0..self.rows).map(|i| {
+            self.row(i).iter().zip(v).map(|(a, b)| a * b).sum::<f64>()
+        }));
     }
 
     /// `self^T @ v`.
@@ -280,5 +331,30 @@ mod tests {
         let a = DenseMatrix::zeros(2, 3);
         let b = DenseMatrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let a = DenseMatrix::from_fn(5, 4, |i, j| (i * 7 + j * 3) as f64 / 3.0);
+        let b = DenseMatrix::from_fn(4, 6, |i, j| (i as f64 - j as f64) / 2.0);
+        // Buffers deliberately start with stale contents and wrong shapes.
+        let mut out = DenseMatrix::from_fn(2, 2, |_, _| 9.0);
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+        a.transpose_into(&mut out);
+        assert_eq!(out, a.transpose());
+        let v = vec![1.0, -2.0, 0.5, 3.0];
+        let mut gv = vec![7.0; 9];
+        a.gemv_into(&v, &mut gv);
+        assert_eq!(gv, a.gemv(&v));
+    }
+
+    #[test]
+    fn reset_zeroed_clears_and_reshapes() {
+        let mut m = DenseMatrix::from_fn(3, 3, |_, _| 5.0);
+        m.reset_zeroed(2, 4);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 4);
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
     }
 }

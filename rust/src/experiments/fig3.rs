@@ -195,8 +195,8 @@ pub fn hier_rows(scale: f64, seed: u64) -> Vec<HierRow> {
         let workers = crate::coordinator::effective_threads(cfg.num_threads);
         out.push(HierRow {
             method: format!(
-                "adaptive hier cap=2 leaf={LEAF} (pruned {}, split {})",
-                hres.stats.pruned_pairs, hres.stats.split_pairs
+                "adaptive hier cap=2 leaf={LEAF} (pruned {}, preskip {}, split {})",
+                hres.stats.pruned_pairs, hres.stats.preskipped_pairs, hres.stats.split_pairs
             ),
             accuracy_pct: 100.0 * acc,
             secs: start.elapsed().as_secs_f64(),

@@ -44,8 +44,12 @@ pub struct Point {
     /// composed bound.
     pub adapt_secs: f64,
     /// Recursion-eligible pairs the adaptive tolerance pruned to the
-    /// exact 1-D leaf.
+    /// exact 1-D leaf (includes the pre-skipped subset).
     pub adapt_pruned: usize,
+    /// The prune-ahead subset of `adapt_pruned`: pairs certified by the
+    /// parent-diameter bound before block extraction, so the nested
+    /// partition was never built (PR 3's "adaptive block-cache skipping").
+    pub adapt_preskipped: usize,
     /// Pairs the adaptive run still re-quantized.
     pub adapt_split: usize,
     /// 2-level hierarchical qFGW (1-D synthetic features) at the same
@@ -101,6 +105,7 @@ pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
             let ares = hier_qgw_match(&x, &y, &adapt_cfg, &mut adapt_rng);
             let adapt_secs = start.elapsed().as_secs_f64();
             let adapt_pruned = ares.stats.pruned_pairs;
+            let adapt_preskipped = ares.stats.preskipped_pairs;
             let adapt_split = ares.stats.split_pairs;
             let fx = coord_feature(&x);
             let fy = coord_feature(&y);
@@ -116,6 +121,7 @@ pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
                 hier_secs,
                 adapt_secs,
                 adapt_pruned,
+                adapt_preskipped,
                 adapt_split,
                 hier_fused_secs,
                 hier_m,
@@ -146,13 +152,13 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
     let pts = sweep(&ns, seed);
     writeln!(
         w,
-        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10} {:>10} {:>13} {:>12}",
-        "N", "m", "qGW time", "GW time", "hier m", "hier time", "adapt time", "pruned/split", "hier qFGW"
+        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10} {:>10} {:>16} {:>12}",
+        "N", "m", "qGW time", "GW time", "hier m", "hier time", "adapt time", "prn/skp/spl", "hier qFGW"
     )?;
     for p in &pts {
         writeln!(
             w,
-            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3} {:>10.3} {:>13} {:>12.3}",
+            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3} {:>10.3} {:>16} {:>12.3}",
             p.n,
             p.m,
             p.qgw_secs,
@@ -160,7 +166,7 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
             p.hier_m,
             p.hier_secs,
             p.adapt_secs,
-            format!("{}/{}", p.adapt_pruned, p.adapt_split),
+            format!("{}/{}/{}", p.adapt_pruned, p.adapt_preskipped, p.adapt_split),
             p.hier_fused_secs
         )?;
     }

@@ -6,9 +6,10 @@
 //! identical update on-device.
 
 use crate::core::DenseMatrix;
-use crate::gw::loss::{gw_cost_tensor, gw_loss, product_coupling};
+use crate::gw::loss::{gw_loss, product_coupling_into};
 use crate::gw::solvers::GwResult;
-use crate::ot::{round_to_coupling, sinkhorn_log, SinkhornOptions};
+use crate::gw::workspace::{mean_abs, GwWorkspace};
+use crate::ot::{round_to_coupling, sinkhorn_log_into, SinkhornOptions};
 
 #[derive(Clone, Debug)]
 pub struct FgwOptions {
@@ -55,42 +56,65 @@ pub fn entropic_fgw(
     b: &[f64],
     opts: &FgwOptions,
 ) -> GwResult {
-    let mut t = product_coupling(a, b);
+    entropic_fgw_with(cx, cy, feat_cost, a, b, opts, &mut GwWorkspace::new())
+}
+
+/// [`entropic_fgw`] over a caller workspace — same hoisting as
+/// [`crate::gw::entropic_gw_with`] (loop-invariant `f1`/`f2`/`Cy^T`, the
+/// product-coupling tensor shared between the `cost_scale` derivation and
+/// the first outer step, reusable Sinkhorn buffers), plus a reusable
+/// buffer for the `(1-alpha) L + alpha M` combination. Bit-identical to
+/// the allocation-per-call path.
+pub fn entropic_fgw_with(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    feat_cost: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    opts: &FgwOptions,
+    ws: &mut GwWorkspace,
+) -> GwResult {
+    let GwWorkspace { inv, a_mat, tensor, t, next, scratch, sinkhorn, .. } = ws;
+    inv.prepare(cx, cy, a, b);
+    product_coupling_into(a, b, t);
     // Unit-free eps: scale by the mean |combined cost| at the product
-    // coupling (see gw::solvers::cost_scale).
-    let scale = {
-        let gw_cost = gw_cost_tensor(cx, cy, &t, a, b);
-        let mut cost = gw_cost;
-        cost.scale(1.0 - opts.alpha);
-        cost.axpy(opts.alpha, feat_cost);
-        let mean = cost.as_slice().iter().map(|x| x.abs()).sum::<f64>()
-            / cost.as_slice().len().max(1) as f64;
-        mean.max(1e-12)
-    };
+    // coupling (see gw::solvers::cost_scale). The combined cost built here
+    // doubles as the first outer iteration's subproblem cost (T is still
+    // the product coupling).
+    let combined = scratch;
+    inv.cost_tensor_into(cx, t, a_mat, tensor);
+    combined.copy_from(tensor);
+    combined.scale(1.0 - opts.alpha);
+    combined.axpy(opts.alpha, feat_cost);
+    let scale = mean_abs(combined);
+    let mut cost_fresh = true;
     let mut total_outer = 0;
     for &eps in &opts.eps_schedule {
         let sopts =
             SinkhornOptions { eps: eps * scale, max_iters: opts.inner_iters, tol: 1e-12 };
         for _ in 0..opts.outer_iters {
-            let gw_cost = gw_cost_tensor(cx, cy, &t, a, b);
-            let mut cost = gw_cost;
-            cost.scale(1.0 - opts.alpha);
-            cost.axpy(opts.alpha, feat_cost);
-            let res = sinkhorn_log(&cost, a, b, &sopts);
+            if !cost_fresh {
+                inv.cost_tensor_into(cx, t, a_mat, tensor);
+                combined.copy_from(tensor);
+                combined.scale(1.0 - opts.alpha);
+                combined.axpy(opts.alpha, feat_cost);
+            }
+            cost_fresh = false;
+            let _ = sinkhorn_log_into(combined, a, b, &sopts, sinkhorn, next);
             total_outer += 1;
             let mut delta = 0.0f64;
-            for (x, y) in res.plan.as_slice().iter().zip(t.as_slice()) {
+            for (x, y) in next.as_slice().iter().zip(t.as_slice()) {
                 delta = delta.max((x - y).abs());
             }
-            t = res.plan;
+            std::mem::swap(t, next);
             if delta < opts.tol {
                 break;
             }
         }
     }
-    round_to_coupling(&mut t, a, b);
-    let loss = fgw_loss(cx, cy, feat_cost, &t, a, b, opts.alpha);
-    GwResult { plan: t, loss, outer_iters: total_outer }
+    round_to_coupling(t, a, b);
+    let loss = fgw_loss(cx, cy, feat_cost, t, a, b, opts.alpha);
+    GwResult { plan: std::mem::take(t), loss, outer_iters: total_outer }
 }
 
 #[cfg(test)]

@@ -10,6 +10,18 @@ pub fn product_coupling(a: &[f64], b: &[f64]) -> DenseMatrix {
     DenseMatrix::outer(a, b)
 }
 
+/// [`product_coupling`] into a caller buffer (same arithmetic as
+/// [`DenseMatrix::outer`], no allocation once `out` has grown).
+pub(crate) fn product_coupling_into(a: &[f64], b: &[f64], out: &mut DenseMatrix) {
+    out.reset_unwritten(a.len(), b.len());
+    for (i, &ai) in a.iter().enumerate() {
+        let row = out.row_mut(i);
+        for (j, &bj) in b.iter().enumerate() {
+            row[j] = ai * bj;
+        }
+    }
+}
+
 /// Square-loss GW cost tensor applied to `t`:
 /// `L(Cx,Cy) (x) T = constC - 2 Cx T Cy^T` with
 /// `constC = (Cx.^2 a) 1^T + 1 (Cy.^2 b)^T`.
@@ -20,70 +32,76 @@ pub fn gw_cost_tensor(
     a: &[f64],
     b: &[f64],
 ) -> DenseMatrix {
-    let n = cx.rows();
-    let m = cy.rows();
-    debug_assert_eq!(t.rows(), n);
-    debug_assert_eq!(t.cols(), m);
-    // f1 = Cx.^2 a ; f2 = Cy.^2 b
-    let mut f1 = vec![0.0; n];
-    for i in 0..n {
-        let row = cx.row(i);
-        f1[i] = row.iter().zip(a).map(|(c, w)| c * c * w).sum();
-    }
-    let mut f2 = vec![0.0; m];
-    for j in 0..m {
-        let row = cy.row(j);
-        f2[j] = row.iter().zip(b).map(|(c, w)| c * c * w).sum();
-    }
-    // A = Cx @ T ; out = f1 + f2^T - 2 A Cy^T  (Cy symmetric in all uses,
-    // but keep the transpose-correct contraction). Both products run
-    // through the parallel blocked kernel — the global alignment spends
-    // most of its time here (EXPERIMENTS.md §Perf).
-    let a_mat = par_matmul(cx, t);
-    let cyt = cy.transpose();
-    let mut out = par_matmul(&a_mat, &cyt);
-    for i in 0..n {
-        let orow = out.row_mut(i);
-        let fi = f1[i];
-        for (o, &fj) in orow.iter_mut().zip(&f2) {
-            *o = fi + fj - 2.0 * *o;
-        }
-    }
-    out
+    debug_assert_eq!(t.rows(), cx.rows());
+    debug_assert_eq!(t.cols(), cy.rows());
+    // One-shot wrapper over the workspace kernel (f1/f2/Cy^T invariants +
+    // two passes of the parallel blocked matmul) so the arithmetic lives
+    // in exactly one place — the global alignment spends most of its time
+    // here (EXPERIMENTS.md §Perf); loops reuse a
+    // [`crate::gw::GwWorkspace`] instead of paying these allocations per
+    // call.
+    let mut ws = crate::gw::workspace::GwWorkspace::new();
+    ws.cost_tensor(cx, cy, t, a, b);
+    std::mem::take(&mut ws.tensor)
 }
 
 /// Row-parallel blocked matmul (i-k-j order, contiguous axpy rows) — the
 /// Layer-3 mirror of the L1 Pallas `matmul` kernel. Splits output rows
 /// over the thread pool for matrices above a size cutoff.
 pub fn par_matmul(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    let mut out = DenseMatrix::zeros(0, 0);
+    par_matmul_into(a, b, &mut out);
+    out
+}
+
+/// [`par_matmul`] into a caller buffer. Workers claim contiguous row
+/// chunks of the output and write into them directly — no per-row
+/// allocation, no result gather/scatter — so the only buffer the product
+/// ever touches is `out` itself (EXPERIMENTS.md §Perf). Each output row is
+/// computed by exactly the serial kernel regardless of chunking, so the
+/// result is bit-identical to [`DenseMatrix::matmul`] at every thread
+/// count.
+pub fn par_matmul_into(a: &DenseMatrix, b: &DenseMatrix, out: &mut DenseMatrix) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(k, b.rows(), "matmul shape mismatch");
     if m * k * n < 64 * 64 * 64 {
-        return a.matmul(b);
+        a.matmul_into(b, out);
+        return;
     }
-    let threads = crate::coordinator::parallel_map(
-        &(0..m).collect::<Vec<usize>>(),
-        |&i| {
-            let mut orow = vec![0.0f64; n];
-            let arow = a.row(i);
-            for (kk, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
+    out.reset_zeroed(m, n);
+    let threads = crate::coordinator::effective_threads(0).min(m);
+    // Small chunks (several per worker) so uneven row sparsity balances;
+    // the queue is popped under a lock whose hold time is trivially small
+    // next to a chunk's O(chunk * k * n) work.
+    let chunk_rows = (m / (threads * 8)).max(1);
+    let chunks: Vec<(usize, &mut [f64])> = out
+        .as_mut_slice()
+        .chunks_mut(chunk_rows * n)
+        .enumerate()
+        .map(|(ci, slice)| (ci * chunk_rows, slice))
+        .collect();
+    let queue = std::sync::Mutex::new(chunks);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let Some((row0, slice)) = queue.lock().unwrap().pop() else {
+                    break;
+                };
+                for (r, orow) in slice.chunks_mut(n).enumerate() {
+                    let arow = a.row(row0 + r);
+                    for (kk, &aik) in arow.iter().enumerate() {
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = b.row(kk);
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += aik * bv;
+                        }
+                    }
                 }
-                let brow = b.row(kk);
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += aik * bv;
-                }
-            }
-            orow
-        },
-        0,
-    );
-    let mut out = DenseMatrix::zeros(m, n);
-    for (i, row) in threads.into_iter().enumerate() {
-        out.row_mut(i).copy_from_slice(&row);
-    }
-    out
+            });
+        }
+    });
 }
 
 /// GW loss `sum (Cx_ik - Cy_jl)^2 T_ij T_kl` of a dense coupling.
@@ -92,19 +110,54 @@ pub fn gw_loss(cx: &DenseMatrix, cy: &DenseMatrix, t: &DenseMatrix, a: &[f64], b
 }
 
 /// GW loss of a *sparse* coupling over implicit metric spaces — evaluates
-/// `sum_{(i,j),(k,l) in supp} (d_X(i,k) - d_Y(j,l))^2 m_ij m_kl` in
-/// O(nnz^2) distance queries without forming any matrix. This is how
-/// large-space couplings (qGW output) are scored.
-pub fn gw_loss_sparse(coupling: &SparseCoupling, x: &dyn MmSpace, y: &dyn MmSpace) -> f64 {
+/// `sum_{(i,j),(k,l) in supp} (d_X(i,k) - d_Y(j,l))^2 m_ij m_kl` without
+/// forming any matrix. This is how large-space couplings (qGW output) are
+/// scored, and the dominant cost of scoring them at experiment scale, so
+/// the quadratic pair sweep is symmetry-halved (`term(e1,e2) =
+/// term(e2,e1)`) and fanned out over the thread pool: O(nnz^2 / 2)
+/// distance queries, deterministic at every thread count (per-entry
+/// partial sums are combined in entry order).
+///
+/// The halving assumes `dist` is symmetric — true for every [`MmSpace`]
+/// (they are metric spaces); a [`crate::core::DenseSpace`] wrapping an
+/// asymmetric matrix would be mis-scored, as it already was by every
+/// consumer of the symmetric GW loss.
+pub fn gw_loss_sparse(
+    coupling: &SparseCoupling,
+    x: &(dyn MmSpace + Sync),
+    y: &(dyn MmSpace + Sync),
+) -> f64 {
+    gw_loss_sparse_threads(coupling, x, y, 0)
+}
+
+/// [`gw_loss_sparse`] with an explicit worker count (0 = all cores).
+/// The result is bit-identical for every `num_threads`.
+pub fn gw_loss_sparse_threads(
+    coupling: &SparseCoupling,
+    x: &(dyn MmSpace + Sync),
+    y: &(dyn MmSpace + Sync),
+    num_threads: usize,
+) -> f64 {
     let entries: Vec<(usize, usize, f64)> = coupling.iter().collect();
-    let mut total = 0.0;
-    for &(i, j, w1) in &entries {
-        for &(k, l, w2) in &entries {
-            let d = x.dist(i, k) - y.dist(j, l);
-            total += d * d * w1 * w2;
-        }
-    }
-    total
+    let idx: Vec<usize> = (0..entries.len()).collect();
+    let partials = crate::coordinator::parallel_map(
+        &idx,
+        |&s| {
+            let (i, j, w1) = entries[s];
+            // Diagonal once (0 whenever self-distances are exactly 0, but
+            // cheap enough to not assume it), strict upper triangle
+            // doubled.
+            let d0 = x.dist(i, i) - y.dist(j, j);
+            let mut acc = d0 * d0 * w1 * w1;
+            for &(k, l, w2) in &entries[s + 1..] {
+                let d = x.dist(i, k) - y.dist(j, l);
+                acc += 2.0 * (d * d * w1 * w2);
+            }
+            acc
+        },
+        num_threads,
+    );
+    partials.iter().sum()
 }
 
 #[cfg(test)]

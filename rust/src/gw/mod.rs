@@ -9,9 +9,16 @@ mod loss;
 mod minibatch;
 mod mrec;
 mod solvers;
+mod workspace;
 
-pub use fgw::{entropic_fgw, fgw_loss, FgwOptions};
-pub use loss::{gw_cost_tensor, gw_loss, gw_loss_sparse, product_coupling};
+pub use fgw::{entropic_fgw, entropic_fgw_with, fgw_loss, FgwOptions};
+pub use loss::{
+    gw_cost_tensor, gw_loss, gw_loss_sparse, gw_loss_sparse_threads, par_matmul, par_matmul_into,
+    product_coupling,
+};
 pub use minibatch::{minibatch_gw, MbGwOptions};
 pub use mrec::{mrec_match, MrecOptions, SubSpace};
-pub use solvers::{cg_gw, cost_scale, entropic_gw, GwOptions, GwResult};
+pub use solvers::{
+    cg_gw, cg_gw_with, cost_scale, entropic_gw, entropic_gw_with, GwOptions, GwResult,
+};
+pub use workspace::GwWorkspace;

@@ -4,8 +4,9 @@
 //! loaded).
 
 use crate::core::DenseMatrix;
-use crate::gw::loss::{gw_cost_tensor, gw_loss, product_coupling};
-use crate::ot::{emd, round_to_coupling, sinkhorn_log, SinkhornOptions};
+use crate::gw::loss::product_coupling_into;
+use crate::gw::workspace::{mean_abs, GwWorkspace};
+use crate::ot::{emd, round_to_coupling, sinkhorn_log_into, SinkhornOptions};
 
 #[derive(Clone, Debug)]
 pub struct GwOptions {
@@ -51,25 +52,51 @@ pub fn entropic_gw(
     b: &[f64],
     opts: &GwOptions,
 ) -> GwResult {
-    let mut t = product_coupling(a, b);
+    entropic_gw_with(cx, cy, a, b, opts, &mut GwWorkspace::new())
+}
+
+/// [`entropic_gw`] over a caller workspace: the loop-invariant `f1`/`f2`/
+/// `Cy^T` factors are computed once, the cost tensor at the product
+/// coupling serves both the `cost_scale` derivation and the first outer
+/// iteration, and every Sinkhorn solve reuses the workspace buffers — no
+/// per-iteration heap allocation. Bit-identical to the allocation-per-call
+/// path for any (reused) workspace.
+pub fn entropic_gw_with(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    opts: &GwOptions,
+    ws: &mut GwWorkspace,
+) -> GwResult {
+    let GwWorkspace { inv, a_mat, tensor, t, next, sinkhorn, .. } = ws;
+    inv.prepare(cx, cy, a, b);
+    product_coupling_into(a, b, t);
     // eps is *relative* to the cost scale (mean |linearized cost| at the
     // product coupling): the GW cost tensor scales with the square of the
     // space's diameter, so an absolute eps would make the solver's
-    // behaviour depend on measurement units.
-    let scale = cost_scale(cx, cy, &t, a, b);
+    // behaviour depend on measurement units. The tensor computed here IS
+    // the first outer iteration's linearization (T is still the product
+    // coupling), so the first iteration below skips the recompute.
+    inv.cost_tensor_into(cx, t, a_mat, tensor);
+    let scale = mean_abs(tensor);
+    let mut tensor_fresh = true;
     let mut total_outer = 0;
     for &eps in &opts.eps_schedule {
         let sopts =
             SinkhornOptions { eps: eps * scale, max_iters: opts.inner_iters, tol: 1e-12 };
         for _ in 0..opts.outer_iters {
-            let cost = gw_cost_tensor(cx, cy, &t, a, b);
-            let res = sinkhorn_log(&cost, a, b, &sopts);
+            if !tensor_fresh {
+                inv.cost_tensor_into(cx, t, a_mat, tensor);
+            }
+            tensor_fresh = false;
+            let _ = sinkhorn_log_into(tensor, a, b, &sopts, sinkhorn, next);
             total_outer += 1;
             let mut delta = 0.0f64;
-            for (x, y) in res.plan.as_slice().iter().zip(t.as_slice()) {
+            for (x, y) in next.as_slice().iter().zip(t.as_slice()) {
                 delta = delta.max((x - y).abs());
             }
-            t = res.plan;
+            std::mem::swap(t, next);
             if delta < opts.tol {
                 break;
             }
@@ -78,14 +105,16 @@ pub fn entropic_gw(
     // Sinkhorn leaves O(exp(-k)) marginal slack at small eps; project the
     // final plan onto the coupling polytope so downstream quantization
     // couplings inherit exact marginals (Proposition 1).
-    round_to_coupling(&mut t, a, b);
-    let loss = gw_loss(cx, cy, &t, a, b);
-    GwResult { plan: t, loss, outer_iters: total_outer }
+    round_to_coupling(t, a, b);
+    inv.cost_tensor_into(cx, t, a_mat, tensor);
+    let loss = tensor.dot(t);
+    GwResult { plan: std::mem::take(t), loss, outer_iters: total_outer }
 }
 
 /// Mean absolute linearized GW cost at `t` — the scale factor that makes
 /// `eps` unit-free across all solvers (shared with [`crate::runtime`]'s
-/// XLA-driven outer loop so both paths anneal identically).
+/// XLA-driven outer loop so both paths anneal identically). Allocating
+/// convenience wrapper; hot paths use [`GwWorkspace::cost_scale`].
 pub fn cost_scale(
     cx: &DenseMatrix,
     cy: &DenseMatrix,
@@ -93,10 +122,7 @@ pub fn cost_scale(
     a: &[f64],
     b: &[f64],
 ) -> f64 {
-    let tensor = gw_cost_tensor(cx, cy, t, a, b);
-    let mean = tensor.as_slice().iter().map(|x| x.abs()).sum::<f64>()
-        / tensor.as_slice().len().max(1) as f64;
-    mean.max(1e-12)
+    GwWorkspace::new().cost_scale(cx, cy, t, a, b)
 }
 
 /// Conditional-gradient (Frank-Wolfe) GW with exact network-simplex inner
@@ -110,31 +136,53 @@ pub fn cg_gw(
     max_iters: usize,
     tol: f64,
 ) -> GwResult {
-    let mut t = product_coupling(a, b);
-    let mut loss = gw_loss(cx, cy, &t, a, b);
+    cg_gw_with(cx, cy, a, b, max_iters, tol, &mut GwWorkspace::new())
+}
+
+/// [`cg_gw`] over a caller workspace. Beyond buffer reuse, the hoisting
+/// removes two whole tensor builds per iteration that the
+/// allocation-per-call path paid: the gradient doubles as the line
+/// search's `<L(T), E>` tensor (T is unchanged between them), and the raw
+/// `Cx T Cy^T` product is kept from the gradient evaluation instead of
+/// being recontracted. Bit-identical to the reference path.
+pub fn cg_gw_with(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    max_iters: usize,
+    tol: f64,
+    ws: &mut GwWorkspace,
+) -> GwResult {
+    let GwWorkspace { inv, a_mat, tensor, t, next, prod, scratch, .. } = ws;
+    inv.prepare(cx, cy, a, b);
+    product_coupling_into(a, b, t);
+    inv.cost_tensor_into(cx, t, a_mat, tensor);
+    let mut loss = tensor.dot(t);
     let mut iters = 0;
     for _ in 0..max_iters {
         iters += 1;
         // Gradient of the quadratic loss is 2 * tensor; the scale does not
-        // change the LP minimizer.
-        let grad = gw_cost_tensor(cx, cy, &t, a, b);
-        let dir = emd(&grad, a, b).plan;
+        // change the LP minimizer. The raw product Cx T Cy^T is kept in
+        // `prod` for the line search's b-coefficient below.
+        inv.raw_product_into(cx, t, a_mat, prod);
+        tensor.copy_from(prod);
+        inv.finish_tensor(tensor);
+        let dir = emd(tensor, a, b).plan;
         // E = D - T; line search f(T + tau E) = f(T) + b tau + c tau^2:
         //   b = <constC part...> handled via tensors:
         //   <L(T), E> appears twice (loss is quadratic, symmetric).
-        let mut e = dir.clone();
-        e.axpy(-1.0, &t);
+        let e = &mut *next;
+        e.copy_from(&dir);
+        e.axpy(-1.0, t);
         // c = -2 <Cx E Cy, E>  (from the -2 CxTCy term).
-        let cx_e_cy = {
-            let tmp = cx.matmul(&e);
-            tmp.matmul(&cy.transpose())
-        };
-        let c2 = -2.0 * cx_e_cy.dot(&e);
+        inv.raw_product_into(cx, e, a_mat, scratch);
+        let c2 = -2.0 * scratch.dot(e);
         // b = <constC, E> - 4 <Cx T Cy, E> = <L(T), E> - 2 <CxTCy, E>
-        //   computed as <tensor(T), E> + (-2<CxTCy,E>):
-        let tensor_t = gw_cost_tensor(cx, cy, &t, a, b);
-        let cx_t_cy = cx.matmul(&t).matmul(&cy.transpose());
-        let b1 = tensor_t.dot(&e) - 2.0 * cx_t_cy.dot(&e);
+        //   computed as <tensor(T), E> + (-2<CxTCy,E>); tensor(T) is the
+        //   gradient already in `tensor` (T unchanged since), CxTCy is the
+        //   raw product already in `prod`.
+        let b1 = tensor.dot(e) - 2.0 * prod.dot(e);
         let tau = if c2 > 0.0 {
             (-b1 / (2.0 * c2)).clamp(0.0, 1.0)
         } else {
@@ -148,15 +196,16 @@ pub fn cg_gw(
         if tau <= 0.0 {
             break;
         }
-        t.axpy(tau, &e);
-        let new_loss = gw_loss(cx, cy, &t, a, b);
+        t.axpy(tau, e);
+        inv.cost_tensor_into(cx, t, a_mat, tensor);
+        let new_loss = tensor.dot(t);
         let improve = loss - new_loss;
         loss = new_loss;
         if improve.abs() < tol {
             break;
         }
     }
-    GwResult { plan: t, loss, outer_iters: iters }
+    GwResult { plan: std::mem::take(t), loss, outer_iters: iters }
 }
 
 #[cfg(test)]

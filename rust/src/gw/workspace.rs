@@ -1,0 +1,219 @@
+//! Reusable solver workspace for the GW core.
+//!
+//! Every outer iteration of [`crate::gw::entropic_gw`] / [`crate::gw::cg_gw`]
+//! evaluates the Peyre-Cuturi-Solomon linearization
+//! `L(Cx,Cy) (x) T = constC - 2 Cx T Cy^T`. Two parts of that expression
+//! are loop-invariant — `constC`'s ingredients `f1 = Cx.^2 a`,
+//! `f2 = Cy.^2 b`, and the pre-transposed `Cy^T` — and every O(nm) buffer
+//! (the `Cx T` intermediate, the tensor itself, the current plan, the
+//! Sinkhorn potentials/copies) is reused across iterations instead of
+//! reallocated. POT and the S-GWL reference implementation hoist the same
+//! constants for the same reason; here the hoisting also covers the
+//! `cost_scale` derivation (the tensor at the product coupling doubles as
+//! the first iteration's linearization) and the final `gw_loss`
+//! evaluation.
+//!
+//! **Reuse contract** (EXPERIMENTS.md §Perf): buffers are sized and reset
+//! on entry by each operation, never warm-started, and every operation
+//! performs the same floating-point operations in the same order as the
+//! allocating reference path — results are bit-identical whether a
+//! workspace is fresh, reused across calls, or reused across problem
+//! sizes. The reuse-equivalence property tests in `rust/tests/properties.rs`
+//! guard this.
+
+use crate::core::DenseMatrix;
+use crate::ot::SinkhornWorkspace;
+
+/// The loop-invariant factorization of one `(Cx, Cy, a, b)` problem:
+/// `f1 = Cx.^2 a`, `f2 = Cy.^2 b`, and `Cy^T` — computed once per
+/// alignment, consumed by every tensor evaluation.
+#[derive(Debug, Default)]
+pub(crate) struct GwInvariants {
+    f1: Vec<f64>,
+    f2: Vec<f64>,
+    cyt: DenseMatrix,
+}
+
+impl GwInvariants {
+    /// Recompute the invariants for a new `(Cx, Cy, a, b)` problem. Same
+    /// arithmetic as the head of [`crate::gw::gw_cost_tensor`].
+    pub(crate) fn prepare(&mut self, cx: &DenseMatrix, cy: &DenseMatrix, a: &[f64], b: &[f64]) {
+        let n = cx.rows();
+        let m = cy.rows();
+        self.f1.clear();
+        self.f1.extend((0..n).map(|i| {
+            cx.row(i).iter().zip(a).map(|(c, w)| c * c * w).sum::<f64>()
+        }));
+        self.f2.clear();
+        self.f2.extend((0..m).map(|j| {
+            cy.row(j).iter().zip(b).map(|(c, w)| c * c * w).sum::<f64>()
+        }));
+        cy.transpose_into(&mut self.cyt);
+    }
+
+    /// `out = Cx T Cy^T` through the parallel blocked kernel, `a_mat`
+    /// holding the `Cx T` intermediate. The raw product is what the CG
+    /// line search consumes directly (its `<Cx T Cy^T, E>` term).
+    pub(crate) fn raw_product_into(
+        &self,
+        cx: &DenseMatrix,
+        t: &DenseMatrix,
+        a_mat: &mut DenseMatrix,
+        out: &mut DenseMatrix,
+    ) {
+        crate::gw::loss::par_matmul_into(cx, t, a_mat);
+        crate::gw::loss::par_matmul_into(a_mat, &self.cyt, out);
+    }
+
+    /// Turn a raw product into the cost tensor in place:
+    /// `out_ij = f1_i + f2_j - 2 out_ij`.
+    pub(crate) fn finish_tensor(&self, out: &mut DenseMatrix) {
+        for i in 0..self.f1.len() {
+            let orow = out.row_mut(i);
+            let fi = self.f1[i];
+            for (o, &fj) in orow.iter_mut().zip(&self.f2) {
+                *o = fi + fj - 2.0 * *o;
+            }
+        }
+    }
+
+    /// Full cost tensor at `t` into `out` — bit-identical to
+    /// [`crate::gw::gw_cost_tensor`] with zero allocations once the
+    /// buffers have grown.
+    pub(crate) fn cost_tensor_into(
+        &self,
+        cx: &DenseMatrix,
+        t: &DenseMatrix,
+        a_mat: &mut DenseMatrix,
+        out: &mut DenseMatrix,
+    ) {
+        self.raw_product_into(cx, t, a_mat, out);
+        self.finish_tensor(out);
+    }
+}
+
+/// Mean absolute entry — the `cost_scale` statistic of a tensor.
+pub(crate) fn mean_abs(m: &DenseMatrix) -> f64 {
+    let s = m.as_slice();
+    let mean = s.iter().map(|x| x.abs()).sum::<f64>() / s.len().max(1) as f64;
+    mean.max(1e-12)
+}
+
+/// All reusable state of one GW alignment: the invariants plus every
+/// transient matrix the solvers touch. One workspace serves any problem
+/// size and any number of alignments (see the module docs for the
+/// bit-identity contract).
+#[derive(Debug, Default)]
+pub struct GwWorkspace {
+    pub(crate) inv: GwInvariants,
+    /// `Cx T` intermediate of the tensor contraction.
+    pub(crate) a_mat: DenseMatrix,
+    /// The cost tensor / gradient at the current plan.
+    pub(crate) tensor: DenseMatrix,
+    /// The current transport plan.
+    pub(crate) t: DenseMatrix,
+    /// Sinkhorn output plan (entropic) / search direction delta `E` (CG).
+    pub(crate) next: DenseMatrix,
+    /// Raw `Cx T Cy^T` product kept alongside the tensor (CG line search).
+    pub(crate) prod: DenseMatrix,
+    /// Second raw product `Cx E Cy^T` (CG) / combined FGW cost (fused).
+    pub(crate) scratch: DenseMatrix,
+    pub(crate) sinkhorn: SinkhornWorkspace,
+}
+
+impl GwWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cost tensor at `t` in the workspace buffer — the in-place variant
+    /// of [`crate::gw::gw_cost_tensor`] (bit-identical output).
+    pub fn cost_tensor(
+        &mut self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        t: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+    ) -> &DenseMatrix {
+        self.inv.prepare(cx, cy, a, b);
+        self.inv.cost_tensor_into(cx, t, &mut self.a_mat, &mut self.tensor);
+        &self.tensor
+    }
+
+    /// Mean absolute linearized cost at `t` — [`crate::gw::cost_scale`]
+    /// without the throwaway tensor allocation. The XLA-driven outer loop
+    /// ([`crate::runtime`]) derives its unit-free eps through this.
+    pub fn cost_scale(
+        &mut self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        t: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+    ) -> f64 {
+        mean_abs(self.cost_tensor(cx, cy, t, a, b))
+    }
+
+    /// GW loss of `t` — [`crate::gw::gw_loss`] against the workspace
+    /// buffers.
+    pub fn gw_loss(
+        &mut self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        t: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+    ) -> f64 {
+        self.cost_tensor(cx, cy, t, a, b).dot(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{uniform_measure, MmSpace, PointCloud};
+    use crate::gw::loss::{gw_cost_tensor, product_coupling};
+    use crate::prng::{Gaussian, Pcg32};
+
+    type Problem = (DenseMatrix, DenseMatrix, Vec<f64>, Vec<f64>);
+
+    fn random_problem(seed: u64, n: usize, m: usize) -> Problem {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        let cx = PointCloud::new((0..n * 3).map(|_| g.sample(&mut rng)).collect(), 3)
+            .distance_matrix();
+        let cy = PointCloud::new((0..m * 3).map(|_| g.sample(&mut rng)).collect(), 3)
+            .distance_matrix();
+        (cx, cy, uniform_measure(n), uniform_measure(m))
+    }
+
+    #[test]
+    fn workspace_tensor_bit_identical_to_allocating_path() {
+        let mut ws = GwWorkspace::new();
+        // Reuse the same workspace across different shapes: stale buffers
+        // must never leak into the result.
+        for (seed, n, m) in [(1u64, 12usize, 9usize), (2, 7, 15), (3, 15, 7)] {
+            let (cx, cy, a, b) = random_problem(seed, n, m);
+            let t = product_coupling(&a, &b);
+            let reference = gw_cost_tensor(&cx, &cy, &t, &a, &b);
+            let got = ws.cost_tensor(&cx, &cy, &t, &a, &b);
+            assert_eq!(got.as_slice(), reference.as_slice(), "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn workspace_cost_scale_and_loss_match_reference() {
+        let (cx, cy, a, b) = random_problem(5, 10, 11);
+        let t = product_coupling(&a, &b);
+        let mut ws = GwWorkspace::new();
+        assert_eq!(
+            ws.cost_scale(&cx, &cy, &t, &a, &b).to_bits(),
+            crate::gw::cost_scale(&cx, &cy, &t, &a, &b).to_bits()
+        );
+        assert_eq!(
+            ws.gw_loss(&cx, &cy, &t, &a, &b).to_bits(),
+            crate::gw::gw_loss(&cx, &cy, &t, &a, &b).to_bits()
+        );
+    }
+}

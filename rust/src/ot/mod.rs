@@ -12,7 +12,10 @@ mod sinkhorn;
 
 pub use emd::{emd, EmdResult};
 pub use emd1d::{emd1d, emd1d_presorted, Plan1d};
-pub use sinkhorn::{round_to_coupling, sinkhorn, sinkhorn_log, SinkhornOptions, SinkhornResult};
+pub use sinkhorn::{
+    round_to_coupling, sinkhorn, sinkhorn_into, sinkhorn_log, sinkhorn_log_into, SinkhornOptions,
+    SinkhornResult, SinkhornStats, SinkhornWorkspace,
+};
 
 use crate::core::DenseMatrix;
 

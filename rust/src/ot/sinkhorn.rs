@@ -32,9 +32,57 @@ pub struct SinkhornResult {
     pub marginal_err: f64,
 }
 
+/// Scalar outputs of the `*_into` Sinkhorn entry points (the plan lands in
+/// the caller's buffer instead of an owned matrix).
+#[derive(Clone, Copy, Debug)]
+pub struct SinkhornStats {
+    pub cost: f64,
+    pub iters: usize,
+    pub marginal_err: f64,
+}
+
+/// Reusable buffers for [`sinkhorn_into`] / [`sinkhorn_log_into`]: one
+/// workspace serves any problem size (buffers regrow as needed and are
+/// reset on entry, so results are bit-identical to the allocating entry
+/// points — see EXPERIMENTS.md §Perf for the reuse contract). The entropic
+/// GW solvers call Sinkhorn `outer_iters x eps_schedule` times per
+/// alignment; the workspace makes every call after the first
+/// allocation-free.
+#[derive(Debug, Default)]
+pub struct SinkhornWorkspace {
+    /// Pre-scaled cost `C/eps` (log form) row-major.
+    c: Vec<f64>,
+    /// Transposed copy of `c` (log form) / transposed kernel (scaling form).
+    ct: DenseMatrix,
+    loga: Vec<f64>,
+    logb: Vec<f64>,
+    /// Potentials (log form) / scaling vectors (multiplicative form).
+    f: Vec<f64>,
+    g: Vec<f64>,
+    /// `K v` / `K^T u` products of the multiplicative form.
+    kv: Vec<f64>,
+    ku: Vec<f64>,
+}
+
 /// Multiplicative-scaling Sinkhorn. Zero-mass-safe (0/0 -> 0), shifted by
 /// the min cost for stability. Prefer [`sinkhorn_log`] for small `eps`.
 pub fn sinkhorn(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOptions) -> SinkhornResult {
+    let mut ws = SinkhornWorkspace::default();
+    let mut plan = DenseMatrix::zeros(0, 0);
+    let stats = sinkhorn_into(cost, a, b, opts, &mut ws, &mut plan);
+    SinkhornResult { plan, cost: stats.cost, iters: stats.iters, marginal_err: stats.marginal_err }
+}
+
+/// [`sinkhorn`] writing the plan into `plan` and reusing `ws` — the
+/// allocation-free form the GW outer loops drive.
+pub fn sinkhorn_into(
+    cost: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    opts: &SinkhornOptions,
+    ws: &mut SinkhornWorkspace,
+    plan: &mut DenseMatrix,
+) -> SinkhornStats {
     let (n, m) = (cost.rows(), cost.cols());
     assert_eq!(n, a.len());
     assert_eq!(m, b.len());
@@ -43,30 +91,41 @@ pub fn sinkhorn(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOptions
         .iter()
         .copied()
         .fold(f64::INFINITY, f64::min);
-    let mut k = DenseMatrix::from_fn(n, m, |i, j| {
-        if a[i] > 0.0 && b[j] > 0.0 {
-            (-(cost.get(i, j) - shift) / opts.eps).exp()
-        } else {
-            0.0
+    // The kernel is built directly in the plan buffer (it becomes the plan
+    // after the final diag(u) K diag(v) scaling; every entry is written).
+    plan.reset_unwritten(n, m);
+    for i in 0..n {
+        let row = plan.row_mut(i);
+        for (j, x) in row.iter_mut().enumerate() {
+            *x = if a[i] > 0.0 && b[j] > 0.0 {
+                (-(cost.get(i, j) - shift) / opts.eps).exp()
+            } else {
+                0.0
+            };
         }
-    });
-    let kt = k.transpose();
-    let mut u = vec![1.0; n];
-    let mut v = vec![1.0; m];
+    }
+    let k = plan;
+    k.transpose_into(&mut ws.ct);
+    let kt = &ws.ct;
+    ws.f.clear();
+    ws.f.resize(n, 1.0);
+    ws.g.clear();
+    ws.g.resize(m, 1.0);
+    let (u, v) = (&mut ws.f, &mut ws.g);
     let mut iters = 0;
     let mut err = f64::INFINITY;
     while iters < opts.max_iters {
-        let kv = k.gemv(&v);
+        k.gemv_into(v, &mut ws.kv);
         for i in 0..n {
-            u[i] = if kv[i] > 0.0 { a[i] / kv[i] } else { 0.0 };
+            u[i] = if ws.kv[i] > 0.0 { a[i] / ws.kv[i] } else { 0.0 };
         }
-        let ku = kt.gemv(&u);
+        kt.gemv_into(u, &mut ws.ku);
         for j in 0..m {
-            v[j] = if ku[j] > 0.0 { b[j] / ku[j] } else { 0.0 };
+            v[j] = if ws.ku[j] > 0.0 { b[j] / ws.ku[j] } else { 0.0 };
         }
         iters += 1;
         if iters % 20 == 0 || iters == opts.max_iters {
-            err = marginal_error(&k, &kt, &u, &v, a, b);
+            err = marginal_error(k, kt, u, v, a, b);
             if err < opts.tol {
                 break;
             }
@@ -78,8 +137,8 @@ pub fn sinkhorn(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOptions
             *x *= u[i] * v[j];
         }
     }
-    let c = cost.dot(&k);
-    SinkhornResult { plan: k, cost: c, iters, marginal_err: err }
+    let c = cost.dot(k);
+    SinkhornStats { cost: c, iters, marginal_err: err }
 }
 
 /// Max violation over *both* marginals of the scaled plan
@@ -113,28 +172,58 @@ const NEG_BIG: f64 = -1e30;
 /// Log-domain Sinkhorn: potentials via logsumexp half-steps; robust at any
 /// `eps`. Matches `compile.kernels.ref.sinkhorn_ref` on the Python side.
 pub fn sinkhorn_log(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOptions) -> SinkhornResult {
+    let mut ws = SinkhornWorkspace::default();
+    let mut plan = DenseMatrix::zeros(0, 0);
+    let stats = sinkhorn_log_into(cost, a, b, opts, &mut ws, &mut plan);
+    SinkhornResult { plan, cost: stats.cost, iters: stats.iters, marginal_err: stats.marginal_err }
+}
+
+/// [`sinkhorn_log`] writing the plan into `plan` and reusing `ws`: the
+/// `C/eps` copies, potentials, and plan buffer persist across calls, so
+/// one alignment's `outer_iters x eps_schedule` Sinkhorn solves allocate
+/// nothing after the first. Bit-identical to [`sinkhorn_log`] (buffers are
+/// reset on entry; no state is warm-started).
+pub fn sinkhorn_log_into(
+    cost: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    opts: &SinkhornOptions,
+    ws: &mut SinkhornWorkspace,
+    plan: &mut DenseMatrix,
+) -> SinkhornStats {
     let (n, m) = (cost.rows(), cost.cols());
     assert_eq!(n, a.len());
     assert_eq!(m, b.len());
     let inv_eps = 1.0 / opts.eps;
     // Pre-scaled cost C/eps, row-major and transposed copies for streaming.
-    let c: Vec<f64> = cost.as_slice().iter().map(|&x| x * inv_eps).collect();
-    let mut ct = vec![0.0; n * m];
-    for i in 0..n {
-        for j in 0..m {
-            ct[j * n + i] = c[i * m + j];
+    ws.c.clear();
+    ws.c.extend(cost.as_slice().iter().map(|&x| x * inv_eps));
+    let c = &ws.c;
+    ws.ct.reset_unwritten(m, n);
+    {
+        let ct = ws.ct.as_mut_slice();
+        for i in 0..n {
+            for j in 0..m {
+                ct[j * n + i] = c[i * m + j];
+            }
         }
     }
-    let loga: Vec<f64> = a.iter().map(|&x| if x > 0.0 { x.ln() } else { NEG_BIG }).collect();
-    let logb: Vec<f64> = b.iter().map(|&x| if x > 0.0 { x.ln() } else { NEG_BIG }).collect();
-    let mut f = vec![0.0; n];
-    let mut g = vec![0.0; m];
+    ws.loga.clear();
+    ws.loga.extend(a.iter().map(|&x| if x > 0.0 { x.ln() } else { NEG_BIG }));
+    ws.logb.clear();
+    ws.logb.extend(b.iter().map(|&x| if x > 0.0 { x.ln() } else { NEG_BIG }));
+    let (loga, logb) = (&ws.loga, &ws.logb);
+    ws.f.clear();
+    ws.f.resize(n, 0.0);
+    ws.g.clear();
+    ws.g.resize(m, 0.0);
+    let (f, g) = (&mut ws.f, &mut ws.g);
+    let ct = ws.ct.as_slice();
     let mut iters = 0;
     let mut err = f64::INFINITY;
-    let mut scratch = vec![0.0; n.max(m)];
     while iters < opts.max_iters {
-        lse_half_step(&c, m, &g, &loga, &mut f, &mut scratch);
-        lse_half_step(&ct, n, &f, &logb, &mut g, &mut scratch);
+        lse_half_step(c, m, g, loga, f);
+        lse_half_step(ct, n, f, logb, g);
         iters += 1;
         if iters % 20 == 0 || iters == opts.max_iters {
             // Max violation over both marginals of exp(f + g - C/eps):
@@ -175,7 +264,7 @@ pub fn sinkhorn_log(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOpt
             }
         }
     }
-    let mut plan = DenseMatrix::zeros(n, m);
+    plan.reset_zeroed(n, m);
     let mut total_cost = 0.0;
     for i in 0..n {
         if loga[i] <= NEG_BIG / 2.0 {
@@ -195,12 +284,12 @@ pub fn sinkhorn_log(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOpt
             }
         }
     }
-    SinkhornResult { plan, cost: total_cost, iters, marginal_err: err }
+    SinkhornStats { cost: total_cost, iters, marginal_err: err }
 }
 
 /// `f_i = log a_i - logsumexp_j (g_j - C_ij/eps)` over row-major `c` with
 /// `cols` columns; NEG_BIG pins zero-mass entries.
-fn lse_half_step(c: &[f64], cols: usize, g: &[f64], log_marg: &[f64], out: &mut [f64], _scratch: &mut [f64]) {
+fn lse_half_step(c: &[f64], cols: usize, g: &[f64], log_marg: &[f64], out: &mut [f64]) {
     for (i, o) in out.iter_mut().enumerate() {
         if log_marg[i] <= NEG_BIG / 2.0 {
             *o = NEG_BIG;

@@ -75,6 +75,18 @@ pub struct QgwConfig {
     /// exact 1-D leaf instead. `levels` then acts as a hard depth cap
     /// rather than the driver. Ignored by flat qGW.
     pub tolerance: f64,
+    /// Prune-ahead (meaningful only in adaptive mode, `tolerance > 0`):
+    /// before extracting and re-partitioning a block pair, bound its
+    /// Theorem-6 term from the parent blocks' diameters alone; pairs whose
+    /// upper bound already fits the remaining budget prune to the exact
+    /// 1-D leaf without ever building the nested partition. The bound is
+    /// sound (it dominates the term the nested partition would realize),
+    /// so couplings are byte-identical with the flag on or off — `false`
+    /// is a validation/debugging escape hatch, not a semantic switch.
+    /// Substrates without a sound parent-level bound (graphs, whose
+    /// extracted subgraph distances can exceed any parent scalar) never
+    /// prune ahead regardless.
+    pub prune_ahead: bool,
 }
 
 impl Default for QgwConfig {
@@ -88,6 +100,7 @@ impl Default for QgwConfig {
             levels: 1,
             leaf_size: 64,
             tolerance: 0.0,
+            prune_ahead: true,
         }
     }
 }

@@ -53,7 +53,18 @@
 //! qGW on the top partition, whose bound is the top term alone). The
 //! split decision is a pure function of per-node scalars, so adaptive
 //! couplings stay byte-identical across thread counts; `tolerance = 0`
-//! (default) preserves fixed-depth semantics exactly.
+//! (default) preserves fixed-depth semantics exactly. **Prune-ahead**
+//! ([`QgwConfig::prune_ahead`], default on): before a pair pays block
+//! extraction + re-partitioning just to read its term, a sound upper
+//! bound on that term is derived from the parent blocks' diameters alone
+//! ([`Substrate::block_bounds`] — anchor-triangle vs bounding-box, plus
+//! the feature box when fused); pairs the bound already certifies skip
+//! the nested partition entirely (counted as
+//! [`HierStats::preskipped_pairs`]), and blocks all of whose partner
+//! pairs pre-skip never enter the block cache. Certification only skips
+//! work whose output would be discarded, so couplings are byte-identical
+//! with the flag on or off; graphs never pre-skip (extracted-subgraph
+//! distances admit no sound parent-level bound).
 //!
 //! Contrast with the MREC baseline ([`crate::gw::mrec_match`]): MREC pays
 //! a full entropic-GW solve at every recursion node *and leaf*; here each
@@ -201,6 +212,71 @@ impl<'a> Substrate<'a> {
         Substrate { data, features }
     }
 
+    /// Prune-ahead certificate for block `p`: a cheap, *sound* upper bound
+    /// `(metric diameter, feature diameter)` computed from parent-level
+    /// data alone — O(block) scans, no extraction, no nested partition.
+    ///
+    /// For clouds the metric bound is the tighter of the anchor triangle
+    /// bound `2 max_i d(x_i, rep)` (the anchor distances are already
+    /// stored) and the block's bounding-box diagonal; every nested anchor
+    /// distance lives inside the block, so the nested quantized
+    /// eccentricity is at most this diameter and the nested
+    /// `block_diameter_bound` at most twice it. The feature bound is the
+    /// block's feature-space bounding-box diagonal (only scanned when the
+    /// fused blend is active). Graphs return `None`: `block_graph`
+    /// restricts shortest paths to the extracted subgraph, so nested
+    /// distances can exceed any parent-level scalar and no sound cheap
+    /// bound exists (open item — a through-rep path-completion bound).
+    fn block_bounds(
+        &self,
+        q: &QuantizedSpace,
+        p: usize,
+        with_features: bool,
+    ) -> Option<(f64, f64)> {
+        let diam = match &self.data {
+            SubstrateData::Cloud(c) => {
+                let block = q.block(p);
+                let dim = c.dim();
+                let mut max_anchor = 0.0f64;
+                let mut lo = vec![f64::INFINITY; dim];
+                let mut hi = vec![f64::NEG_INFINITY; dim];
+                for &i in block {
+                    let i = i as usize;
+                    max_anchor = max_anchor.max(q.anchor_dist(i));
+                    for (k, &v) in c.point(i).iter().enumerate() {
+                        lo[k] = lo[k].min(v);
+                        hi[k] = hi[k].max(v);
+                    }
+                }
+                let bbox = lo
+                    .iter()
+                    .zip(&hi)
+                    .map(|(l, h)| (h - l) * (h - l))
+                    .sum::<f64>()
+                    .sqrt();
+                (2.0 * max_anchor).min(bbox)
+            }
+            SubstrateData::Graph { .. } => return None,
+        };
+        let feat = match (with_features, self.features()) {
+            (true, Some(f)) => {
+                let block = q.block(p);
+                let fd = f.dim();
+                let mut lo = vec![f64::INFINITY; fd];
+                let mut hi = vec![f64::NEG_INFINITY; fd];
+                for &i in block {
+                    for (k, &v) in f.feature(i as usize).iter().enumerate() {
+                        lo[k] = lo[k].min(v);
+                        hi[k] = hi[k].max(v);
+                    }
+                }
+                lo.iter().zip(&hi).map(|(l, h)| (h - l) * (h - l)).sum::<f64>().sqrt()
+            }
+            _ => 0.0,
+        };
+        Some((diam, feat))
+    }
+
     /// Tracked bytes of the raw substrate data (for the peak-memory
     /// accounting in [`HierStats`]).
     fn memory_bytes(&self) -> usize {
@@ -244,8 +320,15 @@ pub struct HierStats {
     /// alignment each, across all levels).
     pub split_pairs: usize,
     /// Recursion-eligible pairs the adaptive tolerance pruned to the
-    /// exact 1-D leaf instead (always 0 when `tolerance = 0`).
+    /// exact 1-D leaf instead (always 0 when `tolerance = 0`). Includes
+    /// the prune-ahead subset below.
     pub pruned_pairs: usize,
+    /// The subset of `pruned_pairs` decided *before* block extraction:
+    /// the parent-diameter upper bound on the pair's Theorem-6 term
+    /// already fit the budget, so the pair never triggered
+    /// `extract_block` or the nested partition (always 0 with
+    /// `prune_ahead = false` and on graph substrates).
+    pub preskipped_pairs: usize,
     /// Recursion nodes (global alignments) executed, including the top.
     pub nodes: usize,
     /// Sparse-storage bytes of the two top-level quantized spaces.
@@ -323,6 +406,7 @@ impl HierStats {
         self.leaf_matchings += other.leaf_matchings;
         self.split_pairs += other.split_pairs;
         self.pruned_pairs += other.pruned_pairs;
+        self.preskipped_pairs += other.preskipped_pairs;
         self.nodes += other.nodes;
         self.max_node_quantized_bytes =
             self.max_node_quantized_bytes.max(other.max_node_quantized_bytes);
@@ -782,36 +866,78 @@ fn solve_pairs(
     };
     // Exact 1-D bottom-out for one pair (beta-blended with the feature
     // matching when fused), as in flat qGW/qFGW.
-    let leaf_outcome = |pu: usize, qu: usize, pruned: bool| -> PairOutcome {
+    let leaf_outcome = |pu: usize, qu: usize, pruned: bool, preskipped: bool| -> PairOutcome {
         let plan = leaf_plan(x, y, qx, qy, pu, qu, fused);
         let mut stats = HierStats::default();
         stats.record_leaf(pair_level);
         if pruned {
             stats.pruned_pairs = 1;
         }
+        if preskipped {
+            stats.preskipped_pairs = 1;
+        }
         PairOutcome { plan, bound: 0.0, transient_bytes: 0, stats }
     };
+    let is_fused = fused.is_some();
 
-    // Blocks that any recursion-eligible pair touches, deduped across
-    // pairs. Adaptive mode still extracts + re-partitions these — the
-    // nested partition is what the split decision's bound term is read
-    // from — but pruned pairs skip the nested alignment and everything
-    // below it, which is where the real cost lives.
+    // Prune-ahead: before paying extraction + re-partitioning, bound each
+    // eligible pair's Theorem-6 term from the parent blocks' diameters
+    // alone ([`Substrate::block_bounds`]). The bound dominates the term
+    // the nested partitions would realize (nested anchor distances live
+    // inside the parent block), so `upper bound <= budget` certifies the
+    // pair would prune after partitioning too — the coupling is identical,
+    // only the wasted nested partition is skipped. The decision is a pure
+    // function of per-block scalars: deterministic at any thread count.
+    let preskip: Vec<bool> = if adaptive && cfg.prune_ahead {
+        let mut bounds_x: HashMap<u32, Option<(f64, f64)>> = HashMap::new();
+        let mut bounds_y: HashMap<u32, Option<(f64, f64)>> = HashMap::new();
+        pairs
+            .iter()
+            .map(|&(p, q)| {
+                if !may_recurse(p as usize, q as usize) {
+                    return false;
+                }
+                let bx = *bounds_x
+                    .entry(p)
+                    .or_insert_with(|| x.block_bounds(qx, p as usize, is_fused));
+                let by = *bounds_y
+                    .entry(q)
+                    .or_insert_with(|| y.block_bounds(qy, q as usize, is_fused));
+                match (bx, by) {
+                    (Some((dx, fx)), Some((dy, fy))) => {
+                        // q_ecc <= diam, nested diameter bound <= 2 diam,
+                        // feature ecc <= feature diam, per side.
+                        bound_term(dx, dy, 2.0 * dx.max(dy), fx + fy) <= budget
+                    }
+                    _ => false,
+                }
+            })
+            .collect()
+    } else {
+        vec![false; pairs.len()]
+    };
+
+    // Blocks that any *surviving* recursion-eligible pair touches, deduped
+    // across pairs. Adaptive mode still extracts + re-partitions these —
+    // the nested partition is what the final split decision's bound term
+    // is read from — but pre-skipped pairs are out, so a block whose
+    // partner pairs all pre-skip never pays extraction at all.
     let mut need_x: Vec<u32> = pairs
         .iter()
-        .filter(|&&(p, q)| may_recurse(p as usize, q as usize))
-        .map(|&(p, _)| p)
+        .zip(&preskip)
+        .filter(|&(&(p, q), &skip)| !skip && may_recurse(p as usize, q as usize))
+        .map(|(&(p, _), _)| p)
         .collect();
     need_x.sort_unstable();
     need_x.dedup();
     let mut need_y: Vec<u32> = pairs
         .iter()
-        .filter(|&&(p, q)| may_recurse(p as usize, q as usize))
-        .map(|&(_, q)| q)
+        .zip(&preskip)
+        .filter(|&(&(p, q), &skip)| !skip && may_recurse(p as usize, q as usize))
+        .map(|(&(_, q), _)| q)
         .collect();
     need_y.sort_unstable();
     need_y.dedup();
-    let is_fused = fused.is_some();
     let cache_x = build_block_cache(
         x, qx, &need_x, levels_left, pair_level, 0, cfg, is_fused, seed, parallel,
     );
@@ -824,10 +950,16 @@ fn solve_pairs(
         .map(|c| c.sub.memory_bytes() + c.q.memory_bytes())
         .sum();
 
-    let solve_one = |pair: &(u32, u32)| -> PairOutcome {
+    let solve_one = |idx: usize| -> PairOutcome {
+        let pair = &pairs[idx];
         let (pu, qu) = (pair.0 as usize, pair.1 as usize);
         if !may_recurse(pu, qu) {
-            return leaf_outcome(pu, qu, false);
+            return leaf_outcome(pu, qu, false, false);
+        }
+        // Pre-skipped above: certified to prune without a nested
+        // partition to read the exact term from.
+        if preskip[idx] {
+            return leaf_outcome(pu, qu, true, true);
         }
 
         let cx = &cache_x[&pair.0];
@@ -841,7 +973,7 @@ fn solve_pairs(
         // pay for the nested alignment (deterministic: the decision is a
         // pure function of per-node scalars).
         if adaptive && node_term <= budget {
-            return leaf_outcome(pu, qu, true);
+            return leaf_outcome(pu, qu, true, false);
         }
 
         // Nested node: align the cached sub-partitions' representatives,
@@ -903,10 +1035,11 @@ fn solve_pairs(
         }
     };
 
+    let idxs: Vec<usize> = (0..pairs.len()).collect();
     let outcomes: Vec<PairOutcome> = if parallel {
-        parallel_map(pairs, solve_one, cfg.num_threads)
+        parallel_map(&idxs, |&i| solve_one(i), cfg.num_threads)
     } else {
-        pairs.iter().map(solve_one).collect()
+        idxs.iter().map(|&i| solve_one(i)).collect()
     };
 
     let mut stats = HierStats::default();

@@ -11,7 +11,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, Result};
 
 use crate::core::DenseMatrix;
-use crate::gw::{gw_loss, product_coupling, GwOptions, GwResult};
+use crate::gw::{gw_loss, product_coupling, GwOptions, GwResult, GwWorkspace};
 use crate::qgw::GlobalAligner;
 
 use super::artifacts::{Artifact, ArtifactKind, Manifest};
@@ -220,6 +220,17 @@ impl XlaEngine {
 pub struct XlaAligner<'a> {
     pub engine: &'a XlaEngine,
     pub opts: GwOptions,
+    /// Reusable solver workspace: the eps-scale derivation needs one cost
+    /// tensor per drive, and the buffer (plus the `f1`/`f2`/`Cy^T`
+    /// factors) persists across every alignment this aligner runs instead
+    /// of being reallocated per node (see `gw::GwWorkspace`).
+    workspace: Mutex<GwWorkspace>,
+}
+
+impl<'a> XlaAligner<'a> {
+    pub fn new(engine: &'a XlaEngine, opts: GwOptions) -> Self {
+        Self { engine, opts, workspace: Mutex::new(GwWorkspace::new()) }
+    }
 }
 
 impl XlaAligner<'_> {
@@ -233,7 +244,7 @@ impl XlaAligner<'_> {
     ) -> Result<GwResult> {
         let mut t = product_coupling(a, b);
         // Same unit-free eps convention as the pure-Rust solvers.
-        let scale = crate::gw::cost_scale(cx, cy, &t, a, b);
+        let scale = self.workspace.lock().unwrap().cost_scale(cx, cy, &t, a, b);
         let mut loss = f64::INFINITY;
         let mut outer = 0;
         for &eps in &self.opts.eps_schedule {

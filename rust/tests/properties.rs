@@ -3,9 +3,16 @@
 //! offline). Each property runs over dozens of seeded random instances and
 //! reports the failing seed on violation.
 
-use qgw::core::{DenseSpace, MmSpace, SparseCoupling};
-use qgw::gw::{cg_gw, entropic_gw, gw_loss, gw_loss_sparse, product_coupling, GwOptions};
-use qgw::ot::{check_coupling, emd, emd1d, round_to_coupling, sinkhorn_log, SinkhornOptions};
+use qgw::core::{DenseMatrix, DenseSpace, MmSpace, SparseCoupling};
+use qgw::gw::{
+    cg_gw, cg_gw_with, entropic_fgw, entropic_fgw_with, entropic_gw, entropic_gw_with,
+    gw_loss, gw_loss_sparse, gw_loss_sparse_threads, product_coupling, FgwOptions, GwOptions,
+    GwWorkspace,
+};
+use qgw::ot::{
+    check_coupling, emd, emd1d, round_to_coupling, sinkhorn, sinkhorn_into, sinkhorn_log,
+    sinkhorn_log_into, SinkhornOptions, SinkhornWorkspace,
+};
 use qgw::partition::{dense_voronoi_partition, voronoi_partition};
 use qgw::prng::{Pcg32, Rng};
 use qgw::qgw::{
@@ -13,8 +20,8 @@ use qgw::qgw::{
     qgw_match_quantized, QfgwConfig, QgwConfig, RustAligner,
 };
 use qgw::testutil::{
-    assert_sparse_bitwise_equal as assert_bitwise_equal, coord_feature, forall, forall_cases,
-    random_cloud, random_measure, ring_graph,
+    assert_sparse_bitwise_equal as assert_bitwise_equal, case_rng, coord_feature, forall,
+    forall_cases, random_cloud, random_measure, ring_graph,
 };
 
 // ---------------------------------------------------------------------------
@@ -478,6 +485,233 @@ fn determinism_across_thread_counts_adaptive_all_substrates() {
             .to_sparse()
     };
     assert_bitwise_equal(&graph_run(1), &graph_run(4));
+}
+
+// ---------------------------------------------------------------------------
+// Workspace reuse (PR 4): the allocation-free solver paths must be
+// bit-identical to the allocation-per-call paths — with a single workspace
+// reused across calls of different shapes, so stale buffer contents can
+// never leak into a result.
+// ---------------------------------------------------------------------------
+
+fn assert_plan_bits_equal(a: &DenseMatrix, b: &DenseMatrix) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "plan shape drift");
+    for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "plan entry drift: {x} vs {y}");
+    }
+}
+
+#[test]
+fn prop_gw_solver_workspace_reuse_bit_identical() {
+    // Explicit seed loop rather than `forall`: the property deliberately
+    // threads ONE mutable workspace through every case (that reuse is the
+    // thing under test), which a `Fn` + unwind-safe closure cannot
+    // capture.
+    let mut ws = GwWorkspace::new();
+    for seed in 0..forall_cases(8) {
+        let rng = &mut case_rng(seed);
+        let n = 8 + rng.below(16);
+        let m = 8 + rng.below(16);
+        let x = random_cloud(rng, n, 2);
+        let y = random_cloud(rng, m, 2);
+        let (cx, cy) = (x.distance_matrix(), y.distance_matrix());
+        let a = random_measure(rng, n);
+        let b = random_measure(rng, m);
+
+        let opts = GwOptions { outer_iters: 4, inner_iters: 30, ..GwOptions::default() };
+        let fresh = entropic_gw(&cx, &cy, &a, &b, &opts);
+        let reused = entropic_gw_with(&cx, &cy, &a, &b, &opts, &mut ws);
+        assert_plan_bits_equal(&fresh.plan, &reused.plan);
+        assert_eq!(fresh.loss.to_bits(), reused.loss.to_bits());
+        assert_eq!(fresh.outer_iters, reused.outer_iters);
+
+        let fresh = cg_gw(&cx, &cy, &a, &b, 8, 1e-9);
+        let reused = cg_gw_with(&cx, &cy, &a, &b, 8, 1e-9, &mut ws);
+        assert_plan_bits_equal(&fresh.plan, &reused.plan);
+        assert_eq!(fresh.loss.to_bits(), reused.loss.to_bits());
+        assert_eq!(fresh.outer_iters, reused.outer_iters);
+
+        let feat = DenseMatrix::from_fn(n, m, |i, j| ((i * 5 + j * 3) % 11) as f64 / 11.0);
+        let fopts = FgwOptions {
+            alpha: rng.next_f64(),
+            outer_iters: 4,
+            inner_iters: 30,
+            ..FgwOptions::default()
+        };
+        let fresh = entropic_fgw(&cx, &cy, &feat, &a, &b, &fopts);
+        let reused = entropic_fgw_with(&cx, &cy, &feat, &a, &b, &fopts, &mut ws);
+        assert_plan_bits_equal(&fresh.plan, &reused.plan);
+        assert_eq!(fresh.loss.to_bits(), reused.loss.to_bits());
+    }
+}
+
+#[test]
+fn prop_sinkhorn_into_reuse_bit_identical() {
+    // Same explicit-seed shape as above: one workspace and one plan
+    // buffer deliberately shared across all cases.
+    let mut ws = SinkhornWorkspace::default();
+    let mut plan = DenseMatrix::zeros(0, 0);
+    for seed in 0..25u64 {
+        let rng = &mut case_rng(seed);
+        let n = 2 + rng.below(12);
+        let m = 2 + rng.below(12);
+        let cost = DenseMatrix::from_fn(n, m, |_, _| rng.next_f64());
+        let a = random_measure(rng, n);
+        let b = random_measure(rng, m);
+        let opts = SinkhornOptions {
+            eps: 0.02 + rng.next_f64() * 0.5,
+            max_iters: 200,
+            tol: 1e-10,
+        };
+        let fresh = sinkhorn_log(&cost, &a, &b, &opts);
+        let stats = sinkhorn_log_into(&cost, &a, &b, &opts, &mut ws, &mut plan);
+        assert_plan_bits_equal(&fresh.plan, &plan);
+        assert_eq!(fresh.cost.to_bits(), stats.cost.to_bits());
+        assert_eq!(fresh.iters, stats.iters);
+        assert_eq!(fresh.marginal_err.to_bits(), stats.marginal_err.to_bits());
+
+        let fresh = sinkhorn(&cost, &a, &b, &opts);
+        let stats = sinkhorn_into(&cost, &a, &b, &opts, &mut ws, &mut plan);
+        assert_plan_bits_equal(&fresh.plan, &plan);
+        assert_eq!(fresh.cost.to_bits(), stats.cost.to_bits());
+        assert_eq!(fresh.iters, stats.iters);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse scoring (PR 4): the symmetry-halved parallel scorer must match
+// the brute-force O(nnz^2) double loop to float tolerance, and be
+// bit-identical across thread counts (per-entry partials combined in
+// entry order).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gw_loss_sparse_halved_matches_bruteforce_and_is_thread_deterministic() {
+    forall(15, |rng| {
+        let n = 20 + rng.below(40);
+        let x = random_cloud(rng, n, 3);
+        let y = random_cloud(rng, n, 3);
+        let m = 4 + rng.below(4);
+        let res = qgw_match(&x, &y, &QgwConfig::with_count(m), rng);
+        let sparse = res.coupling.to_sparse();
+
+        // Brute-force reference: the unhalved double loop.
+        let entries: Vec<(usize, usize, f64)> = sparse.iter().collect();
+        let mut reference = 0.0;
+        for &(i, j, w1) in &entries {
+            for &(k, l, w2) in &entries {
+                let d = x.dist(i, k) - y.dist(j, l);
+                reference += d * d * w1 * w2;
+            }
+        }
+        let got = gw_loss_sparse(&sparse, &x, &y);
+        assert!(
+            (got - reference).abs() <= 1e-9 * reference.abs().max(1.0),
+            "halved scorer drifted: {got} vs {reference}"
+        );
+        let t1 = gw_loss_sparse_threads(&sparse, &x, &y, 1);
+        let t4 = gw_loss_sparse_threads(&sparse, &x, &y, 4);
+        assert_eq!(t1.to_bits(), t4.to_bits(), "thread-count nondeterminism: {t1} vs {t4}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Prune-ahead (PR 4): deciding a prune from the parent-diameter bound
+// before block extraction must be invisible in the output — couplings and
+// prune/split counts byte-identical to PR 3's prune-after-partition on
+// every substrate — and with a budget above every parent-diameter bound
+// the certificate must fire for every eligible cloud pair.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prune_ahead_byte_identical_and_fires_on_generous_budget() {
+    // Cloud substrate.
+    let mut srng = Pcg32::seed_from(41);
+    let x = random_cloud(&mut srng, 320, 3);
+    let y = random_cloud(&mut srng, 300, 3);
+    let base = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_fraction(0.05) };
+    let fixed = {
+        let mut rng = Pcg32::seed_from(7);
+        hier_qgw_match(&x, &y, &base, &mut rng)
+    };
+    assert!(fixed.stats.split_pairs > 0, "fixture must recurse");
+    let cloud_run = |tolerance: f64, prune_ahead: bool| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QgwConfig { tolerance, prune_ahead, ..base.clone() };
+        hier_qgw_match(&x, &y, &cfg, &mut rng)
+    };
+    for tol in [fixed.mid_tolerance(), fixed.result.error_bound * 64.0] {
+        let ahead = cloud_run(tol, true);
+        let after = cloud_run(tol, false);
+        assert_bitwise_equal(
+            &ahead.result.coupling.to_sparse(),
+            &after.result.coupling.to_sparse(),
+        );
+        assert_eq!(ahead.stats.pruned_pairs, after.stats.pruned_pairs);
+        assert_eq!(ahead.stats.split_pairs, after.stats.split_pairs);
+        assert_eq!(after.stats.preskipped_pairs, 0, "disabled prune-ahead still pre-skipped");
+        assert_eq!(ahead.result.error_bound.to_bits(), after.result.error_bound.to_bits());
+    }
+    // Budget far above any parent-diameter bound: every eligible pair is
+    // certified before extraction, so no block cache is built at all.
+    let generous = cloud_run(fixed.result.error_bound * 64.0, true);
+    assert!(generous.stats.preskipped_pairs > 0, "certificate never fired");
+    assert_eq!(generous.stats.preskipped_pairs, generous.stats.pruned_pairs);
+    assert_eq!(generous.stats.split_pairs, 0);
+
+    // Fused substrate: byte-identical with the certificate on or off.
+    let fx = coord_feature(&x);
+    let fy = coord_feature(&y);
+    let fbase = QfgwConfig {
+        base: QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_fraction(0.05) },
+        alpha: 0.5,
+        beta: 0.75,
+    };
+    let ffixed = {
+        let mut rng = Pcg32::seed_from(7);
+        hier_qfgw_match(&x, &y, &fx, &fy, &fbase, &mut rng)
+    };
+    let fused_run = |prune_ahead: bool| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QfgwConfig {
+            base: QgwConfig {
+                tolerance: ffixed.mid_tolerance(),
+                prune_ahead,
+                ..fbase.base.clone()
+            },
+            alpha: fbase.alpha,
+            beta: fbase.beta,
+        };
+        hier_qfgw_match(&x, &y, &fx, &fy, &cfg, &mut rng)
+    };
+    let ahead = fused_run(true);
+    let after = fused_run(false);
+    assert_bitwise_equal(&ahead.result.coupling.to_sparse(), &after.result.coupling.to_sparse());
+    assert_eq!(ahead.stats.pruned_pairs, after.stats.pruned_pairs);
+    assert_eq!(after.stats.preskipped_pairs, 0);
+
+    // Graph substrate: no sound parent-level bound exists, so the
+    // certificate must never fire — and the flag must be a no-op.
+    let (g, mu) = ring_graph(240);
+    let gbase = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) };
+    let gfixed = {
+        let mut rng = Pcg32::seed_from(7);
+        hier_graph_match(&g, &g, &mu, &mu, None, None, &gbase, &mut rng)
+    };
+    let graph_run = |prune_ahead: bool| {
+        let mut rng = Pcg32::seed_from(7);
+        let cfg = QgwConfig {
+            tolerance: gfixed.result.error_bound * 64.0,
+            prune_ahead,
+            ..gbase.clone()
+        };
+        hier_graph_match(&g, &g, &mu, &mu, None, None, &cfg, &mut rng)
+    };
+    let ahead = graph_run(true);
+    let after = graph_run(false);
+    assert_bitwise_equal(&ahead.result.coupling.to_sparse(), &after.result.coupling.to_sparse());
+    assert_eq!(ahead.stats.preskipped_pairs, 0, "graphs must never pre-skip");
+    assert_eq!(after.stats.preskipped_pairs, 0);
 }
 
 // ---------------------------------------------------------------------------

@@ -132,7 +132,7 @@ fn full_qgw_pipeline_through_xla_aligner() {
     let cfg = QgwConfig::with_count(96); // pads into the m=128 bucket
     let qx = qgw::partition::voronoi_partition(&shape.cloud, 96, &mut rng);
     let qy = qgw::partition::voronoi_partition(&copy.cloud, 96, &mut rng);
-    let aligner = XlaAligner { engine: &engine, opts: cfg.gw.clone() };
+    let aligner = XlaAligner::new(&engine, cfg.gw.clone());
     let res = qgw_match_quantized(&qx, &qy, &cfg, &aligner);
     assert!(res.coupling.check_marginals(shape.cloud.measure(), copy.cloud.measure()) < 1e-7);
     let sparse = res.coupling.to_sparse();

@@ -1,11 +1,15 @@
 //! Command-line interface (hand-rolled arg parsing — no clap offline).
 //!
 //! ```text
-//! qgw match      --class dog --n 2000 --fraction 0.1 [--fused A,B] [--seed S]
-//!                [--levels L --leaf-size K --tolerance T]  # L>1: hierarchical
-//! qgw experiment table1|table2|fig1|fig2|fig3|fig4|scaling [--scale F] [--full]
-//! qgw serve      --class dog --n 5000 --fraction 0.1 --addr 127.0.0.1:7979
-//! qgw artifacts  [--dir artifacts]     # report loaded AOT artifacts
+//! qgw match       --class dog --n 2000 --fraction 0.1 [--fused A,B] [--seed S]
+//!                 [--levels L --leaf-size K --tolerance T]  # L>1: hierarchical
+//! qgw experiment  table1|table2|fig1|fig2|fig3|fig4|scaling [--scale F] [--full]
+//! qgw serve       --class dog --n 5000 --fraction 0.1 --addr 127.0.0.1:7979
+//!                 [--index p1.qgwi,p2.qgwi --registry-bytes B]  # MATCH verb
+//! qgw index build --class dog --n 20000 --levels 2 --leaf-size 32 [--out PATH]
+//! qgw index match --index PATH --class dog --n 2000 [--queries K]
+//! qgw index info  --index PATH
+//! qgw artifacts   [--dir artifacts]     # report loaded AOT artifacts
 //! qgw info
 //! ```
 //!
@@ -28,9 +32,10 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
-use crate::coordinator::{MatchPipeline, MatchService, Metrics, PipelineInput};
+use crate::coordinator::{MatchPipeline, MatchService, Metrics, PipelineInput, QueryInput};
 use crate::data::shapes::{sample_shape, ShapeClass};
 use crate::eval::distortion_score;
+use crate::index::{IndexRegistry, RefIndex};
 use crate::prng::Pcg32;
 use crate::qgw::QgwConfig;
 
@@ -103,12 +108,15 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "experiment" => crate::experiments::run_experiment(&args),
         "serve" => cmd_serve(&args),
         "query" => cmd_query(&args),
+        "index" => cmd_index(&args),
         "artifacts" => cmd_artifacts(&args),
         "info" => {
             print_usage();
             Ok(())
         }
-        other => bail!("unknown command {other:?} (try: match, experiment, serve, artifacts, info)"),
+        other => {
+            bail!("unknown command {other:?} (try: match, experiment, serve, index, artifacts, info)")
+        }
     }
 }
 
@@ -213,7 +221,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shape = sample_shape(class, n, &mut rng);
     let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
     let metrics = Metrics::new();
-    let mut pipe = MatchPipeline::new(cfg, &metrics);
+    let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
     pipe.seed = seed;
     pipe.fused = fused;
     let report = if pipe.fused.is_some() {
@@ -227,15 +235,155 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pipe.run(PipelineInput::Clouds { x: &shape.cloud, y: &copy.cloud })
     };
 
-    let svc = std::sync::Arc::new(MatchService::new(report.result.coupling));
+    let mut svc = MatchService::new(report.result.coupling);
+    if let Some(registry) = load_indices(args)? {
+        svc = svc.with_registry(registry, cfg, seed);
+    }
+    let svc = std::sync::Arc::new(svc);
     let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let bound = svc.serve(&addr, std::sync::Arc::clone(&shutdown))?;
     println!("serving match queries on {bound} ({})", svc.stats());
-    println!("protocol: QUERY <i> | MAP <i> | STATS | QUIT");
+    println!("protocol: QUERY <i> | MAP <i> | MATCH <name> <n> <dim> | INDEXES | STATS | QUIT");
     // Block forever (ctrl-c to exit).
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// `[index]` settings from `--config`, or the defaults.
+fn index_settings(args: &Args) -> Result<crate::config::IndexSettings> {
+    Ok(match args.flag("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.index_settings(),
+        None => Config::parse("")?.index_settings(),
+    })
+}
+
+/// Load the `--index p1,p2,..` files into a registry (named by file stem),
+/// LRU-bounded by `--registry-bytes` (default: `[index] memory_bytes`).
+fn load_indices(args: &Args) -> Result<Option<std::sync::Arc<IndexRegistry>>> {
+    let Some(spec) = args.flag("index") else {
+        return Ok(None);
+    };
+    let settings = index_settings(args)?;
+    let registry = IndexRegistry::new(args.usize_or("registry-bytes", settings.memory_bytes)?);
+    for raw in spec.split(',') {
+        let path = std::path::Path::new(raw.trim());
+        let index = RefIndex::load(path)?;
+        let name =
+            path.file_stem().and_then(|s| s.to_str()).unwrap_or("index").to_string();
+        println!("loaded index {name}: {}", index.describe());
+        let evicted = registry.insert(&name, index);
+        for name in evicted {
+            println!("evicted index {name} (registry over its memory budget)");
+        }
+    }
+    Ok(Some(std::sync::Arc::new(registry)))
+}
+
+/// `qgw index <build|match|info>` — build a reference index once, persist
+/// it, and serve many queries against it.
+fn cmd_index(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("build") => cmd_index_build(args),
+        Some("match") => cmd_index_match(args),
+        Some("info") => cmd_index_info(args),
+        _ => bail!("usage: qgw index <build|match|info> (see `qgw info`)"),
+    }
+}
+
+fn cmd_index_build(args: &Args) -> Result<()> {
+    let class = shape_class_by_name(args.flag("class").unwrap_or("dogs"))?;
+    let n = args.usize_or("n", 5000)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let (cfg, fused) = build_config(args)?;
+
+    let mut rng = Pcg32::seed_from(seed);
+    let shape = sample_shape(class, n, &mut rng);
+    let start = std::time::Instant::now();
+    let features = fused.is_some().then_some(&shape.normals);
+    let index = RefIndex::build_cloud(&shape.cloud, features, &cfg, seed);
+    let build_secs = start.elapsed().as_secs_f64();
+
+    let out = match args.flag("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            let settings = index_settings(args)?;
+            std::fs::create_dir_all(&settings.dir)
+                .with_context(|| format!("creating {:?}", settings.dir))?;
+            settings.dir.join(format!("{}_{n}.qgwi", class.name().to_lowercase()))
+        }
+    };
+    index.save(&out)?;
+    println!("built {} in {build_secs:.3}s", index.describe());
+    println!("saved -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_index_match(args: &Args) -> Result<()> {
+    let path = args.flag("index").context("--index PATH is required")?;
+    let index = RefIndex::load(std::path::Path::new(path))?;
+    let class = shape_class_by_name(args.flag("class").unwrap_or("dogs"))?;
+    let n = args.usize_or("n", 2000)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let queries = args.usize_or("queries", 1)?.max(1);
+    let (base_cfg, fused) = build_config(args)?;
+    // Structural knobs come from the index; solver knobs from flags. The
+    // partition size pins to the build's realized m (query-side blocks
+    // then size to the same count).
+    let cfg = index.structural_config(&base_cfg);
+    println!("loaded {}", index.describe());
+
+    let metrics = Metrics::new();
+    let mut rng = Pcg32::seed_from(seed ^ 0xA5A5);
+    let mut total = 0.0f64;
+    for k in 0..queries {
+        let shape = sample_shape(class, n, &mut rng);
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = seed.wrapping_add(k as u64);
+        pipe.fused = fused;
+        let report = if fused.is_some() && index.has_features() {
+            pipe.run_indexed(
+                QueryInput::CloudWithFeatures { x: &shape.cloud, fx: &shape.normals },
+                &index,
+            )?
+        } else {
+            pipe.run_indexed(QueryInput::Cloud { x: &shape.cloud }, &index)?
+        };
+        total += report.total_secs;
+        println!(
+            "query {k}: n={n} m={}x{} levels={} loss={:.6} bound={:.4} \
+             pruned={} preskipped={} total={:.3}s (partition {:.3}s global {:.3}s local {:.3}s)",
+            report.m_x,
+            report.m_y,
+            report.levels,
+            report.result.gw_loss,
+            report.result.error_bound,
+            report.pruned_pairs,
+            report.preskipped_pairs,
+            report.total_secs,
+            report.partition_secs,
+            report.global_secs,
+            report.local_secs
+        );
+    }
+    println!(
+        "{queries} quer{} in {total:.3}s ({:.3}s/query, reference side amortized)",
+        if queries == 1 { "y" } else { "ies" },
+        total / queries as f64
+    );
+    println!("metrics: {}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_index_info(args: &Args) -> Result<()> {
+    let path = args.flag("index").context("--index PATH is required")?;
+    let index = RefIndex::load(std::path::Path::new(path))?;
+    println!("{path}: {}", index.describe());
+    println!(
+        "build seed: {} (matches at this pipeline seed replay the cold path)",
+        index.params().seed
+    );
+    Ok(())
 }
 
 /// Client for the `serve` protocol: `qgw query --addr HOST:PORT <i> [i..]`
@@ -287,7 +435,12 @@ fn print_usage() {
            match       match a shape against its perturbed copy\n\
            experiment  regenerate a paper table/figure (table1 table2 fig1 fig2 fig3 fig4 scaling)\n\
            serve       compute a matching and serve row queries over TCP\n\
+                       (--index p1.qgwi,p2.qgwi preloads a reference-index registry;\n\
+                        clients then use `MATCH <name> <n> <dim>` + point upload)\n\
            query       client for serve (QUERY/MAP rows by point id)\n\
+           index       build: precompute + persist a reference index (--out PATH)\n\
+                       match: match query shapes against a loaded index (--queries K)\n\
+                       info:  describe a persisted index\n\
            artifacts   report AOT artifacts available to the runtime\n\
            info        this message\n\
          \n\

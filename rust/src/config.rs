@@ -159,6 +159,22 @@ impl Config {
         }
         Some((self.f64_or("fused.alpha", 0.5), self.f64_or("fused.beta", 0.75)))
     }
+
+    /// Reference-index settings from the `[index]` section.
+    pub fn index_settings(&self) -> IndexSettings {
+        IndexSettings {
+            dir: std::path::PathBuf::from(self.str_or("index.dir", "indices")),
+            memory_bytes: self.usize_or("index.memory_bytes", 256 * 1024 * 1024),
+        }
+    }
+}
+
+/// Parsed `[index]` section: where the CLI reads/writes index files and
+/// how much resident memory the in-process registry may hold.
+#[derive(Clone, Debug)]
+pub struct IndexSettings {
+    pub dir: std::path::PathBuf,
+    pub memory_bytes: usize,
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -286,6 +302,17 @@ full = false
         assert_eq!(both.fused_config(), Some((0.2, 0.9)));
         // Absent section: plain qGW.
         assert_eq!(Config::parse("").unwrap().fused_config(), None);
+    }
+
+    #[test]
+    fn index_section_parses_and_defaults() {
+        let c = Config::parse("[index]\ndir = \"refs\"\nmemory_bytes = 1024\n").unwrap();
+        let s = c.index_settings();
+        assert_eq!(s.dir, std::path::PathBuf::from("refs"));
+        assert_eq!(s.memory_bytes, 1024);
+        let d = Config::parse("").unwrap().index_settings();
+        assert_eq!(d.dir, std::path::PathBuf::from("indices"));
+        assert_eq!(d.memory_bytes, 256 * 1024 * 1024);
     }
 
     #[test]

@@ -11,6 +11,6 @@ mod pool;
 mod service;
 
 pub use metrics::{Metrics, StageTimer};
-pub use pipeline::{MatchPipeline, PipelineInput, PipelineReport};
+pub use pipeline::{MatchPipeline, PipelineInput, PipelineReport, QueryInput};
 pub use pool::{effective_threads, parallel_map, ThreadPool};
 pub use service::MatchService;

@@ -19,13 +19,16 @@
 
 use std::time::{Duration, Instant};
 
-use crate::core::{PointCloud, QuantizedSpace};
+use anyhow::{bail, Result};
+
+use crate::core::PointCloud;
 use crate::graph::Graph;
-use crate::partition::{fluid_partition, partition_cloud, voronoi_partition};
-use crate::prng::{Pcg32, Rng};
+use crate::index::RefIndex;
+use crate::prng::Pcg32;
 use crate::qgw::{
-    assemble, hier_match_quantized, qfgw_align, qfgw_assemble, FeatureSet, GlobalAligner,
-    QfgwConfig, QgwConfig, QgwResult, RustAligner, Substrate,
+    assemble, hier_match_indexed, hier_match_quantized, qfgw_align, qfgw_assemble, split_seed,
+    stage_partition, FeatureSet, GlobalAligner, QfgwConfig, QgwConfig, QgwResult, RustAligner,
+    Substrate,
 };
 
 use super::Metrics;
@@ -47,6 +50,15 @@ pub enum PipelineInput<'a> {
         fx: Option<&'a FeatureSet>,
         fy: Option<&'a FeatureSet>,
     },
+}
+
+/// One side of a match — the query fed to
+/// [`MatchPipeline::run_indexed`]; the reference side lives in the
+/// [`RefIndex`].
+pub enum QueryInput<'a> {
+    Cloud { x: &'a PointCloud },
+    CloudWithFeatures { x: &'a PointCloud, fx: &'a FeatureSet },
+    Graph { x: &'a Graph, mu_x: &'a [f64], fx: Option<&'a FeatureSet> },
 }
 
 #[derive(Debug)]
@@ -98,46 +110,50 @@ impl<'a> MatchPipeline<'a> {
 
     pub fn run(&self, input: PipelineInput<'_>) -> PipelineReport {
         let total_start = Instant::now();
-        let mut rng = Pcg32::seed_from(self.seed);
+        // Per-side seed streams: lane 0 drives the query (X) partition,
+        // lane 1 the reference (Y) partition, lane 2 the hierarchy
+        // chains. The reference side's randomness never depends on the
+        // query side, which is what makes a prebuilt [`RefIndex`] at the
+        // same seed reproduce this cold path byte-for-byte — see
+        // [`MatchPipeline::run_indexed`].
+        let mut rng_x = Pcg32::seed_from(split_seed(self.seed, 0));
+        let mut rng_y = Pcg32::seed_from(split_seed(self.seed, 1));
+        let hier_seed = split_seed(self.seed, 2);
         let rust_aligner = RustAligner(self.qgw.gw.clone());
 
-        // --- Stage 1: partition + substrate capture ----------------------
+        // --- Stage 1: substrate capture + partition ----------------------
+        // (The partitioner choice per substrate lives in the shared
+        // `stage_partition`, which the reference-index build and the
+        // indexed query side resolve through as well.)
         let part_start = Instant::now();
-        let (sx, sy, qx, qy): (Substrate<'_>, Substrate<'_>, QuantizedSpace, QuantizedSpace) =
-            match input {
-                PipelineInput::Clouds { x, y } => {
-                    let mx = self.qgw.size.resolve(x.len());
-                    let my = self.qgw.size.resolve(y.len());
-                    let qx = partition_cloud(x, mx, self.qgw.kmeans, &mut rng);
-                    let qy = partition_cloud(y, my, self.qgw.kmeans, &mut rng);
-                    (Substrate::cloud(x), Substrate::cloud(y), qx, qy)
+        let (sx, sy): (Substrate<'_>, Substrate<'_>) = match input {
+            PipelineInput::Clouds { x, y } => (Substrate::cloud(x), Substrate::cloud(y)),
+            PipelineInput::CloudsWithFeatures { x, y, fx, fy } => (
+                Substrate::cloud(x).with_features(fx),
+                Substrate::cloud(y).with_features(fy),
+            ),
+            PipelineInput::Graphs { x, y, mu_x, mu_y, fx, fy } => {
+                let mut sx = Substrate::graph(x, mu_x);
+                let mut sy = Substrate::graph(y, mu_y);
+                if let (Some(fx), Some(fy)) = (fx, fy) {
+                    sx = sx.with_features(fx);
+                    sy = sy.with_features(fy);
                 }
-                PipelineInput::CloudsWithFeatures { x, y, fx, fy } => {
-                    let mx = self.qgw.size.resolve(x.len());
-                    let my = self.qgw.size.resolve(y.len());
-                    let qx = voronoi_partition(x, mx, &mut rng);
-                    let qy = voronoi_partition(y, my, &mut rng);
-                    (
-                        Substrate::cloud(x).with_features(fx),
-                        Substrate::cloud(y).with_features(fy),
-                        qx,
-                        qy,
-                    )
-                }
-                PipelineInput::Graphs { x, y, mu_x, mu_y, fx, fy } => {
-                    let mx = self.qgw.size.resolve(x.num_nodes());
-                    let my = self.qgw.size.resolve(y.num_nodes());
-                    let qx = fluid_partition(x, mu_x, mx, &mut rng);
-                    let qy = fluid_partition(y, mu_y, my, &mut rng);
-                    let mut sx = Substrate::graph(x, mu_x);
-                    let mut sy = Substrate::graph(y, mu_y);
-                    if let (Some(fx), Some(fy)) = (fx, fy) {
-                        sx = sx.with_features(fx);
-                        sy = sy.with_features(fy);
-                    }
-                    (sx, sy, qx, qy)
-                }
-            };
+                (sx, sy)
+            }
+        };
+        let qx = stage_partition(
+            &sx,
+            self.qgw.size.resolve(sx.len()),
+            self.qgw.kmeans,
+            &mut rng_x,
+        );
+        let qy = stage_partition(
+            &sy,
+            self.qgw.size.resolve(sy.len()),
+            self.qgw.kmeans,
+            &mut rng_y,
+        );
         let partition_secs = part_start.elapsed().as_secs_f64();
         self.metrics.add_duration("partition", part_start.elapsed());
 
@@ -156,7 +172,7 @@ impl<'a> MatchPipeline<'a> {
                         &self.qgw,
                         self.fused,
                         &rust_aligner,
-                        rng.next_u64(),
+                        hier_seed,
                     );
                     self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
                     self.metrics.incr("hier_pruned_pairs", hres.stats.pruned_pairs as u64);
@@ -232,6 +248,87 @@ impl<'a> MatchPipeline<'a> {
             local_secs,
             total_secs: total_start.elapsed().as_secs_f64(),
         }
+    }
+
+    /// Match a query space against a prebuilt reference index: only the
+    /// query side is partitioned and recursed; everything reference-side
+    /// is read from `index`. At the same pipeline `seed` the index was
+    /// built with, the coupling is byte-identical to the corresponding
+    /// cold [`MatchPipeline::run`] — at any other seed it is simply a
+    /// valid match against the same resident reference (the serving
+    /// case: one build, many queries).
+    pub fn run_indexed(
+        &self,
+        query: QueryInput<'_>,
+        index: &RefIndex,
+    ) -> Result<PipelineReport> {
+        if self.aligner.is_some() {
+            bail!(
+                "aligner overrides cannot serve the indexed path (the hierarchy needs a \
+                 Sync aligner)"
+            );
+        }
+        index.validate_config(&self.qgw)?;
+        let total_start = Instant::now();
+        let mut rng_x = Pcg32::seed_from(split_seed(self.seed, 0));
+        let hier_seed = split_seed(self.seed, 2);
+        let rust_aligner = RustAligner(self.qgw.gw.clone());
+
+        // --- Stage 1: query-side partition only --------------------------
+        let part_start = Instant::now();
+        let sx: Substrate<'_> = match query {
+            QueryInput::Cloud { x } => Substrate::cloud(x),
+            QueryInput::CloudWithFeatures { x, fx } => Substrate::cloud(x).with_features(fx),
+            QueryInput::Graph { x, mu_x, fx } => {
+                let mut sx = Substrate::graph(x, mu_x);
+                if let Some(fx) = fx {
+                    sx = sx.with_features(fx);
+                }
+                sx
+            }
+        };
+        let qx = stage_partition(
+            &sx,
+            self.qgw.size.resolve(sx.len()),
+            self.qgw.kmeans,
+            &mut rng_x,
+        );
+        let partition_secs = part_start.elapsed().as_secs_f64();
+        self.metrics.add_duration("partition", part_start.elapsed());
+
+        // --- Stages 2+3 against the resident reference tree --------------
+        let hres = hier_match_indexed(
+            &sx,
+            &qx,
+            index.root(),
+            &self.qgw,
+            self.fused,
+            &rust_aligner,
+            hier_seed,
+        );
+        self.metrics.incr("indexed_matches", 1);
+        self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
+        self.metrics.incr("hier_pruned_pairs", hres.stats.pruned_pairs as u64);
+        self.metrics.incr("hier_preskipped_pairs", hres.stats.preskipped_pairs as u64);
+        self.metrics
+            .add_duration("global_align", Duration::from_secs_f64(hres.global_secs));
+        self.metrics
+            .add_duration("local+assemble", Duration::from_secs_f64(hres.local_secs));
+        self.metrics.incr("local_matchings", hres.result.num_local_matchings as u64);
+
+        Ok(PipelineReport {
+            m_x: qx.num_blocks(),
+            m_y: index.root().num_blocks(),
+            levels: hres.stats.levels_used(),
+            leaf_size: self.qgw.leaf_size,
+            pruned_pairs: hres.stats.pruned_pairs,
+            preskipped_pairs: hres.stats.preskipped_pairs,
+            result: hres.result,
+            partition_secs,
+            global_secs: hres.global_secs,
+            local_secs: hres.local_secs,
+            total_secs: total_start.elapsed().as_secs_f64(),
+        })
     }
 }
 
@@ -426,6 +523,48 @@ mod tests {
                 <= report.total_secs + 1e-6
         );
         assert!(metrics.duration("local+assemble").as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn pipeline_indexed_match_reproduces_cold_run() {
+        let x = cloud(260, 21);
+        let y = cloud(240, 22);
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(5) };
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = 77;
+        let cold = pipe.run(PipelineInput::Clouds { x: &x, y: &y });
+        assert!(cold.levels >= 2, "fixture must recurse");
+
+        let idx = crate::index::RefIndex::build_cloud(&y, None, &cfg, 77);
+        let indexed = pipe.run_indexed(QueryInput::Cloud { x: &x }, &idx).unwrap();
+        crate::testutil::assert_sparse_bitwise_equal(
+            &cold.result.coupling.to_sparse(),
+            &indexed.result.coupling.to_sparse(),
+        );
+        assert_eq!(cold.m_x, indexed.m_x);
+        assert_eq!(cold.m_y, indexed.m_y);
+        assert_eq!(cold.levels, indexed.levels);
+        assert_eq!(metrics.counter("indexed_matches"), 1);
+    }
+
+    #[test]
+    fn pipeline_indexed_rejects_structural_mismatch_and_override() {
+        let x = cloud(120, 31);
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(4) };
+        let idx = crate::index::RefIndex::build_cloud(&x, None, &cfg, 7);
+        let metrics = Metrics::new();
+
+        // Mismatched leaf size is refused up front, not silently served.
+        let bad = QgwConfig { leaf_size: 20, ..cfg.clone() };
+        let pipe = MatchPipeline::new(bad, &metrics);
+        assert!(pipe.run_indexed(QueryInput::Cloud { x: &x }, &idx).is_err());
+
+        // Aligner overrides force flat matching and cannot serve the tree.
+        let rust = RustAligner(cfg.gw.clone());
+        let mut pipe = MatchPipeline::new(cfg, &metrics);
+        pipe.aligner = Some(&rust);
+        assert!(pipe.run_indexed(QueryInput::Cloud { x: &x }, &idx).is_err());
     }
 
     #[test]

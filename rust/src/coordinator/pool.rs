@@ -1,12 +1,15 @@
 //! Minimal threading substrate.
 //!
-//! * [`parallel_map`] — scoped fork-join over a slice: deterministic
-//!   chunking, no allocation beyond the output vector, results in input
-//!   order. This is what the qGW local-matching fan-out uses.
-//! * [`ThreadPool`] — persistent workers fed by a channel, for the match
-//!   service's request loop.
+//! * [`parallel_map`] — scoped fork-join over a slice: workers claim
+//!   disjoint output chunks and write into them directly (the same trick
+//!   as `par_matmul_into` — the only lock is the briefly-held chunk-queue
+//!   pop), results in input order. This is what the qGW local-matching
+//!   fan-out uses.
+//! * [`ThreadPool`] — persistent workers fed by a *bounded* channel, for
+//!   the match service's connection handling: a flood of jobs blocks (or,
+//!   via [`ThreadPool::try_execute`], is refused) instead of growing an
+//!   unbounded queue or spawning unbounded threads.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -20,9 +23,14 @@ pub fn effective_threads(requested: usize) -> usize {
     }
 }
 
-/// Apply `f` to every item in parallel, preserving order. Work is pulled
-/// from an atomic cursor in small batches so uneven item costs (big vs
-/// small partition blocks) balance out.
+/// Apply `f` to every item in parallel, preserving order. The output is
+/// split into small disjoint chunks (several per worker, so uneven item
+/// costs — big vs small partition blocks — balance out); workers pop a
+/// chunk from a queue and write results straight into it. The same trick
+/// as `par_matmul_into`: no per-item `(idx, value)` collection, no
+/// scatter pass, and the only lock is the chunk-queue pop, whose hold
+/// time is trivial next to a chunk's work. Output order — and therefore
+/// every deterministic consumer — is independent of scheduling.
 pub fn parallel_map<T, U, F>(items: &[T], f: F, num_threads: usize) -> Vec<U>
 where
     T: Sync,
@@ -36,50 +44,53 @@ where
     }
     let mut out: Vec<Option<U>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
-    let cursor = AtomicUsize::new(0);
     let batch = (n / (threads * 8)).max(1);
-    // SAFETY-free approach: split the output into disjoint cells via raw
-    // pointers is unnecessary — use a Mutex-free trick: each worker writes
-    // to indices it claimed exclusively through the atomic cursor. We wrap
-    // cells in UnsafeCell-free form by collecting (idx, value) pairs and
-    // scattering afterwards.
-    let results: Mutex<Vec<(usize, U)>> = Mutex::new(Vec::with_capacity(n));
+    let chunks: Vec<(usize, &mut [Option<U>])> = out
+        .chunks_mut(batch)
+        .enumerate()
+        .map(|(ci, slice)| (ci * batch, slice))
+        .collect();
+    let queue = Mutex::new(chunks);
     thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| {
-                let mut local: Vec<(usize, U)> = Vec::new();
-                loop {
-                    let start = cursor.fetch_add(batch, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + batch).min(n);
-                    for i in start..end {
-                        local.push((i, f(&items[i])));
-                    }
+            s.spawn(|| loop {
+                let Some((start, slice)) = queue.lock().unwrap().pop() else {
+                    break;
+                };
+                for (off, cell) in slice.iter_mut().enumerate() {
+                    *cell = Some(f(&items[start + off]));
                 }
-                results.lock().unwrap().extend(local);
             });
         }
     });
-    for (i, v) in results.into_inner().unwrap() {
-        out[i] = Some(v);
-    }
+    // The queue's chunk slices borrow `out`; end that borrow before the
+    // output is moved.
+    drop(queue);
     out.into_iter().map(|v| v.expect("worker missed an index")).collect()
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Persistent worker pool for the service path.
+/// Persistent worker pool for the service path, fed by a *bounded* queue:
+/// when every worker is busy and the queue is full, [`ThreadPool::execute`]
+/// blocks the submitter and [`ThreadPool::try_execute`] refuses the job —
+/// so a connection flood degrades into refused connections instead of
+/// unbounded threads or memory.
 pub struct ThreadPool {
-    sender: Option<mpsc::Sender<Job>>,
+    sender: Option<mpsc::SyncSender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
+    /// Pool with a default queue depth of 64 pending jobs.
     pub fn new(num_threads: usize) -> Self {
+        Self::with_queue(num_threads, 64)
+    }
+
+    /// Pool with an explicit bound on *queued* (not yet running) jobs.
+    pub fn with_queue(num_threads: usize, queue: usize) -> Self {
         let threads = effective_threads(num_threads);
-        let (sender, receiver) = mpsc::channel::<Job>();
+        let (sender, receiver) = mpsc::sync_channel::<Job>(queue.max(1));
         let receiver = Arc::new(Mutex::new(receiver));
         let workers = (0..threads)
             .map(|_| {
@@ -87,7 +98,18 @@ impl ThreadPool {
                 thread::spawn(move || loop {
                     let job = { rx.lock().unwrap().recv() };
                     match job {
-                        Ok(job) => job(),
+                        // Isolate panics: a panicking job (e.g. a service
+                        // handler fed hostile input) must cost one job,
+                        // not permanently remove a pool worker — with a
+                        // bounded pool that would be a capacity leak that
+                        // eventually bricks the service.
+                        Ok(job) => {
+                            let result =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                            if result.is_err() {
+                                eprintln!("warn: pool job panicked (worker recovered)");
+                            }
+                        }
                         Err(_) => break,
                     }
                 })
@@ -96,12 +118,24 @@ impl ThreadPool {
         Self { sender: Some(sender), workers }
     }
 
+    /// Submit a job, blocking while the queue is full.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
         self.sender
             .as_ref()
             .expect("pool shut down")
             .send(Box::new(job))
             .expect("all workers dead");
+    }
+
+    /// Submit a job only if the queue has room; returns `false` (dropping
+    /// the job) when the pool is saturated — the service's load-shedding
+    /// path.
+    pub fn try_execute<F: FnOnce() + Send + 'static>(&self, job: F) -> bool {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .try_send(Box::new(job))
+            .is_ok()
     }
 
     pub fn num_workers(&self) -> usize {
@@ -172,5 +206,40 @@ mod tests {
         }
         drop(pool); // join
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn bounded_pool_sheds_load_instead_of_growing() {
+        // One worker pinned on a gate job + queue depth 2: the first
+        // try_execute occupies the worker, two more fill the queue, and
+        // every further submission is refused instead of queueing
+        // unboundedly.
+        let pool = ThreadPool::with_queue(1, 2);
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        assert!(pool.try_execute(move || {
+            while !g.load(Ordering::SeqCst) {
+                thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }));
+        // Give the worker a moment to take the gate job off the queue.
+        thread::sleep(std::time::Duration::from_millis(20));
+        let accepted: usize = (0..10).filter(|_| pool.try_execute(|| {})).count();
+        assert!(accepted <= 3, "bounded queue accepted {accepted} jobs");
+        assert!(accepted >= 1, "queue refused jobs it had room for ({accepted})");
+        gate.store(true, Ordering::SeqCst);
+        drop(pool); // join: queued jobs still run, refused ones were dropped
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        let pool = ThreadPool::with_queue(1, 4);
+        pool.execute(|| panic!("boom"));
+        // The sole worker must survive the panic and run the next job.
+        let ok = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let o = Arc::clone(&ok);
+        pool.execute(move || o.store(true, Ordering::SeqCst));
+        drop(pool); // join
+        assert!(ok.load(Ordering::SeqCst), "worker died with the panicking job");
     }
 }

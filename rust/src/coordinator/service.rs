@@ -1,79 +1,192 @@
-//! Match service: hold a computed quantization coupling and serve
-//! point-to-point queries — the "fast computation of individual queries"
-//! capability of §2.2. Exposes an in-process API plus a line-oriented TCP
-//! protocol (`QUERY <i>` → `j:mass j:mass ...`, `MAP <i>` → `j`,
-//! `STATS` → summary) used by `qgw serve`.
+//! Match service: serve point-to-point coupling queries — the "fast
+//! computation of individual queries" capability of §2.2 — and, since the
+//! reference-index subsystem, *compute* matches on demand against a
+//! registry of prebuilt reference indices.
+//!
+//! Line-oriented TCP protocol (`qgw serve`):
+//!
+//! ```text
+//! QUERY <i>                    -> j:mass j:mass ...   (row of the coupling)
+//! MAP <i>                      -> j | NONE            (argmax assignment)
+//! STATS                        -> one summary line
+//! INDEXES                      -> registered index names
+//! MATCH <name> <n> <dim>       -> OK n=.. ref=.. loss=.. bound=.. ...
+//!   (followed by n upload lines of dim whitespace-separated floats: the
+//!    query cloud, matched against registry entry <name>; QUERY/MAP then
+//!    serve the *connection's* fresh coupling)
+//! QUIT
+//! ```
+//!
+//! Connections are handled on a bounded [`ThreadPool`]: a connection
+//! flood saturates the pool's queue and further connections are refused
+//! (dropped, counted in `refused`) instead of exhausting threads.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::qgw::QuantizationCoupling;
+use crate::index::IndexRegistry;
+use crate::qgw::{QgwConfig, QuantizationCoupling};
+
+use super::{MatchPipeline, Metrics, QueryInput, ThreadPool};
 
 pub struct MatchService {
-    coupling: Arc<QuantizationCoupling>,
+    coupling: Option<Arc<QuantizationCoupling>>,
+    registry: Option<Arc<IndexRegistry>>,
+    /// Solver knobs for `MATCH`-computed couplings (the structural knobs
+    /// — levels, leaf size, kmeans — always come from the index itself).
+    qgw: QgwConfig,
+    /// Pipeline seed of `MATCH`-computed couplings.
+    seed: u64,
     queries: AtomicU64,
+    matches: AtomicU64,
+    refused: AtomicU64,
 }
 
 impl MatchService {
+    /// Serve row queries over one precomputed coupling (the classic
+    /// `qgw serve` mode).
     pub fn new(coupling: QuantizationCoupling) -> Self {
-        Self { coupling: Arc::new(coupling), queries: AtomicU64::new(0) }
+        Self {
+            coupling: Some(Arc::new(coupling)),
+            registry: None,
+            qgw: QgwConfig::default(),
+            seed: 7,
+            queries: AtomicU64::new(0),
+            matches: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+        }
     }
 
-    /// `mu(x_i, .)` — sparse row of the coupling.
+    /// Serve `MATCH` requests against a registry of reference indices
+    /// (no base coupling; connections build their own via `MATCH`).
+    pub fn from_registry(registry: Arc<IndexRegistry>, qgw: QgwConfig, seed: u64) -> Self {
+        Self {
+            coupling: None,
+            registry: Some(registry),
+            qgw,
+            seed,
+            queries: AtomicU64::new(0),
+            matches: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach a registry (builder-style) so a classic service also
+    /// accepts `MATCH` requests, with the solver knobs and pipeline seed
+    /// those matches run under.
+    pub fn with_registry(
+        mut self,
+        registry: Arc<IndexRegistry>,
+        qgw: QgwConfig,
+        seed: u64,
+    ) -> Self {
+        self.registry = Some(registry);
+        self.qgw = qgw;
+        self.seed = seed;
+        self
+    }
+
+    /// `mu(x_i, .)` — sparse row of the base coupling.
     pub fn query(&self, i: usize) -> Vec<(usize, f64)> {
         self.queries.fetch_add(1, Ordering::Relaxed);
-        if i >= self.coupling.num_source_points() {
-            return Vec::new();
+        match self.coupling.as_deref() {
+            Some(c) if i < c.num_source_points() => c.row_query(i),
+            _ => Vec::new(),
         }
-        self.coupling.row_query(i)
     }
 
-    /// Hard assignment of point `i`.
+    /// Hard assignment of point `i` under the base coupling.
     pub fn map_point(&self, i: usize) -> Option<usize> {
         self.queries.fetch_add(1, Ordering::Relaxed);
-        if i >= self.coupling.num_source_points() {
-            return None;
+        match self.coupling.as_deref() {
+            Some(c) if i < c.num_source_points() => c.map_point(i),
+            _ => None,
         }
-        self.coupling.map_point(i)
     }
 
     pub fn num_queries(&self) -> u64 {
         self.queries.load(Ordering::Relaxed)
     }
 
+    /// `MATCH` requests served successfully.
+    pub fn num_matches(&self) -> u64 {
+        self.matches.load(Ordering::Relaxed)
+    }
+
+    /// Connections refused because the pool's bounded queue was full.
+    pub fn num_refused(&self) -> u64 {
+        self.refused.load(Ordering::Relaxed)
+    }
+
     pub fn stats(&self) -> String {
+        let base = match self.coupling.as_deref() {
+            Some(c) => format!(
+                "points={}x{} local_plans={} memory_bytes={}",
+                c.num_source_points(),
+                c.num_target_points(),
+                c.num_local_plans(),
+                c.memory_bytes(),
+            ),
+            None => "points=0x0 local_plans=0 memory_bytes=0".to_string(),
+        };
+        let reg = match &self.registry {
+            Some(r) => format!(" indices={} index_bytes={}", r.len(), r.total_bytes()),
+            None => String::new(),
+        };
         format!(
-            "points={}x{} local_plans={} memory_bytes={} queries={}",
-            self.coupling.num_source_points(),
-            self.coupling.num_target_points(),
-            self.coupling.num_local_plans(),
-            self.coupling.memory_bytes(),
+            "{base}{reg} queries={} matches={} refused={}",
             self.num_queries(),
+            self.num_matches(),
+            self.num_refused(),
         )
     }
 
-    /// Serve the TCP protocol until `shutdown` is set. Binds to `addr`
-    /// (e.g. `127.0.0.1:7979`); returns the bound address.
+    /// Serve the TCP protocol until `shutdown` is set, handling
+    /// connections on a bounded pool (32 workers, queue 8). Binds to
+    /// `addr` (e.g. `127.0.0.1:7979`); returns the bound address.
     pub fn serve(
         self: &Arc<Self>,
         addr: &str,
         shutdown: Arc<AtomicBool>,
+    ) -> std::io::Result<std::net::SocketAddr> {
+        self.serve_with_pool(addr, shutdown, 32, 8)
+    }
+
+    /// [`MatchService::serve`] with explicit pool sizing. Connections are
+    /// long-lived sessions, so `workers` bounds the *concurrent clients*;
+    /// at most `queue` more sit accepted-but-unserved waiting for a
+    /// worker (keep `queue` small — a queued client hangs silently until
+    /// a session ends). Beyond that, connections are dropped (the client
+    /// sees a close) and counted in `refused` — a flood degrades into
+    /// refusals instead of unbounded thread spawn.
+    pub fn serve_with_pool(
+        self: &Arc<Self>,
+        addr: &str,
+        shutdown: Arc<AtomicBool>,
+        workers: usize,
+        queue: usize,
     ) -> std::io::Result<std::net::SocketAddr> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let svc = Arc::clone(self);
         std::thread::spawn(move || {
+            let pool = ThreadPool::with_queue(workers, queue);
             while !shutdown.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let svc = Arc::clone(&svc);
-                        let shutdown = Arc::clone(&shutdown);
-                        std::thread::spawn(move || {
-                            let _ = svc.handle_conn(stream, &shutdown);
+                        let conn_svc = Arc::clone(&svc);
+                        let sd = Arc::clone(&shutdown);
+                        let accepted = pool.try_execute(move || {
+                            let _ = conn_svc.handle_conn(stream, &sd);
                         });
+                        if !accepted {
+                            // Pool saturated: the closure (and its stream)
+                            // was dropped, closing the connection.
+                            svc.refused.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(10));
@@ -81,6 +194,8 @@ impl MatchService {
                     Err(_) => break,
                 }
             }
+            // Dropping the pool joins its workers; handlers exit on the
+            // shutdown flag re-checks between timed reads.
         });
         Ok(local)
     }
@@ -99,12 +214,216 @@ impl MatchService {
         let mut writer = stream.try_clone()?;
         let mut reader = BufReader::new(stream);
         let mut line = String::new();
-        while !shutdown.load(Ordering::Relaxed) {
-            match reader.read_line(&mut line) {
-                Ok(0) => break, // EOF: client closed the connection.
-                Ok(_) => {}
-                // Timeout (or signal): keep any partial line already read
-                // and re-check the shutdown flag.
+        // The coupling this connection's QUERY/MAP verbs read: the base
+        // coupling until a successful MATCH replaces it.
+        let mut active: Option<Arc<QuantizationCoupling>> = self.coupling.clone();
+        loop {
+            if read_line_shutdown(&mut reader, &mut line, shutdown)? == 0 {
+                break; // EOF or shutdown.
+            }
+            let mut parts = line.split_whitespace();
+            let response = match (parts.next(), parts.next()) {
+                (Some("QUERY"), Some(i)) => match i.parse::<usize>() {
+                    Ok(i) => {
+                        self.queries.fetch_add(1, Ordering::Relaxed);
+                        match active.as_deref() {
+                            Some(c) if i < c.num_source_points() => c
+                                .row_query(i)
+                                .iter()
+                                .map(|(j, w)| format!("{j}:{w:.9}"))
+                                .collect::<Vec<_>>()
+                                .join(" "),
+                            Some(_) => String::new(),
+                            None => "ERR no coupling (run MATCH <name> <n> <dim>)".to_string(),
+                        }
+                    }
+                    Err(_) => "ERR bad index".to_string(),
+                },
+                (Some("MAP"), Some(i)) => match i.parse::<usize>() {
+                    Ok(i) => {
+                        self.queries.fetch_add(1, Ordering::Relaxed);
+                        match active.as_deref() {
+                            Some(c) if i < c.num_source_points() => c
+                                .map_point(i)
+                                .map(|j| j.to_string())
+                                .unwrap_or_else(|| "NONE".to_string()),
+                            Some(_) => "NONE".to_string(),
+                            None => "ERR no coupling (run MATCH <name> <n> <dim>)".to_string(),
+                        }
+                    }
+                    Err(_) => "ERR bad index".to_string(),
+                },
+                (Some("MATCH"), Some(name)) => {
+                    let n = parts.next().and_then(|t| t.parse::<usize>().ok());
+                    let dim = parts.next().and_then(|t| t.parse::<usize>().ok());
+                    match (n, dim) {
+                        (Some(n), Some(dim)) => {
+                            match self.handle_match(name, n, dim, &mut reader, shutdown)? {
+                                Ok((coupling, summary)) => {
+                                    active = Some(Arc::new(coupling));
+                                    summary
+                                }
+                                Err(msg) => format!("ERR {msg}"),
+                            }
+                        }
+                        _ => "ERR usage: MATCH <name> <n> <dim>".to_string(),
+                    }
+                }
+                (Some("INDEXES"), _) => match &self.registry {
+                    Some(reg) => {
+                        let names = reg.names();
+                        if names.is_empty() {
+                            "EMPTY".to_string()
+                        } else {
+                            names.join(" ")
+                        }
+                    }
+                    None => "ERR no registry configured".to_string(),
+                },
+                (Some("STATS"), _) => self.stats(),
+                (Some("QUIT"), _) => break,
+                _ => "ERR unknown command".to_string(),
+            };
+            writeln!(writer, "{response}")?;
+            line.clear();
+        }
+        Ok(())
+    }
+
+    /// Read an uploaded query cloud and match it against a registry
+    /// entry. Outer `Err` = connection-level failure (tear down); inner
+    /// `Err` = protocol-level failure (reported to the client). Protocol
+    /// errors *consume the announced payload first* so the upload lines
+    /// are never re-parsed as commands — the connection stays usable
+    /// after any reported error. The one exception is an oversized
+    /// header, which tears the connection down instead of reading an
+    /// attacker-controlled amount of data.
+    #[allow(clippy::type_complexity)]
+    fn handle_match(
+        &self,
+        name: &str,
+        n: usize,
+        dim: usize,
+        reader: &mut BufReader<TcpStream>,
+        shutdown: &AtomicBool,
+    ) -> std::io::Result<Result<(QuantizationCoupling, String), String>> {
+        if dim == 0 || n.saturating_mul(dim) > 10_000_000 {
+            // Refusing to read the payload desyncs the stream by design;
+            // drop the connection rather than stream-parse an unbounded
+            // (or 0-dim, n-unbounded) announcement.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("invalid MATCH upload header {n}x{dim} (cap 10M coordinates)"),
+            ));
+        }
+        if n == 0 {
+            return Ok(Err("empty upload (n must be positive)".to_string()));
+        }
+        // Read the announced payload unconditionally; `Vec::new` grows
+        // with the data actually received instead of pre-reserving from
+        // the client-controlled header, and no line may push more than
+        // `dim` values (the per-line read itself is capped by
+        // `MAX_LINE_BYTES`).
+        let mut coords: Vec<f64> = Vec::new();
+        let mut parse_err: Option<String> = None;
+        let mut line = String::new();
+        for _ in 0..n {
+            line.clear();
+            if read_line_shutdown(reader, &mut line, shutdown)? == 0 {
+                return Ok(Err("upload truncated".to_string()));
+            }
+            if parse_err.is_some() {
+                continue; // drain the rest of the payload
+            }
+            let before = coords.len();
+            for tok in line.split_whitespace() {
+                if coords.len() - before == dim {
+                    parse_err = Some(format!("more than {dim} coordinates on a line"));
+                    break;
+                }
+                match tok.parse::<f64>() {
+                    Ok(v) if v.is_finite() => coords.push(v),
+                    Ok(_) => {
+                        parse_err = Some(format!("non-finite coordinate {tok:?}"));
+                        break;
+                    }
+                    Err(_) => {
+                        parse_err = Some(format!("bad coordinate {tok:?}"));
+                        break;
+                    }
+                }
+            }
+            if parse_err.is_none() && coords.len() - before != dim {
+                parse_err = Some(format!(
+                    "expected {dim} coordinates per line, got {}",
+                    coords.len() - before
+                ));
+            }
+        }
+        if let Some(msg) = parse_err {
+            return Ok(Err(msg));
+        }
+        let Some(registry) = &self.registry else {
+            return Ok(Err("no registry configured".to_string()));
+        };
+        let Some(index) = registry.get(name) else {
+            return Ok(Err(format!("unknown index {name:?} (try INDEXES)")));
+        };
+        if index.kind() != crate::index::IndexKind::Cloud {
+            return Ok(Err(format!(
+                "index {name:?} is a {} reference; MATCH uploads are point clouds",
+                index.kind().name()
+            )));
+        }
+        let cloud = crate::core::PointCloud::new(coords, dim);
+
+        // Structural knobs come from the index (they shape the tree, and
+        // the partition size pins to the build's realized m); solver
+        // knobs stay with the service configuration.
+        let cfg = index.structural_config(&self.qgw);
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg, &metrics);
+        pipe.seed = self.seed;
+        let report = match pipe.run_indexed(QueryInput::Cloud { x: &cloud }, &index) {
+            Ok(r) => r,
+            Err(e) => return Ok(Err(e.to_string())),
+        };
+        self.matches.fetch_add(1, Ordering::Relaxed);
+        let summary = format!(
+            "OK n={} ref={} loss={:.6} bound={:.6} levels={} leaves={}",
+            cloud.len(),
+            index.num_points(),
+            report.result.gw_loss,
+            report.result.error_bound,
+            report.levels,
+            report.result.num_local_matchings,
+        );
+        Ok(Ok((report.result.coupling, summary)))
+    }
+}
+
+/// Maximum accepted request/upload line length. A newline-free stream
+/// would otherwise grow the line buffer without bound — the read is cut
+/// off (connection torn down) once a line exceeds this.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Read one `\n`-terminated line (appended to `line`), retrying on the
+/// 50ms read timeout while re-checking the shutdown flag, and enforcing
+/// [`MAX_LINE_BYTES`]. Returns `Ok(0)` on client EOF *or* shutdown;
+/// partial data read before a timeout is kept across retries.
+fn read_line_shutdown(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    shutdown: &AtomicBool,
+) -> std::io::Result<usize> {
+    let mut read_total = 0usize;
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return Ok(0);
+        }
+        let (consumed, done) = {
+            let buf = match reader.fill_buf() {
+                Ok(b) => b,
                 Err(e)
                     if matches!(
                         e.kind(),
@@ -116,34 +435,32 @@ impl MatchService {
                     continue;
                 }
                 Err(e) => return Err(e),
-            }
-            let mut parts = line.split_whitespace();
-            let response = match (parts.next(), parts.next()) {
-                (Some("QUERY"), Some(i)) => match i.parse::<usize>() {
-                    Ok(i) => {
-                        let row = self.query(i);
-                        row.iter()
-                            .map(|(j, w)| format!("{j}:{w:.9}"))
-                            .collect::<Vec<_>>()
-                            .join(" ")
-                    }
-                    Err(_) => "ERR bad index".to_string(),
-                },
-                (Some("MAP"), Some(i)) => match i.parse::<usize>() {
-                    Ok(i) => self
-                        .map_point(i)
-                        .map(|j| j.to_string())
-                        .unwrap_or_else(|| "NONE".to_string()),
-                    Err(_) => "ERR bad index".to_string(),
-                },
-                (Some("STATS"), _) => self.stats(),
-                (Some("QUIT"), _) => break,
-                _ => "ERR unknown command".to_string(),
             };
-            writeln!(writer, "{response}")?;
-            line.clear();
+            if buf.is_empty() {
+                return Ok(read_total); // EOF
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    line.push_str(&String::from_utf8_lossy(&buf[..=pos]));
+                    (pos + 1, true)
+                }
+                None => {
+                    line.push_str(&String::from_utf8_lossy(buf));
+                    (buf.len(), false)
+                }
+            }
+        };
+        reader.consume(consumed);
+        read_total += consumed;
+        if done {
+            return Ok(read_total);
         }
-        Ok(())
+        if line.len() > MAX_LINE_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "request line exceeds the length cap",
+            ));
+        }
     }
 }
 
@@ -151,6 +468,7 @@ impl MatchService {
 mod tests {
     use super::*;
     use crate::core::{MmSpace, PointCloud};
+    use crate::index::RefIndex;
     use crate::prng::{Gaussian, Pcg32};
     use crate::qgw::{qgw_match, QgwConfig};
 
@@ -223,5 +541,76 @@ mod tests {
         let mut tail = String::new();
         let n = reader.read_line(&mut tail).expect("server never closed the silent connection");
         assert_eq!(n, 0, "expected EOF after shutdown, got {tail:?}");
+    }
+
+    fn registry_service() -> (PointCloud, QgwConfig, Arc<MatchService>) {
+        let mut rng = Pcg32::seed_from(5);
+        let mut g = Gaussian::new();
+        let y = PointCloud::new((0..200 * 3).map(|_| g.sample(&mut rng)).collect(), 3);
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(5) };
+        let registry = Arc::new(IndexRegistry::new(usize::MAX));
+        registry.insert("shapes", RefIndex::build_cloud(&y, None, &cfg, 7));
+        let svc = Arc::new(MatchService::from_registry(registry, cfg.clone(), 7));
+        (y, cfg, svc)
+    }
+
+    #[test]
+    fn match_verb_serves_uploaded_query_against_registry() {
+        use std::io::{BufRead, BufReader, Write};
+        let (_, _, svc) = registry_service();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = svc.serve("127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+
+        // Registry listing.
+        writeln!(stream, "INDEXES").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "shapes", "INDEXES reply: {line:?}");
+
+        // QUERY before any MATCH has no coupling to read.
+        line.clear();
+        writeln!(stream, "MAP 0").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR no coupling"), "premature MAP reply: {line:?}");
+
+        // Upload a 60-point query cloud and match it.
+        let mut rng = Pcg32::seed_from(9);
+        let mut g = Gaussian::new();
+        writeln!(stream, "MATCH shapes 60 3").unwrap();
+        for _ in 0..60 {
+            writeln!(
+                stream,
+                "{} {} {}",
+                g.sample(&mut rng),
+                g.sample(&mut rng),
+                g.sample(&mut rng)
+            )
+            .unwrap();
+        }
+        line.clear();
+        // The match can take a moment at test sizes.
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(60))).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK n=60 ref=200"), "MATCH reply: {line:?}");
+
+        // The connection's QUERY/MAP now serve the fresh coupling.
+        line.clear();
+        writeln!(stream, "MAP 0").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let j: usize = line.trim().parse().expect("MAP after MATCH should return an id");
+        assert!(j < 200);
+
+        // Unknown index name is a clean protocol error.
+        line.clear();
+        writeln!(stream, "MATCH nosuch 1 1").unwrap();
+        writeln!(stream, "0.0").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR unknown index"), "reply: {line:?}");
+
+        writeln!(stream, "QUIT").unwrap();
+        assert_eq!(svc.num_matches(), 1);
+        shutdown.store(true, Ordering::Relaxed);
     }
 }

@@ -19,9 +19,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::coordinator::{MatchPipeline, Metrics, PipelineInput, QueryInput};
 use crate::core::MmSpace;
 use crate::data::blobs::make_blobs;
 use crate::gw::cg_gw;
+use crate::index::RefIndex;
 use crate::prng::Pcg32;
 use crate::qgw::{
     balanced_m, hier_qfgw_match, hier_qgw_match, qgw_match, PartitionSize, QfgwConfig, QgwConfig,
@@ -30,6 +32,9 @@ use crate::testutil::coord_feature;
 
 /// Leaf resolution of the hierarchical series.
 pub const HIER_LEAF: usize = 32;
+
+/// Queries served per reference in the index-amortization series.
+pub const INDEX_QUERIES: usize = 2;
 
 #[derive(Clone, Debug)]
 pub struct Point {
@@ -57,6 +62,14 @@ pub struct Point {
     pub hier_fused_secs: f64,
     /// Top-level (= per-level) partition size of the hierarchical run.
     pub hier_m: usize,
+    /// One-time reference-index build (the amortized cost).
+    pub index_build_secs: f64,
+    /// Mean per-query pipeline time against the resident index
+    /// ([`INDEX_QUERIES`] queries, reference side never recomputed).
+    pub index_query_secs: f64,
+    /// Mean per-query *cold* pipeline time at the same config (reference
+    /// side re-partitioned and re-quantized every query).
+    pub cold_query_secs: f64,
 }
 
 pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
@@ -113,6 +126,33 @@ pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
             let start = Instant::now();
             let _ = hier_qfgw_match(&x, &y, &fx, &fy, &fused_cfg, &mut rng);
             let hier_fused_secs = start.elapsed().as_secs_f64();
+
+            // Reference-index amortization series: build the reference
+            // side once, then serve INDEX_QUERIES queries from it; the
+            // cold baseline pays the reference side per query (identical
+            // config and pipeline, so the delta is exactly the amortized
+            // work).
+            let metrics = Metrics::new();
+            let pipe_seed = seed ^ n as u64;
+            let start = Instant::now();
+            let index = RefIndex::build_cloud(&y, None, &hier_cfg, pipe_seed);
+            let index_build_secs = start.elapsed().as_secs_f64();
+            let (mut cold_total, mut idx_total) = (0.0f64, 0.0f64);
+            for q in 0..INDEX_QUERIES {
+                let mut pipe = MatchPipeline::new(hier_cfg.clone(), &metrics);
+                pipe.seed = pipe_seed.wrapping_add(q as u64);
+                let t = Instant::now();
+                let _ = pipe.run(PipelineInput::Clouds { x: &x, y: &y });
+                cold_total += t.elapsed().as_secs_f64();
+                let t = Instant::now();
+                let _ = pipe
+                    .run_indexed(QueryInput::Cloud { x: &x }, &index)
+                    .expect("indexed match");
+                idx_total += t.elapsed().as_secs_f64();
+            }
+            let cold_query_secs = cold_total / INDEX_QUERIES as f64;
+            let index_query_secs = idx_total / INDEX_QUERIES as f64;
+
             Point {
                 n,
                 m,
@@ -125,6 +165,9 @@ pub fn sweep(ns: &[usize], seed: u64) -> Vec<Point> {
                 adapt_split,
                 hier_fused_secs,
                 hier_m,
+                index_build_secs,
+                index_query_secs,
+                cold_query_secs,
             }
         })
         .collect()
@@ -152,13 +195,15 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
     let pts = sweep(&ns, seed);
     writeln!(
         w,
-        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10} {:>10} {:>16} {:>12}",
-        "N", "m", "qGW time", "GW time", "hier m", "hier time", "adapt time", "prn/skp/spl", "hier qFGW"
+        "{:>8} {:>6} {:>10} {:>10} {:>8} {:>10} {:>10} {:>16} {:>12} {:>10} {:>10} {:>10}",
+        "N", "m", "qGW time", "GW time", "hier m", "hier time", "adapt time", "prn/skp/spl",
+        "hier qFGW", "idx build", "idx query", "cold query"
     )?;
     for p in &pts {
         writeln!(
             w,
-            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3} {:>10.3} {:>16} {:>12.3}",
+            "{:>8} {:>6} {:>10.3} {:>10} {:>8} {:>10.3} {:>10.3} {:>16} {:>12.3} {:>10.3} \
+             {:>10.3} {:>10.3}",
             p.n,
             p.m,
             p.qgw_secs,
@@ -167,7 +212,10 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
             p.hier_secs,
             p.adapt_secs,
             format!("{}/{}/{}", p.adapt_pruned, p.adapt_preskipped, p.adapt_split),
-            p.hier_fused_secs
+            p.hier_fused_secs,
+            p.index_build_secs,
+            p.index_query_secs,
+            p.cold_query_secs
         )?;
     }
     let slope = loglog_slope(&pts.iter().map(|p| (p.n, p.qgw_secs)).collect::<Vec<_>>());
@@ -186,6 +234,16 @@ pub fn run(scale: f64, seed: u64, w: &mut dyn Write) -> Result<()> {
     writeln!(
         w,
         "log-log slope of 2-level hier qFGW (leaf {HIER_LEAF}, 1-D features) time vs N: {fslope:.2}"
+    )?;
+    let mean_speedup = pts
+        .iter()
+        .map(|p| p.cold_query_secs / p.index_query_secs.max(1e-12))
+        .sum::<f64>()
+        / pts.len().max(1) as f64;
+    writeln!(
+        w,
+        "reference-index amortization ({INDEX_QUERIES} queries/ref, build once): mean \
+         per-query speedup {mean_speedup:.2}x over cold pipeline runs"
     )?;
     Ok(())
 }

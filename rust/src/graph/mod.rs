@@ -69,6 +69,26 @@ impl Graph {
         self.adj[u].len()
     }
 
+    /// Raw adjacency lists (serialization support — the reference-index
+    /// store persists them verbatim).
+    pub(crate) fn adjacency(&self) -> &[Vec<(u32, f64)>] {
+        &self.adj
+    }
+
+    /// Rebuild from raw adjacency lists. The exact neighbor order is
+    /// preserved (unlike replaying `add_edge`), so traversals over a
+    /// deserialized graph are bit-identical to the original.
+    pub(crate) fn from_adjacency(adj: Vec<Vec<(u32, f64)>>, num_edges: usize) -> Self {
+        let n = adj.len();
+        for list in &adj {
+            for &(v, w) in list {
+                assert!((v as usize) < n, "adjacency neighbor out of range");
+                assert!(w >= 0.0, "negative edge weight");
+            }
+        }
+        Self { adj, num_edges }
+    }
+
     /// Is the graph connected? (BFS from node 0.)
     pub fn is_connected(&self) -> bool {
         let n = self.num_nodes();

@@ -6,7 +6,7 @@
 use crate::core::DenseMatrix;
 use crate::gw::loss::product_coupling_into;
 use crate::gw::workspace::{mean_abs, GwWorkspace};
-use crate::ot::{emd, round_to_coupling, sinkhorn_log_into, SinkhornOptions};
+use crate::ot::{emd_into, round_to_coupling, sinkhorn_log_into, SinkhornOptions};
 
 #[derive(Clone, Debug)]
 pub struct GwOptions {
@@ -144,7 +144,10 @@ pub fn cg_gw(
 /// allocation-per-call path paid: the gradient doubles as the line
 /// search's `<L(T), E>` tensor (T is unchanged between them), and the raw
 /// `Cx T Cy^T` product is kept from the gradient evaluation instead of
-/// being recontracted. Bit-identical to the reference path.
+/// being recontracted. The inner network-simplex LP also runs through the
+/// workspace ([`crate::ot::EmdWorkspace`]) and writes its plan straight
+/// into the search-direction buffer — zero heap allocations per outer
+/// iteration in steady state. Bit-identical to the reference path.
 pub fn cg_gw_with(
     cx: &DenseMatrix,
     cy: &DenseMatrix,
@@ -154,7 +157,7 @@ pub fn cg_gw_with(
     tol: f64,
     ws: &mut GwWorkspace,
 ) -> GwResult {
-    let GwWorkspace { inv, a_mat, tensor, t, next, prod, scratch, .. } = ws;
+    let GwWorkspace { inv, a_mat, tensor, t, next, prod, scratch, emd: emd_ws, .. } = ws;
     inv.prepare(cx, cy, a, b);
     product_coupling_into(a, b, t);
     inv.cost_tensor_into(cx, t, a_mat, tensor);
@@ -168,12 +171,12 @@ pub fn cg_gw_with(
         inv.raw_product_into(cx, t, a_mat, prod);
         tensor.copy_from(prod);
         inv.finish_tensor(tensor);
-        let dir = emd(tensor, a, b).plan;
+        // The LP minimizer lands directly in `next` (no throwaway plan).
+        emd_into(tensor, a, b, emd_ws, next);
         // E = D - T; line search f(T + tau E) = f(T) + b tau + c tau^2:
         //   b = <constC part...> handled via tensors:
         //   <L(T), E> appears twice (loss is quadratic, symmetric).
         let e = &mut *next;
-        e.copy_from(&dir);
         e.axpy(-1.0, t);
         // c = -2 <Cx E Cy, E>  (from the -2 CxTCy term).
         inv.raw_product_into(cx, e, a_mat, scratch);

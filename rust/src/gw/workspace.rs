@@ -22,7 +22,7 @@
 //! guard this.
 
 use crate::core::DenseMatrix;
-use crate::ot::SinkhornWorkspace;
+use crate::ot::{EmdWorkspace, SinkhornWorkspace};
 
 /// The loop-invariant factorization of one `(Cx, Cy, a, b)` problem:
 /// `f1 = Cx.^2 a`, `f2 = Cy.^2 b`, and `Cy^T` — computed once per
@@ -119,6 +119,9 @@ pub struct GwWorkspace {
     /// Second raw product `Cx E Cy^T` (CG) / combined FGW cost (fused).
     pub(crate) scratch: DenseMatrix,
     pub(crate) sinkhorn: SinkhornWorkspace,
+    /// Network-simplex buffers for CG's inner LP (the last per-outer-
+    /// iteration allocator in the unregularized baseline).
+    pub(crate) emd: EmdWorkspace,
 }
 
 impl GwWorkspace {

@@ -1,0 +1,491 @@
+//! Reference index: precomputed quantized hierarchies served one-to-many.
+//!
+//! The paper's central speedup is that quantization makes the
+//! reference-side structure reusable — the partition, the per-node
+//! representative sub-metrics, the local orderings are all properties of
+//! *one* space, not of a pair (§2.2 motivates "fast computation of
+//! individual queries"). Yet a cold [`crate::coordinator::MatchPipeline`]
+//! run re-partitions, re-quantizes, and re-scans the reference from
+//! scratch for every query pair. This module makes the reference a
+//! persistent, shareable artifact:
+//!
+//! * [`RefIndex`] — everything reference-side the hierarchy computes
+//!   once: the nested partition tree ([`crate::qgw::RefNode`]), per-node
+//!   representative sub-metric matrices, rep feature slices for fused
+//!   inputs, anchor-sorted leaf orderings, and the per-node quantization
+//!   eccentricities the Theorem-6 bound terms read. Built by
+//!   [`RefIndex::build_cloud`] / [`RefIndex::build_graph`]; matched
+//!   against via [`crate::coordinator::MatchPipeline::run_indexed`] or
+//!   [`crate::qgw::hier_match_indexed`] directly.
+//! * [`store`] — a versioned, checksummed binary on-disk format
+//!   (`save` / `load`), so indices survive process restarts and ship
+//!   between build and serving fleets.
+//! * [`IndexRegistry`] — an in-process registry of named indices,
+//!   LRU-bounded by total `memory_bytes`, which the match service's
+//!   `MATCH <name>` protocol verb resolves against.
+//!
+//! **Byte-identity contract**: matching a query against
+//! `RefIndex::build_*(y, .., cfg, seed)` produces exactly the coupling of
+//! the fused build+match path at the same pipeline `seed` — on clouds,
+//! fused clouds, and graphs, at any thread count (the reference-side
+//! recursion chain is a pure function of `(seed, level, block)`; see the
+//! seeding notes in `qgw/hier.rs`). Property-tested in
+//! `rust/tests/properties.rs`.
+
+mod store;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::core::{PointCloud, QuantizedSpace};
+use crate::graph::Graph;
+use crate::prng::Pcg32;
+use crate::qgw::{
+    build_ref_tree, split_seed, stage_partition, FeatureSet, PartitionSize, QgwConfig, RefNode,
+    Substrate,
+};
+
+/// What kind of metric space the reference is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKind {
+    Cloud,
+    Graph,
+}
+
+impl IndexKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexKind::Cloud => "cloud",
+            IndexKind::Graph => "graph",
+        }
+    }
+}
+
+/// Build-time parameters baked into an index. A match must agree on the
+/// structural knobs (`levels`, `leaf_size`, and `kmeans` for clouds) —
+/// they shape the tree itself — while `tolerance` / `prune_ahead` /
+/// thread counts remain free per query.
+#[derive(Clone, Debug)]
+pub struct IndexParams {
+    pub kind: IndexKind,
+    pub levels: usize,
+    pub leaf_size: usize,
+    pub kmeans: bool,
+    /// Top-level block count of the reference partition.
+    pub m: usize,
+    /// The pipeline seed whose reference-side chain the tree replays; a
+    /// query matched at the same seed reproduces the cold pipeline run
+    /// byte-for-byte.
+    pub seed: u64,
+}
+
+/// A prebuilt quantized reference hierarchy, ready to serve many queries.
+pub struct RefIndex {
+    params: IndexParams,
+    root: RefNode,
+    memory_bytes: usize,
+}
+
+impl RefIndex {
+    /// Build a cloud reference index. Mirrors the pipeline's reference
+    /// side exactly: the top partition comes from the seed's lane-1
+    /// stream (Voronoi when features are attached — the qFGW partitioner
+    /// — and the shared k-means/Voronoi choice otherwise), and the nested
+    /// tree replays the reference-side recursion chain.
+    pub fn build_cloud(
+        y: &PointCloud,
+        fy: Option<&FeatureSet>,
+        cfg: &QgwConfig,
+        seed: u64,
+    ) -> RefIndex {
+        let mut sub = Substrate::owned_cloud(y.clone());
+        if let Some(f) = fy {
+            assert_eq!(f.len(), y.len());
+            sub = sub.with_owned_features(f.clone());
+        }
+        Self::from_substrate(IndexKind::Cloud, sub, cfg, seed)
+    }
+
+    /// Build a graph reference index (Fluid-community top partition,
+    /// nested Fluid re-partitions, optional WL-style features).
+    pub fn build_graph(
+        y: &Graph,
+        mu_y: &[f64],
+        fy: Option<&FeatureSet>,
+        cfg: &QgwConfig,
+        seed: u64,
+    ) -> RefIndex {
+        assert_eq!(y.num_nodes(), mu_y.len());
+        let mut sub = Substrate::owned_graph(y.clone(), mu_y.to_vec());
+        if let Some(f) = fy {
+            assert_eq!(f.len(), mu_y.len());
+            sub = sub.with_owned_features(f.clone());
+        }
+        Self::from_substrate(IndexKind::Graph, sub, cfg, seed)
+    }
+
+    /// Shared build tail: the top partition comes from the *same*
+    /// stage-1 partitioner selection and lane-1 seed stream the pipeline
+    /// uses ([`stage_partition`]), so partitioner drift between the cold
+    /// and indexed paths is impossible by construction.
+    fn from_substrate(
+        kind: IndexKind,
+        sub: Substrate<'static>,
+        cfg: &QgwConfig,
+        seed: u64,
+    ) -> RefIndex {
+        let my = cfg.size.resolve(sub.len());
+        let mut rng = Pcg32::seed_from(split_seed(seed, 1));
+        let qy = stage_partition(&sub, my, cfg.kmeans, &mut rng);
+        Self::from_top(kind, sub, qy, cfg, seed)
+    }
+
+    fn from_top(
+        kind: IndexKind,
+        sub: Substrate<'static>,
+        q: QuantizedSpace,
+        cfg: &QgwConfig,
+        seed: u64,
+    ) -> RefIndex {
+        let params = IndexParams {
+            kind,
+            levels: cfg.levels.max(1),
+            leaf_size: cfg.leaf_size.max(1),
+            kmeans: cfg.kmeans,
+            m: q.num_blocks(),
+            seed,
+        };
+        // Lane 2 is the pipeline's hierarchy seed; build_ref_tree derives
+        // the reference-side (lane 1) chain from it internally.
+        let root = build_ref_tree(sub, q, cfg, split_seed(seed, 2));
+        Self::from_parts(params, root)
+    }
+
+    pub(crate) fn from_parts(params: IndexParams, root: RefNode) -> RefIndex {
+        let memory_bytes = root.memory_bytes();
+        RefIndex { params, root, memory_bytes }
+    }
+
+    pub fn params(&self) -> &IndexParams {
+        &self.params
+    }
+
+    pub fn kind(&self) -> IndexKind {
+        self.params.kind
+    }
+
+    /// The root of the reference tree (feeds
+    /// [`crate::qgw::hier_match_indexed`]).
+    pub fn root(&self) -> &RefNode {
+        &self.root
+    }
+
+    /// Points / nodes of the underlying reference space.
+    pub fn num_points(&self) -> usize {
+        self.root.num_points()
+    }
+
+    /// Can this index serve fused (feature-blended) queries?
+    pub fn has_features(&self) -> bool {
+        self.root.has_features()
+    }
+
+    pub fn feature_dim(&self) -> Option<usize> {
+        self.root.feature_dim()
+    }
+
+    /// Recursion nodes materialized in the tree.
+    pub fn node_count(&self) -> usize {
+        self.root.node_count()
+    }
+
+    /// Resident bytes of the whole tree — what the registry's LRU budget
+    /// counts.
+    pub fn memory_bytes(&self) -> usize {
+        self.memory_bytes
+    }
+
+    /// Overlay this index's structural knobs — levels, leaf size, kmeans,
+    /// and the partition size pinned to the build's realized `m` — onto a
+    /// base config's solver knobs. The single way serving paths (the CLI
+    /// `index match` verb, the service's `MATCH` handler) derive a
+    /// [`validate_config`](RefIndex::validate_config)-compatible config,
+    /// so the two cannot drift apart.
+    pub fn structural_config(&self, base: &QgwConfig) -> QgwConfig {
+        QgwConfig {
+            levels: self.params.levels,
+            leaf_size: self.params.leaf_size,
+            kmeans: self.params.kmeans,
+            size: PartitionSize::Count(self.params.m),
+            ..base.clone()
+        }
+    }
+
+    /// Check that a match configuration is structurally compatible with
+    /// this index. `levels` / `leaf_size` (and `kmeans` for clouds) shape
+    /// the nested partitions themselves, so a mismatch would silently
+    /// break the byte-identity contract — or walk off the tree.
+    pub fn validate_config(&self, cfg: &QgwConfig) -> Result<()> {
+        if cfg.levels.max(1) != self.params.levels {
+            bail!(
+                "index built with levels={} cannot serve a levels={} match",
+                self.params.levels,
+                cfg.levels.max(1)
+            );
+        }
+        if cfg.leaf_size.max(1) != self.params.leaf_size {
+            bail!(
+                "index built with leaf_size={} cannot serve a leaf_size={} match",
+                self.params.leaf_size,
+                cfg.leaf_size.max(1)
+            );
+        }
+        if self.params.kind == IndexKind::Cloud && cfg.kmeans != self.params.kmeans {
+            bail!(
+                "index built with kmeans={} cannot serve a kmeans={} match",
+                self.params.kmeans,
+                cfg.kmeans
+            );
+        }
+        // The partition-size knob must realize the build's reference-side
+        // block count, or the served coupling silently diverges from the
+        // cold run at the same seed+config (the byte-identity contract).
+        let resolved = cfg.size.resolve(self.num_points());
+        if resolved != self.params.m {
+            bail!(
+                "match partition size resolves to m={resolved} on the reference but the \
+                 index was built with m={} (pass --m {} or the build's fraction)",
+                self.params.m,
+                self.params.m
+            );
+        }
+        Ok(())
+    }
+
+    /// Persist to the versioned, checksummed binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        store::save_index(self, path)
+    }
+
+    /// Load an index persisted by [`RefIndex::save`]. Fails cleanly on
+    /// truncation, corruption (checksum), or a version mismatch.
+    pub fn load(path: &Path) -> Result<RefIndex> {
+        store::load_index(path)
+    }
+
+    /// One-line description for logs and the service's `INDEXES` verb.
+    pub fn describe(&self) -> String {
+        format!(
+            "kind={} n={} m={} levels={} leaf={} nodes={} features={} bytes={}",
+            self.params.kind.name(),
+            self.num_points(),
+            self.params.m,
+            self.params.levels,
+            self.params.leaf_size,
+            self.node_count(),
+            self.feature_dim().map(|d| d.to_string()).unwrap_or_else(|| "-".into()),
+            self.memory_bytes
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+struct Entry {
+    index: Arc<RefIndex>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    entries: HashMap<String, Entry>,
+    tick: u64,
+    total_bytes: usize,
+    evictions: u64,
+}
+
+/// In-process registry of named reference indices, LRU-bounded by total
+/// resident `memory_bytes`. Inserting past the budget evicts the
+/// least-recently-used *other* entries (a single index larger than the
+/// whole budget is still admitted — the bound governs co-residency, not
+/// admission). Handles are `Arc`s, so an index being served stays alive
+/// through its own eviction.
+pub struct IndexRegistry {
+    max_bytes: usize,
+    inner: Mutex<RegistryInner>,
+}
+
+impl IndexRegistry {
+    pub fn new(max_bytes: usize) -> Self {
+        Self { max_bytes, inner: Mutex::new(RegistryInner::default()) }
+    }
+
+    /// Insert (or replace) a named index; returns the names evicted to
+    /// fit the memory budget.
+    pub fn insert(&self, name: &str, index: RefIndex) -> Vec<String> {
+        let index = Arc::new(index);
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let bytes = index.memory_bytes();
+        if let Some(old) = g.entries.insert(name.to_string(), Entry { index, last_used: tick })
+        {
+            g.total_bytes -= old.index.memory_bytes();
+        }
+        g.total_bytes += bytes;
+        let mut evicted = Vec::new();
+        while g.total_bytes > self.max_bytes && g.entries.len() > 1 {
+            // Ticks are unique, so the minimum is unambiguous at any
+            // insertion order; the just-inserted entry holds the newest
+            // tick and is never the victim while others remain.
+            let victim = g
+                .entries
+                .iter()
+                .filter(|(k, _)| k.as_str() != name)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            if let Some(e) = g.entries.remove(&victim) {
+                g.total_bytes -= e.index.memory_bytes();
+                g.evictions += 1;
+                evicted.push(victim);
+            }
+        }
+        evicted
+    }
+
+    /// Look up a named index, bumping its recency.
+    pub fn get(&self, name: &str) -> Option<Arc<RefIndex>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        g.entries.get_mut(name).map(|e| {
+            e.last_used = tick;
+            Arc::clone(&e.index)
+        })
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let g = self.inner.lock().unwrap();
+        let mut names: Vec<String> = g.entries.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes across all entries.
+    pub fn total_bytes(&self) -> usize {
+        self.inner.lock().unwrap().total_bytes
+    }
+
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    /// Entries evicted by the LRU bound since construction.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Gaussian, Rng};
+
+    fn cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        PointCloud::new((0..n * 3).map(|_| g.sample(&mut rng)).collect(), 3)
+    }
+
+    fn tiny_index(seed: u64) -> RefIndex {
+        let y = cloud(120, seed);
+        let cfg = QgwConfig {
+            levels: 2,
+            leaf_size: 8,
+            ..QgwConfig::with_count(4)
+        };
+        RefIndex::build_cloud(&y, None, &cfg, seed)
+    }
+
+    #[test]
+    fn build_populates_tree_and_params() {
+        let idx = tiny_index(1);
+        assert_eq!(idx.kind(), IndexKind::Cloud);
+        assert_eq!(idx.params().levels, 2);
+        assert_eq!(idx.params().m, 4);
+        assert_eq!(idx.num_points(), 120);
+        assert!(idx.node_count() > 1, "tree never expanded: {}", idx.describe());
+        assert!(idx.memory_bytes() > 0);
+        assert!(!idx.has_features());
+    }
+
+    #[test]
+    fn validate_config_rejects_structural_mismatches() {
+        let idx = tiny_index(2);
+        let good = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(4) };
+        assert!(idx.validate_config(&good).is_ok());
+        let bad_levels = QgwConfig { levels: 3, ..good.clone() };
+        assert!(idx.validate_config(&bad_levels).is_err());
+        let bad_leaf = QgwConfig { leaf_size: 16, ..good.clone() };
+        assert!(idx.validate_config(&bad_leaf).is_err());
+        let bad_kmeans = QgwConfig { kmeans: true, ..good.clone() };
+        assert!(idx.validate_config(&bad_kmeans).is_err());
+        // A partition-size knob that realizes a different reference-side m
+        // breaks byte-identity and must be refused too.
+        let bad_m = QgwConfig { size: crate::qgw::PartitionSize::Count(8), ..good };
+        assert!(idx.validate_config(&bad_m).is_err());
+    }
+
+    #[test]
+    fn registry_lru_evicts_least_recently_used() {
+        let a = tiny_index(10);
+        let budget = a.memory_bytes() * 2 + a.memory_bytes() / 2; // fits 2, not 3
+        let reg = IndexRegistry::new(budget);
+        assert!(reg.insert("a", a).is_empty());
+        assert!(reg.insert("b", tiny_index(11)).is_empty());
+        assert_eq!(reg.len(), 2);
+
+        // Touch "a" so "b" is the LRU entry, then overflow with "c".
+        assert!(reg.get("a").is_some());
+        let evicted = reg.insert("c", tiny_index(12));
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.get("b").is_none());
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("c").is_some());
+        assert_eq!(reg.evictions(), 1);
+        assert!(reg.total_bytes() <= reg.max_bytes());
+        assert_eq!(reg.names(), vec!["a".to_string(), "c".to_string()]);
+    }
+
+    #[test]
+    fn registry_admits_single_oversized_index_and_replaces_names() {
+        let a = tiny_index(20);
+        let reg = IndexRegistry::new(a.memory_bytes() / 2);
+        assert!(reg.insert("big", a).is_empty(), "sole entry must be admitted");
+        assert_eq!(reg.len(), 1);
+        // Replacing under the same name swaps bytes instead of leaking.
+        let before = reg.total_bytes();
+        reg.insert("big", tiny_index(21));
+        assert_eq!(reg.len(), 1);
+        assert!(reg.total_bytes() > 0 && reg.total_bytes() < before * 3);
+        // A second insert evicts the resident entry (budget is tiny).
+        let evicted = reg.insert("other", tiny_index(22));
+        assert_eq!(evicted, vec!["big".to_string()]);
+    }
+}

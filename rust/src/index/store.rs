@@ -1,0 +1,466 @@
+//! On-disk format for reference indices: a little-endian binary layout
+//! with a magic tag, a format version, an explicit payload length, and a
+//! trailing FNV-1a 64 checksum over the payload.
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"QGWINDEX"
+//! 8       4     version (u32, currently 1)
+//! 12      8     payload length (u64)
+//! 20      L     payload
+//! 20+L    8     FNV-1a 64 checksum of the payload
+//! ```
+//!
+//! Payload layout (all integers little-endian):
+//!
+//! * params — kind `u8` (0 cloud, 1 graph), levels `u64`, leaf_size
+//!   `u64`, kmeans `u8`, seed `u64`;
+//! * reference data — cloud: `n, dim` then `n*dim` coords and `n`
+//!   measures; graph: `n, num_edges` then per-node adjacency
+//!   (`deg, deg x (v: u32, w: f64)`, preserving neighbor order so
+//!   traversals replay bit-identically) and `n` measures;
+//! * features — present `u8`, then `dim` and `n*dim` values;
+//! * tree — recursive node records, root first: the raw
+//!   [`QuantizedSpace`] parts (`m, n`, rep ids, `m x m` rep distances,
+//!   block assignments, anchor distances, point measures) followed by one
+//!   present-flag + record per block's child. Child *substrates* are not
+//!   stored: extraction from the parent is deterministic, so the loader
+//!   re-derives them through the exact code path the build used —
+//!   halving the file and guaranteeing the reloaded tree is
+//!   value-identical.
+//!
+//! Error paths (all pre-parse, so corrupt bytes never reach the
+//! structure invariants): bad magic, version mismatch, length mismatch /
+//! truncation, checksum mismatch, and in-payload bounds checks.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::{DenseMatrix, PointCloud, QuantizedSpace};
+use crate::graph::Graph;
+use crate::index::{IndexKind, IndexParams, RefIndex};
+use crate::qgw::{FeatureSet, RefNode, Substrate};
+
+const MAGIC: &[u8; 8] = b"QGWINDEX";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 8 + 4 + 8;
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+// --- writer ----------------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn write_substrate(out: &mut Vec<u8>, sub: &Substrate<'_>) {
+    if let Some(c) = sub.cloud_data() {
+        put_u8(out, 0);
+        put_u64(out, c.len() as u64);
+        put_u64(out, c.dim() as u64);
+        for &v in c.coords() {
+            put_f64(out, v);
+        }
+        for &v in crate::core::MmSpace::measure(c) {
+            put_f64(out, v);
+        }
+    } else if let Some((g, mu)) = sub.graph_data() {
+        put_u8(out, 1);
+        put_u64(out, g.num_nodes() as u64);
+        put_u64(out, g.num_edges() as u64);
+        for list in g.adjacency() {
+            put_u64(out, list.len() as u64);
+            for &(v, w) in list {
+                put_u32(out, v);
+                put_f64(out, w);
+            }
+        }
+        for &v in mu {
+            put_f64(out, v);
+        }
+    } else {
+        unreachable!("substrate is neither cloud nor graph");
+    }
+    match sub.features() {
+        Some(f) => {
+            put_u8(out, 1);
+            put_u64(out, f.dim() as u64);
+            for &v in f.data() {
+                put_f64(out, v);
+            }
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn write_node(out: &mut Vec<u8>, node: &RefNode) {
+    let q = &node.q;
+    let m = q.num_blocks();
+    let n = q.num_points();
+    put_u64(out, m as u64);
+    put_u64(out, n as u64);
+    for &r in q.rep_ids() {
+        put_u64(out, r as u64);
+    }
+    for &v in q.rep_dists().as_slice() {
+        put_f64(out, v);
+    }
+    for i in 0..n {
+        put_u32(out, q.block_of(i) as u32);
+    }
+    for i in 0..n {
+        put_f64(out, q.anchor_dist(i));
+    }
+    for &v in q.point_measure() {
+        put_f64(out, v);
+    }
+    for child in &node.children {
+        match child {
+            Some(c) => {
+                put_u8(out, 1);
+                write_node(out, c);
+            }
+            None => put_u8(out, 0),
+        }
+    }
+}
+
+pub(crate) fn save_index(index: &RefIndex, path: &Path) -> Result<()> {
+    let params = index.params();
+    let mut payload = Vec::new();
+    // The substrate record below carries the kind tag; params hold only
+    // the structural knobs.
+    put_u64(&mut payload, params.levels as u64);
+    put_u64(&mut payload, params.leaf_size as u64);
+    put_u8(&mut payload, params.kmeans as u8);
+    put_u64(&mut payload, params.seed);
+    write_substrate(&mut payload, &index.root().sub);
+    write_node(&mut payload, index.root());
+
+    let mut file = Vec::with_capacity(HEADER_LEN + payload.len() + 8);
+    file.extend_from_slice(MAGIC);
+    file.extend_from_slice(&VERSION.to_le_bytes());
+    file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let checksum = fnv1a64(&payload);
+    file.extend_from_slice(&payload);
+    file.extend_from_slice(&checksum.to_le_bytes());
+    std::fs::write(path, file).with_context(|| format!("writing index to {path:?}"))?;
+    Ok(())
+}
+
+// --- reader ----------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len().saturating_sub(self.pos) < n {
+            bail!("index payload truncated (wanted {n} bytes at offset {})", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("count {v} overflows usize"))
+    }
+
+    fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        let bytes = self.take(n.checked_mul(8).context("f64 array length overflow")?)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(n.checked_mul(4).context("u32 array length overflow")?)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    /// Unread payload bytes — the bound for count preallocation checks.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+fn read_substrate(r: &mut Reader<'_>) -> Result<(IndexKind, Substrate<'static>)> {
+    let kind_tag = r.u8()?;
+    let (kind, sub) = match kind_tag {
+        0 => {
+            let n = r.usize()?;
+            let dim = r.usize()?;
+            if dim == 0 {
+                bail!("corrupt index: zero-dimensional cloud");
+            }
+            let coords = r.f64_vec(n.checked_mul(dim).context("coord count overflow")?)?;
+            if coords.iter().any(|v| !v.is_finite()) {
+                bail!("corrupt index: non-finite cloud coordinate");
+            }
+            let measure = r.f64_vec(n)?;
+            check_measure(&measure)?;
+            (IndexKind::Cloud, Substrate::owned_cloud(PointCloud::with_measure(coords, dim, measure)))
+        }
+        1 => {
+            let n = r.usize()?;
+            let num_edges = r.usize()?;
+            // Bound counts by the bytes actually present before any
+            // preallocation: a crafted header must fail cleanly, not
+            // abort on a capacity overflow. Every node record is at
+            // least 8 bytes (its degree), every edge entry 12.
+            if n > r.remaining() / 8 {
+                bail!("corrupt index: graph claims {n} nodes beyond the payload");
+            }
+            let mut adj: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let deg = r.usize()?;
+                if deg > r.remaining() / 12 {
+                    bail!("corrupt index: node degree {deg} beyond the payload");
+                }
+                let mut list = Vec::with_capacity(deg);
+                for _ in 0..deg {
+                    let v = r.u32()?;
+                    let w = r.f64()?;
+                    if v as usize >= n {
+                        bail!("corrupt index: graph neighbor out of range");
+                    }
+                    if w < 0.0 || w.is_nan() {
+                        bail!("corrupt index: negative or NaN edge weight");
+                    }
+                    list.push((v, w));
+                }
+                adj.push(list);
+            }
+            let degree_sum: usize = adj.iter().map(|l| l.len()).sum();
+            if degree_sum != num_edges.saturating_mul(2) {
+                bail!(
+                    "corrupt index: adjacency holds {degree_sum} half-edges but the header \
+                     claims {num_edges} edges"
+                );
+            }
+            let measure = r.f64_vec(n)?;
+            check_measure(&measure)?;
+            (IndexKind::Graph, Substrate::owned_graph(Graph::from_adjacency(adj, num_edges), measure))
+        }
+        other => bail!("corrupt index: unknown substrate kind {other}"),
+    };
+    let sub = if r.u8()? != 0 {
+        let dim = r.usize()?;
+        if dim == 0 {
+            bail!("corrupt index: zero-dimensional features");
+        }
+        let data = r.f64_vec(sub.len().checked_mul(dim).context("feature count overflow")?)?;
+        sub.with_owned_features(FeatureSet::new(data, dim))
+    } else {
+        sub
+    };
+    Ok((kind, sub))
+}
+
+/// A stored probability-measure slice must be finite and non-negative —
+/// poisoned marginals would otherwise flow straight into Sinkhorn/EMD and
+/// serve NaN couplings.
+fn check_measure(measure: &[f64]) -> Result<()> {
+    if measure.iter().any(|v| !v.is_finite() || *v < 0.0) {
+        bail!("corrupt index: non-finite or negative measure entry");
+    }
+    Ok(())
+}
+
+fn read_node(
+    r: &mut Reader<'_>,
+    sub: Substrate<'static>,
+    leaf_size: usize,
+    levels_left: usize,
+) -> Result<RefNode> {
+    let m = r.usize()?;
+    let n = r.usize()?;
+    if n != sub.len() {
+        bail!("corrupt index: node claims {n} points but its substrate holds {}", sub.len());
+    }
+    if m == 0 || m > n {
+        bail!("corrupt index: node has {m} blocks over {n} points");
+    }
+    let mut rep_ids: Vec<usize> = Vec::with_capacity(m);
+    for _ in 0..m {
+        rep_ids.push(r.usize()?);
+    }
+    let rep_dists = DenseMatrix::from_vec(m, m, r.f64_vec(m * m)?);
+    let block_of = r.u32_vec(n)?;
+    let anchor = r.f64_vec(n)?;
+    let point_measure = r.f64_vec(n)?;
+
+    // Validate the partition invariants here, with clean errors, before
+    // `QuantizedSpace::new`'s asserts could turn corrupt data into a
+    // panic (the checksum already rules out accidental corruption; this
+    // guards the structure itself).
+    for &b in &block_of {
+        if b as usize >= m {
+            bail!("corrupt index: block id {b} out of range (m={m})");
+        }
+    }
+    let mut counts = vec![0usize; m];
+    for &b in &block_of {
+        counts[b as usize] += 1;
+    }
+    if counts.iter().any(|&c| c == 0) {
+        bail!("corrupt index: empty partition block");
+    }
+    for (p, &rid) in rep_ids.iter().enumerate() {
+        if rid >= n {
+            bail!("corrupt index: representative id {rid} out of range (n={n})");
+        }
+        if block_of[rid] as usize != p {
+            bail!("corrupt index: representative {rid} not in its own block {p}");
+        }
+    }
+    if anchor.iter().any(|v| !v.is_finite()) {
+        bail!("corrupt index: non-finite anchor distance");
+    }
+    if rep_dists.as_slice().iter().any(|v| !v.is_finite()) {
+        bail!("corrupt index: non-finite representative distance");
+    }
+    check_measure(&point_measure)?;
+
+    let q = QuantizedSpace::new(rep_ids, rep_dists, block_of, anchor, point_measure);
+    let keep_features = sub.features().is_some();
+    let mut children: Vec<Option<RefNode>> = (0..m).map(|_| None).collect();
+    for (p, slot) in children.iter_mut().enumerate() {
+        let present = r.u8()? != 0;
+        // The build expands exactly the expandable blocks; enforce that
+        // here so a checksum-valid but structurally wrong file fails at
+        // load time instead of panicking inside a future match.
+        let block_len = q.block(p).len();
+        let expandable = levels_left > 0 && block_len > leaf_size && block_len >= 4;
+        if present != expandable {
+            bail!(
+                "corrupt index: block {p} ({block_len} points, {levels_left} levels left) \
+                 {} a child partition",
+                if present { "must not carry" } else { "is missing" }
+            );
+        }
+        if present {
+            let child_sub = sub.extract_block(&q, p, keep_features);
+            *slot = Some(read_node(r, child_sub, leaf_size, levels_left - 1)?);
+        }
+    }
+    Ok(RefNode::assemble(sub, q, children))
+}
+
+pub(crate) fn load_index(path: &Path) -> Result<RefIndex> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading index from {path:?}"))?;
+    if bytes.len() < HEADER_LEN + 8 {
+        bail!("index file truncated: {} bytes is smaller than the header", bytes.len());
+    }
+    if &bytes[0..8] != MAGIC {
+        bail!("not a qgw index file (bad magic)");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported index version {version} (this build reads version {VERSION})");
+    }
+    let payload_len =
+        usize::try_from(u64::from_le_bytes(bytes[12..20].try_into().unwrap()))
+            .context("payload length overflows usize")?;
+    let expected = HEADER_LEN
+        .checked_add(payload_len)
+        .and_then(|v| v.checked_add(8))
+        .context("payload length overflow")?;
+    if bytes.len() != expected {
+        bail!(
+            "index file truncated or oversized: payload claims {payload_len} bytes, file \
+             holds {} of {expected}",
+            bytes.len()
+        );
+    }
+    let payload = &bytes[HEADER_LEN..HEADER_LEN + payload_len];
+    let stored = u64::from_le_bytes(bytes[HEADER_LEN + payload_len..].try_into().unwrap());
+    let computed = fnv1a64(payload);
+    if stored != computed {
+        bail!(
+            "index checksum mismatch (corrupted file): stored {stored:016x}, computed \
+             {computed:016x}"
+        );
+    }
+
+    let mut r = Reader { buf: payload, pos: 0 };
+    let levels = r.usize()?;
+    let leaf_size = r.usize()?;
+    let kmeans = r.u8()? != 0;
+    let seed = r.u64()?;
+    if levels == 0 || leaf_size == 0 {
+        bail!("corrupt index: zero levels or leaf size");
+    }
+    let (kind, sub) = read_substrate(&mut r)?;
+    let root = read_node(&mut r, sub, leaf_size, levels - 1)?;
+    if !r.done() {
+        bail!("corrupt index: {} trailing payload bytes", payload.len() - r.pos);
+    }
+    let params = IndexParams { kind, levels, leaf_size, kmeans, m: root.num_blocks(), seed };
+    Ok(RefIndex::from_parts(params, root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn reader_bounds_checked() {
+        let mut r = Reader { buf: &[1, 2, 3], pos: 0 };
+        assert_eq!(r.u8().unwrap(), 1);
+        assert!(r.u64().is_err());
+        assert_eq!(r.take(2).unwrap(), &[2, 3]);
+        assert!(r.done());
+        assert!(r.u8().is_err());
+    }
+}

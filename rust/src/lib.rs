@@ -68,6 +68,7 @@ pub mod eval;
 pub mod experiments;
 pub mod graph;
 pub mod gw;
+pub mod index;
 pub mod metric;
 pub mod ot;
 pub mod partition;
@@ -77,4 +78,5 @@ pub mod runtime;
 pub mod testutil;
 
 pub use crate::core::{DenseMatrix, MmSpace};
+pub use crate::index::{IndexRegistry, RefIndex};
 pub use crate::qgw::{hier_qgw_match, qgw_match, qfgw_match, HierQgwResult, QgwConfig};

@@ -28,10 +28,53 @@ pub struct EmdResult {
     pub iters: usize,
 }
 
+/// Reusable buffers of one network-simplex solve: the zero-mass-stripped
+/// marginals, the restricted cost, the basis/tree state, and every
+/// traversal scratch vector. One workspace serves any problem size and
+/// any number of solves; steady-state [`emd_into`] calls are
+/// allocation-free, and results are bit-identical to a fresh workspace
+/// (buffer reuse only — the arithmetic and its order are unchanged).
+/// This is what lets [`crate::gw::cg_gw_with`]'s inner LP stop paying
+/// per-outer-iteration heap traffic.
+#[derive(Debug, Default)]
+pub struct EmdWorkspace {
+    ai: Vec<usize>,
+    bj: Vec<usize>,
+    av: Vec<f64>,
+    bv: Vec<f64>,
+    sub_cost: DenseMatrix,
+    basic: Vec<(usize, usize, f64)>,
+    adj: Vec<Vec<(usize, usize)>>,
+    u: Vec<f64>,
+    v: Vec<f64>,
+    stack: Vec<usize>,
+    visited: Vec<bool>,
+    parent_node: Vec<usize>,
+    parent_arc: Vec<usize>,
+    path_arcs: Vec<usize>,
+}
+
 /// Exact optimal transport between `(a, b)` under `cost`. `a` and `b` must
 /// be non-negative and sum to the same total (both are renormalized to the
-/// mean of the two sums to absorb rounding).
+/// mean of the two sums to absorb rounding). Allocating convenience
+/// wrapper over [`emd_into`].
 pub fn emd(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> EmdResult {
+    let mut ws = EmdWorkspace::default();
+    let mut plan = DenseMatrix::zeros(0, 0);
+    let (total, iters) = emd_into(cost, a, b, &mut ws, &mut plan);
+    EmdResult { plan, cost: total, iters }
+}
+
+/// [`emd`] over a caller workspace, writing the optimal plan into `plan`
+/// (resized as needed). Returns `(cost, pivot count)`. Bit-identical to
+/// [`emd`] for any (reused) workspace.
+pub fn emd_into(
+    cost: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    ws: &mut EmdWorkspace,
+    plan: &mut DenseMatrix,
+) -> (f64, usize) {
     let n = a.len();
     let m = b.len();
     assert_eq!(cost.rows(), n);
@@ -43,30 +86,95 @@ pub fn emd(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> EmdResult {
         (sa - sb).abs() <= 1e-9 * sa.max(sb),
         "marginal sums differ: {sa} vs {sb}"
     );
+    let EmdWorkspace {
+        ai,
+        bj,
+        av,
+        bv,
+        sub_cost,
+        basic,
+        adj,
+        u,
+        v,
+        stack,
+        visited,
+        parent_node,
+        parent_arc,
+        path_arcs,
+    } = ws;
     // Strip zero-mass atoms; the simplex needs strictly positive supplies
     // for a clean tree (restored on output).
-    let ai: Vec<usize> = (0..n).filter(|&i| a[i] > 0.0).collect();
-    let bj: Vec<usize> = (0..m).filter(|&j| b[j] > 0.0).collect();
-    let av: Vec<f64> = ai.iter().map(|&i| a[i]).collect();
-    let bv: Vec<f64> = bj.iter().map(|&j| b[j] * (sa / sb)).collect();
-    let sub_cost = DenseMatrix::from_fn(ai.len(), bj.len(), |p, q| cost.get(ai[p], bj[q]));
+    ai.clear();
+    ai.extend((0..n).filter(|&i| a[i] > 0.0));
+    bj.clear();
+    bj.extend((0..m).filter(|&j| b[j] > 0.0));
+    av.clear();
+    av.extend(ai.iter().map(|&i| a[i]));
+    bv.clear();
+    bv.extend(bj.iter().map(|&j| b[j] * (sa / sb)));
+    sub_cost.reset_unwritten(ai.len(), bj.len());
+    for (p, &i) in ai.iter().enumerate() {
+        let row = sub_cost.row_mut(p);
+        for (q, &j) in bj.iter().enumerate() {
+            row[q] = cost.get(i, j);
+        }
+    }
 
-    let (flows, iters) = simplex(&sub_cost, &av, &bv);
+    let iters = simplex_into(
+        sub_cost,
+        av,
+        bv,
+        basic,
+        adj,
+        u,
+        v,
+        stack,
+        visited,
+        parent_node,
+        parent_arc,
+        path_arcs,
+    );
 
-    let mut plan = DenseMatrix::zeros(n, m);
+    plan.reset_zeroed(n, m);
     let mut total = 0.0;
-    for &(p, q, f) in &flows {
+    for &(p, q, f) in basic.iter() {
         if f > 0.0 {
             plan.set(ai[p], bj[q], f);
             total += f * cost.get(ai[p], bj[q]);
         }
     }
-    EmdResult { plan, cost: total, iters }
+    (total, iters)
 }
 
-/// Core network simplex over strictly positive supplies. Returns basic
-/// flows `(i, j, flow)` and the pivot count.
-fn simplex(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> (Vec<(usize, usize, f64)>, usize) {
+/// Shared adjacency rebuild: node -> list of `(neighbor, basic-arc index)`.
+fn rebuild_adj(basic: &[(usize, usize, f64)], adj: &mut [Vec<(usize, usize)>], n: usize) {
+    for l in adj.iter_mut() {
+        l.clear();
+    }
+    for (k, &(i, j, _)) in basic.iter().enumerate() {
+        adj[i].push((n + j, k));
+        adj[n + j].push((i, k));
+    }
+}
+
+/// Core network simplex over strictly positive supplies, running entirely
+/// in caller buffers. Leaves the basic flows `(i, j, flow)` in `basic`
+/// and returns the pivot count.
+#[allow(clippy::too_many_arguments)]
+fn simplex_into(
+    cost: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    basic: &mut Vec<(usize, usize, f64)>,
+    adj: &mut Vec<Vec<(usize, usize)>>,
+    u: &mut Vec<f64>,
+    v: &mut Vec<f64>,
+    stack: &mut Vec<usize>,
+    visited: &mut Vec<bool>,
+    parent_node: &mut Vec<usize>,
+    parent_arc: &mut Vec<usize>,
+    path_arcs: &mut Vec<usize>,
+) -> usize {
     let n = a.len();
     let m = b.len();
     // Node ids: rows 0..n, cols n..n+m. Basis = spanning tree with exactly
@@ -75,7 +183,7 @@ fn simplex(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> (Vec<(usize, usize, f64)
 
     // --- Northwest corner initialization ------------------------------
     // Produces n + m - 1 basic arcs (including degenerate zero-flow arcs).
-    let mut basic: Vec<(usize, usize, f64)> = Vec::with_capacity(nodes - 1);
+    basic.clear();
     {
         let (mut i, mut j) = (0usize, 0usize);
         let mut ra = a[0];
@@ -102,25 +210,22 @@ fn simplex(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> (Vec<(usize, usize, f64)
     }
     debug_assert_eq!(basic.len(), nodes - 1);
 
-    // Tree adjacency: node -> list of (neighbor, basic-arc index).
-    let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nodes];
-    let rebuild_adj = |basic: &[(usize, usize, f64)], adj: &mut Vec<Vec<(usize, usize)>>| {
-        for l in adj.iter_mut() {
-            l.clear();
-        }
-        for (k, &(i, j, _)) in basic.iter().enumerate() {
-            adj[i].push((n + j, k));
-            adj[n + j].push((i, k));
-        }
-    };
-    rebuild_adj(&basic, &mut adj);
+    // Tree adjacency + traversal scratch, sized in place (capacities
+    // persist across workspace reuse; inner adjacency Vecs keep theirs).
+    adj.resize_with(nodes, Vec::new);
+    rebuild_adj(basic, adj, n);
 
-    let mut u = vec![0.0f64; n]; // row potentials
-    let mut v = vec![0.0f64; m]; // col potentials
-    let mut stack: Vec<usize> = Vec::with_capacity(nodes);
-    let mut visited = vec![false; nodes];
-    let mut parent_node = vec![usize::MAX; nodes];
-    let mut parent_arc = vec![usize::MAX; nodes];
+    u.clear();
+    u.resize(n, 0.0); // row potentials
+    v.clear();
+    v.resize(m, 0.0); // col potentials
+    stack.clear();
+    visited.clear();
+    visited.resize(nodes, false);
+    parent_node.clear();
+    parent_node.resize(nodes, usize::MAX);
+    parent_arc.clear();
+    parent_arc.resize(nodes, usize::MAX);
 
     let max_iters = 50 * nodes * nodes + 10_000;
     let mut iters = 0;
@@ -215,7 +320,7 @@ fn simplex(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> (Vec<(usize, usize, f64)
         // Walk back collecting the path arcs; arcs at odd positions along
         // the cycle (starting with the entering arc as position 0) lose
         // flow.
-        let mut path_arcs: Vec<usize> = Vec::new();
+        path_arcs.clear();
         let mut node = target;
         while parent_node[node] != usize::MAX {
             path_arcs.push(parent_arc[node]);
@@ -285,10 +390,10 @@ fn simplex(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> (Vec<(usize, usize, f64)
         // Replace the leaving arc with the entering arc in the basis.
         let leaving_arc = path_arcs[leave_pos];
         basic[leaving_arc] = (ei, ej, theta);
-        rebuild_adj(&basic, &mut adj);
+        rebuild_adj(basic, adj, n);
     }
 
-    (basic, iters)
+    iters
 }
 
 #[cfg(test)]
@@ -416,5 +521,29 @@ mod tests {
     fn mismatched_mass_panics() {
         let cost = DenseMatrix::zeros(2, 2);
         emd(&cost, &[0.5, 0.5], &[0.5, 0.6]);
+    }
+
+    #[test]
+    fn workspace_reuse_bit_identical_across_shapes() {
+        // One workspace threaded through problems of different shapes
+        // (including shrinking sizes, where stale buffer tails must never
+        // leak) reproduces the fresh-workspace path exactly.
+        let mut rng = Pcg32::seed_from(9);
+        let mut ws = EmdWorkspace::default();
+        let mut plan = DenseMatrix::zeros(0, 0);
+        for (n, m) in [(6usize, 9usize), (9, 4), (3, 3), (8, 8)] {
+            let cost = DenseMatrix::from_fn(n, m, |_, _| rng.next_f64());
+            let mut a: Vec<f64> = (0..n).map(|_| rng.next_f64() + 0.05).collect();
+            let mut b: Vec<f64> = (0..m).map(|_| rng.next_f64() + 0.05).collect();
+            let sa: f64 = a.iter().sum();
+            a.iter_mut().for_each(|x| *x /= sa);
+            let sb: f64 = b.iter().sum();
+            b.iter_mut().for_each(|x| *x /= sb);
+            let reference = emd(&cost, &a, &b);
+            let (c, iters) = emd_into(&cost, &a, &b, &mut ws, &mut plan);
+            assert_eq!(c.to_bits(), reference.cost.to_bits(), "{n}x{m}");
+            assert_eq!(iters, reference.iters);
+            assert_eq!(plan.as_slice(), reference.plan.as_slice());
+        }
     }
 }

@@ -10,7 +10,7 @@ mod emd;
 mod emd1d;
 mod sinkhorn;
 
-pub use emd::{emd, EmdResult};
+pub use emd::{emd, emd_into, EmdResult, EmdWorkspace};
 pub use emd1d::{emd1d, emd1d_presorted, Plan1d};
 pub use sinkhorn::{
     round_to_coupling, sinkhorn, sinkhorn_into, sinkhorn_log, sinkhorn_log_into, SinkhornOptions,

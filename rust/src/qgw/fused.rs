@@ -49,6 +49,11 @@ impl FeatureSet {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// The raw row-major feature matrix (serialization support).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
     /// Euclidean distance in feature space.
     #[inline]
     pub fn dist(&self, i: usize, other: &FeatureSet, j: usize) -> f64 {

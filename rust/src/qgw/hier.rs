@@ -85,14 +85,29 @@
 //! accumulates the worst child chain per level (leaves are exact and
 //! contribute 0).
 //!
+//! **Build/match split** (the reference-index subsystem,
+//! [`crate::index`]): everything the recursion computes on one side —
+//! block extraction, nested partitions, per-node Theorem-6 scalars — is a
+//! pure function of that side's data and its own seed chain, never of the
+//! partner side. The *build phase* ([`build_ref_tree`]) materializes that
+//! chain once as a [`RefNode`] tree (one node per expandable block at
+//! every level, eagerly covering every block a future query could
+//! support); the *match phase* ([`hier_match_indexed`]) then takes
+//! `&RefNode` for the reference side and extracts/partitions only the
+//! query side. Because the per-block streams are derived from
+//! `(side, level, block)` alone, serving a match from the tree is
+//! byte-identical to the fused build+match path
+//! ([`hier_match_quantized`]) at the same seed — property-tested on all
+//! three substrates across thread counts.
+//!
 //! Work fans out over [`crate::coordinator::parallel_map`] twice at the
 //! top level: block extraction + re-partitioning (one task per distinct
 //! block of a recursing pair) and then pair alignment + recursion (one
 //! task per supported pair). Every task derives its RNG from
-//! `(base seed, level, side/pair ids)` — never from shared mutable state —
-//! so the coupling is byte-identical for any thread count on every
-//! substrate (guarded by the determinism regression tests in
-//! `rust/tests/properties.rs`).
+//! `(side, level, block id)` chains — never from shared mutable state or
+//! the partner side — so the coupling is byte-identical for any thread
+//! count on every substrate (guarded by the determinism regression tests
+//! in `rust/tests/properties.rs`).
 
 use std::borrow::Cow;
 use std::collections::HashMap;
@@ -161,6 +176,45 @@ impl<'a> Substrate<'a> {
         self
     }
 
+    /// Owning cloud substrate — the reference-index build and the on-disk
+    /// loader hold their data for the lifetime of the index.
+    pub(crate) fn owned_cloud(c: PointCloud) -> Substrate<'static> {
+        Substrate { data: SubstrateData::Cloud(Cow::Owned(c)), features: None }
+    }
+
+    /// Owning graph substrate with its node measure.
+    pub(crate) fn owned_graph(g: Graph, measure: Vec<f64>) -> Substrate<'static> {
+        assert_eq!(g.num_nodes(), measure.len());
+        Substrate {
+            data: SubstrateData::Graph { graph: Cow::Owned(g), measure: Cow::Owned(measure) },
+            features: None,
+        }
+    }
+
+    /// Attach owned per-point features.
+    pub(crate) fn with_owned_features(mut self, f: FeatureSet) -> Self {
+        assert_eq!(f.len(), self.len());
+        self.features = Some(Cow::Owned(f));
+        self
+    }
+
+    /// The underlying cloud, if this is a cloud substrate (serialization).
+    pub(crate) fn cloud_data(&self) -> Option<&PointCloud> {
+        match &self.data {
+            SubstrateData::Cloud(c) => Some(c.as_ref()),
+            SubstrateData::Graph { .. } => None,
+        }
+    }
+
+    /// The underlying graph and node measure, if this is a graph
+    /// substrate (serialization).
+    pub(crate) fn graph_data(&self) -> Option<(&Graph, &[f64])> {
+        match &self.data {
+            SubstrateData::Cloud(_) => None,
+            SubstrateData::Graph { graph, measure } => Some((graph.as_ref(), measure.as_ref())),
+        }
+    }
+
     /// Number of points / nodes.
     pub fn len(&self) -> usize {
         match &self.data {
@@ -196,7 +250,12 @@ impl<'a> Substrate<'a> {
     /// rows would be dead weight in every recursion cache. Index `k` of
     /// the result is position `k` in the block's local plans for every
     /// substrate kind.
-    fn extract_block(&self, q: &QuantizedSpace, p: usize, keep_features: bool) -> Substrate<'static> {
+    pub(crate) fn extract_block(
+        &self,
+        q: &QuantizedSpace,
+        p: usize,
+        keep_features: bool,
+    ) -> Substrate<'static> {
         let data = match &self.data {
             SubstrateData::Cloud(c) => SubstrateData::Cloud(Cow::Owned(block_cloud(c, q, p))),
             SubstrateData::Graph { graph, .. } => {
@@ -289,6 +348,176 @@ impl<'a> Substrate<'a> {
         };
         base + self.features().map_or(0, |f| f.len() * f.dim() * 8)
     }
+}
+
+/// The stage-1 (top-level) partitioner choice for one side of a pipeline
+/// match: featured clouds use the Voronoi partitioner (the qFGW entry
+/// points' choice), plain clouds the shared k-means/Voronoi choice, and
+/// graphs Fluid communities. The pipeline's two sides, the indexed query
+/// side, and the reference-index build all resolve through this one
+/// function, so the byte-identity contract cannot drift on partitioner
+/// selection.
+pub(crate) fn stage_partition<R: Rng>(
+    sub: &Substrate<'_>,
+    m: usize,
+    kmeans: bool,
+    rng: &mut R,
+) -> QuantizedSpace {
+    match (&sub.data, sub.features()) {
+        (SubstrateData::Cloud(c), Some(_)) => voronoi_partition(c, m, rng),
+        (SubstrateData::Cloud(c), None) => partition_cloud(c, m, kmeans, rng),
+        (SubstrateData::Graph { graph, measure }, _) => fluid_partition(graph, measure, m, rng),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference tree — the build phase's output, served one-to-many
+// ---------------------------------------------------------------------------
+
+/// One node of a prebuilt reference tree: the (owned) substrate extracted
+/// at this node, its quantized partition, the Theorem-6 scalars the match
+/// phase's bound terms read, and one child per *expandable* block (a
+/// block that a pair could re-quantize: above the leaf size, at least 4
+/// points, levels remaining).
+///
+/// The tree eagerly covers every block a future query could support —
+/// that is the reference-index trade: build cost and resident memory are
+/// paid once, and each query then pays only its own side's extraction and
+/// partitioning. Every per-node value is exactly what the lazy path's
+/// [`CachedBlock`] would compute for the same seed chain, so matching
+/// against the tree is byte-identical to the fused build+match path.
+pub struct RefNode {
+    pub(crate) sub: Substrate<'static>,
+    pub(crate) q: QuantizedSpace,
+    /// Geometric quantized eccentricity of this node's partition.
+    pub(crate) q_ecc: f64,
+    /// Block-diameter bound (the Theorem-6 `eps`) of this node's partition.
+    pub(crate) diam: f64,
+    /// Feature-space quantized eccentricity (0 when the substrate carries
+    /// no features; *gated by the match's fused flag* before use).
+    pub(crate) feat_ecc: f64,
+    /// One entry per block of `q`; `Some` exactly for expandable blocks.
+    pub(crate) children: Vec<Option<RefNode>>,
+}
+
+impl RefNode {
+    /// Assemble a node from its parts, deriving the bound-term scalars —
+    /// the build phase and the on-disk loader share this, so both
+    /// materialize identical in-memory trees.
+    pub(crate) fn assemble(
+        sub: Substrate<'static>,
+        q: QuantizedSpace,
+        children: Vec<Option<RefNode>>,
+    ) -> Self {
+        assert_eq!(q.num_points(), sub.len());
+        assert_eq!(children.len(), q.num_blocks());
+        let q_ecc = q.quantized_eccentricity();
+        let diam = q.block_diameter_bound();
+        let feat_ecc = match sub.features() {
+            Some(f) => feature_quantized_eccentricity(&q, f),
+            None => 0.0,
+        };
+        Self { sub, q, q_ecc, diam, feat_ecc, children }
+    }
+
+    /// Points of the underlying reference space at this node.
+    pub fn num_points(&self) -> usize {
+        self.q.num_points()
+    }
+
+    /// Partition blocks at this node.
+    pub fn num_blocks(&self) -> usize {
+        self.q.num_blocks()
+    }
+
+    /// Does the reference carry per-point features (can serve fused
+    /// queries)?
+    pub fn has_features(&self) -> bool {
+        self.sub.features().is_some()
+    }
+
+    /// Feature dimension, when features are attached.
+    pub fn feature_dim(&self) -> Option<usize> {
+        self.sub.features().map(|f| f.dim())
+    }
+
+    /// Recursion nodes in the tree (this node plus all descendants).
+    pub fn node_count(&self) -> usize {
+        1 + self.children.iter().flatten().map(|c| c.node_count()).sum::<usize>()
+    }
+
+    /// Depth of the tree (1 = no expanded children).
+    pub fn depth(&self) -> usize {
+        1 + self.children.iter().flatten().map(|c| c.depth()).max().unwrap_or(0)
+    }
+
+    /// Tracked bytes of the whole tree: substrates plus quantized storage
+    /// at every node (what the registry's LRU budget counts).
+    pub fn memory_bytes(&self) -> usize {
+        self.sub.memory_bytes()
+            + self.q.memory_bytes()
+            + self.children.iter().flatten().map(|c| c.memory_bytes()).sum::<usize>()
+    }
+}
+
+/// Build the reference tree for one side over its prebuilt top partition.
+/// Every expandable block of every node is extracted and re-partitioned
+/// exactly as the lazy match phase would, using the side-1 (reference)
+/// chain of `seed` — so [`hier_match_indexed`] against the tree replays
+/// [`hier_match_quantized`] byte-for-byte at the same seed. The top-level
+/// block fan-out runs on the pool; the tree is identical at any thread
+/// count.
+pub fn build_ref_tree(
+    sub: Substrate<'static>,
+    q: QuantizedSpace,
+    cfg: &QgwConfig,
+    seed: u64,
+) -> RefNode {
+    assert_eq!(q.num_points(), sub.len());
+    build_ref_node(sub, q, cfg, side_seed(seed, 1), cfg.levels.max(1) - 1, 0, true)
+}
+
+fn build_ref_node(
+    sub: Substrate<'static>,
+    q: QuantizedSpace,
+    cfg: &QgwConfig,
+    node_seed: u64,
+    levels_left: usize,
+    level: usize,
+    parallel: bool,
+) -> RefNode {
+    let leaf = cfg.leaf_size.max(1);
+    // The index keeps features whenever the reference carries them, so one
+    // tree serves fused and plain queries alike; the match phase gates the
+    // feature scalars by its own fused flag, which is what keeps plain
+    // matches byte-identical to a feature-blind lazy run.
+    let keep_features = sub.features().is_some();
+    let expandable: Vec<u32> = (0..q.num_blocks())
+        .filter(|&p| {
+            let b = q.block(p).len();
+            levels_left > 0 && b > leaf && b >= 4
+        })
+        .map(|p| p as u32)
+        .collect();
+    let build_one = |p: &u32| -> RefNode {
+        let pu = *p as usize;
+        let child = sub.extract_block(&q, pu, keep_features);
+        let m = balanced_m(child.len(), leaf, levels_left);
+        let (rng_seed, child_seed) = block_streams(node_seed, level, pu);
+        let mut rng = Pcg32::seed_from(rng_seed);
+        let child_q = child.partition(m, cfg.kmeans, &mut rng);
+        build_ref_node(child, child_q, cfg, child_seed, levels_left - 1, level + 1, false)
+    };
+    let built: Vec<RefNode> = if parallel {
+        parallel_map(&expandable, build_one, cfg.num_threads)
+    } else {
+        expandable.iter().map(build_one).collect()
+    };
+    let mut children: Vec<Option<RefNode>> = (0..q.num_blocks()).map(|_| None).collect();
+    for (p, node) in expandable.iter().zip(built) {
+        children[*p as usize] = Some(node);
+    }
+    RefNode::assemble(sub, q, children)
 }
 
 // ---------------------------------------------------------------------------
@@ -580,9 +809,11 @@ pub fn hier_qgw_match_quantized(
 ///
 /// `fused` enables the qFGW blend (`align_fused` at every node, beta-blend
 /// at every leaf) and is ignored unless *both* substrates carry features.
-/// `seed` drives the recursive re-partitioning; each block and each pair
-/// derives its own stream from `(seed, level, ids)`, so results do not
-/// depend on `cfg.num_threads`.
+/// `seed` drives the recursive re-partitioning; each side derives an
+/// independent chain and each block its own stream from
+/// `(side, level, block)`, so results do not depend on `cfg.num_threads`
+/// — and the whole reference-side chain can be prebuilt
+/// ([`build_ref_tree`]) and served via [`hier_match_indexed`].
 #[allow(clippy::too_many_arguments)]
 pub fn hier_match_quantized(
     x: &Substrate<'_>,
@@ -594,11 +825,55 @@ pub fn hier_match_quantized(
     aligner: &(dyn GlobalAligner + Sync),
     seed: u64,
 ) -> HierQgwResult {
-    assert_eq!(qx.num_points(), x.len());
-    assert_eq!(qy.num_points(), y.len());
+    let sx = SideCtx { sub: x, q: qx, src: SideSrc::Lazy { node_seed: side_seed(seed, 0) } };
+    let sy = SideCtx { sub: y, q: qy, src: SideSrc::Lazy { node_seed: side_seed(seed, 1) } };
+    hier_match_sides(&sx, &sy, cfg, fused, aligner)
+}
+
+/// Hierarchical match of a query substrate against a prebuilt reference
+/// tree: the Y side's extraction, nested partitions, and bound-term
+/// scalars are all read from `reference` instead of being recomputed, so
+/// a resident reference serves many queries at the query side's cost
+/// alone.
+///
+/// Byte-identity contract: with `reference = build_ref_tree(y, qy, cfg,
+/// seed)`, this returns exactly the coupling of
+/// `hier_match_quantized(x, y, qx, qy, cfg, fused, aligner, seed)` — for
+/// any thread count and on every substrate. `cfg.levels` and
+/// `cfg.leaf_size` must match the build configuration (a deeper match
+/// than the build would need children the tree never expanded);
+/// [`crate::index::RefIndex::validate_config`] enforces this at the
+/// serving layer.
+#[allow(clippy::too_many_arguments)]
+pub fn hier_match_indexed(
+    x: &Substrate<'_>,
+    qx: &QuantizedSpace,
+    reference: &RefNode,
+    cfg: &QgwConfig,
+    fused: Option<(f64, f64)>,
+    aligner: &(dyn GlobalAligner + Sync),
+    seed: u64,
+) -> HierQgwResult {
+    let sx = SideCtx { sub: x, q: qx, src: SideSrc::Lazy { node_seed: side_seed(seed, 0) } };
+    let sy =
+        SideCtx { sub: &reference.sub, q: &reference.q, src: SideSrc::Index(reference) };
+    hier_match_sides(&sx, &sy, cfg, fused, aligner)
+}
+
+/// Shared body of the lazy and indexed entry points.
+fn hier_match_sides(
+    x: &SideCtx<'_>,
+    y: &SideCtx<'_>,
+    cfg: &QgwConfig,
+    fused: Option<(f64, f64)>,
+    aligner: &(dyn GlobalAligner + Sync),
+) -> HierQgwResult {
+    assert_eq!(x.q.num_points(), x.sub.len());
+    assert_eq!(y.q.num_points(), y.sub.len());
+    let (qx, qy) = (x.q, y.q);
     let levels = cfg.levels.max(1);
     // The fused blend needs features on both sides.
-    let fused = match (fused, x.features(), y.features()) {
+    let fused = match (fused, x.sub.features(), y.sub.features()) {
         (Some(ab), Some(_), Some(_)) => Some(ab),
         _ => None,
     };
@@ -608,7 +883,7 @@ pub fn hier_match_quantized(
     // decision.
     let q_x = qx.quantized_eccentricity();
     let q_y = qy.quantized_eccentricity();
-    let top_feat = match (fused, x.features(), y.features()) {
+    let top_feat = match (fused, x.sub.features(), y.sub.features()) {
         (Some(_), Some(fx), Some(fy)) => {
             feature_quantized_eccentricity(qx, fx) + feature_quantized_eccentricity(qy, fy)
         }
@@ -620,7 +895,7 @@ pub fn hier_match_quantized(
     // Step 1: global alignment of the top-level representatives — exactly
     // as flat qGW/qFGW.
     let align_start = Instant::now();
-    let global_res = align_node(x, y, qx, qy, fused, aligner);
+    let global_res = align_node(x.sub, y.sub, qx, qy, fused, aligner);
     let global_secs = align_start.elapsed().as_secs_f64();
 
     // Step 2: solve every supported pair (leaf 1-D matching or a nested
@@ -631,8 +906,6 @@ pub fn hier_match_quantized(
     let node = solve_pairs(
         x,
         y,
-        qx,
-        qy,
         &pairs,
         levels - 1,
         0,
@@ -640,7 +913,6 @@ pub fn hier_match_quantized(
         cfg,
         fused,
         aligner,
-        seed,
         true,
     );
 
@@ -756,21 +1028,55 @@ struct NodeOutcome {
     stats: HierStats,
 }
 
-/// Deterministic per-pair stream: mixes `(base, level, p, q)` through
-/// SplitMix64 so sibling pairs decorrelate regardless of scheduling.
-fn pair_seed(base: u64, level: usize, p: usize, q: usize) -> u64 {
-    let mut sm = SplitMix64::new(
-        base ^ ((level as u64) << 48) ^ ((p as u64) << 24) ^ (q as u64),
-    );
-    sm.next()
+/// Derive an independent stream lane from a base seed. Shared by the
+/// per-side recursion chains, the pipeline's per-side partition streams,
+/// and the service's query-side derivation, so every consumer splits one
+/// user-facing seed the same way.
+pub(crate) fn split_seed(base: u64, lane: u64) -> u64 {
+    SplitMix64::new(base ^ lane.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next()
 }
 
-/// Deterministic per-block stream for the shared re-partitioning.
-fn block_seed(base: u64, level: usize, side: u64, block: usize) -> u64 {
-    let mut sm = SplitMix64::new(
-        base ^ ((level as u64) << 48) ^ (side << 40) ^ 0x5EED ^ (block as u64),
-    );
-    sm.next()
+/// Root seed of one side's recursion chain: lane 0 drives the X (query)
+/// side, lane 1 the Y (reference) side. The chains never mix — the whole
+/// reference-side chain is a pure function of `side_seed(seed, 1)`, which
+/// is what lets [`build_ref_tree`] replay it ahead of any query.
+fn side_seed(seed: u64, side: u64) -> u64 {
+    split_seed(seed, 0x51DE ^ side)
+}
+
+/// Per-block streams of one side's chain: the nested partition's RNG seed
+/// and the child node's own chain seed, both pure functions of
+/// `(node_seed, level, block)` — sibling blocks, sibling pairs, and the
+/// partner side never influence them (scheduling-independent, and
+/// reference blocks are reusable across queries).
+fn block_streams(node_seed: u64, level: usize, block: usize) -> (u64, u64) {
+    let mut sm =
+        SplitMix64::new(node_seed ^ ((level as u64) << 48) ^ 0x5EED ^ (block as u64));
+    let rng_seed = sm.next();
+    let child_seed = sm.next();
+    (rng_seed, child_seed)
+}
+
+/// One side of a recursion node: its substrate + partition, and how the
+/// nested structures of its blocks are obtained.
+#[derive(Clone, Copy)]
+struct SideCtx<'a> {
+    sub: &'a Substrate<'a>,
+    q: &'a QuantizedSpace,
+    src: SideSrc<'a>,
+}
+
+/// Where a side's blocks come from: extracted + re-partitioned on demand
+/// (the lazy/fused path), or read from a prebuilt reference tree (the
+/// indexed path). Both produce identical [`BlockView`]s — the recursion
+/// below never knows which side it is consuming.
+#[derive(Clone, Copy)]
+enum SideSrc<'a> {
+    /// `node_seed` drives this node's per-block partition streams and,
+    /// recursively, its descendants'.
+    Lazy { node_seed: u64 },
+    /// Serve blocks from the prebuilt tree rooted here.
+    Index(&'a RefNode),
 }
 
 /// Per-block data shared by every partner pair of an alignment node: the
@@ -787,34 +1093,102 @@ struct CachedBlock {
     /// Feature-space quantized eccentricity (0 unless the fused blend is
     /// active and features are attached).
     feat_ecc: f64,
+    /// Chain seed of the nested node (drives *its* block streams).
+    child_seed: u64,
 }
 
-/// One extracted + re-partitioned block per entry, keyed by block id.
-type BlockCache = HashMap<u32, CachedBlock>;
+/// One side's resolved blocks for a node's pair fan-out.
+enum SideCache<'a> {
+    /// Extracted + re-partitioned on demand, keyed by block id.
+    Lazy(HashMap<u32, CachedBlock>),
+    /// Resident in the reference tree; nothing was built.
+    Index(&'a RefNode),
+}
 
-/// Extract and re-partition each listed block exactly once — blocks
-/// typically support 2-3 partner pairs, and this is the node's dominant
-/// per-block cost, so it must not repeat per pair. Parallel at the top
-/// level, sequential inside recursion workers.
-#[allow(clippy::too_many_arguments)]
-fn build_block_cache(
-    sub: &Substrate<'_>,
-    q: &QuantizedSpace,
+/// A borrowed view of one extracted + re-partitioned block, uniform over
+/// both sources. `feat_ecc` is already gated by the match's fused flag —
+/// a feature-carrying reference served to a plain match reads exactly the
+/// zeros the lazy feature-blind path would compute.
+#[derive(Clone, Copy)]
+struct BlockView<'a> {
+    sub: &'a Substrate<'static>,
+    q: &'a QuantizedSpace,
+    q_ecc: f64,
+    diam: f64,
+    feat_ecc: f64,
+    src: SideSrc<'a>,
+}
+
+impl SideCache<'_> {
+    fn view(&self, p: u32, fused: bool) -> BlockView<'_> {
+        match self {
+            SideCache::Lazy(map) => {
+                let c = &map[&p];
+                BlockView {
+                    sub: &c.sub,
+                    q: &c.q,
+                    q_ecc: c.q_ecc,
+                    diam: c.diam,
+                    feat_ecc: if fused { c.feat_ecc } else { 0.0 },
+                    src: SideSrc::Lazy { node_seed: c.child_seed },
+                }
+            }
+            SideCache::Index(node) => {
+                let c = node.children[p as usize].as_ref().expect(
+                    "reference tree is missing a child partition — the match depth \
+                     exceeds the build depth (validate_config should have caught this)",
+                );
+                BlockView {
+                    sub: &c.sub,
+                    q: &c.q,
+                    q_ecc: c.q_ecc,
+                    diam: c.diam,
+                    feat_ecc: if fused { c.feat_ecc } else { 0.0 },
+                    src: SideSrc::Index(c),
+                }
+            }
+        }
+    }
+
+    /// Bytes this node *built* for the fan-out (transient). Blocks served
+    /// from the reference tree are resident in the index, not transients
+    /// of the match — they count toward the registry budget instead.
+    fn transient_bytes(&self) -> usize {
+        match self {
+            SideCache::Lazy(map) => {
+                map.values().map(|c| c.sub.memory_bytes() + c.q.memory_bytes()).sum()
+            }
+            SideCache::Index(_) => 0,
+        }
+    }
+}
+
+/// Resolve one side's needed blocks: extract + re-partition them (lazy),
+/// or point at the resident tree (indexed). Extraction runs each listed
+/// block exactly once — blocks typically support 2-3 partner pairs, and
+/// this is the node's dominant per-block cost, so it must not repeat per
+/// pair. Parallel at the top level, sequential inside recursion workers.
+fn build_side_cache<'a>(
+    side: &SideCtx<'a>,
     blocks: &[u32],
     levels_left: usize,
     pair_level: usize,
-    side: u64,
     cfg: &QgwConfig,
     fused: bool,
-    seed: u64,
     parallel: bool,
-) -> BlockCache {
+) -> SideCache<'a> {
+    let node_seed = match side.src {
+        SideSrc::Index(node) => return SideCache::Index(node),
+        SideSrc::Lazy { node_seed } => node_seed,
+    };
+    let (sub, q) = (side.sub, side.q);
     let leaf = cfg.leaf_size.max(1);
     let build_one = |p: &u32| {
         let pu = *p as usize;
         let child = sub.extract_block(q, pu, fused);
         let m = balanced_m(child.len(), leaf, levels_left);
-        let mut rng = Pcg32::seed_from(block_seed(seed, pair_level, side, pu));
+        let (rng_seed, child_seed) = block_streams(node_seed, pair_level, pu);
+        let mut rng = Pcg32::seed_from(rng_seed);
         let qsub = child.partition(m, cfg.kmeans, &mut rng);
         let q_ecc = qsub.quantized_eccentricity();
         let diam = qsub.block_diameter_bound();
@@ -822,14 +1196,14 @@ fn build_block_cache(
             (true, Some(f)) => feature_quantized_eccentricity(&qsub, f),
             _ => 0.0,
         };
-        CachedBlock { sub: child, q: qsub, q_ecc, diam, feat_ecc }
+        CachedBlock { sub: child, q: qsub, q_ecc, diam, feat_ecc, child_seed }
     };
     let built: Vec<CachedBlock> = if parallel {
         parallel_map(blocks, build_one, cfg.num_threads)
     } else {
         blocks.iter().map(build_one).collect()
     };
-    blocks.iter().copied().zip(built).collect()
+    SideCache::Lazy(blocks.iter().copied().zip(built).collect())
 }
 
 /// Solve every supported pair of one alignment node. `levels_left` counts
@@ -838,13 +1212,12 @@ fn build_block_cache(
 /// adaptive tolerance (the configured tolerance minus every bound term
 /// committed above these pairs) — consulted only when `cfg.tolerance > 0`.
 /// Only the top call fans out over the pool; recursive calls run inside
-/// their worker.
+/// their worker. Either side may be served from a prebuilt reference tree
+/// (see [`SideSrc`]); the pair logic is identical.
 #[allow(clippy::too_many_arguments)]
 fn solve_pairs(
-    x: &Substrate<'_>,
-    y: &Substrate<'_>,
-    qx: &QuantizedSpace,
-    qy: &QuantizedSpace,
+    x: &SideCtx<'_>,
+    y: &SideCtx<'_>,
     pairs: &[(u32, u32)],
     levels_left: usize,
     pair_level: usize,
@@ -852,9 +1225,9 @@ fn solve_pairs(
     cfg: &QgwConfig,
     fused: Option<(f64, f64)>,
     aligner: &(dyn GlobalAligner + Sync),
-    seed: u64,
     parallel: bool,
 ) -> NodeOutcome {
+    let (qx, qy) = (x.q, y.q);
     let leaf = cfg.leaf_size.max(1);
     let adaptive = cfg.tolerance > 0.0;
     // Size/level eligibility — the fixed-depth split rule. In adaptive
@@ -867,7 +1240,7 @@ fn solve_pairs(
     // Exact 1-D bottom-out for one pair (beta-blended with the feature
     // matching when fused), as in flat qGW/qFGW.
     let leaf_outcome = |pu: usize, qu: usize, pruned: bool, preskipped: bool| -> PairOutcome {
-        let plan = leaf_plan(x, y, qx, qy, pu, qu, fused);
+        let plan = leaf_plan(x.sub, y.sub, qx, qy, pu, qu, fused);
         let mut stats = HierStats::default();
         stats.record_leaf(pair_level);
         if pruned {
@@ -899,10 +1272,10 @@ fn solve_pairs(
                 }
                 let bx = *bounds_x
                     .entry(p)
-                    .or_insert_with(|| x.block_bounds(qx, p as usize, is_fused));
+                    .or_insert_with(|| x.sub.block_bounds(qx, p as usize, is_fused));
                 let by = *bounds_y
                     .entry(q)
-                    .or_insert_with(|| y.block_bounds(qy, q as usize, is_fused));
+                    .or_insert_with(|| y.sub.block_bounds(qy, q as usize, is_fused));
                 match (bx, by) {
                     (Some((dx, fx)), Some((dy, fy))) => {
                         // q_ecc <= diam, nested diameter bound <= 2 diam,
@@ -938,17 +1311,11 @@ fn solve_pairs(
         .collect();
     need_y.sort_unstable();
     need_y.dedup();
-    let cache_x = build_block_cache(
-        x, qx, &need_x, levels_left, pair_level, 0, cfg, is_fused, seed, parallel,
-    );
-    let cache_y = build_block_cache(
-        y, qy, &need_y, levels_left, pair_level, 1, cfg, is_fused, seed, parallel,
-    );
-    let cache_bytes: usize = cache_x
-        .values()
-        .chain(cache_y.values())
-        .map(|c| c.sub.memory_bytes() + c.q.memory_bytes())
-        .sum();
+    let cache_x =
+        build_side_cache(x, &need_x, levels_left, pair_level, cfg, is_fused, parallel);
+    let cache_y =
+        build_side_cache(y, &need_y, levels_left, pair_level, cfg, is_fused, parallel);
+    let cache_bytes: usize = cache_x.transient_bytes() + cache_y.transient_bytes();
 
     let solve_one = |idx: usize| -> PairOutcome {
         let pair = &pairs[idx];
@@ -962,10 +1329,10 @@ fn solve_pairs(
             return leaf_outcome(pu, qu, true, true);
         }
 
-        let cx = &cache_x[&pair.0];
-        let cy = &cache_y[&pair.1];
+        let vx = cache_x.view(pair.0, is_fused);
+        let vy = cache_y.view(pair.1, is_fused);
         let node_term =
-            bound_term(cx.q_ecc, cy.q_ecc, cx.diam.max(cy.diam), cx.feat_ecc + cy.feat_ecc);
+            bound_term(vx.q_ecc, vy.q_ecc, vx.diam.max(vy.diam), vx.feat_ecc + vy.feat_ecc);
 
         // Adaptive split decision: a pair whose Theorem-6 term already
         // fits the remaining budget is accurate enough as-is — prune it
@@ -978,9 +1345,8 @@ fn solve_pairs(
 
         // Nested node: align the cached sub-partitions' representatives,
         // then solve the supported sub-pairs one level down.
-        let (sub_x, sqx) = (&cx.sub, &cx.q);
-        let (sub_y, sqy) = (&cy.sub, &cy.q);
-        let res = align_node(sub_x, sub_y, sqx, sqy, fused, aligner);
+        let (sqx, sqy) = (vx.q, vy.q);
+        let res = align_node(vx.sub, vy.sub, sqx, sqy, fused, aligner);
         let global = SparseCoupling::from_dense(&res.plan, cfg.mass_threshold);
         let mut child_pairs: Vec<(u32, u32)> = Vec::new();
         let mut gmass: Vec<f64> = Vec::new();
@@ -989,11 +1355,11 @@ fn solve_pairs(
             gmass.push(w);
         }
 
+        let child_x = SideCtx { sub: vx.sub, q: vx.q, src: vx.src };
+        let child_y = SideCtx { sub: vy.sub, q: vy.q, src: vy.src };
         let child = solve_pairs(
-            sub_x,
-            sub_y,
-            sqx,
-            sqy,
+            &child_x,
+            &child_y,
             &child_pairs,
             levels_left - 1,
             pair_level + 1,
@@ -1001,7 +1367,6 @@ fn solve_pairs(
             cfg,
             fused,
             aligner,
-            pair_seed(seed, pair_level, pu, qu),
             false,
         );
 
@@ -1207,6 +1572,66 @@ mod tests {
                 hier.result.coupling.local_plan(p, q).unwrap().iter().map(|e| e.2).sum();
             assert!((mass - 1.0).abs() < 1e-7, "pair ({p},{q}) mass {mass}");
         }
+    }
+
+    // -- reference tree (build/match split) ---------------------------------
+
+    #[test]
+    fn indexed_match_reproduces_lazy_match_bitwise() {
+        let x = gaussian_cloud(260, 51);
+        let y = gaussian_cloud(240, 52);
+        let mut rng = Pcg32::seed_from(53);
+        let qx = voronoi_partition(&x, 5, &mut rng);
+        let qy = voronoi_partition(&y, 5, &mut rng);
+        let cfg = QgwConfig { levels: 3, leaf_size: 6, ..QgwConfig::default() };
+        let aligner = RustAligner(cfg.gw.clone());
+        let lazy = hier_qgw_match_quantized(&x, &y, &qx, &qy, &cfg, &aligner, 77);
+        assert!(lazy.stats.split_pairs > 0, "fixture must recurse: {:?}", lazy.stats);
+
+        let tree = build_ref_tree(Substrate::owned_cloud(y.clone()), qy.clone(), &cfg, 77);
+        assert!(tree.node_count() > 1, "tree must expand blocks");
+        assert!(tree.depth() >= 2);
+        assert!(tree.memory_bytes() > qy.memory_bytes());
+        let idx = hier_match_indexed(&Substrate::cloud(&x), &qx, &tree, &cfg, None, &aligner, 77);
+        assert_sparse_bitwise_equal(
+            &lazy.result.coupling.to_sparse(),
+            &idx.result.coupling.to_sparse(),
+        );
+        assert_eq!(lazy.result.error_bound.to_bits(), idx.result.error_bound.to_bits());
+        assert_eq!(lazy.stats.leaf_matchings, idx.stats.leaf_matchings);
+        // The indexed run never pays reference-side cache transients.
+        assert!(idx.stats.top_cache_bytes <= lazy.stats.top_cache_bytes);
+    }
+
+    #[test]
+    fn indexed_match_adaptive_and_different_query_seed() {
+        // Adaptive tolerance: prune decisions are pure functions of the
+        // same per-node scalars, so the indexed path replays them exactly.
+        let x = gaussian_cloud(260, 54);
+        let y = gaussian_cloud(240, 55);
+        let mut rng = Pcg32::seed_from(56);
+        let qx = voronoi_partition(&x, 5, &mut rng);
+        let qy = voronoi_partition(&y, 5, &mut rng);
+        let cfg = QgwConfig { levels: 3, leaf_size: 6, ..QgwConfig::default() };
+        let aligner = RustAligner(cfg.gw.clone());
+        let fixed = hier_qgw_match_quantized(&x, &y, &qx, &qy, &cfg, &aligner, 31);
+        let acfg = QgwConfig { tolerance: fixed.mid_tolerance(), ..cfg.clone() };
+        let lazy = hier_qgw_match_quantized(&x, &y, &qx, &qy, &acfg, &aligner, 31);
+        let tree = build_ref_tree(Substrate::owned_cloud(y.clone()), qy.clone(), &acfg, 31);
+        let idx =
+            hier_match_indexed(&Substrate::cloud(&x), &qx, &tree, &acfg, None, &aligner, 31);
+        assert_sparse_bitwise_equal(
+            &lazy.result.coupling.to_sparse(),
+            &idx.result.coupling.to_sparse(),
+        );
+        assert_eq!(lazy.stats.pruned_pairs, idx.stats.pruned_pairs);
+        assert_eq!(lazy.stats.preskipped_pairs, idx.stats.preskipped_pairs);
+
+        // A different query seed still yields a valid coupling against the
+        // same resident tree (the serving case: many queries, one build).
+        let other =
+            hier_match_indexed(&Substrate::cloud(&x), &qx, &tree, &acfg, None, &aligner, 99);
+        assert!(other.result.coupling.check_marginals(x.measure(), y.measure()) < 1e-7);
     }
 
     // -- adaptive recursion (tolerance) -------------------------------------

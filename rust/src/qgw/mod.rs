@@ -40,6 +40,8 @@ pub use fused::{
 };
 pub(crate) use fused::{qfgw_align, qfgw_assemble};
 pub use hier::{
-    balanced_m, hier_graph_match, hier_match_quantized, hier_qfgw_match, hier_qgw_match,
-    hier_qgw_match_quantized, HierQgwResult, HierStats, Substrate,
+    balanced_m, build_ref_tree, hier_graph_match, hier_match_indexed, hier_match_quantized,
+    hier_qfgw_match, hier_qgw_match, hier_qgw_match_quantized, HierQgwResult, HierStats, RefNode,
+    Substrate,
 };
+pub(crate) use hier::{split_seed, stage_partition};

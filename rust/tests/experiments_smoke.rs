@@ -124,4 +124,9 @@ fn scaling_sweep_tiny() {
         &pts.iter().map(|p| (p.n, p.qgw_secs)).collect::<Vec<_>>(),
     );
     assert!(slope < 2.8, "qGW scaling slope {slope}");
+    // The index amortization series actually ran on every point.
+    for p in &pts {
+        assert!(p.index_build_secs > 0.0, "{p:?}");
+        assert!(p.index_query_secs > 0.0 && p.cold_query_secs > 0.0, "{p:?}");
+    }
 }

@@ -1,0 +1,179 @@
+//! Reference-index store acceptance tests: the on-disk round trip must be
+//! *semantically invisible* (a loaded index serves byte-identical
+//! couplings), and every damaged-file path must fail cleanly before any
+//! structure is built.
+
+use qgw::coordinator::{MatchPipeline, Metrics, PipelineInput, QueryInput};
+use qgw::core::PointCloud;
+use qgw::index::RefIndex;
+use qgw::prng::{Gaussian, Pcg32, Rng};
+use qgw::qgw::QgwConfig;
+use qgw::testutil::{assert_sparse_bitwise_equal, coord_feature, ring_graph};
+
+fn cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::seed_from(seed);
+    let mut g = Gaussian::new();
+    PointCloud::new((0..n * 3).map(|_| g.sample(&mut rng)).collect(), 3)
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("qgw_idx_{}_{name}.qgwi", std::process::id()))
+}
+
+fn hier_cfg() -> QgwConfig {
+    QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(5) }
+}
+
+#[test]
+fn store_round_trip_serves_byte_identical_cloud_matches() {
+    let x = cloud(240, 1);
+    let y = cloud(260, 2);
+    let cfg = hier_cfg();
+    let index = RefIndex::build_cloud(&y, None, &cfg, 77);
+    let described = index.describe();
+
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+    pipe.seed = 77;
+    let in_memory = pipe.run_indexed(QueryInput::Cloud { x: &x }, &index).unwrap();
+
+    let path = tmp_path("roundtrip");
+    index.save(&path).unwrap();
+    let loaded = RefIndex::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // Metadata and structure survive verbatim...
+    assert_eq!(loaded.describe(), described);
+    assert_eq!(loaded.params().seed, 77);
+    assert_eq!(loaded.node_count(), index.node_count());
+
+    // ...and so does every coupling served from the reloaded tree.
+    let reloaded = pipe.run_indexed(QueryInput::Cloud { x: &x }, &loaded).unwrap();
+    assert_sparse_bitwise_equal(
+        &in_memory.result.coupling.to_sparse(),
+        &reloaded.result.coupling.to_sparse(),
+    );
+    assert_eq!(
+        in_memory.result.error_bound.to_bits(),
+        reloaded.result.error_bound.to_bits()
+    );
+}
+
+#[test]
+fn store_round_trip_fused_features_survive() {
+    let x = cloud(220, 3);
+    let y = cloud(200, 4);
+    let (fx, fy) = (coord_feature(&x), coord_feature(&y));
+    let cfg = hier_cfg();
+    let index = RefIndex::build_cloud(&y, Some(&fy), &cfg, 31);
+    assert!(index.has_features());
+
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+    pipe.seed = 31;
+    pipe.fused = Some((0.5, 0.75));
+    let in_memory = pipe
+        .run_indexed(QueryInput::CloudWithFeatures { x: &x, fx: &fx }, &index)
+        .unwrap();
+
+    let path = tmp_path("fused");
+    index.save(&path).unwrap();
+    let loaded = RefIndex::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.feature_dim(), index.feature_dim());
+
+    let reloaded = pipe
+        .run_indexed(QueryInput::CloudWithFeatures { x: &x, fx: &fx }, &loaded)
+        .unwrap();
+    assert_sparse_bitwise_equal(
+        &in_memory.result.coupling.to_sparse(),
+        &reloaded.result.coupling.to_sparse(),
+    );
+}
+
+#[test]
+fn store_round_trip_graph_adjacency_survives() {
+    let (g, mu) = ring_graph(150);
+    let cfg = QgwConfig { levels: 2, leaf_size: 6, ..QgwConfig::with_count(5) };
+    let index = RefIndex::build_graph(&g, &mu, None, &cfg, 9);
+
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+    pipe.seed = 9;
+    let (qg, qmu) = ring_graph(140);
+    let in_memory = pipe
+        .run_indexed(QueryInput::Graph { x: &qg, mu_x: &qmu, fx: None }, &index)
+        .unwrap();
+
+    let path = tmp_path("graph");
+    index.save(&path).unwrap();
+    let loaded = RefIndex::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let reloaded = pipe
+        .run_indexed(QueryInput::Graph { x: &qg, mu_x: &qmu, fx: None }, &loaded)
+        .unwrap();
+    assert_sparse_bitwise_equal(
+        &in_memory.result.coupling.to_sparse(),
+        &reloaded.result.coupling.to_sparse(),
+    );
+}
+
+fn saved_index_bytes(tag: &str) -> Vec<u8> {
+    let y = cloud(150, 8);
+    let index = RefIndex::build_cloud(&y, None, &hier_cfg(), 7);
+    // Unique path per caller: the damage tests run concurrently.
+    let path = tmp_path(&format!("damage_source_{tag}"));
+    index.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+/// Write damaged bytes, attempt a load, and return the error message
+/// (panics if the damaged file loads).
+fn load_err(name: &str, bytes: &[u8]) -> String {
+    let path = tmp_path(name);
+    std::fs::write(&path, bytes).unwrap();
+    let out = RefIndex::load(&path);
+    std::fs::remove_file(&path).ok();
+    match out {
+        Ok(_) => panic!("damaged index {name} unexpectedly loaded"),
+        Err(e) => e.to_string(),
+    }
+}
+
+#[test]
+fn corrupted_payload_fails_checksum() {
+    let mut bytes = saved_index_bytes("corrupt");
+    // Flip one payload bit (well past the 20-byte header).
+    let mid = 20 + (bytes.len() - 28) / 2;
+    bytes[mid] ^= 0x40;
+    let err = load_err("corrupt", &bytes);
+    assert!(err.contains("checksum"), "unexpected error: {err}");
+}
+
+#[test]
+fn truncated_file_fails_cleanly() {
+    let bytes = saved_index_bytes("trunc");
+    // Cut mid-payload: the length field no longer matches the file.
+    let cut = &bytes[..bytes.len() - bytes.len() / 3];
+    let err = load_err("truncated", cut);
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+    // Cut inside the header too.
+    let err = load_err("tiny", &bytes[..10]);
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+}
+
+#[test]
+fn version_mismatch_and_bad_magic_fail_cleanly() {
+    let mut bytes = saved_index_bytes("version");
+    bytes[8] = bytes[8].wrapping_add(1); // version field (after the magic)
+    let err = load_err("version", &bytes);
+    assert!(err.contains("version"), "unexpected error: {err}");
+
+    let mut bytes = saved_index_bytes("magic");
+    bytes[0] = b'X';
+    let err = load_err("magic", &bytes);
+    assert!(err.contains("magic"), "unexpected error: {err}");
+}

@@ -3,7 +3,9 @@
 //! offline). Each property runs over dozens of seeded random instances and
 //! reports the failing seed on violation.
 
+use qgw::coordinator::{MatchPipeline, Metrics, PipelineInput, QueryInput};
 use qgw::core::{DenseMatrix, DenseSpace, MmSpace, SparseCoupling};
+use qgw::index::RefIndex;
 use qgw::gw::{
     cg_gw, cg_gw_with, entropic_fgw, entropic_fgw_with, entropic_gw, entropic_gw_with,
     gw_loss, gw_loss_sparse, gw_loss_sparse_threads, product_coupling, FgwOptions, GwOptions,
@@ -847,6 +849,173 @@ fn prop_sparse_and_dense_partitions_agree() {
 // ---------------------------------------------------------------------------
 // Failure injection: malformed inputs fail loudly, not silently.
 // ---------------------------------------------------------------------------
+
+// ---------------------------------------------------------------------------
+// Reference index: the indexed match phase is byte-identical to the fused
+// build+match path on every substrate, at any thread count, for any
+// build-vs-match thread split (the serving contract of `crate::index`).
+// ---------------------------------------------------------------------------
+
+/// Couplings of a cold pipeline run and indexed runs (index built and
+/// matched under every 1/4-thread combination) must all be bit-equal.
+fn assert_indexed_equals_cold(
+    cold: &SparseCoupling,
+    cfg: &QgwConfig,
+    build: impl Fn(&QgwConfig) -> RefIndex,
+    run_query: impl Fn(&QgwConfig, &RefIndex) -> SparseCoupling,
+) {
+    for build_threads in [1usize, 4] {
+        let bcfg = QgwConfig { num_threads: build_threads, ..cfg.clone() };
+        let index = build(&bcfg);
+        for match_threads in [1usize, 4] {
+            let mcfg = QgwConfig { num_threads: match_threads, ..cfg.clone() };
+            let got = run_query(&mcfg, &index);
+            assert_bitwise_equal(cold, &got);
+        }
+    }
+}
+
+#[test]
+fn prop_indexed_match_byte_identical_cloud() {
+    forall(4, |rng| {
+        let x = random_cloud(rng, 150 + rng.below(80), 3);
+        let y = random_cloud(rng, 150 + rng.below(80), 3);
+        let seed = rng.next_u64();
+        let cfg = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(5) };
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = seed;
+        let cold = pipe.run(PipelineInput::Clouds { x: &x, y: &y });
+        let cold_sparse = cold.result.coupling.to_sparse();
+        assert_indexed_equals_cold(
+            &cold_sparse,
+            &cfg,
+            |bcfg| RefIndex::build_cloud(&y, None, bcfg, seed),
+            |mcfg, index| {
+                let metrics = Metrics::new();
+                let mut pipe = MatchPipeline::new(mcfg.clone(), &metrics);
+                pipe.seed = seed;
+                pipe.run_indexed(QueryInput::Cloud { x: &x }, index)
+                    .unwrap()
+                    .result
+                    .coupling
+                    .to_sparse()
+            },
+        );
+    });
+}
+
+#[test]
+fn prop_indexed_match_byte_identical_fused() {
+    forall(3, |rng| {
+        let x = random_cloud(rng, 150 + rng.below(60), 3);
+        let y = random_cloud(rng, 150 + rng.below(60), 3);
+        let (fx, fy) = (coord_feature(&x), coord_feature(&y));
+        let seed = rng.next_u64();
+        let cfg = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(5) };
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = seed;
+        pipe.fused = Some((0.5, 0.75));
+        let cold = pipe.run(PipelineInput::CloudsWithFeatures {
+            x: &x,
+            y: &y,
+            fx: &fx,
+            fy: &fy,
+        });
+        let cold_sparse = cold.result.coupling.to_sparse();
+        for build_threads in [1usize, 4] {
+            let bcfg = QgwConfig { num_threads: build_threads, ..cfg.clone() };
+            let index = RefIndex::build_cloud(&y, Some(&fy), &bcfg, seed);
+            for match_threads in [1usize, 4] {
+                let metrics = Metrics::new();
+                let mcfg = QgwConfig { num_threads: match_threads, ..cfg.clone() };
+                let mut pipe = MatchPipeline::new(mcfg, &metrics);
+                pipe.seed = seed;
+                pipe.fused = Some((0.5, 0.75));
+                let got = pipe
+                    .run_indexed(QueryInput::CloudWithFeatures { x: &x, fx: &fx }, &index)
+                    .unwrap();
+                assert_bitwise_equal(&cold_sparse, &got.result.coupling.to_sparse());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_indexed_match_byte_identical_graph() {
+    forall(3, |rng| {
+        let (gx, mux) = ring_graph(100 + rng.below(60));
+        let (gy, muy) = ring_graph(100 + rng.below(60));
+        let seed = rng.next_u64();
+        let cfg = QgwConfig { levels: 2, leaf_size: 6, ..QgwConfig::with_count(5) };
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = seed;
+        let cold = pipe.run(PipelineInput::Graphs {
+            x: &gx,
+            y: &gy,
+            mu_x: &mux,
+            mu_y: &muy,
+            fx: None,
+            fy: None,
+        });
+        let cold_sparse = cold.result.coupling.to_sparse();
+        assert_indexed_equals_cold(
+            &cold_sparse,
+            &cfg,
+            |bcfg| RefIndex::build_graph(&gy, &muy, None, bcfg, seed),
+            |mcfg, index| {
+                let metrics = Metrics::new();
+                let mut pipe = MatchPipeline::new(mcfg.clone(), &metrics);
+                pipe.seed = seed;
+                pipe.run_indexed(QueryInput::Graph { x: &gx, mu_x: &mux, fx: None }, index)
+                    .unwrap()
+                    .result
+                    .coupling
+                    .to_sparse()
+            },
+        );
+    });
+}
+
+#[test]
+fn prop_indexed_match_byte_identical_adaptive_tolerance() {
+    // Adaptive prune decisions are pure per-node scalar functions, so the
+    // indexed path replays them — including prune-ahead pre-skips.
+    forall(3, |rng| {
+        let x = random_cloud(rng, 170 + rng.below(60), 3);
+        let y = random_cloud(rng, 170 + rng.below(60), 3);
+        let seed = rng.next_u64();
+        let base = QgwConfig { levels: 3, leaf_size: 6, ..QgwConfig::with_count(5) };
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(base.clone(), &metrics);
+        pipe.seed = seed;
+        let fixed = pipe.run(PipelineInput::Clouds { x: &x, y: &y });
+        let tol = fixed.result.error_bound * 0.6;
+        let cfg = QgwConfig { tolerance: tol, ..base };
+
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = seed;
+        let cold = pipe.run(PipelineInput::Clouds { x: &x, y: &y });
+        let cold_sparse = cold.result.coupling.to_sparse();
+        assert_indexed_equals_cold(
+            &cold_sparse,
+            &cfg,
+            |bcfg| RefIndex::build_cloud(&y, None, bcfg, seed),
+            |mcfg, index| {
+                let metrics = Metrics::new();
+                let mut pipe = MatchPipeline::new(mcfg.clone(), &metrics);
+                pipe.seed = seed;
+                let got = pipe.run_indexed(QueryInput::Cloud { x: &x }, index).unwrap();
+                assert_eq!(got.pruned_pairs, cold.pruned_pairs);
+                assert_eq!(got.preskipped_pairs, cold.preskipped_pairs);
+                got.result.coupling.to_sparse()
+            },
+        );
+    });
+}
 
 #[test]
 fn prop_sparse_coupling_handles_degenerate_rows() {

@@ -15,12 +15,22 @@
 //! queries indexed-vs-cold, assert the per-query speedup, and emit
 //! `BENCH_5.json`.
 //!
+//! PR 6 moved every parallel op onto the shared persistent
+//! [`qgw::coordinator::ComputePool`]; the spawn-vs-pool profile here
+//! runs each primitive through both the pooled and the legacy scoped
+//! (spawn-per-call) path, counts OS thread spawns per iteration via
+//! [`qgw::coordinator::threads_spawned_total`], asserts the pooled paths
+//! spawn **zero** threads per op in steady state (and that the results
+//! stay byte-identical), and emits `BENCH_6.json`.
+//!
 //! `QGW_BENCH_TEST_MODE=1` shrinks every size and runs one iteration per
 //! op — the CI quick-profile step uses it to assert the kernel signatures
 //! and the (deterministic) workspace-vs-alloc allocation wins without
 //! paying for a full bench run; the index amortization speedup is
-//! asserted in full mode only, where its margin is not noise-sized.
-//! `QGW_BENCH_JSON` / `QGW_BENCH5_JSON` override the output paths.
+//! asserted in full mode only, where its margin is not noise-sized. The
+//! zero-spawn assertions are deterministic and hold in both modes.
+//! `QGW_BENCH_JSON` / `QGW_BENCH5_JSON` / `QGW_BENCH6_JSON` override the
+//! output paths.
 
 #[path = "harness.rs"]
 mod harness;
@@ -30,11 +40,16 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 use harness::BenchStats;
-use qgw::coordinator::{MatchPipeline, Metrics, PipelineInput, QueryInput};
+use qgw::coordinator::{
+    parallel_map, parallel_map_scoped, threads_spawned_total, MatchPipeline, Metrics,
+    PipelineInput, QueryInput,
+};
 use qgw::core::{uniform_measure, DenseMatrix, MmSpace, SparseCoupling};
 use qgw::data::blobs::make_blobs;
 use qgw::gw::{
-    entropic_gw, gw_cost_tensor, gw_loss_sparse, product_coupling, GwOptions, GwWorkspace,
+    entropic_gw, gw_cost_tensor, gw_loss_sparse, gw_loss_sparse_threads,
+    gw_loss_sparse_threads_scoped, par_matmul_into, par_matmul_into_scoped, product_coupling,
+    GwOptions, GwWorkspace,
 };
 use qgw::index::RefIndex;
 use qgw::ot::{
@@ -168,6 +183,46 @@ fn write_json(records: &[Record], test_mode: bool) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
+}
+
+/// One BENCH_6.json record: a parallel primitive through the pooled or
+/// the legacy scoped (spawn-per-call) path.
+struct PoolRecord {
+    op: String,
+    size: usize,
+    ns_per_iter: u128,
+    thread_spawns_per_iter: f64,
+}
+
+/// Time `f` for `iters` iterations while counting OS thread spawns
+/// (engine-wide, via [`threads_spawned_total`]). Returns spawns/iter so
+/// the caller can assert the steady-state contract: pooled paths spawn
+/// zero threads per op once the shared pool is warm.
+fn profile_spawns(
+    records: &mut Vec<PoolRecord>,
+    op: &str,
+    size: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> f64 {
+    let iters = iters.max(1);
+    let spawns0 = threads_spawned_total();
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let elapsed = start.elapsed();
+    let spawned = threads_spawned_total() - spawns0;
+    let per_iter = spawned as f64 / iters as f64;
+    let ns = elapsed.as_nanos() / iters as u128;
+    println!("{op} size={size}: {ns} ns/iter, {per_iter:.1} thread spawns/iter");
+    records.push(PoolRecord {
+        op: op.to_string(),
+        size,
+        ns_per_iter: ns,
+        thread_spawns_per_iter: per_iter,
+    });
+    per_iter
 }
 
 /// The pre-PR-4 O(nnz^2) serial double loop — kept as the sparse-scoring
@@ -455,7 +510,126 @@ fn main() {
         );
     }
 
+    println!("--- compute pool: persistent pool vs spawn-per-call (BENCH_6) ---");
+    {
+        let threads = 4;
+        let iters = if test_mode { 2 } else { 50 };
+        let mut pr: Vec<PoolRecord> = Vec::new();
+
+        // parallel_map over a plain slice.
+        let n_map = if test_mode { 256 } else { 4096 };
+        let items: Vec<u64> = (0..n_map as u64).collect();
+        // One 72^3 matmul — above the 64^3 serial cutoff, so the
+        // parallel path engages even at test-mode scale.
+        let mm = 72;
+        let xa = make_blobs(mm, 3, 1.0, 10.0, &mut rng);
+        let xb = make_blobs(mm, 3, 1.0, 10.0, &mut rng);
+        let (am, bm) = (xa.distance_matrix(), xb.distance_matrix());
+        let mut out_pool = DenseMatrix::zeros(mm, mm);
+        let mut out_scoped = DenseMatrix::zeros(mm, mm);
+        // Near-diagonal sparse coupling, as in the scoring bench above.
+        let n = if test_mode { 64 } else { 500 };
+        let xs = make_blobs(n, 3, 1.0, 10.0, &mut rng);
+        let sparse = SparseCoupling::from_rows(
+            n,
+            n,
+            (0..n)
+                .map(|i| vec![(i as u32, 0.7 / n as f64), (((i + 1) % n) as u32, 0.3 / n as f64)])
+                .collect(),
+        );
+
+        // Warm the shared pool: its workers spawn once, here, and never
+        // again — everything below is the steady state the engine runs in.
+        std::hint::black_box(parallel_map(&items, |v| v.wrapping_mul(3), threads));
+
+        let map_pool = profile_spawns(&mut pr, "parallel_map[pool]", n_map, iters, || {
+            std::hint::black_box(parallel_map(&items, |v| v.rotate_left(7), threads));
+        });
+        let map_scoped = profile_spawns(&mut pr, "parallel_map[scoped]", n_map, iters, || {
+            std::hint::black_box(parallel_map_scoped(&items, |v| v.rotate_left(7), threads));
+        });
+        let mm_pool = profile_spawns(&mut pr, "par_matmul[pool]", mm, iters, || {
+            par_matmul_into(&am, &bm, &mut out_pool);
+        });
+        profile_spawns(&mut pr, "par_matmul[scoped]", mm, iters, || {
+            par_matmul_into_scoped(&am, &bm, &mut out_scoped);
+        });
+        let loss_pool = profile_spawns(&mut pr, "gw_loss_sparse[pool]", n, iters, || {
+            std::hint::black_box(gw_loss_sparse_threads(&sparse, &xs, &xs, threads));
+        });
+        profile_spawns(&mut pr, "gw_loss_sparse[scoped]", n, iters, || {
+            std::hint::black_box(gw_loss_sparse_threads_scoped(&sparse, &xs, &xs, threads));
+        });
+
+        // The PR-6 contract, deterministic in both modes: pooled ops spawn
+        // zero threads per call in steady state, while the scoped paths
+        // pay at least one spawn per call; and pooled results stay
+        // byte-identical to the scoped ones.
+        assert!(
+            map_pool == 0.0 && mm_pool == 0.0 && loss_pool == 0.0,
+            "pooled paths spawned threads in steady state: map={map_pool} matmul={mm_pool} \
+             loss={loss_pool} spawns/iter"
+        );
+        assert!(
+            map_scoped >= 1.0,
+            "scoped parallel_map should spawn per call (got {map_scoped} spawns/iter)"
+        );
+        assert_eq!(
+            out_pool.as_slice(),
+            out_scoped.as_slice(),
+            "pooled matmul diverged from the scoped reference"
+        );
+        assert_eq!(
+            gw_loss_sparse_threads(&sparse, &xs, &xs, threads).to_bits(),
+            gw_loss_sparse_threads_scoped(&sparse, &xs, &xs, threads).to_bits(),
+            "pooled sparse loss diverged from the scoped reference"
+        );
+        println!(
+            "steady-state thread spawns/iter: pool 0.0/0.0/0.0 vs scoped \
+             {map_scoped:.1} (parallel_map)"
+        );
+        write_bench6(&pr, test_mode);
+    }
+
     write_json(&records, test_mode);
+}
+
+/// BENCH_6.json — the spawn-vs-pool trajectory: each parallel primitive
+/// through the persistent-pool and the spawn-per-call path, with
+/// steady-state thread spawns per iteration (schema documented in
+/// EXPERIMENTS.md §Compute-pool).
+fn write_bench6(records: &[PoolRecord], test_mode: bool) {
+    let path = std::env::var("QGW_BENCH6_JSON").unwrap_or_else(|_| {
+        if test_mode {
+            std::env::temp_dir().join("BENCH_6_smoke.json").to_string_lossy().into_owned()
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json").to_string()
+        }
+    });
+    let mut out = String::from("[\n");
+    out.push_str(&format!(
+        "  {{\"op\": \"_meta\", \"note\": \"measured by cargo bench --bench micro ({} mode); \
+         thread_spawns_per_iter is deterministic (pool paths must stay at 0.0 in steady \
+         state), timings are machine-dependent\"}}{}\n",
+        if test_mode { "test" } else { "full" },
+        if records.is_empty() { "" } else { "," }
+    ));
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"op\": \"{}\", \"size\": {}, \"ns_per_iter\": {}, \
+             \"thread_spawns_per_iter\": {:.1}}}{}\n",
+            r.op,
+            r.size,
+            r.ns_per_iter,
+            r.thread_spawns_per_iter,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 /// BENCH_5.json — the reference-index amortization trajectory: one build,

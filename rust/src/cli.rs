@@ -122,13 +122,24 @@ pub fn run(argv: Vec<String>) -> Result<()> {
 
 fn build_config(args: &Args) -> Result<(QgwConfig, Option<(f64, f64)>)> {
     // Optional config file, overridden by flags.
-    let (mut cfg, mut fused) = match args.flag("config") {
+    let (mut cfg, mut fused, pool_cfg) = match args.flag("config") {
         Some(path) => {
             let file = Config::load(std::path::Path::new(path))?;
-            (file.qgw_config(), file.fused_config())
+            (file.qgw_config(), file.fused_config(), file.pool_threads())
         }
-        None => (QgwConfig::default(), None),
+        None => (QgwConfig::default(), None, 0),
     };
+    // Shared compute-pool size: `--pool-threads` wins over the config
+    // file's `[qgw] pool_threads`, and `QGW_POOL_THREADS` (read when the
+    // pool is first built) wins over both. The pool is lazy, so this
+    // only sticks if it runs before the first parallel op.
+    let pool_threads = match args.flag("pool-threads") {
+        Some(v) => v.parse::<usize>().context("--pool-threads")?,
+        None => pool_cfg,
+    };
+    if pool_threads > 0 && !crate::coordinator::set_global_pool_size(pool_threads) {
+        eprintln!("warn: shared compute pool already running; --pool-threads ignored");
+    }
     if let Some(m) = args.flag("m") {
         cfg.size = crate::qgw::PartitionSize::Count(m.parse().context("--m")?);
     } else if args.flag("fraction").is_some() {
@@ -455,7 +466,16 @@ fn print_usage() {
                           --levels is a hard cap and a block pair re-quantizes only\n\
                           while its Theorem-6 bound term exceeds the remaining\n\
                           budget; pairs already within budget bottom out at the\n\
-                          exact 1-D leaf (reported as pruned_pairs)"
+                          exact 1-D leaf (reported as pruned_pairs)\n\
+         \n\
+         thread knobs (match/serve/index — couplings are byte-identical at\n\
+         every setting of both):\n\
+           --threads N       per-op concurrency cap (default 0 = use every\n\
+                             worker of the shared compute pool; 1 = serial)\n\
+           --pool-threads N  size of the shared compute pool, built once on\n\
+                             the first parallel op (default 0 = one worker\n\
+                             per core; the QGW_POOL_THREADS env var\n\
+                             overrides both this flag and the config file)"
     );
 }
 

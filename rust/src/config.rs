@@ -149,6 +149,15 @@ impl Config {
         }
     }
 
+    /// Size of the shared compute pool from `[qgw] pool_threads` (0 =
+    /// auto: one worker per core). Distinct from `[qgw] threads`, which
+    /// caps per-op concurrency; the pool itself is built once, on the
+    /// first parallel op, and `QGW_POOL_THREADS` in the environment
+    /// overrides this value at that point.
+    pub fn pool_threads(&self) -> usize {
+        self.usize_or("qgw.pool_threads", 0)
+    }
+
     /// Fused (qFGW) weights from the `[fused]` section: `Some((alpha,
     /// beta))` when either key is present, missing keys taking the paper
     /// defaults (0.5, 0.75). `None` when the section is absent — plain
@@ -292,6 +301,14 @@ full = false
         assert_eq!(z.levels, 1);
         assert_eq!(z.leaf_size, 1);
         assert_eq!(z.tolerance, 0.0);
+    }
+
+    #[test]
+    fn pool_threads_parses_and_defaults_to_auto() {
+        let c = Config::parse("[qgw]\npool_threads = 6\n").unwrap();
+        assert_eq!(c.pool_threads(), 6);
+        // Absent (or any non-positive value) means auto-size.
+        assert_eq!(Config::parse("").unwrap().pool_threads(), 0);
     }
 
     #[test]

@@ -1,16 +1,23 @@
-//! Layer-3 coordination: thread pool, stage metrics, the end-to-end match
-//! pipeline, and the row-query match service.
+//! Layer-3 coordination: compute pool, stage metrics, the end-to-end
+//! match pipeline, and the row-query match service.
 //!
-//! No tokio/rayon in the offline environment — the pool is built on
-//! `std::thread::scope` (fan-out) and a channel-fed persistent pool
-//! (service mode).
+//! No tokio/rayon in the offline environment — compute fan-out runs on
+//! one process-wide persistent work-stealing [`ComputePool`], and service
+//! connections on a channel-fed bounded [`ThreadPool`]. The
+//! `*_scoped` variants keep the old per-call `std::thread::scope`
+//! implementations as property-test references.
 
 mod metrics;
 mod pipeline;
 mod pool;
 mod service;
 
+pub(crate) use pool::{count_thread_spawn, lock_recover, SendPtr};
+
 pub use metrics::{Metrics, StageTimer};
 pub use pipeline::{MatchPipeline, PipelineInput, PipelineReport, QueryInput};
-pub use pool::{effective_threads, parallel_map, ThreadPool};
+pub use pool::{
+    effective_threads, parallel_map, parallel_map_scoped, set_global_pool_size,
+    threads_spawned_total, ComputePool, ThreadPool,
+};
 pub use service::MatchService;

@@ -16,6 +16,13 @@
 //! `aligner` override (the recursion requires a `Sync` aligner); that
 //! downgrade is surfaced through the `hier_fallbacks` metric and a
 //! warning instead of being silently absorbed.
+//!
+//! All parallel work below the pipeline — the hierarchy's block fan-out,
+//! the solver's matmuls, the sparse loss sweeps — runs on the shared
+//! persistent [`super::ComputePool`]; no stage spawns threads of its
+//! own, and `qgw.threads` acts as a per-op concurrency cap rather than
+//! a spawn count. Couplings are byte-identical at every cap and pool
+//! size.
 
 use std::time::{Duration, Instant};
 

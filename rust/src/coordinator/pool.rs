@@ -1,17 +1,35 @@
-//! Minimal threading substrate.
+//! Threading substrate: the engine's persistent compute pool plus the
+//! service-side job pool.
 //!
-//! * [`parallel_map`] — scoped fork-join over a slice: workers claim
-//!   disjoint output chunks and write into them directly (the same trick
-//!   as `par_matmul_into` — the only lock is the briefly-held chunk-queue
-//!   pop), results in input order. This is what the qGW local-matching
-//!   fan-out uses.
+//! * [`ComputePool`] — one process-wide set of persistent workers that
+//!   every parallel kernel ([`parallel_map`],
+//!   [`crate::gw::par_matmul_into`], the sparse-loss sweep) fans out
+//!   over. Work-stealing at two granularities: a task *handle* is pushed
+//!   onto per-worker deques (stolen deque-to-deque when a worker's own
+//!   deque is empty), and within a task every participant — pool workers
+//!   and the submitting thread alike — claims chunks off a shared atomic
+//!   cursor. Idle workers park on a condvar (no spinning); steady-state
+//!   parallel ops spawn zero threads (the BENCH_6 oracle).
+//! * [`parallel_map`] — fork-join over a slice on the shared pool:
+//!   participants claim disjoint output chunks and write into them
+//!   directly, results in input order. Output placement depends only on
+//!   the input index, never on scheduling, so every deterministic
+//!   consumer (byte-identical couplings across thread counts) is
+//!   preserved. [`parallel_map_scoped`] keeps the pre-pool
+//!   `thread::scope` implementation as the reference the pooled path is
+//!   property-tested and benched against.
 //! * [`ThreadPool`] — persistent workers fed by a *bounded* channel, for
 //!   the match service's connection handling: a flood of jobs blocks (or,
 //!   via [`ThreadPool::try_execute`], is refused) instead of growing an
-//!   unbounded queue or spawning unbounded threads.
+//!   unbounded queue or spawning unbounded threads. Service sessions
+//!   block on I/O for their lifetime, which is exactly what the compute
+//!   pool's workers must never do — hence two pools.
 
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread;
 
 /// Number of worker threads to use when `requested == 0`.
@@ -23,15 +41,356 @@ pub fn effective_threads(requested: usize) -> usize {
     }
 }
 
-/// Apply `f` to every item in parallel, preserving order. The output is
-/// split into small disjoint chunks (several per worker, so uneven item
-/// costs — big vs small partition blocks — balance out); workers pop a
-/// chunk from a queue and write results straight into it. The same trick
-/// as `par_matmul_into`: no per-item `(idx, value)` collection, no
-/// scatter pass, and the only lock is the chunk-queue pop, whose hold
-/// time is trivial next to a chunk's work. Output order — and therefore
-/// every deterministic consumer — is independent of scheduling.
+/// OS threads the engine has ever spawned (compute-pool workers, service
+/// pool workers, accept loops, and the scoped reference paths). The
+/// micro bench samples this around steady-state pooled ops to assert the
+/// pool's whole point: zero spawns per op once the workers exist.
+static THREADS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Monotone count of engine-spawned OS threads (see [`count_thread_spawn`]).
+pub fn threads_spawned_total() -> u64 {
+    THREADS_SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Record one engine thread spawn. Call at every `thread::spawn` /
+/// scoped-spawn site so [`threads_spawned_total`] stays an honest oracle.
+pub(crate) fn count_thread_spawn() {
+    THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Lock a mutex, recovering the guard when a previous holder panicked.
+/// Every queue/deque in this module protects plain work-distribution
+/// state that is never left half-updated by a panicking *closure* (the
+/// panic happens in user code outside the lock), so the data is valid and
+/// the original panic — not a `PoisonError` — is the one that must
+/// surface.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Raw-pointer wrapper that lets disjoint-chunk writers share a base
+/// pointer across threads. Safety is the *caller's* obligation: every
+/// chunk must write a disjoint region, and the owner must not touch the
+/// buffer until the parallel op completes.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+/// Monomorphized trampoline stored in [`TaskState`]: recovers the
+/// submitter's closure from the erased data pointer and runs one chunk.
+///
+/// # Safety
+/// `data` must point to a live `F` for the duration of the call — upheld
+/// because [`ComputePool::run`] does not return (and so the closure does
+/// not die) until every claimed chunk has finished.
+unsafe fn call_chunk<F: Fn(usize) + Sync>(data: *const (), chunk: usize) {
+    let f = &*(data as *const F);
+    f(chunk);
+}
+
+/// One parallel op in flight on the [`ComputePool`]: the lifetime-erased
+/// chunk closure plus the claim cursor and the completion latch. Handles
+/// (`Arc<TaskState>`) are pushed onto worker deques; any number of
+/// threads execute the same task concurrently by claiming chunk indices
+/// off `next`.
+struct TaskState {
+    /// The submitter's `&F` with its lifetime erased; only dereferenced
+    /// via `call` between a successful cursor claim and the matching
+    /// `pending` decrement, both of which happen before the submitter's
+    /// `run` returns.
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    chunks: usize,
+    /// Next unclaimed chunk index. Claims past `chunks` are harmless
+    /// no-ops — that is how stale handles in worker deques drain.
+    next: AtomicUsize,
+    /// Chunks claimed-and-not-yet-finished plus never-claimed ones; the
+    /// submitter's wait and the erased borrow both end when this hits 0.
+    pending: AtomicUsize,
+    /// First panic payload out of any chunk; re-raised by the submitter
+    /// after completion so sibling chunks finish (the output buffer is
+    /// borrowed by all of them) and the *original* panic surfaces.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `data` is only dereferenced inside the claim window described
+// on the field, and all cross-thread handoff of the pointed-to closure is
+// ordered by the deque mutex (publish) and the `pending` release
+// sequence + `done` mutex (retire).
+unsafe impl Send for TaskState {}
+unsafe impl Sync for TaskState {}
+
+impl TaskState {
+    /// Claim and execute chunks until the cursor is exhausted. Called by
+    /// pool workers and the submitting thread alike — the submitter
+    /// always participates, which is what makes nested parallel ops
+    /// (hierarchy fan-out → solver → blocked matmul) deadlock-free: a
+    /// blocked submitter is only ever waiting on chunks some thread is
+    /// actively executing.
+    fn run_chunks(&self) {
+        loop {
+            let c = self.next.fetch_add(1, Ordering::Relaxed);
+            if c >= self.chunks {
+                return;
+            }
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: chunk `c` was claimed exactly once; the closure
+                // outlives this call (see `TaskState::data`).
+                unsafe { (self.call)(self.data, c) }
+            }));
+            if let Err(payload) = result {
+                let mut slot = lock_recover(&self.panic);
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            // AcqRel: joins every finished chunk's writes into one release
+            // sequence so whichever thread observes 0 (and the submitter
+            // after it) sees all of them.
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut done = lock_recover(&self.done);
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolShared {
+    /// One handle deque per worker. A submitter pushes up to
+    /// `concurrency - 1` copies of a task's handle round-robin; a worker
+    /// pops its own deque front-first and steals from the others
+    /// back-first.
+    deques: Vec<Mutex<VecDeque<Arc<TaskState>>>>,
+    /// Wake epoch, bumped under the lock on every push (and on
+    /// shutdown). A worker snapshots it before scanning the deques and
+    /// re-checks under the lock before parking, so a push that lands
+    /// mid-scan is either seen by the scan or bumps the epoch and forces
+    /// a rescan — no lost wakeups.
+    epoch: Mutex<u64>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl PoolShared {
+    fn push_handles(&self, task: &Arc<TaskState>, handles: usize) {
+        for w in 0..handles {
+            lock_recover(&self.deques[w % self.deques.len()]).push_back(Arc::clone(task));
+        }
+        let mut epoch = lock_recover(&self.epoch);
+        *epoch = epoch.wrapping_add(1);
+        self.wake.notify_all();
+    }
+
+    fn pop_task(&self, me: usize) -> Option<Arc<TaskState>> {
+        if let Some(t) = lock_recover(&self.deques[me]).pop_front() {
+            return Some(t);
+        }
+        let n = self.deques.len();
+        for off in 1..n {
+            if let Some(t) = lock_recover(&self.deques[(me + off) % n]).pop_back() {
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, me: usize) {
+    loop {
+        // Snapshot the epoch *before* scanning (see `PoolShared::epoch`).
+        let seen = *lock_recover(&shared.epoch);
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if let Some(task) = shared.pop_task(me) {
+            task.run_chunks();
+            continue;
+        }
+        let mut guard = lock_recover(&shared.epoch);
+        while *guard == seen && !shared.shutdown.load(Ordering::Acquire) {
+            guard = shared.wake.wait(guard).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Persistent work-stealing pool for the engine's compute kernels. See
+/// the module docs for the architecture and EXPERIMENTS.md §Compute-pool
+/// for the determinism contract and the spawn-vs-pool measurements.
+pub struct ComputePool {
+    shared: Arc<PoolShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ComputePool {
+    /// Pool with `num_threads` persistent workers (0 = one per core).
+    pub fn new(num_threads: usize) -> Self {
+        let threads = effective_threads(num_threads);
+        let shared = Arc::new(PoolShared {
+            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            epoch: Mutex::new(0),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads)
+            .map(|me| {
+                let sh = Arc::clone(&shared);
+                count_thread_spawn();
+                thread::Builder::new()
+                    .name(format!("qgw-pool-{me}"))
+                    .spawn(move || worker_loop(sh, me))
+                    .expect("spawning compute pool worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// The process-wide pool every parallel kernel shares. Built lazily
+    /// on first use; sized by `QGW_POOL_THREADS`, else by the last
+    /// [`set_global_pool_size`] call (the `--pool-threads` /
+    /// `[qgw] pool_threads` knobs), else one worker per core.
+    pub fn global() -> &'static ComputePool {
+        GLOBAL_POOL.get_or_init(|| {
+            let requested = std::env::var("QGW_POOL_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| GLOBAL_POOL_SIZE.load(Ordering::Relaxed));
+            ComputePool::new(requested)
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `f(0) .. f(chunks - 1)` across the pool, returning when all
+    /// chunks have finished. `limit` caps the number of concurrent
+    /// claimants *for this op* (0 = no cap): it is the per-op `--threads`
+    /// knob, a resource bound only — which chunks land on which thread
+    /// never affects where results are written. The submitting thread
+    /// always participates, so `limit == 1` (or a single chunk) runs
+    /// entirely inline. If any chunk panics, the remaining chunks still
+    /// run and the first panic is re-raised here afterwards.
+    pub fn run<F: Fn(usize) + Sync>(&self, chunks: usize, limit: usize, f: &F) {
+        if chunks == 0 {
+            return;
+        }
+        let limit = if limit == 0 { usize::MAX } else { limit };
+        let helpers = self.workers.len().min(chunks).min(limit.saturating_sub(1));
+        if helpers == 0 || chunks == 1 {
+            for c in 0..chunks {
+                f(c);
+            }
+            return;
+        }
+        let task = Arc::new(TaskState {
+            data: f as *const F as *const (),
+            call: call_chunk::<F>,
+            chunks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(chunks),
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        self.shared.push_handles(&task, helpers);
+        task.run_chunks();
+        {
+            let mut done = lock_recover(&task.done);
+            while !*done {
+                done = task.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        if let Some(payload) = lock_recover(&task.panic).take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let mut epoch = lock_recover(&self.shared.epoch);
+            *epoch = epoch.wrapping_add(1);
+            self.shared.wake.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+static GLOBAL_POOL: OnceLock<ComputePool> = OnceLock::new();
+static GLOBAL_POOL_SIZE: AtomicUsize = AtomicUsize::new(0);
+
+/// Request a worker count for the process-wide [`ComputePool::global`]
+/// (0 = one per core). Takes effect only if called before the pool's
+/// first use; returns `false` (and changes nothing) once the pool is
+/// built. The `QGW_POOL_THREADS` environment variable overrides this.
+pub fn set_global_pool_size(n: usize) -> bool {
+    GLOBAL_POOL_SIZE.store(n, Ordering::Relaxed);
+    GLOBAL_POOL.get().is_none()
+}
+
+/// Apply `f` to every item in parallel on the shared [`ComputePool`],
+/// preserving order. The output is split into small disjoint chunks
+/// (several per claimant, so uneven item costs — big vs small partition
+/// blocks — balance out); participants claim a chunk off the task cursor
+/// and write results straight into it. No per-item `(idx, value)`
+/// collection, no scatter pass, no thread spawn. `num_threads` caps this
+/// op's concurrency (0 = pool width); output order — and therefore every
+/// deterministic consumer — is independent of scheduling and of
+/// `num_threads`.
 pub fn parallel_map<T, U, F>(items: &[T], f: F, num_threads: usize) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = effective_threads(num_threads).min(n.max(1));
+    if threads <= 1 || n < 2 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let batch = (n / (threads * 8)).max(1);
+    let nchunks = n.div_ceil(batch);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    ComputePool::global().run(nchunks, threads, &|ci: usize| {
+        let start = ci * batch;
+        let end = (start + batch).min(n);
+        for idx in start..end {
+            let v = f(&items[idx]);
+            // SAFETY: chunk `ci` exclusively owns out[start..end] (chunk
+            // ranges are disjoint, each chunk runs exactly once) and
+            // `out` is untouched until `run` returns. The slot holds the
+            // `None` it was initialized with, so dropping it before the
+            // overwrite is not required.
+            unsafe { out_ptr.0.add(idx).write(Some(v)) };
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker missed an index")).collect()
+}
+
+/// The pre-pool `thread::scope` implementation of [`parallel_map`]:
+/// spawns `num_threads` OS threads per call. Kept as the reference the
+/// pooled path is property-tested against (`rust/tests/properties.rs`)
+/// and as the per-call-spawn baseline of the BENCH_6 spawn-vs-pool
+/// profile. Same chunking, same output placement — bit-identical results.
+pub fn parallel_map_scoped<T, U, F>(items: &[T], f: F, num_threads: usize) -> Vec<U>
 where
     T: Sync,
     U: Send,
@@ -53,8 +412,13 @@ where
     let queue = Mutex::new(chunks);
     thread::scope(|s| {
         for _ in 0..threads {
+            count_thread_spawn();
             s.spawn(|| loop {
-                let Some((start, slice)) = queue.lock().unwrap().pop() else {
+                // A panicking closure poisons this mutex from a sibling's
+                // perspective; recover the guard so the siblings drain
+                // the queue and `thread::scope` re-raises the *original*
+                // panic, not a PoisonError.
+                let Some((start, slice)) = lock_recover(&queue).pop() else {
                     break;
                 };
                 for (off, cell) in slice.iter_mut().enumerate() {
@@ -95,8 +459,9 @@ impl ThreadPool {
         let workers = (0..threads)
             .map(|_| {
                 let rx = Arc::clone(&receiver);
+                count_thread_spawn();
                 thread::spawn(move || loop {
-                    let job = { rx.lock().unwrap().recv() };
+                    let job = { lock_recover(&rx).recv() };
                     match job {
                         // Isolate panics: a panicking job (e.g. a service
                         // handler fed hostile input) must cost one job,
@@ -177,21 +542,105 @@ mod tests {
     }
 
     #[test]
-    fn parallel_map_uses_multiple_threads() {
-        // Items sleep long enough that a single worker cannot drain the
-        // queue before others start.
+    fn pool_uses_multiple_workers() {
+        // A private pool with a known worker count (independent of the
+        // host's core count), chunks slow enough that one thread cannot
+        // drain the cursor before others join in.
         use std::collections::HashSet;
-        let items: Vec<usize> = (0..64).collect();
-        let out = parallel_map(
-            &items,
-            |_| {
-                thread::sleep(std::time::Duration::from_millis(2));
-                format!("{:?}", thread::current().id())
+        let pool = ComputePool::new(4);
+        let ids = Mutex::new(HashSet::new());
+        pool.run(64, 0, &|_| {
+            thread::sleep(std::time::Duration::from_millis(2));
+            ids.lock().unwrap().insert(thread::current().id());
+        });
+        let distinct = ids.into_inner().unwrap().len();
+        assert!(distinct >= 2, "only {distinct} threads claimed chunks");
+    }
+
+    #[test]
+    fn pool_runs_every_chunk_exactly_once() {
+        let pool = ComputePool::new(3);
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), 0, &|c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        for (c, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {c}");
+        }
+    }
+
+    #[test]
+    fn pool_limit_one_runs_inline_without_touching_workers() {
+        let pool = ComputePool::new(2);
+        let main_id = thread::current().id();
+        let ran_on = Mutex::new(Vec::new());
+        pool.run(8, 1, &|c| {
+            ran_on.lock().unwrap().push((c, thread::current().id()));
+        });
+        let ran = ran_on.into_inner().unwrap();
+        assert_eq!(ran.len(), 8);
+        assert!(ran.iter().all(|&(_, id)| id == main_id));
+    }
+
+    #[test]
+    fn pooled_map_supports_nesting() {
+        // Hierarchy fan-out shape: an outer parallel_map whose items each
+        // run an inner parallel_map on the same global pool. The
+        // submitter-participates rule makes this deadlock-free.
+        let outer: Vec<usize> = (0..8).collect();
+        let got = parallel_map(
+            &outer,
+            |&i| {
+                let inner: Vec<usize> = (0..16).collect();
+                parallel_map(&inner, |&j| i * 100 + j, 4).iter().sum::<usize>()
             },
             4,
         );
-        let distinct: HashSet<_> = out.into_iter().collect();
-        assert!(distinct.len() >= 2, "only {} threads used", distinct.len());
+        let want: Vec<usize> =
+            (0..8).map(|i| (0..16).map(|j| i * 100 + j).sum::<usize>()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pooled_map_panic_surfaces_original_payload_and_pool_survives() {
+        let items: Vec<usize> = (0..200).collect();
+        let err = std::panic::catch_unwind(|| {
+            parallel_map(&items, |&x| if x == 97 { panic!("boom") } else { x }, 4)
+        })
+        .expect_err("panic must propagate");
+        assert_eq!(err.downcast_ref::<&str>(), Some(&"boom"));
+        // The global pool must still be fully functional afterwards.
+        let ok = parallel_map(&items, |&x| x + 1, 4);
+        assert_eq!(ok[199], 200);
+    }
+
+    #[test]
+    fn scoped_map_panic_not_masked_by_queue_poison() {
+        // A panicking closure poisons the scoped chunk queue; the guard
+        // recovery must let the *original* payload surface through
+        // thread::scope instead of a PoisonError unwrap.
+        let items: Vec<usize> = (0..200).collect();
+        let err = std::panic::catch_unwind(|| {
+            parallel_map_scoped(&items, |&x| if x == 3 { panic!("boom") } else { x }, 4)
+        })
+        .expect_err("panic must propagate");
+        assert_eq!(err.downcast_ref::<&str>(), Some(&"boom"));
+    }
+
+    #[test]
+    fn private_pool_drop_joins_workers() {
+        let pool = ComputePool::new(3);
+        pool.run(10, 0, &|_| {});
+        drop(pool); // must not hang or leak parked workers
+    }
+
+    #[test]
+    fn spawn_counter_is_monotone_and_counts_scoped_spawns() {
+        let before = threads_spawned_total();
+        let items: Vec<usize> = (0..64).collect();
+        let _ = parallel_map_scoped(&items, |&x| x, 4);
+        let after = threads_spawned_total();
+        assert!(after >= before + 4, "scoped spawns uncounted: {before} -> {after}");
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct MatchService {
     queries: AtomicU64,
     matches: AtomicU64,
     refused: AtomicU64,
+    /// Accept-loop errors survived (transient) or died on (fatal) — see
+    /// [`accept_error_is_fatal`]. A nonzero value with a live process is
+    /// the observable signal the old silent `break` never gave.
+    accept_errors: AtomicU64,
 }
 
 impl MatchService {
@@ -56,6 +60,7 @@ impl MatchService {
             queries: AtomicU64::new(0),
             matches: AtomicU64::new(0),
             refused: AtomicU64::new(0),
+            accept_errors: AtomicU64::new(0),
         }
     }
 
@@ -70,6 +75,7 @@ impl MatchService {
             queries: AtomicU64::new(0),
             matches: AtomicU64::new(0),
             refused: AtomicU64::new(0),
+            accept_errors: AtomicU64::new(0),
         }
     }
 
@@ -120,6 +126,11 @@ impl MatchService {
         self.refused.load(Ordering::Relaxed)
     }
 
+    /// Accept-loop errors observed (transient and fatal).
+    pub fn num_accept_errors(&self) -> u64 {
+        self.accept_errors.load(Ordering::Relaxed)
+    }
+
     pub fn stats(&self) -> String {
         let base = match self.coupling.as_deref() {
             Some(c) => format!(
@@ -136,10 +147,11 @@ impl MatchService {
             None => String::new(),
         };
         format!(
-            "{base}{reg} queries={} matches={} refused={}",
+            "{base}{reg} queries={} matches={} refused={} accept_errors={}",
             self.num_queries(),
             self.num_matches(),
             self.num_refused(),
+            self.num_accept_errors(),
         )
     }
 
@@ -172,6 +184,7 @@ impl MatchService {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let svc = Arc::clone(self);
+        super::count_thread_spawn();
         std::thread::spawn(move || {
             let pool = ThreadPool::with_queue(workers, queue);
             while !shutdown.load(Ordering::Relaxed) {
@@ -191,7 +204,21 @@ impl MatchService {
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(10));
                     }
-                    Err(_) => break,
+                    Err(e) => {
+                        // A connection dying between the TCP handshake
+                        // and our accept() is the *client's* failure;
+                        // breaking here used to kill the accept loop
+                        // silently while the process lived on. Survive
+                        // transient errors, count everything, and only
+                        // die — loudly — when the listener itself is
+                        // broken.
+                        svc.accept_errors.fetch_add(1, Ordering::Relaxed);
+                        if accept_error_is_fatal(&e) {
+                            eprintln!("error: match service accept loop terminating: {e}");
+                            break;
+                        }
+                        eprintln!("warn: transient accept error: {e}");
+                    }
                 }
             }
             // Dropping the pool joins its workers; handlers exit on the
@@ -209,6 +236,13 @@ impl MatchService {
     /// the timed-out write tears the connection down instead of blocking
     /// the thread forever.
     fn handle_conn(&self, stream: TcpStream, shutdown: &AtomicBool) -> std::io::Result<()> {
+        // Accepted streams can inherit the listener's nonblocking flag
+        // (platform-dependent — BSD-derived stacks do, Linux accept()
+        // does not, accept4() callers vary); force blocking mode so the
+        // 50 ms read timeout below actually sleeps instead of turning
+        // `read_line_shutdown`'s WouldBlock retry loop into a 100%-CPU
+        // busy-spin.
+        stream.set_nonblocking(false)?;
         stream.set_read_timeout(Some(std::time::Duration::from_millis(50)))?;
         stream.set_write_timeout(Some(std::time::Duration::from_secs(1)))?;
         let mut writer = stream.try_clone()?;
@@ -402,6 +436,28 @@ impl MatchService {
     }
 }
 
+/// Classify an `accept()` error. Per-connection failures — the peer
+/// resetting or aborting between the kernel's handshake and our
+/// `accept()`, or an interrupted syscall — leave the listener fully
+/// functional, so the loop must ride them out. File-descriptor
+/// exhaustion (`EMFILE`/`ENFILE`, 24/23 on Unix; surfaced under an
+/// unstable `ErrorKind`, hence the raw-errno check) recovers once
+/// connections close, so it is transient too. Anything else (`EBADF`,
+/// `EINVAL`, ...) means the listener itself is gone and accepting can
+/// never succeed again.
+fn accept_error_is_fatal(e: &std::io::Error) -> bool {
+    if matches!(e.raw_os_error(), Some(23) | Some(24)) {
+        return false;
+    }
+    !matches!(
+        e.kind(),
+        std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
 /// Maximum accepted request/upload line length. A newline-free stream
 /// would otherwise grow the line buffer without bound — the read is cut
 /// off (connection torn down) once a line exceeds this.
@@ -513,6 +569,84 @@ mod tests {
         assert!(lines[0].parse::<usize>().is_ok(), "MAP reply: {}", lines[0]);
         assert!(lines[1].contains("points=100x100"), "STATS reply: {}", lines[1]);
         shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn handle_conn_clears_inherited_nonblocking_flag() {
+        use std::io::{BufRead, BufReader, Read, Write};
+        let (_, svc) = service();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        // Simulate the platform-dependent inheritance of the listener's
+        // O_NONBLOCK on the accepted stream.
+        accepted.set_nonblocking(true).unwrap();
+        // O_NONBLOCK is a file-status flag shared across cloned fds, so
+        // this probe observes the handler's blocking mode from outside.
+        let mut probe = accepted.try_clone().unwrap();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handler = {
+            let svc = Arc::clone(&svc);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || svc.handle_conn(accepted, &shutdown))
+        };
+        // A served round-trip proves the handler is past its socket
+        // setup before the probe measures anything.
+        writeln!(client, "STATS").unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("points="), "STATS reply: {line:?}");
+        // With O_NONBLOCK still set this read returns WouldBlock
+        // immediately (the handler is busy-spinning); in blocking mode it
+        // waits out its receive timeout.
+        probe.set_read_timeout(Some(std::time::Duration::from_millis(300))).unwrap();
+        let start = std::time::Instant::now();
+        let err = probe.read(&mut [0u8; 1]).expect_err("no data was sent to the probe");
+        assert!(
+            matches!(
+                err.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ),
+            "unexpected probe error: {err:?}"
+        );
+        assert!(
+            start.elapsed() >= std::time::Duration::from_millis(200),
+            "probe read returned in {:?} — the accepted stream is still nonblocking, so \
+             handle_conn busy-spins instead of honoring its read timeout",
+            start.elapsed()
+        );
+        writeln!(client, "QUIT").unwrap();
+        handler.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn accept_error_classification() {
+        use std::io::{Error, ErrorKind};
+        for kind in [
+            ErrorKind::ConnectionAborted,
+            ErrorKind::ConnectionReset,
+            ErrorKind::Interrupted,
+            ErrorKind::TimedOut,
+        ] {
+            assert!(!accept_error_is_fatal(&Error::from(kind)), "{kind:?} must be survivable");
+        }
+        // fd exhaustion is transient (recovers as connections close).
+        assert!(!accept_error_is_fatal(&Error::from_raw_os_error(24)), "EMFILE must be survivable");
+        assert!(!accept_error_is_fatal(&Error::from_raw_os_error(23)), "ENFILE must be survivable");
+        for kind in [ErrorKind::InvalidInput, ErrorKind::PermissionDenied, ErrorKind::NotFound] {
+            assert!(accept_error_is_fatal(&Error::from(kind)), "{kind:?} must stop the loop");
+        }
+    }
+
+    #[test]
+    fn stats_reports_accept_errors() {
+        let (_, svc) = service();
+        assert!(svc.stats().contains("accept_errors=0"), "stats: {}", svc.stats());
+        svc.accept_errors.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(svc.num_accept_errors(), 2);
+        assert!(svc.stats().contains("accept_errors=2"), "stats: {}", svc.stats());
     }
 
     #[test]

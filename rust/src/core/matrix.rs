@@ -5,6 +5,13 @@
 
 use std::fmt;
 
+/// Cache tile sizes of the blocked matmul kernel: `TILE_K` consecutive
+/// `a` columns by `TILE_J` consecutive output columns keeps the streamed
+/// `b` panel (`TILE_K * TILE_J * 8` bytes = 64 KiB) cache-resident and
+/// the output strip hot across a whole k-tile sweep.
+const MATMUL_TILE_K: usize = 64;
+const MATMUL_TILE_J: usize = 128;
+
 #[derive(Clone, Default, PartialEq)]
 pub struct DenseMatrix {
     rows: usize,
@@ -147,18 +154,45 @@ impl DenseMatrix {
     /// [`DenseMatrix::matmul`], zero allocations once `out` has grown.
     pub fn matmul_into(&self, other: &DenseMatrix, out: &mut DenseMatrix) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let (m, n) = (self.rows, other.cols);
         out.reset_zeroed(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &aik) in arow.iter().enumerate().take(k) {
-                if aik == 0.0 {
-                    continue; // couplings are sparse-ish; skip zero mass
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += aik * b;
+        self.matmul_rows_into(other, 0, &mut out.data);
+    }
+
+    /// Serial cache-blocked matmul kernel over an output row range:
+    /// computes rows `row0 ..` of `self @ other` into `out_rows`, which
+    /// must hold whole zero-initialized rows. The k and j loops are tiled
+    /// ([`MATMUL_TILE_K`] x [`MATMUL_TILE_J`]) for cache reuse while
+    /// keeping, for every output element, the ascending-k accumulation
+    /// order and the zero-mass skip of the classic i-k-j loop — the
+    /// result is bit-identical to the unblocked kernel at every tile size
+    /// and every row split. Every matmul path (serial, scoped, pooled)
+    /// funnels through this one kernel, which makes them byte-identical
+    /// to each other by construction (EXPERIMENTS.md §Compute-pool).
+    pub(crate) fn matmul_rows_into(&self, other: &DenseMatrix, row0: usize, out_rows: &mut [f64]) {
+        let k_dim = self.cols;
+        let n = other.cols;
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(out_rows.len() % n, 0);
+        let rows = out_rows.len() / n;
+        for kk in (0..k_dim).step_by(MATMUL_TILE_K) {
+            let k_end = (kk + MATMUL_TILE_K).min(k_dim);
+            for jj in (0..n).step_by(MATMUL_TILE_J) {
+                let j_end = (jj + MATMUL_TILE_J).min(n);
+                for r in 0..rows {
+                    let arow = &self.row(row0 + r)[kk..k_end];
+                    let orow = &mut out_rows[r * n + jj..r * n + j_end];
+                    for (k, &aik) in arow.iter().enumerate() {
+                        if aik == 0.0 {
+                            continue; // couplings are sparse-ish; skip zero mass
+                        }
+                        let brow = &other.data[(kk + k) * n + jj..(kk + k) * n + j_end];
+                        for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                            *o += aik * b;
+                        }
+                    }
                 }
             }
         }
@@ -347,6 +381,39 @@ mod tests {
         let mut gv = vec![7.0; 9];
         a.gemv_into(&v, &mut gv);
         assert_eq!(gv, a.gemv(&v));
+    }
+
+    #[test]
+    fn blocked_matmul_bit_identical_to_naive_ikj() {
+        // Sizes straddle the 64/128 tile boundaries: below, exact
+        // multiples, and remainders — plus zero entries exercising the
+        // sparse skip.
+        let cases = [(1usize, 1usize, 1usize), (3, 70, 130), (65, 64, 128), (10, 129, 257)];
+        for &(m, k, n) in &cases {
+            let a = DenseMatrix::from_fn(m, k, |i, j| {
+                if (i + j) % 7 == 0 {
+                    0.0
+                } else {
+                    (i * 31 + j * 17) as f64 / 13.0 - 3.0
+                }
+            });
+            let b = DenseMatrix::from_fn(k, n, |i, j| ((i * 13 + j * 5) as f64).sin());
+            let mut naive = DenseMatrix::zeros(m, n);
+            for i in 0..m {
+                for kk in 0..k {
+                    let aik = a.get(i, kk);
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        let v = naive.get(i, j) + aik * b.get(kk, j);
+                        naive.set(i, j, v);
+                    }
+                }
+            }
+            let got = a.matmul(&b);
+            assert_eq!(got.as_slice(), naive.as_slice(), "{m}x{k}x{n}");
+        }
     }
 
     #[test]

@@ -54,25 +54,59 @@ pub fn par_matmul(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
     out
 }
 
-/// [`par_matmul`] into a caller buffer. Workers claim contiguous row
-/// chunks of the output and write into them directly — no per-row
-/// allocation, no result gather/scatter — so the only buffer the product
-/// ever touches is `out` itself (EXPERIMENTS.md §Perf). Each output row is
-/// computed by exactly the serial kernel regardless of chunking, so the
-/// result is bit-identical to [`DenseMatrix::matmul`] at every thread
-/// count.
+/// Flop cutoff below which the parallel matmul runs serially: chunk
+/// bookkeeping on the pool costs more than it saves under this.
+const PAR_MATMUL_MIN_FLOPS: usize = 64 * 64 * 64;
+
+/// [`par_matmul`] into a caller buffer. Contiguous row chunks of the
+/// output are fanned out over the engine's persistent
+/// [`crate::coordinator::ComputePool`] — zero thread spawns per call in
+/// steady state (the BENCH_6 oracle) — and participants write into their
+/// chunks directly: no per-row allocation, no result gather/scatter, so
+/// the only buffer the product ever touches is `out` itself
+/// (EXPERIMENTS.md §Perf). Every chunk runs exactly the serial blocked
+/// kernel ([`DenseMatrix::matmul_into`] routes through the same one), so
+/// the result is bit-identical to [`DenseMatrix::matmul`] at every
+/// worker count.
 pub fn par_matmul_into(a: &DenseMatrix, b: &DenseMatrix, out: &mut DenseMatrix) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(k, b.rows(), "matmul shape mismatch");
-    if m * k * n < 64 * 64 * 64 {
+    if m * k * n < PAR_MATMUL_MIN_FLOPS {
         a.matmul_into(b, out);
         return;
     }
     out.reset_zeroed(m, n);
     let threads = crate::coordinator::effective_threads(0).min(m);
-    // Small chunks (several per worker) so uneven row sparsity balances;
-    // the queue is popped under a lock whose hold time is trivially small
-    // next to a chunk's O(chunk * k * n) work.
+    // Small chunks (several per claimant) so uneven row sparsity
+    // balances out across the pool's chunk cursor.
+    let chunk_rows = (m / (threads * 8)).max(1);
+    let nchunks = m.div_ceil(chunk_rows);
+    let out_ptr = crate::coordinator::SendPtr(out.as_mut_slice().as_mut_ptr());
+    crate::coordinator::ComputePool::global().run(nchunks, threads, &|ci: usize| {
+        let row0 = ci * chunk_rows;
+        let rows = chunk_rows.min(m - row0);
+        // SAFETY: chunk `ci` exclusively owns output rows
+        // `row0 .. row0 + rows` (chunk ranges are disjoint, each chunk
+        // runs exactly once) and `out` is untouched until `run` returns.
+        let slice = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(row0 * n), rows * n) };
+        a.matmul_rows_into(b, row0, slice);
+    });
+}
+
+/// The pre-pool `thread::scope` implementation of [`par_matmul_into`]:
+/// spawns a worker set per call. Kept as the reference the pooled path
+/// is property-tested against (`rust/tests/properties.rs`) and as the
+/// per-call-spawn baseline of the BENCH_6 spawn-vs-pool profile. Same
+/// chunking, same blocked row kernel — bit-identical results.
+pub fn par_matmul_into_scoped(a: &DenseMatrix, b: &DenseMatrix, out: &mut DenseMatrix) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(k, b.rows(), "matmul shape mismatch");
+    if m * k * n < PAR_MATMUL_MIN_FLOPS {
+        a.matmul_into(b, out);
+        return;
+    }
+    out.reset_zeroed(m, n);
+    let threads = crate::coordinator::effective_threads(0).min(m);
     let chunk_rows = (m / (threads * 8)).max(1);
     let chunks: Vec<(usize, &mut [f64])> = out
         .as_mut_slice()
@@ -83,22 +117,14 @@ pub fn par_matmul_into(a: &DenseMatrix, b: &DenseMatrix, out: &mut DenseMatrix) 
     let queue = std::sync::Mutex::new(chunks);
     std::thread::scope(|s| {
         for _ in 0..threads {
+            crate::coordinator::count_thread_spawn();
             s.spawn(|| loop {
-                let Some((row0, slice)) = queue.lock().unwrap().pop() else {
+                // Guard recovery: a panic in a sibling must surface as
+                // itself, not as this unwrap's PoisonError.
+                let Some((row0, slice)) = crate::coordinator::lock_recover(&queue).pop() else {
                     break;
                 };
-                for (r, orow) in slice.chunks_mut(n).enumerate() {
-                    let arow = a.row(row0 + r);
-                    for (kk, &aik) in arow.iter().enumerate() {
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = b.row(kk);
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += aik * bv;
-                        }
-                    }
-                }
+                a.matmul_rows_into(b, row0, slice);
             });
         }
     });
@@ -130,7 +156,7 @@ pub fn gw_loss_sparse(
     gw_loss_sparse_threads(coupling, x, y, 0)
 }
 
-/// [`gw_loss_sparse`] with an explicit worker count (0 = all cores).
+/// [`gw_loss_sparse`] with an explicit concurrency cap (0 = pool width).
 /// The result is bit-identical for every `num_threads`.
 pub fn gw_loss_sparse_threads(
     coupling: &SparseCoupling,
@@ -138,25 +164,51 @@ pub fn gw_loss_sparse_threads(
     y: &(dyn MmSpace + Sync),
     num_threads: usize,
 ) -> f64 {
+    gw_loss_sparse_impl(coupling, x, y, num_threads, false)
+}
+
+/// [`gw_loss_sparse_threads`] on per-call scoped threads instead of the
+/// shared pool — the reference the pooled path is property-tested and
+/// benched against (same per-entry arithmetic, same entry-order
+/// reduction; bit-identical results).
+pub fn gw_loss_sparse_threads_scoped(
+    coupling: &SparseCoupling,
+    x: &(dyn MmSpace + Sync),
+    y: &(dyn MmSpace + Sync),
+    num_threads: usize,
+) -> f64 {
+    gw_loss_sparse_impl(coupling, x, y, num_threads, true)
+}
+
+fn gw_loss_sparse_impl(
+    coupling: &SparseCoupling,
+    x: &(dyn MmSpace + Sync),
+    y: &(dyn MmSpace + Sync),
+    num_threads: usize,
+    scoped: bool,
+) -> f64 {
     let entries: Vec<(usize, usize, f64)> = coupling.iter().collect();
     let idx: Vec<usize> = (0..entries.len()).collect();
-    let partials = crate::coordinator::parallel_map(
-        &idx,
-        |&s| {
-            let (i, j, w1) = entries[s];
-            // Diagonal once (0 whenever self-distances are exactly 0, but
-            // cheap enough to not assume it), strict upper triangle
-            // doubled.
-            let d0 = x.dist(i, i) - y.dist(j, j);
-            let mut acc = d0 * d0 * w1 * w1;
-            for &(k, l, w2) in &entries[s + 1..] {
-                let d = x.dist(i, k) - y.dist(j, l);
-                acc += 2.0 * (d * d * w1 * w2);
-            }
-            acc
-        },
-        num_threads,
-    );
+    let score = |&s: &usize| {
+        let (i, j, w1) = entries[s];
+        // Diagonal once (0 whenever self-distances are exactly 0, but
+        // cheap enough to not assume it), strict upper triangle
+        // doubled.
+        let d0 = x.dist(i, i) - y.dist(j, j);
+        let mut acc = d0 * d0 * w1 * w1;
+        for &(k, l, w2) in &entries[s + 1..] {
+            let d = x.dist(i, k) - y.dist(j, l);
+            acc += 2.0 * (d * d * w1 * w2);
+        }
+        acc
+    };
+    // One closure, two execution substrates: the per-entry partials are
+    // identical, and both reductions run in entry order.
+    let partials = if scoped {
+        crate::coordinator::parallel_map_scoped(&idx, score, num_threads)
+    } else {
+        crate::coordinator::parallel_map(&idx, score, num_threads)
+    };
     partials.iter().sum()
 }
 

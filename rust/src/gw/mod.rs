@@ -13,8 +13,8 @@ mod workspace;
 
 pub use fgw::{entropic_fgw, entropic_fgw_with, fgw_loss, FgwOptions};
 pub use loss::{
-    gw_cost_tensor, gw_loss, gw_loss_sparse, gw_loss_sparse_threads, par_matmul, par_matmul_into,
-    product_coupling,
+    gw_cost_tensor, gw_loss, gw_loss_sparse, gw_loss_sparse_threads, gw_loss_sparse_threads_scoped,
+    par_matmul, par_matmul_into, par_matmul_into_scoped, product_coupling,
 };
 pub use minibatch::{minibatch_gw, MbGwOptions};
 pub use mrec::{mrec_match, MrecOptions, SubSpace};

@@ -93,15 +93,18 @@ pub fn sinkhorn_into(
         .fold(f64::INFINITY, f64::min);
     // The kernel is built directly in the plan buffer (it becomes the plan
     // after the final diag(u) K diag(v) scaling; every entry is written).
+    // The zero-mass row test is hoisted so the inner loop is a pure
+    // exp-over-strip sweep.
     plan.reset_unwritten(n, m);
     for i in 0..n {
         let row = plan.row_mut(i);
-        for (j, x) in row.iter_mut().enumerate() {
-            *x = if a[i] > 0.0 && b[j] > 0.0 {
-                (-(cost.get(i, j) - shift) / opts.eps).exp()
-            } else {
-                0.0
-            };
+        if a[i] <= 0.0 {
+            row.fill(0.0);
+            continue;
+        }
+        let crow = cost.row(i);
+        for ((x, &bj), &cj) in row.iter_mut().zip(b).zip(crow) {
+            *x = if bj > 0.0 { (-(cj - shift) / opts.eps).exp() } else { 0.0 };
         }
     }
     let k = plan;
@@ -133,8 +136,11 @@ pub fn sinkhorn_into(
     }
     for i in 0..n {
         let row = k.row_mut(i);
-        for (j, x) in row.iter_mut().enumerate() {
-            *x *= u[i] * v[j];
+        let ui = u[i];
+        // Same per-entry product order as `u[i] * v[j]`, but as a pure
+        // zip sweep the row scaling vectorizes cleanly.
+        for (x, &vj) in row.iter_mut().zip(v.iter()) {
+            *x *= ui * vj;
         }
     }
     let c = cost.dot(k);
@@ -168,6 +174,15 @@ fn marginal_error(
 }
 
 const NEG_BIG: f64 = -1e30;
+
+/// Strip width of the vectorization-friendly log-domain inner loops:
+/// exponent values are staged through a fixed-size stack buffer so the
+/// `g - c` gather and the cutoff select compile to clean vector code and
+/// the `exp` calls run over a contiguous strip. Purely an execution-shape
+/// change — accumulation order is unchanged, masked lanes contribute an
+/// exact +0.0, and results are bit-identical to the scalar loops
+/// (EXPERIMENTS.md §Compute-pool).
+const LSE_STRIP: usize = 32;
 
 /// Log-domain Sinkhorn: potentials via logsumexp half-steps; robust at any
 /// `eps`. Matches `compile.kernels.ref.sinkhorn_ref` on the Python side.
@@ -264,32 +279,56 @@ pub fn sinkhorn_log_into(
             }
         }
     }
+    // Zero-mass-column mask folded into the potentials: those columns
+    // pin to -inf so the `e > -700` select below drops them — entry for
+    // entry the same plan as the old per-entry `logb` branch, including
+    // before any half-step has run. Reuses the `kv` buffer (idle in the
+    // log form).
+    ws.kv.clear();
+    ws.kv.extend(
+        g.iter()
+            .zip(logb)
+            .map(|(&gj, &lb)| if lb <= NEG_BIG / 2.0 { f64::NEG_INFINITY } else { gj }),
+    );
+    let gmask = &ws.kv;
     plan.reset_zeroed(n, m);
     let mut total_cost = 0.0;
+    let mut w = [0.0f64; LSE_STRIP];
     for i in 0..n {
         if loga[i] <= NEG_BIG / 2.0 {
             continue;
         }
+        let fi = f[i];
         let crow = &c[i * m..(i + 1) * m];
+        let cost_row = cost.row(i);
         let prow = plan.row_mut(i);
-        for j in 0..m {
-            if logb[j] <= NEG_BIG / 2.0 {
-                continue;
+        // Fixed-size strips: stage the exponents in a stack buffer so the
+        // gather and the cutoff select stay branch-free around the exp
+        // calls; masked lanes hold an exact +0.0, so writing them and
+        // adding them to the cost is bit-identical to skipping them.
+        let mut j0 = 0;
+        while j0 < m {
+            let j1 = (j0 + LSE_STRIP).min(m);
+            for ((wt, &gj), &cj) in w.iter_mut().zip(&gmask[j0..j1]).zip(&crow[j0..j1]) {
+                let e = fi + gj - cj;
+                *wt = if e > -700.0 { e.exp() } else { 0.0 };
             }
-            let e = f[i] + g[j] - crow[j];
-            if e > -700.0 {
-                let w = e.exp();
-                prow[j] = w;
-                total_cost += w * cost.get(i, j);
+            prow[j0..j1].copy_from_slice(&w[..j1 - j0]);
+            for (&wt, &cj) in w[..j1 - j0].iter().zip(&cost_row[j0..j1]) {
+                total_cost += wt * cj;
             }
+            j0 = j1;
         }
     }
     SinkhornStats { cost: total_cost, iters, marginal_err: err }
 }
 
 /// `f_i = log a_i - logsumexp_j (g_j - C_ij/eps)` over row-major `c` with
-/// `cols` columns; NEG_BIG pins zero-mass entries.
+/// `cols` columns; NEG_BIG pins zero-mass entries. Strip-mined over
+/// [`LSE_STRIP`]-wide stack buffers; scans and sums run in ascending-`j`
+/// order, so the result is bit-identical to the plain scalar loop.
 fn lse_half_step(c: &[f64], cols: usize, g: &[f64], log_marg: &[f64], out: &mut [f64]) {
+    let mut z = [0.0f64; LSE_STRIP];
     for (i, o) in out.iter_mut().enumerate() {
         if log_marg[i] <= NEG_BIG / 2.0 {
             *o = NEG_BIG;
@@ -297,10 +336,14 @@ fn lse_half_step(c: &[f64], cols: usize, g: &[f64], log_marg: &[f64], out: &mut 
         }
         let row = &c[i * cols..(i + 1) * cols];
         let mut zmax = f64::NEG_INFINITY;
-        for j in 0..cols {
-            let z = g[j] - row[j];
-            if z > zmax {
-                zmax = z;
+        for (gs, rs) in g.chunks(LSE_STRIP).zip(row.chunks(LSE_STRIP)) {
+            for ((zt, &gj), &rj) in z.iter_mut().zip(gs).zip(rs) {
+                *zt = gj - rj;
+            }
+            for &zt in &z[..gs.len()] {
+                if zt > zmax {
+                    zmax = zt;
+                }
             }
         }
         if zmax <= NEG_BIG / 2.0 {
@@ -308,14 +351,19 @@ fn lse_half_step(c: &[f64], cols: usize, g: &[f64], log_marg: &[f64], out: &mut 
             continue;
         }
         // exp(z - zmax) < 2.5e-16 contributes nothing against the
-        // guaranteed exp(0) = 1 term; skipping the exp() call for those
-        // entries is the single biggest win in the profile (§Perf).
+        // guaranteed exp(0) = 1 term; entries below the cutoff are masked
+        // to an exact +0.0 — bit-identical to skipping them — so the
+        // strip sum stays branch-free around the exp calls, the single
+        // biggest win in the profile (§Perf).
         let mut s = 0.0;
         let cutoff = zmax - 36.0;
-        for j in 0..cols {
-            let z = g[j] - row[j];
-            if z > cutoff {
-                s += (z - zmax).exp();
+        for (gs, rs) in g.chunks(LSE_STRIP).zip(row.chunks(LSE_STRIP)) {
+            for ((zt, &gj), &rj) in z.iter_mut().zip(gs).zip(rs) {
+                let zj = gj - rj;
+                *zt = if zj > cutoff { (zj - zmax).exp() } else { 0.0 };
+            }
+            for &zt in &z[..gs.len()] {
+                s += zt;
             }
         }
         *o = log_marg[i] - (zmax + s.ln());

@@ -103,11 +103,16 @@
 //! Work fans out over [`crate::coordinator::parallel_map`] twice at the
 //! top level: block extraction + re-partitioning (one task per distinct
 //! block of a recursing pair) and then pair alignment + recursion (one
-//! task per supported pair). Every task derives its RNG from
-//! `(side, level, block id)` chains — never from shared mutable state or
-//! the partner side — so the coupling is byte-identical for any thread
-//! count on every substrate (guarded by the determinism regression tests
-//! in `rust/tests/properties.rs`).
+//! task per supported pair). Both fan-outs run on the shared persistent
+//! [`crate::coordinator::ComputePool`] — `cfg.num_threads` is a per-op
+//! concurrency cap, not a spawn count, and nested parallel ops inside a
+//! pair task (the m-point solver's matmuls and loss sweeps) borrow the
+//! same workers. Every task derives its RNG from `(side, level,
+//! block id)` chains — never from shared mutable state or the partner
+//! side — and results land by input index, so the coupling is
+//! byte-identical for any thread count and any pool size on every
+//! substrate (guarded by the determinism regression tests in
+//! `rust/tests/properties.rs`).
 
 use std::borrow::Cow;
 use std::collections::HashMap;
@@ -812,6 +817,7 @@ pub fn hier_qgw_match_quantized(
 /// `seed` drives the recursive re-partitioning; each side derives an
 /// independent chain and each block its own stream from
 /// `(side, level, block)`, so results do not depend on `cfg.num_threads`
+/// (a per-op cap on the shared compute pool) or on the pool's size
 /// — and the whole reference-side chain can be prebuilt
 /// ([`build_ref_tree`]) and served via [`hier_match_indexed`].
 #[allow(clippy::too_many_arguments)]

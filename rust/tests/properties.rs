@@ -3,12 +3,15 @@
 //! offline). Each property runs over dozens of seeded random instances and
 //! reports the failing seed on violation.
 
-use qgw::coordinator::{MatchPipeline, Metrics, PipelineInput, QueryInput};
+use qgw::coordinator::{
+    parallel_map, parallel_map_scoped, MatchPipeline, Metrics, PipelineInput, QueryInput,
+};
 use qgw::core::{DenseMatrix, DenseSpace, MmSpace, SparseCoupling};
 use qgw::index::RefIndex;
 use qgw::gw::{
     cg_gw, cg_gw_with, entropic_fgw, entropic_fgw_with, entropic_gw, entropic_gw_with,
-    gw_loss, gw_loss_sparse, gw_loss_sparse_threads, product_coupling, FgwOptions, GwOptions,
+    gw_loss, gw_loss_sparse, gw_loss_sparse_threads, gw_loss_sparse_threads_scoped,
+    par_matmul_into, par_matmul_into_scoped, product_coupling, FgwOptions, GwOptions,
     GwWorkspace,
 };
 use qgw::ot::{
@@ -1036,5 +1039,92 @@ fn prop_sparse_coupling_handles_degenerate_rows() {
         // Row marginals are consistent with iter().
         let total: f64 = c.iter().map(|e| e.2).sum();
         assert!((total - c.total_mass()).abs() < 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PR 6 compute-pool contract: every primitive that moved onto the shared
+// persistent pool must return byte-identical results to the legacy
+// spawn-per-call `thread::scope` path, at every per-op concurrency cap.
+// The steady-state zero-spawn assertion lives in `benches/micro.rs`
+// (BENCH_6); these tests pin the *correctness* half of the migration.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pooled_parallel_map_bit_identical_to_scoped_and_serial() {
+    forall(20, |rng| {
+        let n = 1 + rng.below(300);
+        let items: Vec<f64> = (0..n).map(|_| rng.next_f64() * 8.0 - 4.0).collect();
+        let f = |x: &f64| (x.sin() * 1e3).mul_add(*x, x.exp());
+        let serial: Vec<f64> = items.iter().map(f).collect();
+        for threads in [1usize, 2, 3, 4, 8] {
+            let pooled = parallel_map(&items, f, threads);
+            let scoped = parallel_map_scoped(&items, f, threads);
+            for i in 0..n {
+                assert_eq!(
+                    pooled[i].to_bits(),
+                    serial[i].to_bits(),
+                    "pooled map diverged from serial at i={i}, threads={threads}"
+                );
+                assert_eq!(
+                    scoped[i].to_bits(),
+                    serial[i].to_bits(),
+                    "scoped map diverged from serial at i={i}, threads={threads}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pooled_matmul_bit_identical_to_scoped_and_serial() {
+    // Dims start at 64 so m*k*n clears the 64^3 serial cutoff and the
+    // parallel row fan-out actually engages (the pool auto-sizes here;
+    // byte-identity must hold at whatever width it picked).
+    forall(8, |rng| {
+        let (m, k, n) = (64 + rng.below(13), 64 + rng.below(13), 64 + rng.below(13));
+        let mut a = DenseMatrix::zeros(m, k);
+        let mut b = DenseMatrix::zeros(k, n);
+        for v in a.as_mut_slice() {
+            *v = if rng.below(7) == 0 { 0.0 } else { rng.next_f64() - 0.5 };
+        }
+        for v in b.as_mut_slice() {
+            *v = if rng.below(7) == 0 { 0.0 } else { rng.next_f64() - 0.5 };
+        }
+        let mut serial = DenseMatrix::zeros(0, 0);
+        a.matmul_into(&b, &mut serial);
+        let mut pooled = DenseMatrix::zeros(0, 0);
+        par_matmul_into(&a, &b, &mut pooled);
+        let mut scoped = DenseMatrix::zeros(0, 0);
+        par_matmul_into_scoped(&a, &b, &mut scoped);
+        assert_eq!(pooled.as_slice(), serial.as_slice(), "pooled matmul diverged from serial");
+        assert_eq!(scoped.as_slice(), serial.as_slice(), "scoped matmul diverged from serial");
+    });
+}
+
+#[test]
+fn prop_pooled_sparse_loss_bit_identical_to_scoped_across_thread_counts() {
+    forall(10, |rng| {
+        let n = 20 + rng.below(40);
+        let x = random_cloud(rng, n, 3);
+        let y = random_cloud(rng, n, 3);
+        let m = 4 + rng.below(4);
+        let res = qgw_match(&x, &y, &QgwConfig::with_count(m), rng);
+        let sparse = res.coupling.to_sparse();
+        let reference = gw_loss_sparse_threads(&sparse, &x, &y, 1);
+        for threads in [1usize, 2, 3, 4, 8] {
+            let pooled = gw_loss_sparse_threads(&sparse, &x, &y, threads);
+            let scoped = gw_loss_sparse_threads_scoped(&sparse, &x, &y, threads);
+            assert_eq!(
+                pooled.to_bits(),
+                reference.to_bits(),
+                "pooled sparse loss drifted at threads={threads}: {pooled} vs {reference}"
+            );
+            assert_eq!(
+                scoped.to_bits(),
+                reference.to_bits(),
+                "scoped sparse loss drifted at threads={threads}: {scoped} vs {reference}"
+            );
+        }
     });
 }

@@ -23,14 +23,21 @@
 //! spawn **zero** threads per op in steady state (and that the results
 //! stay byte-identical), and emits `BENCH_6.json`.
 //!
+//! PR 7 made the per-node global aligner a policy choice
+//! (`exact | entropic | sliced`); the aligner profile here times one
+//! rep-space alignment — the hierarchy's unit of work — through the
+//! entropic and the deterministic sliced backend on the same problem,
+//! records both backends' achieved GW losses alongside the timings, and
+//! emits `BENCH_7.json`.
+//!
 //! `QGW_BENCH_TEST_MODE=1` shrinks every size and runs one iteration per
 //! op — the CI quick-profile step uses it to assert the kernel signatures
 //! and the (deterministic) workspace-vs-alloc allocation wins without
 //! paying for a full bench run; the index amortization speedup is
 //! asserted in full mode only, where its margin is not noise-sized. The
 //! zero-spawn assertions are deterministic and hold in both modes.
-//! `QGW_BENCH_JSON` / `QGW_BENCH5_JSON` / `QGW_BENCH6_JSON` override the
-//! output paths.
+//! `QGW_BENCH_JSON` / `QGW_BENCH5_JSON` / `QGW_BENCH6_JSON` /
+//! `QGW_BENCH7_JSON` override the output paths.
 
 #[path = "harness.rs"]
 mod harness;
@@ -49,7 +56,7 @@ use qgw::data::blobs::make_blobs;
 use qgw::gw::{
     entropic_gw, gw_cost_tensor, gw_loss_sparse, gw_loss_sparse_threads,
     gw_loss_sparse_threads_scoped, par_matmul_into, par_matmul_into_scoped, product_coupling,
-    GwOptions, GwWorkspace,
+    sliced_gw, GwOptions, GwWorkspace,
 };
 use qgw::index::RefIndex;
 use qgw::ot::{
@@ -591,7 +598,95 @@ fn main() {
         write_bench6(&pr, test_mode);
     }
 
+    println!("--- aligner backends: entropic vs sliced per-node alignment (BENCH_7) ---");
+    {
+        // One rep-space alignment is the hierarchy's unit of work; the
+        // policy trades per-node cost against objective quality, so the
+        // trajectory records both. The sliced backend is deterministic at
+        // a fixed seed, so its loss column is machine-independent.
+        let align_sizes: &[usize] = if test_mode { &[16] } else { &[32, 64, 128] };
+        let projections = 16;
+        let mut ar: Vec<AlignRecord> = Vec::new();
+        for &m in align_sizes {
+            let x = make_blobs(m, 3, 1.0, 10.0, &mut rng);
+            let y = make_blobs(m, 3, 1.0, 10.0, &mut rng);
+            let (cx, cy) = (x.distance_matrix(), y.distance_matrix());
+            let a = uniform_measure(m);
+            let opts = GwOptions::default();
+
+            let iters = if test_mode { 1 } else { 5 };
+            let start = Instant::now();
+            let mut eloss = 0.0;
+            for _ in 0..iters {
+                eloss = std::hint::black_box(entropic_gw(&cx, &cy, &a, &a, &opts)).loss;
+            }
+            let entropic_ns = start.elapsed().as_nanos() / iters as u128;
+            let start = Instant::now();
+            let mut sloss = 0.0;
+            for _ in 0..iters {
+                sloss = std::hint::black_box(sliced_gw(&cx, &cy, &a, &a, projections, 41)).loss;
+            }
+            let sliced_ns = start.elapsed().as_nanos() / iters as u128;
+            let speedup = entropic_ns as f64 / sliced_ns.max(1) as f64;
+            println!(
+                "align m={m}: entropic {entropic_ns} ns (loss {eloss:.6}) vs sliced \
+                 {sliced_ns} ns (loss {sloss:.6}) -> {speedup:.2}x"
+            );
+            ar.push(AlignRecord { op: "align_entropic", m, ns_per_iter: entropic_ns, loss: eloss });
+            ar.push(AlignRecord { op: "align_sliced", m, ns_per_iter: sliced_ns, loss: sloss });
+            ar.push(AlignRecord { op: "sliced_speedup", m, ns_per_iter: 0, loss: speedup });
+        }
+        write_bench7(&ar, test_mode);
+    }
+
     write_json(&records, test_mode);
+}
+
+/// One BENCH_7.json record: a per-node alignment backend at rep size `m`
+/// (`loss` carries the speedup for the `sliced_speedup` rows).
+struct AlignRecord {
+    op: &'static str,
+    m: usize,
+    ns_per_iter: u128,
+    loss: f64,
+}
+
+/// BENCH_7.json — the aligner-backend trajectory: per-node entropic vs
+/// sliced alignment timings and achieved losses (schema documented in
+/// EXPERIMENTS.md §Aligner-policy).
+fn write_bench7(records: &[AlignRecord], test_mode: bool) {
+    let path = std::env::var("QGW_BENCH7_JSON").unwrap_or_else(|_| {
+        if test_mode {
+            std::env::temp_dir().join("BENCH_7_smoke.json").to_string_lossy().into_owned()
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_7.json").to_string()
+        }
+    });
+    let mut out = String::from("[\n");
+    out.push_str(&format!(
+        "  {{\"op\": \"_meta\", \"note\": \"measured by cargo bench --bench micro ({} mode); \
+         per-node global alignment through each backend; sliced losses are deterministic at \
+         the fixed seed, timings are machine-dependent\"}}{}\n",
+        if test_mode { "test" } else { "full" },
+        if records.is_empty() { "" } else { "," }
+    ));
+    for (i, r) in records.iter().enumerate() {
+        let line = if r.op == "sliced_speedup" {
+            format!("  {{\"op\": \"{}\", \"m\": {}, \"speedup\": {:.3}}}", r.op, r.m, r.loss)
+        } else {
+            format!(
+                "  {{\"op\": \"{}\", \"m\": {}, \"ns_per_iter\": {}, \"loss\": {:.9}}}",
+                r.op, r.m, r.ns_per_iter, r.loss
+            )
+        };
+        out.push_str(&line);
+        out.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("]\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 /// BENCH_6.json — the spawn-vs-pool trajectory: each parallel primitive

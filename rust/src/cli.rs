@@ -3,6 +3,7 @@
 //! ```text
 //! qgw match       --class dog --n 2000 --fraction 0.1 [--fused A,B] [--seed S]
 //!                 [--levels L --leaf-size K --tolerance T]  # L>1: hierarchical
+//!                 [--aligner-policy exact|entropic|sliced[,..]]  # per level
 //! qgw experiment  table1|table2|fig1|fig2|fig3|fig4|scaling [--scale F] [--full]
 //! qgw serve       --class dog --n 5000 --fraction 0.1 --addr 127.0.0.1:7979
 //!                 [--index p1.qgwi,p2.qgwi --registry-bytes B]  # MATCH verb
@@ -152,6 +153,10 @@ fn build_config(args: &Args) -> Result<(QgwConfig, Option<(f64, f64)>)> {
     cfg.levels = args.usize_or("levels", cfg.levels)?.max(1);
     cfg.leaf_size = args.usize_or("leaf-size", cfg.leaf_size)?.max(1);
     cfg.tolerance = args.f64_or("tolerance", cfg.tolerance)?.max(0.0);
+    if let Some(spec) = args.flag("aligner-policy") {
+        cfg.aligner_policy =
+            crate::qgw::AlignerPolicy::parse(spec).context("--aligner-policy")?;
+    }
     if let Some(spec) = args.flag("fused") {
         let parts: Vec<f64> = spec
             .split(',')
@@ -196,14 +201,15 @@ fn cmd_match(args: &Args) -> Result<()> {
     let distortion = distortion_score(&sparse, &copy.cloud, &copy.ground_truth);
     println!(
         "class={} n={n} m={}x{} levels={} leaf={} tolerance={tolerance} pruned_pairs={} \
-         preskipped_pairs={}",
+         preskipped_pairs={} aligners={}",
         class.name(),
         report.m_x,
         report.m_y,
         report.levels,
         report.leaf_size,
         report.pruned_pairs,
-        report.preskipped_pairs
+        report.preskipped_pairs,
+        report.aligner_per_level.join(",")
     );
     println!(
         "distortion={distortion:.4} rep_gw_loss={:.6} local_matchings={}",
@@ -467,6 +473,16 @@ fn print_usage() {
                           while its Theorem-6 bound term exceeds the remaining\n\
                           budget; pairs already within budget bottom out at the\n\
                           exact 1-D leaf (reported as pruned_pairs)\n\
+         \n\
+         aligner policy (match/serve/index — or `[qgw] aligner_policy` in the\n\
+         config file; the flag wins):\n\
+           --aligner-policy SPEC  comma-separated per-recursion-level global\n\
+                                  aligner backends, each `exact`, `entropic`,\n\
+                                  or `sliced`; the last entry repeats for\n\
+                                  deeper levels (default: entropic). Sliced is\n\
+                                  deterministic: seeded from the node's seed\n\
+                                  chain, byte-identical across thread counts\n\
+                                  and cold-vs-indexed serving.\n\
          \n\
          thread knobs (match/serve/index — couplings are byte-identical at\n\
          every setting of both):\n\

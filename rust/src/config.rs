@@ -9,7 +9,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::gw::GwOptions;
-use crate::qgw::{PartitionSize, QgwConfig};
+use crate::qgw::{AlignerPolicy, PartitionSize, QgwConfig};
 
 /// A parsed configuration value.
 #[derive(Clone, Debug, PartialEq)]
@@ -146,6 +146,8 @@ impl Config {
             leaf_size: self.usize_or("qgw.leaf_size", 64).max(1),
             tolerance: self.f64_or("qgw.tolerance", 0.0).max(0.0),
             prune_ahead: self.bool_or("qgw.prune_ahead", true),
+            aligner_policy: AlignerPolicy::parse(self.str_or("qgw.aligner_policy", "entropic"))
+                .unwrap_or_else(|e| panic!("[qgw] aligner_policy: {e}")),
         }
     }
 
@@ -301,6 +303,23 @@ full = false
         assert_eq!(z.levels, 1);
         assert_eq!(z.leaf_size, 1);
         assert_eq!(z.tolerance, 0.0);
+    }
+
+    #[test]
+    fn aligner_policy_parses_and_defaults_to_entropic() {
+        let c = Config::parse("[qgw]\naligner_policy = \"exact, sliced\"\n").unwrap();
+        let q = c.qgw_config();
+        assert_eq!(q.aligner_policy, AlignerPolicy::parse("exact,sliced").unwrap());
+        assert_eq!(q.aligner_policy.describe(), "exact,sliced");
+        let d = Config::parse("").unwrap().qgw_config();
+        assert_eq!(d.aligner_policy, AlignerPolicy::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "aligner_policy")]
+    fn aligner_policy_rejects_unknown_backend() {
+        let c = Config::parse("[qgw]\naligner_policy = \"simplex\"\n").unwrap();
+        let _ = c.qgw_config();
     }
 
     #[test]

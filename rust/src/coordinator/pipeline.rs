@@ -12,10 +12,18 @@
 //! hard cap: pairs whose Theorem-6 term already fits the remaining
 //! tolerance budget are pruned to the exact leaf (reported through
 //! [`PipelineReport::pruned_pairs`] and the `hier_pruned_pairs` metric).
-//! The only remaining flat fallback is an explicit
-//! `aligner` override (the recursion requires a `Sync` aligner); that
-//! downgrade is surfaced through the `hier_fallbacks` metric and a
-//! warning instead of being silently absorbed.
+//!
+//! **One spine.** Cold matching ([`MatchPipeline::run`]) and indexed
+//! serving ([`MatchPipeline::run_indexed`]) differ only in where the
+//! reference side comes from: a substrate partitioned here, or a resident
+//! [`RefIndex`] tree. Both feed the same execution tail (the private
+//! `spine` method) — aligner resolution, the hierarchical recursion,
+//! stage metrics, and report assembly — so the two paths cannot drift. The aligner is a `&dyn` [`GlobalAligner`] everywhere
+//! (the trait is object-safe over `Sync`): an explicit `aligner` override
+//! rides the full hierarchy exactly like the default, which is a
+//! [`PolicyAligner`] resolving `qgw.aligner_policy`
+//! (`exact | entropic | sliced`, selectable per recursion level). There
+//! is no flat-fallback path.
 //!
 //! All parallel work below the pipeline — the hierarchy's block fan-out,
 //! the solver's matmuls, the sparse loss sweeps — runs on the shared
@@ -26,16 +34,15 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::core::PointCloud;
+use crate::core::{PointCloud, QuantizedSpace};
 use crate::graph::Graph;
 use crate::index::RefIndex;
 use crate::prng::Pcg32;
 use crate::qgw::{
-    assemble, hier_match_indexed, hier_match_quantized, qfgw_align, qfgw_assemble, split_seed,
-    stage_partition, FeatureSet, GlobalAligner, QfgwConfig, QgwConfig, QgwResult, RustAligner,
-    Substrate,
+    hier_match_indexed, hier_match_quantized, split_seed, stage_partition, FeatureSet,
+    GlobalAligner, PolicyAligner, QgwConfig, QgwResult, Substrate,
 };
 
 use super::Metrics;
@@ -88,14 +95,27 @@ pub struct PipelineReport {
     /// `levels > 1`).
     pub leaf_size: usize,
     /// Recursion-eligible block pairs the adaptive tolerance pruned to
-    /// the exact 1-D leaf (0 in fixed-depth mode, i.e. `tolerance = 0`,
-    /// and on the flat fallback path). Includes `preskipped_pairs`.
+    /// the exact 1-D leaf (0 in fixed-depth mode, i.e. `tolerance = 0`).
+    /// Includes `preskipped_pairs`.
     pub pruned_pairs: usize,
     /// The prune-ahead subset of `pruned_pairs`: pairs whose
     /// parent-diameter bound certified the prune before block extraction,
     /// so they never paid the nested partition (see
     /// `QgwConfig::prune_ahead`).
     pub preskipped_pairs: usize,
+    /// Realized aligner backend per level that actually ran (entry `l` is
+    /// `GlobalAligner::kind_at(l)`): `"exact"`, `"entropic"`, `"sliced"`,
+    /// `"xla"`, or `"custom"`.
+    pub aligner_per_level: Vec<&'static str>,
+}
+
+/// Where the spine's reference side comes from — the *only* difference
+/// between cold matching and indexed serving.
+enum RefSide<'a> {
+    /// A substrate partitioned by this very run (`MatchPipeline::run`).
+    Cold { sub: &'a Substrate<'a>, q: &'a QuantizedSpace },
+    /// A resident prebuilt tree (`MatchPipeline::run_indexed`).
+    Indexed(&'a RefIndex),
 }
 
 /// Configurable qGW/qFGW pipeline with stage metrics.
@@ -104,9 +124,10 @@ pub struct MatchPipeline<'a> {
     pub fused: Option<(f64, f64)>, // (alpha, beta)
     pub seed: u64,
     pub metrics: &'a Metrics,
-    /// Global aligner override (e.g. the PJRT runtime); defaults to the
-    /// pure-Rust solver. Overrides are not `Sync`, so they force flat
-    /// matching — see `hier_fallbacks`.
+    /// Global aligner override (e.g. the PJRT runtime); defaults to a
+    /// [`PolicyAligner`] resolving `qgw.aligner_policy`. The trait is
+    /// object-safe over `Sync`, so an override rides the full hierarchy —
+    /// cold and indexed alike — exactly like the default.
     pub aligner: Option<&'a dyn GlobalAligner>,
 }
 
@@ -125,8 +146,6 @@ impl<'a> MatchPipeline<'a> {
         // [`MatchPipeline::run_indexed`].
         let mut rng_x = Pcg32::seed_from(split_seed(self.seed, 0));
         let mut rng_y = Pcg32::seed_from(split_seed(self.seed, 1));
-        let hier_seed = split_seed(self.seed, 2);
-        let rust_aligner = RustAligner(self.qgw.gw.clone());
 
         // --- Stage 1: substrate capture + partition ----------------------
         // (The partitioner choice per substrate lives in the shared
@@ -164,95 +183,75 @@ impl<'a> MatchPipeline<'a> {
         let partition_secs = part_start.elapsed().as_secs_f64();
         self.metrics.add_duration("partition", part_start.elapsed());
 
+        self.spine(total_start, partition_secs, &sx, &qx, RefSide::Cold { sub: &sy, q: &qy })
+    }
+
+    /// The shared execution tail of cold and indexed matching: resolve the
+    /// aligner (explicit override, else the config's policy), run the
+    /// hierarchical recursion against whichever reference source the
+    /// caller prepared, record the stage metrics, and assemble the report.
+    /// Everything downstream of stage 1 lives here — the two public entry
+    /// points differ *only* in how the reference side was obtained.
+    fn spine(
+        &self,
+        total_start: Instant,
+        partition_secs: f64,
+        sx: &Substrate<'_>,
+        qx: &QuantizedSpace,
+        reference: RefSide<'_>,
+    ) -> PipelineReport {
+        let hier_seed = split_seed(self.seed, 2);
+        let policy_aligner = PolicyAligner::from_config(&self.qgw);
+        let aligner: &dyn GlobalAligner = match self.aligner {
+            Some(a) => a,
+            None => &policy_aligner,
+        };
+
         // --- Stages 2+3: every substrate goes through the hierarchy ------
         // (`hier_match_quantized` gates the fused blend itself: `self.fused`
-        // only engages when both substrates actually carry features, and the
-        // flat-fallback match below applies the same rule by pattern.)
-        let (result, levels_ran, pruned_pairs, preskipped_pairs, global_secs, local_secs) =
-            match self.aligner {
-                None => {
-                    let hres = hier_match_quantized(
-                        &sx,
-                        &sy,
-                        &qx,
-                        &qy,
+        // only engages when both substrates actually carry features.)
+        let (m_y, hres) = match reference {
+            RefSide::Cold { sub, q } => (
+                q.num_blocks(),
+                hier_match_quantized(sx, sub, qx, q, &self.qgw, self.fused, aligner, hier_seed),
+            ),
+            RefSide::Indexed(index) => {
+                self.metrics.incr("indexed_matches", 1);
+                (
+                    index.root().num_blocks(),
+                    hier_match_indexed(
+                        sx,
+                        qx,
+                        index.root(),
                         &self.qgw,
                         self.fused,
-                        &rust_aligner,
+                        aligner,
                         hier_seed,
-                    );
-                    self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
-                    self.metrics.incr("hier_pruned_pairs", hres.stats.pruned_pairs as u64);
-                    self.metrics
-                        .incr("hier_preskipped_pairs", hres.stats.preskipped_pairs as u64);
-                    (
-                        hres.result,
-                        hres.stats.levels_used(),
-                        hres.stats.pruned_pairs,
-                        hres.stats.preskipped_pairs,
-                        hres.global_secs,
-                        hres.local_secs,
-                    )
-                }
-                Some(aligner) => {
-                    // Aligner overrides are not `Sync`, so the recursion
-                    // cannot fan out over them: flat matching runs instead.
-                    // Surface the downgrade instead of silently absorbing it.
-                    if self.qgw.levels > 1 {
-                        self.metrics.incr("hier_fallbacks", 1);
-                        eprintln!(
-                            "warn: qgw.levels={} requested but the aligner override forces flat \
-                             matching (hier_fallbacks metric bumped)",
-                            self.qgw.levels
-                        );
-                    }
-                    let align_start = Instant::now();
-                    let (global_res, fused_ctx) =
-                        match (self.fused, sx.features(), sy.features()) {
-                            (Some((alpha, beta)), Some(fx), Some(fy)) => {
-                                let cfg = QfgwConfig { base: self.qgw.clone(), alpha, beta };
-                                (
-                                    qfgw_align(&qx, &qy, fx, fy, &cfg, aligner),
-                                    Some((cfg, fx, fy)),
-                                )
-                            }
-                            _ => (
-                                aligner.align(
-                                    qx.rep_dists(),
-                                    qy.rep_dists(),
-                                    qx.rep_measure(),
-                                    qy.rep_measure(),
-                                ),
-                                None,
-                            ),
-                        };
-                    let global_secs = align_start.elapsed().as_secs_f64();
-                    let local_start = Instant::now();
-                    let result = match fused_ctx {
-                        Some((cfg, fx, fy)) => qfgw_assemble(&qx, &qy, fx, fy, global_res, &cfg),
-                        None => assemble(&qx, &qy, global_res, &self.qgw),
-                    };
-                    (result, 1, 0, 0, global_secs, local_start.elapsed().as_secs_f64())
-                }
-            };
-        self.metrics.add_duration("global_align", Duration::from_secs_f64(global_secs));
-        self.metrics.add_duration("local+assemble", Duration::from_secs_f64(local_secs));
-        self.metrics.incr("local_matchings", result.num_local_matchings as u64);
+                    ),
+                )
+            }
+        };
+        self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
+        self.metrics.incr("hier_pruned_pairs", hres.stats.pruned_pairs as u64);
+        self.metrics.incr("hier_preskipped_pairs", hres.stats.preskipped_pairs as u64);
+        self.metrics.add_duration("global_align", Duration::from_secs_f64(hres.global_secs));
+        self.metrics.add_duration("local+assemble", Duration::from_secs_f64(hres.local_secs));
+        self.metrics.incr("local_matchings", hres.result.num_local_matchings as u64);
 
         PipelineReport {
             m_x: qx.num_blocks(),
-            m_y: qy.num_blocks(),
+            m_y,
             // Report what actually ran: a hierarchy whose blocks all hit
-            // the leaf size degenerates to one level, and an aligner
-            // override forces flat matching.
-            levels: levels_ran,
+            // the leaf size degenerates to one level.
+            levels: hres.stats.levels_used(),
             leaf_size: self.qgw.leaf_size,
-            pruned_pairs,
-            preskipped_pairs,
-            result,
+            pruned_pairs: hres.stats.pruned_pairs,
+            preskipped_pairs: hres.stats.preskipped_pairs,
+            aligner_per_level: hres.stats.aligner_per_level.clone(),
+            result: hres.result,
             partition_secs,
-            global_secs,
-            local_secs,
+            global_secs: hres.global_secs,
+            local_secs: hres.local_secs,
             total_secs: total_start.elapsed().as_secs_f64(),
         }
     }
@@ -269,17 +268,9 @@ impl<'a> MatchPipeline<'a> {
         query: QueryInput<'_>,
         index: &RefIndex,
     ) -> Result<PipelineReport> {
-        if self.aligner.is_some() {
-            bail!(
-                "aligner overrides cannot serve the indexed path (the hierarchy needs a \
-                 Sync aligner)"
-            );
-        }
         index.validate_config(&self.qgw)?;
         let total_start = Instant::now();
         let mut rng_x = Pcg32::seed_from(split_seed(self.seed, 0));
-        let hier_seed = split_seed(self.seed, 2);
-        let rust_aligner = RustAligner(self.qgw.gw.clone());
 
         // --- Stage 1: query-side partition only --------------------------
         let part_start = Instant::now();
@@ -303,39 +294,7 @@ impl<'a> MatchPipeline<'a> {
         let partition_secs = part_start.elapsed().as_secs_f64();
         self.metrics.add_duration("partition", part_start.elapsed());
 
-        // --- Stages 2+3 against the resident reference tree --------------
-        let hres = hier_match_indexed(
-            &sx,
-            &qx,
-            index.root(),
-            &self.qgw,
-            self.fused,
-            &rust_aligner,
-            hier_seed,
-        );
-        self.metrics.incr("indexed_matches", 1);
-        self.metrics.incr("hier_nodes", hres.stats.nodes as u64);
-        self.metrics.incr("hier_pruned_pairs", hres.stats.pruned_pairs as u64);
-        self.metrics.incr("hier_preskipped_pairs", hres.stats.preskipped_pairs as u64);
-        self.metrics
-            .add_duration("global_align", Duration::from_secs_f64(hres.global_secs));
-        self.metrics
-            .add_duration("local+assemble", Duration::from_secs_f64(hres.local_secs));
-        self.metrics.incr("local_matchings", hres.result.num_local_matchings as u64);
-
-        Ok(PipelineReport {
-            m_x: qx.num_blocks(),
-            m_y: index.root().num_blocks(),
-            levels: hres.stats.levels_used(),
-            leaf_size: self.qgw.leaf_size,
-            pruned_pairs: hres.stats.pruned_pairs,
-            preskipped_pairs: hres.stats.preskipped_pairs,
-            result: hres.result,
-            partition_secs,
-            global_secs: hres.global_secs,
-            local_secs: hres.local_secs,
-            total_secs: total_start.elapsed().as_secs_f64(),
-        })
+        Ok(self.spine(total_start, partition_secs, &sx, &qx, RefSide::Indexed(index)))
     }
 }
 
@@ -344,6 +303,7 @@ mod tests {
     use super::*;
     use crate::core::MmSpace;
     use crate::prng::{Gaussian, Rng};
+    use crate::qgw::RustAligner;
     use crate::testutil::ring_graph as ring;
 
     fn cloud(n: usize, seed: u64) -> PointCloud {
@@ -429,7 +389,6 @@ mod tests {
         assert!(report.result.coupling.check_marginals(&mu, &mu) < 1e-7);
         assert!(report.levels >= 2, "graph input fell back to flat: levels={}", report.levels);
         assert!(metrics.counter("hier_nodes") > 1, "no graph recursion nodes");
-        assert_eq!(metrics.counter("hier_fallbacks"), 0);
     }
 
     #[test]
@@ -450,7 +409,6 @@ mod tests {
         assert!(report.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
         assert!(report.levels >= 2, "fused input fell back to flat: levels={}", report.levels);
         assert!(metrics.counter("hier_nodes") > 1, "no fused recursion nodes");
-        assert_eq!(metrics.counter("hier_fallbacks"), 0);
     }
 
     #[test]
@@ -502,16 +460,47 @@ mod tests {
     }
 
     #[test]
-    fn pipeline_aligner_override_falls_back_with_metric() {
+    fn pipeline_aligner_override_rides_hierarchy() {
+        // An explicit override no longer downgrades to flat matching: it
+        // runs at every recursion node, and a RustAligner override is
+        // byte-identical to the default entropic policy.
         let x = cloud(120, 4);
-        let metrics = Metrics::new();
         let cfg = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) };
+
+        let metrics = Metrics::new();
+        let baseline =
+            MatchPipeline::new(cfg.clone(), &metrics).run(PipelineInput::Clouds { x: &x, y: &x });
+        assert!(baseline.levels >= 2, "fixture must recurse");
+
         let rust = RustAligner(cfg.gw.clone());
+        let metrics = Metrics::new();
         let mut pipe = MatchPipeline::new(cfg, &metrics);
         pipe.aligner = Some(&rust);
         let report = pipe.run(PipelineInput::Clouds { x: &x, y: &x });
-        assert_eq!(report.levels, 1);
-        assert_eq!(metrics.counter("hier_fallbacks"), 1);
+        assert_eq!(report.levels, baseline.levels, "override fell back to flat");
+        crate::testutil::assert_sparse_bitwise_equal(
+            &baseline.result.coupling.to_sparse(),
+            &report.result.coupling.to_sparse(),
+        );
+        // The report names the backend that ran at each level.
+        assert_eq!(baseline.aligner_per_level.len(), baseline.levels);
+        assert!(baseline.aligner_per_level.iter().all(|&k| k == "entropic"));
+        assert_eq!(report.aligner_per_level.len(), report.levels);
+        assert!(report.aligner_per_level.iter().all(|&k| k == "entropic"));
+        assert!(report.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
+    }
+
+    #[test]
+    fn pipeline_sliced_policy_runs_and_reports_backend() {
+        let x = cloud(150, 6);
+        let metrics = Metrics::new();
+        let mut cfg = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) };
+        cfg.aligner_policy = crate::qgw::AlignerPolicy::parse("entropic,sliced").unwrap();
+        let pipe = MatchPipeline::new(cfg, &metrics);
+        let report = pipe.run(PipelineInput::Clouds { x: &x, y: &x });
+        assert!(report.levels >= 2, "fixture must recurse");
+        assert_eq!(report.aligner_per_level[0], "entropic");
+        assert!(report.aligner_per_level[1..].iter().all(|&k| k == "sliced"));
         assert!(report.result.coupling.check_marginals(x.measure(), x.measure()) < 1e-7);
     }
 
@@ -556,22 +545,41 @@ mod tests {
     }
 
     #[test]
-    fn pipeline_indexed_rejects_structural_mismatch_and_override() {
+    fn pipeline_indexed_rejects_structural_mismatch() {
         let x = cloud(120, 31);
         let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(4) };
         let idx = crate::index::RefIndex::build_cloud(&x, None, &cfg, 7);
         let metrics = Metrics::new();
 
         // Mismatched leaf size is refused up front, not silently served.
-        let bad = QgwConfig { leaf_size: 20, ..cfg.clone() };
+        let bad = QgwConfig { leaf_size: 20, ..cfg };
         let pipe = MatchPipeline::new(bad, &metrics);
         assert!(pipe.run_indexed(QueryInput::Cloud { x: &x }, &idx).is_err());
+    }
 
-        // Aligner overrides force flat matching and cannot serve the tree.
+    #[test]
+    fn pipeline_indexed_serves_aligner_override() {
+        // Overrides used to be rejected on the indexed path; now they ride
+        // the served hierarchy and stay byte-identical to their own cold
+        // run at the same seed.
+        let x = cloud(220, 33);
+        let y = cloud(200, 34);
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(5) };
         let rust = RustAligner(cfg.gw.clone());
-        let mut pipe = MatchPipeline::new(cfg, &metrics);
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = 91;
         pipe.aligner = Some(&rust);
-        assert!(pipe.run_indexed(QueryInput::Cloud { x: &x }, &idx).is_err());
+        let cold = pipe.run(PipelineInput::Clouds { x: &x, y: &y });
+        assert!(cold.levels >= 2, "fixture must recurse");
+
+        let idx = crate::index::RefIndex::build_cloud(&y, None, &cfg, 91);
+        let indexed = pipe.run_indexed(QueryInput::Cloud { x: &x }, &idx).unwrap();
+        crate::testutil::assert_sparse_bitwise_equal(
+            &cold.result.coupling.to_sparse(),
+            &indexed.result.coupling.to_sparse(),
+        );
+        assert_eq!(cold.aligner_per_level, indexed.aligner_per_level);
     }
 
     #[test]

@@ -147,11 +147,12 @@ impl MatchService {
             None => String::new(),
         };
         format!(
-            "{base}{reg} queries={} matches={} refused={} accept_errors={}",
+            "{base}{reg} queries={} matches={} refused={} accept_errors={} aligner_policy={}",
             self.num_queries(),
             self.num_matches(),
             self.num_refused(),
             self.num_accept_errors(),
+            self.qgw.aligner_policy.describe(),
         )
     }
 
@@ -424,13 +425,14 @@ impl MatchService {
         };
         self.matches.fetch_add(1, Ordering::Relaxed);
         let summary = format!(
-            "OK n={} ref={} loss={:.6} bound={:.6} levels={} leaves={}",
+            "OK n={} ref={} loss={:.6} bound={:.6} levels={} leaves={} aligners={}",
             cloud.len(),
             index.num_points(),
             report.result.gw_loss,
             report.result.error_bound,
             report.levels,
             report.result.num_local_matchings,
+            report.aligner_per_level.join(","),
         );
         Ok(Ok((report.result.coupling, summary)))
     }
@@ -644,6 +646,7 @@ mod tests {
     fn stats_reports_accept_errors() {
         let (_, svc) = service();
         assert!(svc.stats().contains("accept_errors=0"), "stats: {}", svc.stats());
+        assert!(svc.stats().contains("aligner_policy=entropic"), "stats: {}", svc.stats());
         svc.accept_errors.fetch_add(2, Ordering::Relaxed);
         assert_eq!(svc.num_accept_errors(), 2);
         assert!(svc.stats().contains("accept_errors=2"), "stats: {}", svc.stats());
@@ -728,6 +731,7 @@ mod tests {
         stream.set_read_timeout(Some(std::time::Duration::from_secs(60))).unwrap();
         reader.read_line(&mut line).unwrap();
         assert!(line.starts_with("OK n=60 ref=200"), "MATCH reply: {line:?}");
+        assert!(line.contains("aligners=entropic"), "MATCH reply: {line:?}");
 
         // The connection's QUERY/MAP now serve the fresh coupling.
         line.clear();

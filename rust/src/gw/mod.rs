@@ -8,6 +8,7 @@ mod fgw;
 mod loss;
 mod minibatch;
 mod mrec;
+mod sliced;
 mod solvers;
 mod workspace;
 
@@ -18,7 +19,9 @@ pub use loss::{
 };
 pub use minibatch::{minibatch_gw, MbGwOptions};
 pub use mrec::{mrec_match, MrecOptions, SubSpace};
+pub use sliced::{sliced_fgw, sliced_gw};
 pub use solvers::{
-    cg_gw, cg_gw_with, cost_scale, entropic_gw, entropic_gw_with, GwOptions, GwResult,
+    cg_fgw, cg_fgw_with, cg_gw, cg_gw_with, cost_scale, entropic_gw, entropic_gw_with, GwOptions,
+    GwResult,
 };
 pub use workspace::GwWorkspace;

@@ -211,6 +211,91 @@ pub fn cg_gw_with(
     GwResult { plan: std::mem::take(t), loss, outer_iters: iters }
 }
 
+/// Conditional-gradient FGW: [`cg_gw`] on the fused objective
+/// `(1 - alpha) GW(T) + alpha <M, T>` (the `exact` aligner-policy kind
+/// for fused matches). The feature term is linear in `T`, so it joins the
+/// LP cost at its exact relative weight and adds a linear term to the
+/// closed-form line search; the GW quadratic machinery is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_fgw(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    feat_cost: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    alpha: f64,
+    max_iters: usize,
+    tol: f64,
+) -> GwResult {
+    cg_fgw_with(cx, cy, feat_cost, a, b, alpha, max_iters, tol, &mut GwWorkspace::new())
+}
+
+/// [`cg_fgw`] over a caller workspace — the same hoisting as
+/// [`cg_gw_with`] (gradient doubles as the line-search tensor, raw
+/// `Cx T Cy^T` kept, workspace EMD), with `scratch` moonlighting as the
+/// combined LP cost before the search direction needs it.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_fgw_with(
+    cx: &DenseMatrix,
+    cy: &DenseMatrix,
+    feat_cost: &DenseMatrix,
+    a: &[f64],
+    b: &[f64],
+    alpha: f64,
+    max_iters: usize,
+    tol: f64,
+    ws: &mut GwWorkspace,
+) -> GwResult {
+    let GwWorkspace { inv, a_mat, tensor, t, next, prod, scratch, emd: emd_ws, .. } = ws;
+    let gw_w = 1.0 - alpha;
+    inv.prepare(cx, cy, a, b);
+    product_coupling_into(a, b, t);
+    inv.cost_tensor_into(cx, t, a_mat, tensor);
+    let mut loss = gw_w * tensor.dot(t) + alpha * feat_cost.dot(t);
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        inv.raw_product_into(cx, t, a_mat, prod);
+        tensor.copy_from(prod);
+        inv.finish_tensor(tensor);
+        // LP cost = the fused gradient (up to terms constant over the
+        // coupling polytope): 2 (1-alpha) L(T) + alpha M. The factor 2 on
+        // the quadratic part matters — it sets the relative weight against
+        // the linear feature term.
+        scratch.copy_from(tensor);
+        scratch.scale(2.0 * gw_w);
+        scratch.axpy(alpha, feat_cost);
+        emd_into(scratch, a, b, emd_ws, next);
+        let e = &mut *next;
+        e.axpy(-1.0, t);
+        // f(T + tau E) = f(T) + b1 tau + c2 tau^2: the GW part carries
+        // cg_gw's coefficients scaled by (1-alpha); the feature part adds
+        // alpha <M, E> to the linear coefficient.
+        inv.raw_product_into(cx, e, a_mat, scratch);
+        let c2 = gw_w * (-2.0 * scratch.dot(e));
+        let b1 = gw_w * (tensor.dot(e) - 2.0 * prod.dot(e)) + alpha * feat_cost.dot(e);
+        let tau = if c2 > 0.0 {
+            (-b1 / (2.0 * c2)).clamp(0.0, 1.0)
+        } else if b1 + c2 < 0.0 {
+            1.0
+        } else {
+            0.0
+        };
+        if tau <= 0.0 {
+            break;
+        }
+        t.axpy(tau, e);
+        inv.cost_tensor_into(cx, t, a_mat, tensor);
+        let new_loss = gw_w * tensor.dot(t) + alpha * feat_cost.dot(t);
+        let improve = loss - new_loss;
+        loss = new_loss;
+        if improve.abs() < tol {
+            break;
+        }
+    }
+    GwResult { plan: std::mem::take(t), loss, outer_iters: iters }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,5 +365,44 @@ mod tests {
         let (cy, _, b) = rotated_pair(18, 8);
         let res = entropic_gw(&cx, &cy, &a, &b, &GwOptions::single_eps(1e-2));
         assert!(check_coupling(&res.plan, &a, &b, 1e-4));
+    }
+
+    #[test]
+    fn cg_fgw_alpha_zero_matches_cg_gw() {
+        let (cx, _, a) = rotated_pair(14, 9);
+        let (cy, _, _) = rotated_pair(14, 10);
+        let feat = DenseMatrix::from_fn(14, 14, |i, j| ((i * 3 + j) % 7) as f64);
+        let plain = cg_gw(&cx, &cy, &a, &a, 30, 1e-12);
+        let fused = cg_fgw(&cx, &cy, &feat, &a, &a, 0.0, 30, 1e-12);
+        assert!((plain.loss - fused.loss).abs() < 1e-9, "{} vs {}", plain.loss, fused.loss);
+        for (p, q) in plain.plan.as_slice().iter().zip(fused.plan.as_slice()) {
+            assert!((p - q).abs() < 1e-9, "alpha=0 plan drift: {p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn cg_fgw_alpha_one_follows_features_only() {
+        // Matched features force the anti-diagonal even though the
+        // structural optimum is ambiguous.
+        let (cx, _, a) = rotated_pair(8, 11);
+        let feat = DenseMatrix::from_fn(8, 8, |i, j| if i + j == 7 { 0.0 } else { 1.0 });
+        let res = cg_fgw(&cx, &cx, &feat, &a, &a, 1.0, 30, 1e-12);
+        assert!(check_coupling(&res.plan, &a, &a, 1e-9));
+        for i in 0..8 {
+            assert_eq!(res.plan.row_argmax(i), 7 - i, "row {i}");
+        }
+    }
+
+    #[test]
+    fn cg_fgw_monotone_nonincreasing_and_couples() {
+        let (cx, _, a) = rotated_pair(12, 12);
+        let (cy, _, b) = rotated_pair(15, 13);
+        let feat = DenseMatrix::from_fn(12, 15, |i, j| ((i + 2 * j) % 5) as f64 / 5.0);
+        let l1 = cg_fgw(&cx, &cy, &feat, &a, &b, 0.5, 1, 0.0).loss;
+        let l10 = cg_fgw(&cx, &cy, &feat, &a, &b, 0.5, 10, 0.0).loss;
+        let l50 = cg_fgw(&cx, &cy, &feat, &a, &b, 0.5, 50, 0.0);
+        assert!(l10 <= l1 + 1e-12);
+        assert!(l50.loss <= l10 + 1e-12);
+        assert!(check_coupling(&l50.plan, &a, &b, 1e-9));
     }
 }

@@ -180,11 +180,16 @@ pub fn block_cloud(cloud: &PointCloud, q: &QuantizedSpace, p: usize) -> PointClo
 /// Subgraph node `k` is `q.block(p)[k]` (the anchor-sorted order, with a
 /// distance-0 node — normally the representative — at position 0), so
 /// subgraph node ids line up with block positions exactly like
-/// [`block_cloud`]. Induced-subgraph components cut off from position 0
-/// are re-attached through it by a bridge edge whose weight is the
-/// component's smallest full-graph anchor distance (the geodesic that
-/// runs through the representative), keeping every nested Dijkstra
-/// distance finite.
+/// [`block_cloud`]. On top of the induced edges, every position `k > 0`
+/// gets a *through-representative completion edge* `(0, k)` weighted by
+/// its full-graph anchor distance — the geodesic that runs through the
+/// representative, which the induced subgraph may have cut. Completion
+/// keeps every nested Dijkstra distance finite (stranded components are
+/// re-attached as a special case) and caps it:
+/// `d_sub(u, v) <= anchor(u) + anchor(v)`, the invariant that makes the
+/// parent-level prune-ahead certificate (`Substrate::block_bounds`)
+/// sound on graphs. Induced edges are never dropped, so `d_sub` also
+/// never exceeds the pre-completion restricted distance.
 pub fn block_graph(g: &Graph, q: &QuantizedSpace, p: usize) -> (Graph, Vec<f64>) {
     assert_eq!(q.num_points(), g.num_nodes());
     let ids = q.block(p);
@@ -207,46 +212,14 @@ pub fn block_graph(g: &Graph, q: &QuantizedSpace, p: usize) -> (Graph, Vec<f64>)
         }
     }
 
-    // Bridge components that lost their path to position 0.
-    if nb > 1 {
-        let mut seen = vec![false; nb];
-        let mut stack = vec![0usize];
-        seen[0] = true;
-        while let Some(u) = stack.pop() {
-            for &(v, _) in sub.neighbors(u) {
-                if !seen[v as usize] {
-                    seen[v as usize] = true;
-                    stack.push(v as usize);
-                }
-            }
-        }
-        // Stranded positions, nearest-the-rep first (ties by position):
-        // one sorted pass bridges every component, instead of rescanning
-        // all unvisited nodes per component — O(nb log nb) even on the
-        // adversarial near-edgeless blocks.
-        let mut stranded: Vec<usize> = (0..nb).filter(|&k| !seen[k]).collect();
-        stranded.sort_unstable_by(|&a, &b| {
-            q.anchor_dist(ids[a] as usize)
-                .partial_cmp(&q.anchor_dist(ids[b] as usize))
-                .unwrap()
-                .then(a.cmp(&b))
-        });
-        for &entry in &stranded {
-            if seen[entry] {
-                continue; // absorbed into an earlier-bridged component
-            }
-            sub.add_edge(0, entry, q.anchor_dist(ids[entry] as usize));
-            seen[entry] = true;
-            let mut stack = vec![entry];
-            while let Some(u) = stack.pop() {
-                for &(v, _) in sub.neighbors(u) {
-                    if !seen[v as usize] {
-                        seen[v as usize] = true;
-                        stack.push(v as usize);
-                    }
-                }
-            }
-        }
+    // Through-representative path completion: the parent graph always has
+    // the walk u -> rep -> v, but the induced subgraph may have lost it.
+    // One completion edge per non-rep position restores every such walk at
+    // its true parent-graph length (anchor distances are full-graph
+    // Dijkstra distances to the representative), which both re-attaches
+    // stranded components and enforces d_sub(u, v) <= anchor(u) + anchor(v).
+    for k in 1..nb {
+        sub.add_edge(0, k, q.anchor_dist(ids[k] as usize));
     }
 
     let measure: Vec<f64> = ids.iter().map(|&i| q.conditional_measure(i as usize)).collect();

@@ -15,9 +15,11 @@
 
 use std::collections::HashMap;
 
+use anyhow::{bail, Result};
+
 use crate::coordinator::parallel_map;
 use crate::core::{DenseMatrix, PointCloud, QuantizedSpace, SparseCoupling};
-use crate::gw::{entropic_gw, gw_loss, GwOptions, GwResult};
+use crate::gw::{cg_fgw, cg_gw, entropic_gw, gw_loss, sliced_fgw, sliced_gw, GwOptions, GwResult};
 use crate::ot::emd1d_presorted;
 use crate::partition::partition_cloud;
 use crate::prng::Rng;
@@ -83,10 +85,17 @@ pub struct QgwConfig {
     /// sound (it dominates the term the nested partition would realize),
     /// so couplings are byte-identical with the flag on or off — `false`
     /// is a validation/debugging escape hatch, not a semantic switch.
-    /// Substrates without a sound parent-level bound (graphs, whose
-    /// extracted subgraph distances can exceed any parent scalar) never
-    /// prune ahead regardless.
+    /// Clouds bound block diameters by the anchor triangle inequality;
+    /// graphs by through-rep path completion (every extracted subgraph
+    /// carries a rep-to-node completion edge at the full-graph anchor
+    /// distance, so `d_sub(u, v) <= anchor(u) + anchor(v)` holds and
+    /// `2 * max_anchor` is a sound block diameter bound).
     pub prune_ahead: bool,
+    /// Which global-alignment solver runs at each recursion level when no
+    /// explicit [`GlobalAligner`] override is installed (the
+    /// [`PolicyAligner`] reads this). Defaults to `entropic` everywhere —
+    /// byte-identical to the historical [`RustAligner`] path.
+    pub aligner_policy: AlignerPolicy,
 }
 
 impl Default for QgwConfig {
@@ -101,6 +110,7 @@ impl Default for QgwConfig {
             leaf_size: 64,
             tolerance: 0.0,
             prune_ahead: true,
+            aligner_policy: AlignerPolicy::default(),
         }
     }
 }
@@ -115,9 +125,17 @@ impl QgwConfig {
     }
 }
 
-/// Pluggable global-alignment backend: pure Rust ([`RustAligner`]) or the
-/// PJRT runtime executing AOT artifacts ([`crate::runtime::XlaAligner`]).
-pub trait GlobalAligner {
+/// Pluggable global-alignment backend: pure Rust ([`RustAligner`]), the
+/// per-level [`PolicyAligner`], or the PJRT runtime executing AOT
+/// artifacts ([`crate::runtime::XlaAligner`]).
+///
+/// The trait is object-safe over `Sync`, so a `&dyn GlobalAligner` rides
+/// the hierarchy's parallel recursion directly — overrides are never
+/// downgraded to flat matching. The hierarchy calls the `*_at` variants,
+/// which carry the recursion level and a node-derived seed; the defaults
+/// ignore both and delegate to the level-free methods, so deterministic
+/// backends need not care.
+pub trait GlobalAligner: Sync {
     fn align(&self, cx: &DenseMatrix, cy: &DenseMatrix, a: &[f64], b: &[f64]) -> GwResult;
 
     /// Fused variant with a feature-cost matrix and weight `alpha`.
@@ -130,6 +148,48 @@ pub trait GlobalAligner {
         b: &[f64],
         alpha: f64,
     ) -> GwResult;
+
+    /// [`align`](GlobalAligner::align) at recursion level `level` (0 = the
+    /// top partition), with a seed derived from the node's X-side chain —
+    /// the hook level-dependent policies and stochastic solvers (sliced
+    /// GW) override. The seed is a pure function of `(pipeline seed,
+    /// node path)`, identical cold-vs-indexed and across thread counts.
+    fn align_at(
+        &self,
+        _level: usize,
+        _seed: u64,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+    ) -> GwResult {
+        self.align(cx, cy, a, b)
+    }
+
+    /// [`align_fused`](GlobalAligner::align_fused) at recursion level
+    /// `level` with a node-derived seed; same contract as
+    /// [`align_at`](GlobalAligner::align_at).
+    #[allow(clippy::too_many_arguments)]
+    fn align_fused_at(
+        &self,
+        _level: usize,
+        _seed: u64,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        feat_cost: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        alpha: f64,
+    ) -> GwResult {
+        self.align_fused(cx, cy, feat_cost, a, b, alpha)
+    }
+
+    /// Short name of the solver this aligner would run at `level` —
+    /// surfaced per realized level in `HierStats` / `PipelineReport` and
+    /// the service `STATS` verb.
+    fn kind_at(&self, _level: usize) -> &'static str {
+        "custom"
+    }
 }
 
 /// Pure-Rust global aligner (log-domain entropic GW with eps annealing).
@@ -157,6 +217,200 @@ impl GlobalAligner for RustAligner {
             tol: self.0.tol,
         };
         crate::gw::entropic_fgw(cx, cy, feat_cost, a, b, &opts)
+    }
+
+    fn kind_at(&self, _level: usize) -> &'static str {
+        AlignerKind::Entropic.name()
+    }
+}
+
+/// Which global-alignment solver a policy runs at one recursion level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlignerKind {
+    /// Conditional-gradient (Frank-Wolfe) GW / FGW — the exact-ish
+    /// baseline solver, deterministic.
+    Exact,
+    /// Log-domain entropic GW / FGW with eps annealing — the historical
+    /// default; byte-identical to [`RustAligner`].
+    Entropic,
+    /// Seeded sliced GW / FGW: 1-D projections through anchor rows of the
+    /// distance matrices, each solved exactly by `emd1d`. Deterministic
+    /// given the node seed (serial per node — parallelism stays at the
+    /// pair fan-out), so couplings are identical across thread counts and
+    /// cold-vs-indexed.
+    Sliced,
+}
+
+impl AlignerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlignerKind::Exact => "exact",
+            AlignerKind::Entropic => "entropic",
+            AlignerKind::Sliced => "sliced",
+        }
+    }
+
+    fn parse(token: &str) -> Result<Self> {
+        match token {
+            "exact" => Ok(AlignerKind::Exact),
+            "entropic" => Ok(AlignerKind::Entropic),
+            "sliced" => Ok(AlignerKind::Sliced),
+            other => bail!(
+                "unknown aligner kind {other:?} (expected exact | entropic | sliced)"
+            ),
+        }
+    }
+}
+
+/// Per-recursion-level solver choice. Parsed from a comma-separated spec:
+/// entry `i` is the solver at level `i`, and the last entry repeats for
+/// all deeper levels — `"exact,sliced"` runs conditional-gradient GW on
+/// the top partition and sliced GW at every nested node. The default
+/// (`"entropic"`) reproduces the pre-policy couplings byte-for-byte.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AlignerPolicy {
+    per_level: Vec<AlignerKind>,
+}
+
+impl Default for AlignerPolicy {
+    fn default() -> Self {
+        Self::uniform(AlignerKind::Entropic)
+    }
+}
+
+impl AlignerPolicy {
+    /// The same solver at every level.
+    pub fn uniform(kind: AlignerKind) -> Self {
+        Self { per_level: vec![kind] }
+    }
+
+    /// Parse a comma-separated per-level spec (`"sliced"`,
+    /// `"exact,sliced"`, ...). Errors on empty specs or unknown kinds.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let per_level: Vec<AlignerKind> = spec
+            .split(',')
+            .map(|tok| AlignerKind::parse(tok.trim()))
+            .collect::<Result<_>>()?;
+        if per_level.is_empty() {
+            bail!("empty aligner policy spec");
+        }
+        Ok(Self { per_level })
+    }
+
+    /// Solver at recursion level `level` (the last entry repeats for
+    /// levels past the end of the spec).
+    pub fn kind_for(&self, level: usize) -> AlignerKind {
+        self.per_level[level.min(self.per_level.len() - 1)]
+    }
+
+    /// The canonical spec string (`"entropic"`, `"exact,sliced"`, ...).
+    pub fn describe(&self) -> String {
+        let names: Vec<&str> = self.per_level.iter().map(|k| k.name()).collect();
+        names.join(",")
+    }
+}
+
+/// Number of seeded 1-D projections per sliced-GW alignment. Fixed (not a
+/// knob) so the determinism contract stays simple: a sliced coupling is a
+/// pure function of the node seed and the inputs.
+pub(crate) const SLICED_PROJECTIONS: usize = 16;
+
+/// The default hierarchy aligner: dispatches each recursion level to the
+/// solver its [`AlignerPolicy`] names, sharing one set of [`GwOptions`].
+/// With the default policy this is byte-identical to
+/// [`RustAligner`]; the `sliced` kind consumes the node seed the
+/// hierarchy threads through [`GlobalAligner::align_at`].
+pub struct PolicyAligner {
+    opts: GwOptions,
+    policy: AlignerPolicy,
+}
+
+impl PolicyAligner {
+    pub fn new(opts: GwOptions, policy: AlignerPolicy) -> Self {
+        Self { opts, policy }
+    }
+
+    pub fn from_config(cfg: &QgwConfig) -> Self {
+        Self::new(cfg.gw.clone(), cfg.aligner_policy.clone())
+    }
+
+    fn fgw_opts(&self, alpha: f64) -> crate::gw::FgwOptions {
+        crate::gw::FgwOptions {
+            alpha,
+            eps_schedule: self.opts.eps_schedule.clone(),
+            outer_iters: self.opts.outer_iters,
+            inner_iters: self.opts.inner_iters,
+            tol: self.opts.tol,
+        }
+    }
+}
+
+impl GlobalAligner for PolicyAligner {
+    fn align(&self, cx: &DenseMatrix, cy: &DenseMatrix, a: &[f64], b: &[f64]) -> GwResult {
+        self.align_at(0, 0, cx, cy, a, b)
+    }
+
+    fn align_fused(
+        &self,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        feat_cost: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        alpha: f64,
+    ) -> GwResult {
+        self.align_fused_at(0, 0, cx, cy, feat_cost, a, b, alpha)
+    }
+
+    fn align_at(
+        &self,
+        level: usize,
+        seed: u64,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+    ) -> GwResult {
+        match self.policy.kind_for(level) {
+            AlignerKind::Entropic => entropic_gw(cx, cy, a, b, &self.opts),
+            AlignerKind::Exact => cg_gw(cx, cy, a, b, self.opts.outer_iters, self.opts.tol),
+            AlignerKind::Sliced => sliced_gw(cx, cy, a, b, SLICED_PROJECTIONS, seed),
+        }
+    }
+
+    fn align_fused_at(
+        &self,
+        level: usize,
+        seed: u64,
+        cx: &DenseMatrix,
+        cy: &DenseMatrix,
+        feat_cost: &DenseMatrix,
+        a: &[f64],
+        b: &[f64],
+        alpha: f64,
+    ) -> GwResult {
+        match self.policy.kind_for(level) {
+            AlignerKind::Entropic => {
+                crate::gw::entropic_fgw(cx, cy, feat_cost, a, b, &self.fgw_opts(alpha))
+            }
+            AlignerKind::Exact => cg_fgw(
+                cx,
+                cy,
+                feat_cost,
+                a,
+                b,
+                alpha,
+                self.opts.outer_iters,
+                self.opts.tol,
+            ),
+            AlignerKind::Sliced => {
+                sliced_fgw(cx, cy, feat_cost, a, b, alpha, SLICED_PROJECTIONS, seed)
+            }
+        }
+    }
+
+    fn kind_at(&self, level: usize) -> &'static str {
+        self.policy.kind_for(level).name()
     }
 }
 
@@ -420,5 +674,57 @@ mod tests {
         let m = 30;
         assert!(res.num_local_matchings < m * m / 2,
             "{} local matchings for m={m}", res.num_local_matchings);
+    }
+
+    #[test]
+    fn aligner_policy_parses_and_repeats_last_entry() {
+        let p = AlignerPolicy::parse("exact, sliced").unwrap();
+        assert_eq!(p.kind_for(0), AlignerKind::Exact);
+        assert_eq!(p.kind_for(1), AlignerKind::Sliced);
+        assert_eq!(p.kind_for(7), AlignerKind::Sliced, "last entry must repeat");
+        assert_eq!(p.describe(), "exact,sliced");
+        assert_eq!(AlignerPolicy::default(), AlignerPolicy::parse("entropic").unwrap());
+        assert!(AlignerPolicy::parse("").is_err());
+        assert!(AlignerPolicy::parse("entropic,warp").is_err());
+    }
+
+    #[test]
+    fn policy_aligner_default_matches_rust_aligner_bitwise() {
+        let x = gaussian_cloud(24, 21);
+        let y = gaussian_cloud(24, 22);
+        let (cx, cy) = (x.distance_matrix(), y.distance_matrix());
+        let a = crate::core::uniform_measure(24);
+        let opts = GwOptions::default();
+        let rust = RustAligner(opts.clone()).align(&cx, &cy, &a, &a);
+        let policy = PolicyAligner::new(opts, AlignerPolicy::default());
+        // Entropic policy must be indistinguishable from the historical
+        // RustAligner path at any level.
+        for level in 0..3 {
+            let got = policy.align_at(level, 99, &cx, &cy, &a, &a);
+            assert_eq!(got.loss.to_bits(), rust.loss.to_bits());
+            for (p, q) in got.plan.as_slice().iter().zip(rust.plan.as_slice()) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+            assert_eq!(policy.kind_at(level), "entropic");
+        }
+    }
+
+    #[test]
+    fn sliced_policy_is_seed_deterministic_and_level_selected() {
+        let x = gaussian_cloud(20, 23);
+        let y = gaussian_cloud(22, 24);
+        let (cx, cy) = (x.distance_matrix(), y.distance_matrix());
+        let a = crate::core::uniform_measure(20);
+        let b = crate::core::uniform_measure(22);
+        let policy =
+            PolicyAligner::new(GwOptions::default(), AlignerPolicy::parse("exact,sliced").unwrap());
+        assert_eq!(policy.kind_at(0), "exact");
+        assert_eq!(policy.kind_at(2), "sliced");
+        let r1 = policy.align_at(1, 4242, &cx, &cy, &a, &b);
+        let r2 = policy.align_at(1, 4242, &cx, &cy, &a, &b);
+        for (p, q) in r1.plan.as_slice().iter().zip(r2.plan.as_slice()) {
+            assert_eq!(p.to_bits(), q.to_bits(), "sliced must be a pure function of the seed");
+        }
+        assert!(crate::ot::check_coupling(&r1.plan, &a, &b, 1e-7), "sliced plan not a coupling");
     }
 }

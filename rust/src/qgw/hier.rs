@@ -33,10 +33,11 @@
 //!   feature local plans `(1-beta) mu0 + beta mu1` exactly as flat
 //!   [`crate::qgw::qfgw_match_quantized`] does.
 //! * *Graphs* — blocks extracted via [`crate::partition::block_graph`]
-//!   (node-induced subgraph, stranded components bridged through the
-//!   representative) and re-partitioned with nested Fluid communities +
-//!   max-PageRank representatives, Dijkstra distances restricted to the
-//!   block.
+//!   (node-induced subgraph completed with through-representative edges
+//!   `rep -> v` at the parent-graph anchor distance, so every block
+//!   distance is capped by `anchor(u) + anchor(v)`) and re-partitioned
+//!   with nested Fluid communities + max-PageRank representatives,
+//!   Dijkstra distances restricted to the block.
 //!
 //! **Adaptive recursion** ([`QgwConfig::tolerance`], the paper's
 //! "recursion as needed"): with a positive tolerance the level budget
@@ -57,14 +58,27 @@
 //! ([`QgwConfig::prune_ahead`], default on): before a pair pays block
 //! extraction + re-partitioning just to read its term, a sound upper
 //! bound on that term is derived from the parent blocks' diameters alone
-//! ([`Substrate::block_bounds`] — anchor-triangle vs bounding-box, plus
-//! the feature box when fused); pairs the bound already certifies skip
+//! ([`Substrate::block_bounds`] — anchor-triangle vs bounding-box for
+//! clouds, the through-rep anchor-triangle bound for graphs, plus the
+//! feature box when fused); pairs the bound already certifies skip
 //! the nested partition entirely (counted as
 //! [`HierStats::preskipped_pairs`]), and blocks all of whose partner
 //! pairs pre-skip never enter the block cache. Certification only skips
 //! work whose output would be discarded, so couplings are byte-identical
-//! with the flag on or off; graphs never pre-skip (extracted-subgraph
-//! distances admit no sound parent-level bound).
+//! with the flag on or off.
+//!
+//! **Aligner policy** ([`crate::qgw::AlignerPolicy`]): every recursion
+//! node invokes the aligner through the level-aware
+//! [`GlobalAligner::align_at`]/[`GlobalAligner::align_fused_at`] hooks,
+//! passing the node's recursion level (0 = top) and a seed derived from
+//! the *query-side* chain (lane `0xA119` of the node's seed — identical
+//! in cold and indexed serving, because the query side is always lazily
+//! partitioned). Deterministic stochastic aligners — the sliced-GW
+//! backend ([`crate::gw::sliced_gw`]) selected by
+//! `aligner_policy = sliced` — ride these seeds, so their couplings are
+//! byte-identical across thread counts and cold-vs-indexed just like the
+//! deterministic solvers. The realized per-level choice is surfaced as
+//! [`HierStats::aligner_per_level`].
 //!
 //! Contrast with the MREC baseline ([`crate::gw::mrec_match`]): MREC pays
 //! a full entropic-GW solve at every recursion node *and leaf*; here each
@@ -287,10 +301,13 @@ impl<'a> Substrate<'a> {
     /// eccentricity is at most this diameter and the nested
     /// `block_diameter_bound` at most twice it. The feature bound is the
     /// block's feature-space bounding-box diagonal (only scanned when the
-    /// fused blend is active). Graphs return `None`: `block_graph`
-    /// restricts shortest paths to the extracted subgraph, so nested
-    /// distances can exceed any parent-level scalar and no sound cheap
-    /// bound exists (open item — a through-rep path-completion bound).
+    /// fused blend is active). For graphs the anchor triangle bound is
+    /// sound because [`block_graph`] completes the induced subgraph with
+    /// through-representative edges `rep -> v` at the parent-graph anchor
+    /// distance: every extracted-subgraph distance satisfies
+    /// `d_sub(u, v) <= d_sub(u, rep) + d_sub(rep, v) <=
+    /// anchor(u) + anchor(v) <= 2 max_anchor`, and the same cap applies
+    /// recursively to the nested partitions' anchor distances.
     fn block_bounds(
         &self,
         q: &QuantizedSpace,
@@ -320,7 +337,13 @@ impl<'a> Substrate<'a> {
                     .sqrt();
                 (2.0 * max_anchor).min(bbox)
             }
-            SubstrateData::Graph { .. } => return None,
+            SubstrateData::Graph { .. } => {
+                let mut max_anchor = 0.0f64;
+                for &i in q.block(p) {
+                    max_anchor = max_anchor.max(q.anchor_dist(i as usize));
+                }
+                2.0 * max_anchor
+            }
         };
         let feat = match (with_features, self.features()) {
             (true, Some(f)) => {
@@ -585,6 +608,10 @@ pub struct HierStats {
     /// own nested block caches plus its deepest descendant's (0 for
     /// 2-level runs — level-1 pairs only solve leaves).
     pub max_pair_transient_bytes: usize,
+    /// Realized aligner backend per level (entry `l` is
+    /// [`GlobalAligner::kind_at`]`(l)` for the levels that actually ran):
+    /// `"exact"`, `"entropic"`, `"sliced"`, `"xla"`, or `"custom"`.
+    pub aligner_per_level: Vec<&'static str>,
 }
 
 impl HierStats {
@@ -803,7 +830,7 @@ pub fn hier_qgw_match_quantized(
     qx: &QuantizedSpace,
     qy: &QuantizedSpace,
     cfg: &QgwConfig,
-    aligner: &(dyn GlobalAligner + Sync),
+    aligner: &dyn GlobalAligner,
     seed: u64,
 ) -> HierQgwResult {
     hier_match_quantized(&Substrate::cloud(x), &Substrate::cloud(y), qx, qy, cfg, None, aligner, seed)
@@ -828,7 +855,7 @@ pub fn hier_match_quantized(
     qy: &QuantizedSpace,
     cfg: &QgwConfig,
     fused: Option<(f64, f64)>,
-    aligner: &(dyn GlobalAligner + Sync),
+    aligner: &dyn GlobalAligner,
     seed: u64,
 ) -> HierQgwResult {
     let sx = SideCtx { sub: x, q: qx, src: SideSrc::Lazy { node_seed: side_seed(seed, 0) } };
@@ -857,7 +884,7 @@ pub fn hier_match_indexed(
     reference: &RefNode,
     cfg: &QgwConfig,
     fused: Option<(f64, f64)>,
-    aligner: &(dyn GlobalAligner + Sync),
+    aligner: &dyn GlobalAligner,
     seed: u64,
 ) -> HierQgwResult {
     let sx = SideCtx { sub: x, q: qx, src: SideSrc::Lazy { node_seed: side_seed(seed, 0) } };
@@ -872,7 +899,7 @@ fn hier_match_sides(
     y: &SideCtx<'_>,
     cfg: &QgwConfig,
     fused: Option<(f64, f64)>,
-    aligner: &(dyn GlobalAligner + Sync),
+    aligner: &dyn GlobalAligner,
 ) -> HierQgwResult {
     assert_eq!(x.q.num_points(), x.sub.len());
     assert_eq!(y.q.num_points(), y.sub.len());
@@ -901,7 +928,7 @@ fn hier_match_sides(
     // Step 1: global alignment of the top-level representatives — exactly
     // as flat qGW/qFGW.
     let align_start = Instant::now();
-    let global_res = align_node(x.sub, y.sub, qx, qy, fused, aligner);
+    let global_res = align_node(0, align_seed(&x.src), x.sub, y.sub, qx, qy, fused, aligner);
     let global_secs = align_start.elapsed().as_secs_f64();
 
     // Step 2: solve every supported pair (leaf 1-D matching or a nested
@@ -929,6 +956,7 @@ fn hier_match_sides(
     stats.top_cache_bytes = node.cache_bytes;
     stats.max_pair_transient_bytes = node.max_pair_transient;
     stats.record_node(0, top_term);
+    stats.aligner_per_level = (0..stats.levels_used()).map(|l| aligner.kind_at(l)).collect();
 
     let locals: HashMap<(u32, u32), LocalPlan> =
         pairs.iter().copied().zip(node.plans).collect();
@@ -954,20 +982,29 @@ fn hier_match_sides(
 // Recursion internals
 // ---------------------------------------------------------------------------
 
-/// One node's global alignment: `align_fused` with the rep-restricted
-/// feature cost when the fused blend is active, plain `align` otherwise.
+/// One node's global alignment: `align_fused_at` with the rep-restricted
+/// feature cost when the fused blend is active, plain `align_at`
+/// otherwise. `level` is the node's recursion level (0 = top) and `seed`
+/// its query-side alignment seed ([`align_seed`]) — deterministic
+/// stochastic aligners (sliced-GW) consume both; the classical solvers
+/// ignore them.
+#[allow(clippy::too_many_arguments)]
 fn align_node(
+    level: usize,
+    seed: u64,
     sx: &Substrate<'_>,
     sy: &Substrate<'_>,
     qx: &QuantizedSpace,
     qy: &QuantizedSpace,
     fused: Option<(f64, f64)>,
-    aligner: &(dyn GlobalAligner + Sync),
+    aligner: &dyn GlobalAligner,
 ) -> GwResult {
     match (fused, sx.features(), sy.features()) {
         (Some((alpha, _)), Some(fx), Some(fy)) => {
             let feat_cost = rep_feature_cost(qx, qy, fx, fy);
-            aligner.align_fused(
+            aligner.align_fused_at(
+                level,
+                seed,
                 qx.rep_dists(),
                 qy.rep_dists(),
                 &feat_cost,
@@ -976,7 +1013,27 @@ fn align_node(
                 alpha,
             )
         }
-        _ => aligner.align(qx.rep_dists(), qy.rep_dists(), qx.rep_measure(), qy.rep_measure()),
+        _ => aligner.align_at(
+            level,
+            seed,
+            qx.rep_dists(),
+            qy.rep_dists(),
+            qx.rep_measure(),
+            qy.rep_measure(),
+        ),
+    }
+}
+
+/// Alignment seed of a recursion node, derived from the *query-side*
+/// source: the X side is lazily partitioned in both cold and indexed
+/// serving, so lane `0xA119` of its node seed is identical in both —
+/// which is what keeps seed-consuming aligners inside the byte-identity
+/// contract. (The reference arm is unreachable from the public entry
+/// points; it pins a fixed lane so the function stays total.)
+fn align_seed(src: &SideSrc<'_>) -> u64 {
+    match src {
+        SideSrc::Lazy { node_seed } => split_seed(*node_seed, 0xA119),
+        SideSrc::Index(_) => split_seed(0, 0xA119),
     }
 }
 
@@ -1230,7 +1287,7 @@ fn solve_pairs(
     budget: f64,
     cfg: &QgwConfig,
     fused: Option<(f64, f64)>,
-    aligner: &(dyn GlobalAligner + Sync),
+    aligner: &dyn GlobalAligner,
     parallel: bool,
 ) -> NodeOutcome {
     let (qx, qy) = (x.q, y.q);
@@ -1352,7 +1409,8 @@ fn solve_pairs(
         // Nested node: align the cached sub-partitions' representatives,
         // then solve the supported sub-pairs one level down.
         let (sqx, sqy) = (vx.q, vy.q);
-        let res = align_node(vx.sub, vy.sub, sqx, sqy, fused, aligner);
+        let res =
+            align_node(pair_level + 1, align_seed(&vx.src), vx.sub, vy.sub, sqx, sqy, fused, aligner);
         let global = SparseCoupling::from_dense(&res.plan, cfg.mass_threshold);
         let mut child_pairs: Vec<(u32, u32)> = Vec::new();
         let mut gmass: Vec<f64> = Vec::new();

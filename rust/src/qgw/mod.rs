@@ -20,7 +20,10 @@
 //!   O((N/L)^(2/levels)) rep matrices. With [`QgwConfig::tolerance`]
 //!   `> 0` the recursion is adaptive: `levels` caps the depth and a pair
 //!   re-quantizes only while its bound term exceeds the remaining
-//!   tolerance budget.
+//!   tolerance budget. Every recursion node's global alignment is
+//!   dispatched through the object-safe [`GlobalAligner`] trait; the
+//!   default is [`PolicyAligner`], which resolves an [`AlignerPolicy`]
+//!   (`exact | entropic | sliced`, selectable per level) at each node.
 
 mod ablation;
 mod algorithm;
@@ -29,16 +32,14 @@ mod fused;
 mod hier;
 
 pub use algorithm::{
-    local_linear_matching, qgw_match, qgw_match_quantized, rep_space_loss, GlobalAligner,
-    PartitionSize, QgwConfig, QgwResult, RustAligner,
+    local_linear_matching, qgw_match, qgw_match_quantized, rep_space_loss, AlignerKind,
+    AlignerPolicy, GlobalAligner, PartitionSize, PolicyAligner, QgwConfig, QgwResult, RustAligner,
 };
-pub(crate) use algorithm::assemble;
 pub use ablation::{local_gw_plan, local_product_plan, qgw_match_with_matcher, LocalMatcher};
 pub use coupling::{LocalPlan, QuantizationCoupling};
 pub use fused::{
     feature_quantized_eccentricity, qfgw_match, qfgw_match_quantized, FeatureSet, QfgwConfig,
 };
-pub(crate) use fused::{qfgw_align, qfgw_assemble};
 pub use hier::{
     balanced_m, build_ref_tree, hier_graph_match, hier_match_indexed, hier_match_quantized,
     hier_qfgw_match, hier_qgw_match, hier_qgw_match_quantized, HierQgwResult, HierStats, RefNode,

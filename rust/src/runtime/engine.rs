@@ -274,6 +274,10 @@ impl XlaAligner<'_> {
 }
 
 impl GlobalAligner for XlaAligner<'_> {
+    fn kind_at(&self, _level: usize) -> &'static str {
+        "xla"
+    }
+
     fn align(&self, cx: &DenseMatrix, cy: &DenseMatrix, a: &[f64], b: &[f64]) -> GwResult {
         match self.drive(cx, cy, a, b, None) {
             Ok(res) => res,

@@ -199,10 +199,10 @@ fn hier_matches_large_rooms_and_beats_flat_at_equal_budget() {
     );
 }
 
-// PR-2 acceptance: the pipeline no longer falls back to flat for fused or
-// graph inputs — with `levels >= 2` both substrates recurse (report.levels
-// >= 2), keep exact marginals to 1e-7, and stay byte-identical across
-// thread counts.
+// PR-2 acceptance (tightened in PR 7, which removed the flat-fallback path
+// outright): with `levels >= 2` both fused and graph inputs recurse
+// (report.levels >= 2), report one realized aligner per level, keep exact
+// marginals to 1e-7, and stay byte-identical across thread counts.
 #[test]
 fn pipeline_hierarchy_covers_fused_and_graph_substrates() {
     use qgw::testutil::assert_sparse_bitwise_equal as assert_bitwise;
@@ -232,7 +232,7 @@ fn pipeline_hierarchy_covers_fused_and_graph_substrates() {
             .check_marginals(shape.cloud.measure(), shape.cloud.measure());
         assert!(merr < 1e-7, "fused marginal err {merr}");
         assert!(report.levels >= 2, "fused input fell back: levels={}", report.levels);
-        assert_eq!(metrics.counter("hier_fallbacks"), 0);
+        assert_eq!(report.aligner_per_level.len(), report.levels);
         report.result.coupling.to_sparse()
     };
     assert_bitwise(&fused_run(1), &fused_run(4));
@@ -259,7 +259,7 @@ fn pipeline_hierarchy_covers_fused_and_graph_substrates() {
         let merr = report.result.coupling.check_marginals(&mu, &mu);
         assert!(merr < 1e-7, "graph marginal err {merr}");
         assert!(report.levels >= 2, "graph input fell back: levels={}", report.levels);
-        assert_eq!(metrics.counter("hier_fallbacks"), 0);
+        assert_eq!(report.aligner_per_level.len(), report.levels);
         report.result.coupling.to_sparse()
     };
     assert_bitwise(&graph_run(1), &graph_run(4));

@@ -22,7 +22,7 @@ use qgw::partition::{dense_voronoi_partition, voronoi_partition};
 use qgw::prng::{Pcg32, Rng};
 use qgw::qgw::{
     hier_graph_match, hier_qfgw_match, hier_qgw_match, hier_qgw_match_quantized, qgw_match,
-    qgw_match_quantized, QfgwConfig, QgwConfig, RustAligner,
+    qgw_match_quantized, AlignerPolicy, PolicyAligner, QfgwConfig, QgwConfig, RustAligner,
 };
 use qgw::testutil::{
     assert_sparse_bitwise_equal as assert_bitwise_equal, case_rng, coord_feature, forall,
@@ -695,8 +695,11 @@ fn prune_ahead_byte_identical_and_fires_on_generous_budget() {
     assert_eq!(ahead.stats.pruned_pairs, after.stats.pruned_pairs);
     assert_eq!(after.stats.preskipped_pairs, 0);
 
-    // Graph substrate: no sound parent-level bound exists, so the
-    // certificate must never fire — and the flag must be a no-op.
+    // Graph substrate: the through-representative completion edges of
+    // `block_graph` make the anchor-triangle bound sound
+    // (`d_sub(u,v) <= anchor(u) + anchor(v)`), so graphs certify ahead of
+    // extraction exactly like clouds — the certificate fires on a
+    // generous budget and skipping extraction stays invisible.
     let (g, mu) = ring_graph(240);
     let gbase = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) };
     let gfixed = {
@@ -715,8 +718,9 @@ fn prune_ahead_byte_identical_and_fires_on_generous_budget() {
     let ahead = graph_run(true);
     let after = graph_run(false);
     assert_bitwise_equal(&ahead.result.coupling.to_sparse(), &after.result.coupling.to_sparse());
-    assert_eq!(ahead.stats.preskipped_pairs, 0, "graphs must never pre-skip");
-    assert_eq!(after.stats.preskipped_pairs, 0);
+    assert_eq!(ahead.stats.pruned_pairs, after.stats.pruned_pairs);
+    assert!(ahead.stats.preskipped_pairs > 0, "graph certificate never fired");
+    assert_eq!(after.stats.preskipped_pairs, 0, "disabled prune-ahead still pre-skipped");
 }
 
 // ---------------------------------------------------------------------------
@@ -1018,6 +1022,97 @@ fn prop_indexed_match_byte_identical_adaptive_tolerance() {
             },
         );
     });
+}
+
+// The sliced aligner's determinism contract: its projections are seeded
+// from the node's seed chain (query-side, so cold and indexed derive the
+// same stream), never from thread identity or wall clock. The standing
+// byte-identity oracle therefore extends verbatim to a sliced policy —
+// cold vs indexed, across every build/match thread split.
+#[test]
+fn prop_indexed_match_byte_identical_sliced_policy() {
+    forall(3, |rng| {
+        let x = random_cloud(rng, 150 + rng.below(60), 3);
+        let y = random_cloud(rng, 150 + rng.below(60), 3);
+        let seed = rng.next_u64();
+        let cfg = QgwConfig {
+            levels: 2,
+            leaf_size: 8,
+            aligner_policy: AlignerPolicy::parse("sliced").unwrap(),
+            ..QgwConfig::with_count(5)
+        };
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = seed;
+        let cold = pipe.run(PipelineInput::Clouds { x: &x, y: &y });
+        assert!(
+            cold.aligner_per_level.iter().all(|k| *k == "sliced"),
+            "realized aligners {:?}",
+            cold.aligner_per_level
+        );
+        let cold_sparse = cold.result.coupling.to_sparse();
+        assert_indexed_equals_cold(
+            &cold_sparse,
+            &cfg,
+            |bcfg| RefIndex::build_cloud(&y, None, bcfg, seed),
+            |mcfg, index| {
+                let metrics = Metrics::new();
+                let mut pipe = MatchPipeline::new(mcfg.clone(), &metrics);
+                pipe.seed = seed;
+                pipe.run_indexed(QueryInput::Cloud { x: &x }, index)
+                    .unwrap()
+                    .result
+                    .coupling
+                    .to_sparse()
+            },
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Object-safety refactor pin: the hierarchy now takes `&dyn GlobalAligner`,
+// and its default [`PolicyAligner`] (entropic policy) must reproduce the
+// pre-refactor [`RustAligner`] generic path byte-for-byte — at per-op
+// concurrency caps 1/2/4/8, all of which must also agree with each other.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dyn_dispatch_policy_entropic_matches_rust_aligner_at_all_caps() {
+    let mut srng = Pcg32::seed_from(53);
+    let x = random_cloud(&mut srng, 300, 3);
+    let y = random_cloud(&mut srng, 280, 3);
+    let mut prng = Pcg32::seed_from(11);
+    let qx = voronoi_partition(&x, 15, &mut prng);
+    let qy = voronoi_partition(&y, 15, &mut prng);
+    let seed = 0x0B7E_C7_5AFEu64;
+    let base = QgwConfig { levels: 2, leaf_size: 12, ..QgwConfig::with_count(15) };
+    let mut reference: Option<SparseCoupling> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let cfg = QgwConfig { num_threads: threads, ..base.clone() };
+        let rust =
+            hier_qgw_match_quantized(&x, &y, &qx, &qy, &cfg, &RustAligner(cfg.gw.clone()), seed);
+        assert!(rust.stats.levels_used() >= 2, "fixture must recurse");
+        let policy = hier_qgw_match_quantized(
+            &x,
+            &y,
+            &qx,
+            &qy,
+            &cfg,
+            &PolicyAligner::from_config(&cfg),
+            seed,
+        );
+        assert!(
+            policy.stats.aligner_per_level.iter().all(|k| *k == "entropic"),
+            "realized aligners {:?}",
+            policy.stats.aligner_per_level
+        );
+        let rs = rust.result.coupling.to_sparse();
+        assert_bitwise_equal(&rs, &policy.result.coupling.to_sparse());
+        match &reference {
+            Some(r) => assert_bitwise_equal(r, &rs),
+            None => reference = Some(rs),
+        }
+    }
 }
 
 #[test]

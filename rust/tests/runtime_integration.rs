@@ -3,6 +3,7 @@
 //! three layers compose. Requires `make artifacts`; tests are skipped
 //! (pass vacuously with a notice) when artifacts are absent.
 
+use qgw::coordinator::{MatchPipeline, Metrics, PipelineInput};
 use qgw::core::{uniform_measure, DenseMatrix, MmSpace, PointCloud};
 use qgw::gw::{entropic_gw, gw_loss, product_coupling, GwOptions};
 use qgw::prng::{Gaussian, Pcg32};
@@ -147,4 +148,34 @@ fn full_qgw_pipeline_through_xla_aligner() {
         "xla {distortion} vs rust {rust_distortion}"
     );
     let _ = aligner.align(qx.rep_dists(), qy.rep_dists(), qx.rep_measure(), qy.rep_measure());
+}
+
+#[test]
+fn xla_aligner_override_rides_the_hierarchy() {
+    // Regression for the old flat-fallback path: a pipeline with an
+    // XlaAligner override used to silently drop to flat matching
+    // (`hier_fallbacks` metric). The trait is object-safe now, so the
+    // override must run the full recursion and every realized level must
+    // report the "xla" backend.
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg32::seed_from(8);
+    let shape = qgw::data::shapes::sample_shape(qgw::data::shapes::ShapeClass::Dog, 1200, &mut rng);
+    let copy = shape.perturbed_permuted_copy(0.01, &mut rng);
+    let cfg = QgwConfig { levels: 2, leaf_size: 16, ..QgwConfig::with_count(24) };
+    let aligner = XlaAligner::new(&engine, cfg.gw.clone());
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg, &metrics);
+    pipe.seed = 8;
+    pipe.aligner = Some(&aligner);
+    let report = pipe.run(PipelineInput::Clouds { x: &shape.cloud, y: &copy.cloud });
+    assert!(report.levels >= 2, "override degenerated to flat matching");
+    assert_eq!(report.aligner_per_level.len(), report.levels);
+    assert!(
+        report.aligner_per_level.iter().all(|&k| k == "xla"),
+        "realized aligners {:?}",
+        report.aligner_per_level
+    );
+    let err =
+        report.result.coupling.check_marginals(shape.cloud.measure(), copy.cloud.measure());
+    assert!(err < 1e-7, "marginal err {err}");
 }

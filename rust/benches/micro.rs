@@ -39,6 +39,10 @@
 //! `QGW_BENCH_JSON` / `QGW_BENCH5_JSON` / `QGW_BENCH6_JSON` /
 //! `QGW_BENCH7_JSON` override the output paths.
 
+// Benches are a separate crate target, so the library's lint attribute
+// does not reach them; same unsafe-hygiene contract as rust/src/lib.rs.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 #[path = "harness.rs"]
 mod harness;
 
@@ -78,19 +82,33 @@ static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
 static LIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
 
+// SAFETY: pure atomic bookkeeping around `System` — every allocation
+// contract (layout validity, pointer provenance) is forwarded to the
+// system allocator untouched.
+// qgw-lint: allow(unsafe-module) -- bench-local counting allocator, the one vetted unsafe outside the pool
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same contract as `System::alloc`; the layout is forwarded verbatim.
+    // qgw-lint: allow(unsafe-module) -- counting wrapper delegates 1:1 to System
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
         let live = LIVE_BYTES.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
         PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: forwarding the caller's layout contract verbatim.
+        // qgw-lint: allow(unsafe-module) -- counting wrapper delegates 1:1 to System
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: same contract as `System::dealloc`; ptr/layout came from this allocator.
+    // qgw-lint: allow(unsafe-module) -- counting wrapper delegates 1:1 to System
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         LIVE_BYTES.fetch_sub(layout.size(), Ordering::Relaxed);
-        System.dealloc(ptr, layout)
+        // SAFETY: forwarding the caller's ptr/layout contract verbatim.
+        // qgw-lint: allow(unsafe-module) -- counting wrapper delegates 1:1 to System
+        unsafe { System.dealloc(ptr, layout) }
     }
 
+    // SAFETY: same contract as `System::realloc`; ptr/layout/new_size forwarded.
+    // qgw-lint: allow(unsafe-module) -- counting wrapper delegates 1:1 to System
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
         if new_size >= layout.size() {
@@ -101,7 +119,9 @@ unsafe impl GlobalAlloc for CountingAlloc {
         } else {
             LIVE_BYTES.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
         }
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: forwarding the caller's realloc contract verbatim.
+        // qgw-lint: allow(unsafe-module) -- counting wrapper delegates 1:1 to System
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 }
 

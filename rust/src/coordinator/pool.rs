@@ -74,7 +74,15 @@ pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// buffer until the parallel op completes.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 
+// SAFETY: a `SendPtr` is just a pointer value; sending it to another
+// thread is sound because the writes made through it target disjoint
+// chunk regions of a buffer the owner does not touch until the parallel
+// op completes (the caller obligation documented above), and `T: Send`
+// keeps the pointee itself legal to access from the receiving thread.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: `&SendPtr` exposes only the raw pointer value (`Copy`, no
+// methods); every dereference is a separate `unsafe` act at the use site
+// carrying its own disjointness argument.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 impl<T> Clone for SendPtr<T> {
@@ -92,7 +100,9 @@ impl<T> Copy for SendPtr<T> {}
 /// because [`ComputePool::run`] does not return (and so the closure does
 /// not die) until every claimed chunk has finished.
 unsafe fn call_chunk<F: Fn(usize) + Sync>(data: *const (), chunk: usize) {
-    let f = &*(data as *const F);
+    // SAFETY: forwarding the function's own contract — the caller
+    // guarantees `data` points to a live `F` for the duration of the call.
+    let f = unsafe { &*(data as *const F) };
     f(chunk);
 }
 
@@ -107,6 +117,10 @@ struct TaskState {
     /// `pending` decrement, both of which happen before the submitter's
     /// `run` returns.
     data: *const (),
+    // SAFETY: the monomorphized [`call_chunk`] trampoline; only ever
+    // invoked as `(self.call)(self.data, c)` inside the claim window
+    // documented on `data`, which is exactly the liveness contract the
+    // trampoline requires.
     call: unsafe fn(*const (), usize),
     chunks: usize,
     /// Next unclaimed chunk index. Claims past `chunks` are harmless
@@ -128,6 +142,9 @@ struct TaskState {
 // ordered by the deque mutex (publish) and the `pending` release
 // sequence + `done` mutex (retire).
 unsafe impl Send for TaskState {}
+// SAFETY: shared access is interior-mutability-only — the atomics order
+// chunk claims/retires, `panic` and `done` are mutex-guarded, and `data`
+// is never written after construction.
 unsafe impl Sync for TaskState {}
 
 impl TaskState {

@@ -186,6 +186,7 @@ impl MatchService {
         listener.set_nonblocking(true)?;
         let svc = Arc::clone(self);
         super::count_thread_spawn();
+        // qgw-lint: allow(determinism-thread) -- serving-loop accept thread: never computes couplings, and the spawn is counted above
         std::thread::spawn(move || {
             let pool = ThreadPool::with_queue(workers, queue);
             while !shutdown.load(Ordering::Relaxed) {
@@ -591,6 +592,7 @@ mod tests {
         let handler = {
             let svc = Arc::clone(&svc);
             let shutdown = Arc::clone(&shutdown);
+            // qgw-lint: allow(determinism-thread) -- test-only connection handler thread, joined before assertions
             std::thread::spawn(move || svc.handle_conn(accepted, &shutdown))
         };
         // A served round-trip proves the handler is past its socket

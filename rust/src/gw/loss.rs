@@ -12,6 +12,7 @@ pub fn product_coupling(a: &[f64], b: &[f64]) -> DenseMatrix {
 
 /// [`product_coupling`] into a caller buffer (same arithmetic as
 /// [`DenseMatrix::outer`], no allocation once `out` has grown).
+// qgw-lint: hot
 pub(crate) fn product_coupling_into(a: &[f64], b: &[f64], out: &mut DenseMatrix) {
     out.reset_unwritten(a.len(), b.len());
     for (i, &ai) in a.iter().enumerate() {
@@ -21,6 +22,7 @@ pub(crate) fn product_coupling_into(a: &[f64], b: &[f64], out: &mut DenseMatrix)
         }
     }
 }
+// qgw-lint: cold
 
 /// Square-loss GW cost tensor applied to `t`:
 /// `L(Cx,Cy) (x) T = constC - 2 Cx T Cy^T` with
@@ -68,6 +70,7 @@ const PAR_MATMUL_MIN_FLOPS: usize = 64 * 64 * 64;
 /// kernel ([`DenseMatrix::matmul_into`] routes through the same one), so
 /// the result is bit-identical to [`DenseMatrix::matmul`] at every
 /// worker count.
+// qgw-lint: hot
 pub fn par_matmul_into(a: &DenseMatrix, b: &DenseMatrix, out: &mut DenseMatrix) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(k, b.rows(), "matmul shape mismatch");
@@ -88,10 +91,12 @@ pub fn par_matmul_into(a: &DenseMatrix, b: &DenseMatrix, out: &mut DenseMatrix) 
         // SAFETY: chunk `ci` exclusively owns output rows
         // `row0 .. row0 + rows` (chunk ranges are disjoint, each chunk
         // runs exactly once) and `out` is untouched until `run` returns.
+        // qgw-lint: allow(unsafe-module) -- disjoint-row writes through SendPtr, the pool's established pattern
         let slice = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(row0 * n), rows * n) };
         a.matmul_rows_into(b, row0, slice);
     });
 }
+// qgw-lint: cold
 
 /// The pre-pool `thread::scope` implementation of [`par_matmul_into`]:
 /// spawns a worker set per call. Kept as the reference the pooled path

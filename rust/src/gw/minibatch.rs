@@ -8,7 +8,7 @@
 //! distortion evaluation uses it through the same argmax protocol as every
 //! other method.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::core::{MmSpace, SparseCoupling};
 use crate::gw::solvers::{entropic_gw, GwOptions};
@@ -39,7 +39,10 @@ pub fn minibatch_gw<R: Rng>(
     let nx = x.len();
     let ny = y.len();
     let bs = opts.batch_size.min(nx).min(ny);
-    let mut acc: HashMap<(u32, u32), f64> = HashMap::new();
+    // BTreeMap so the accumulated entries drain in (i, j) order — with a
+    // HashMap the within-row column order of the returned coupling would
+    // vary across processes.
+    let mut acc: BTreeMap<(u32, u32), f64> = BTreeMap::new();
     let scale = 1.0 / opts.num_batches as f64;
     for _ in 0..opts.num_batches {
         let ix = choose_k(nx, bs, rng);

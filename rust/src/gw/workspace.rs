@@ -34,6 +34,9 @@ pub(crate) struct GwInvariants {
     cyt: DenseMatrix,
 }
 
+// qgw-lint: hot -- every buffer below is reused across outer iterations;
+// an allocating pattern here re-introduces the per-iteration allocations
+// the workspace exists to remove (BENCH_4 measures this contract).
 impl GwInvariants {
     /// Recompute the invariants for a new `(Cx, Cy, a, b)` problem. Same
     /// arithmetic as the head of [`crate::gw::gw_cost_tensor`].
@@ -91,6 +94,7 @@ impl GwInvariants {
         self.finish_tensor(out);
     }
 }
+// qgw-lint: cold
 
 /// Mean absolute entry — the `cost_scale` statistic of a tensor.
 pub(crate) fn mean_abs(m: &DenseMatrix) -> f64 {

@@ -34,7 +34,7 @@
 
 mod store;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
@@ -303,7 +303,10 @@ struct Entry {
 
 #[derive(Default)]
 struct RegistryInner {
-    entries: HashMap<String, Entry>,
+    /// BTreeMap so eviction scans and `names()` iterate in name order —
+    /// registry ops are rare (one per insert/lookup), so lookup perf is
+    /// irrelevant next to a reproducible iteration order.
+    entries: BTreeMap<String, Entry>,
     tick: u64,
     total_bytes: usize,
     evictions: u64,

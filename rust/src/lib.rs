@@ -59,6 +59,11 @@
 //! cap and a block pair is only re-quantized while its Theorem-6 bound
 //! term still exceeds the remaining tolerance budget.
 
+// Part of the qgw-lint unsafe-hygiene contract (see EXPERIMENTS.md
+// §Static-analysis): every unsafe operation inside an `unsafe fn` must
+// sit in an explicit `unsafe {}` block with its own SAFETY argument.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

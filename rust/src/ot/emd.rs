@@ -68,6 +68,8 @@ pub fn emd(cost: &DenseMatrix, a: &[f64], b: &[f64]) -> EmdResult {
 /// [`emd`] over a caller workspace, writing the optimal plan into `plan`
 /// (resized as needed). Returns `(cost, pivot count)`. Bit-identical to
 /// [`emd`] for any (reused) workspace.
+// qgw-lint: hot -- CG-GW's inner LP: steady-state solves must stay
+// allocation-free (the emd[workspace] vs emd[alloc] BENCH_4 assertion).
 pub fn emd_into(
     cost: &DenseMatrix,
     a: &[f64],
@@ -212,6 +214,7 @@ fn simplex_into(
 
     // Tree adjacency + traversal scratch, sized in place (capacities
     // persist across workspace reuse; inner adjacency Vecs keep theirs).
+    // qgw-lint: allow(hot-alloc) -- grows once to the max node count seen; steady-state reuse is a no-op
     adj.resize_with(nodes, Vec::new);
     rebuild_adj(basic, adj, n);
 
@@ -395,6 +398,7 @@ fn simplex_into(
 
     iters
 }
+// qgw-lint: cold
 
 #[cfg(test)]
 mod tests {

@@ -75,6 +75,9 @@ pub fn sinkhorn(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOptions
 
 /// [`sinkhorn`] writing the plan into `plan` and reusing `ws` — the
 /// allocation-free form the GW outer loops drive.
+// qgw-lint: hot -- the GW outer loops call this outer_iters x eps_schedule
+// times per alignment; the workspace exists so no call after the first
+// allocates (BENCH_4 contract).
 pub fn sinkhorn_into(
     cost: &DenseMatrix,
     a: &[f64],
@@ -172,6 +175,7 @@ fn marginal_error(
     }
     err
 }
+// qgw-lint: cold
 
 const NEG_BIG: f64 = -1e30;
 
@@ -198,6 +202,8 @@ pub fn sinkhorn_log(cost: &DenseMatrix, a: &[f64], b: &[f64], opts: &SinkhornOpt
 /// one alignment's `outer_iters x eps_schedule` Sinkhorn solves allocate
 /// nothing after the first. Bit-identical to [`sinkhorn_log`] (buffers are
 /// reset on entry; no state is warm-started).
+// qgw-lint: hot -- same reuse contract as sinkhorn_into: C/eps copies,
+// potentials, and plan persist across the solver's many calls.
 pub fn sinkhorn_log_into(
     cost: &DenseMatrix,
     a: &[f64],
@@ -369,6 +375,7 @@ fn lse_half_step(c: &[f64], cols: usize, g: &[f64], log_marg: &[f64], out: &mut 
         *o = log_marg[i] - (zmax + s.ln());
     }
 }
+// qgw-lint: cold
 
 /// Round an approximately-feasible transport plan onto the coupling
 /// polytope (Altschuler, Weed, Rigollet 2017, Algorithm 2): scale rows

@@ -92,7 +92,7 @@ pub fn partition_from_communities(g: &Graph, measure: &[f64], com: &[u32]) -> Qu
     // first-seen node order. The remap is keyed by label value, so even
     // sparse labelings (hash-derived or sentinel label ids) stay
     // O(distinct labels), not O(max label value).
-    let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut remap: std::collections::BTreeMap<u32, u32> = std::collections::BTreeMap::new();
     let mut labels = vec![0u32; n];
     for (v, &c) in com.iter().enumerate() {
         let next = remap.len() as u32;
@@ -194,8 +194,8 @@ pub fn block_graph(g: &Graph, q: &QuantizedSpace, p: usize) -> (Graph, Vec<f64>)
     assert_eq!(q.num_points(), g.num_nodes());
     let ids = q.block(p);
     let nb = ids.len();
-    let mut index: std::collections::HashMap<u32, u32> =
-        std::collections::HashMap::with_capacity(nb);
+    // qgw-lint: allow(determinism-hash) -- keyed lookups only: built once, read by exact node id in the edge scan below, never iterated; O(1) lookups matter here (every edge of every block pays one)
+    let mut index = std::collections::HashMap::<u32, u32>::with_capacity(nb);
     for (k, &i) in ids.iter().enumerate() {
         index.insert(i, k as u32);
     }

@@ -145,6 +145,7 @@ mod tests {
         let (shape, copy) = shape_pair();
         let mut rng = Pcg32::seed_from(5);
         let cfg = QgwConfig::with_fraction(0.04);
+        // qgw-lint: allow(determinism-time) -- test-only timing readout, reported alongside the distortion score
         let start = std::time::Instant::now();
         let res = qgw_match_with_matcher(&shape.cloud, &copy.cloud, &cfg, matcher, &mut rng);
         let secs = start.elapsed().as_secs_f64();

@@ -13,7 +13,7 @@
 //! sparse `mu_m` support the total work is O(N log N) (paper Prop. 3 +
 //! support-sparsity observation).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
@@ -492,7 +492,7 @@ where
         },
         cfg.num_threads,
     );
-    let locals: HashMap<(u32, u32), LocalPlan> = pairs.into_iter().zip(plans).collect();
+    let locals: BTreeMap<(u32, u32), LocalPlan> = pairs.into_iter().zip(plans).collect();
     let num_local = locals.len();
 
     // Step 3: assemble.

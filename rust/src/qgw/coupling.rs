@@ -11,7 +11,7 @@
 //! * Proposition-1 marginal correctness by construction, which
 //!   [`QuantizationCoupling::check_marginals`] verifies in tests.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::core::{QuantizedSpace, SparseCoupling};
 
@@ -28,8 +28,10 @@ pub struct QuantizationCoupling {
     /// Global coupling over representatives (m_x x m_y), sparse.
     global: SparseCoupling,
     /// Local plans keyed by (block_p, block_q); present exactly for the
-    /// supported entries of `global`.
-    locals: HashMap<(u32, u32), LocalPlan>,
+    /// supported entries of `global`. BTreeMap, not HashMap: iteration
+    /// order reaches [`Self::local_pairs`] and downstream stats, so it
+    /// must be reproducible.
+    locals: BTreeMap<(u32, u32), LocalPlan>,
     /// Block structure snapshots (ids per block, block of each point,
     /// position of each point within its block's sorted list).
     blocks_x: Vec<Vec<u32>>,
@@ -43,7 +45,7 @@ impl QuantizationCoupling {
         qx: &QuantizedSpace,
         qy: &QuantizedSpace,
         global: SparseCoupling,
-        locals: HashMap<(u32, u32), LocalPlan>,
+        locals: BTreeMap<(u32, u32), LocalPlan>,
     ) -> Self {
         assert_eq!(global.rows(), qx.num_blocks());
         assert_eq!(global.cols(), qy.num_blocks());
@@ -93,8 +95,8 @@ impl QuantizationCoupling {
         self.locals.get(&(p as u32, q as u32))
     }
 
-    /// Iterate the supported `(p, q)` representative pairs (arbitrary
-    /// order).
+    /// Iterate the supported `(p, q)` representative pairs in sorted
+    /// (p, q) order.
     pub fn local_pairs(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
         self.locals.keys().map(|&(p, q)| (p as usize, q as usize))
     }
@@ -190,7 +192,7 @@ mod tests {
             2,
             vec![vec![(0, 0.5)], vec![(1, 0.5)]],
         );
-        let mut locals = HashMap::new();
+        let mut locals = BTreeMap::new();
         // Each block has 2 points with conditional measure 1/2.
         locals.insert((0u32, 0u32), vec![(0u32, 0u32, 0.5), (1, 1, 0.5)]);
         locals.insert((1u32, 1u32), vec![(0u32, 0u32, 0.5), (1, 1, 0.5)]);
@@ -250,7 +252,7 @@ mod tests {
             2,
             vec![vec![(0, 0.25), (1, 0.25)], vec![(0, 0.25), (1, 0.25)]],
         );
-        let mut locals = HashMap::new();
+        let mut locals = BTreeMap::new();
         for p in 0..2u32 {
             for q in 0..2u32 {
                 locals.insert((p, q), vec![(0u32, 0u32, 0.5), (1, 1, 0.5)]);

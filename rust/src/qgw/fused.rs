@@ -231,17 +231,17 @@ pub(crate) fn blend_plans(geo: LocalPlan, feat: LocalPlan, beta: f64) -> LocalPl
     if beta >= 1.0 {
         return feat;
     }
-    let mut merged: std::collections::HashMap<(u32, u32), f64> =
-        std::collections::HashMap::with_capacity(geo.len() + feat.len());
+    // BTreeMap drains in (i, j) order, which is exactly the sorted entry
+    // order the plan format wants — no post-sort needed.
+    let mut merged: std::collections::BTreeMap<(u32, u32), f64> =
+        std::collections::BTreeMap::new();
     for (i, j, w) in geo {
         *merged.entry((i, j)).or_insert(0.0) += (1.0 - beta) * w;
     }
     for (i, j, w) in feat {
         *merged.entry((i, j)).or_insert(0.0) += beta * w;
     }
-    let mut out: LocalPlan = merged.into_iter().map(|((i, j), w)| (i, j, w)).collect();
-    out.sort_unstable_by_key(|&(i, j, _)| (i, j));
-    out
+    merged.into_iter().map(|((i, j), w)| (i, j, w)).collect()
 }
 
 #[cfg(test)]

@@ -1,0 +1,906 @@
+//! `qgw-lint`: the repo's in-tree static-analysis pass.
+//!
+//! The crate's correctness story rests on contracts no compiler checks:
+//! couplings must be byte-identical across thread counts, pool sizes, and
+//! cold-vs-indexed paths; the solver core must stay allocation-free per
+//! outer iteration; and the `ComputePool`'s lifetime-erased `unsafe` is
+//! sound only under invariants that live in prose. This pass rejects the
+//! hazard *patterns* that erode those contracts at CI time, long before a
+//! property test would catch the erosion dynamically (and for iteration-
+//! order hazards, possibly never — `HashMap` order is stable within one
+//! run).
+//!
+//! Three rule families over every `.rs` file under `rust/src` and
+//! `rust/benches` (token-level scan; comments and string literals are
+//! excluded from matching, annotations are read *from* comments):
+//!
+//! * **D — determinism.**
+//!   `determinism-hash`: `HashMap`/`HashSet` in the result-affecting
+//!   modules (`qgw/`, `gw/`, `ot/`, `partition/`, `index/`) — iteration
+//!   order is seeded per process, so anything it reaches is not
+//!   reproducible; use `BTreeMap`/`BTreeSet` or annotate a keyed-lookup-
+//!   only site. `determinism-thread`: `thread::spawn` / `thread::scope`
+//!   anywhere outside `coordinator/pool.rs` or a `*_scoped` reference
+//!   function — ad-hoc threads bypass the pool's determinism discipline
+//!   and the engine-wide spawn accounting. `determinism-time`:
+//!   `Instant::now` / `SystemTime::now` / `RandomState` in the
+//!   result-affecting modules — wall-clock reads in solver paths invite
+//!   time-dependent control flow.
+//! * **U — unsafe hygiene.** `unsafe-safety-comment`: every `unsafe`
+//!   occurrence must carry an adjacent `// SAFETY:` comment (same line,
+//!   or in the contiguous comment/attribute block directly above; a
+//!   `/// # Safety` doc section counts). `unsafe-module`: `unsafe` is
+//!   confined to an allowlisted module set (today:
+//!   `coordinator/pool.rs`); anywhere else needs an inline allow with a
+//!   reason. `unsafe-op-deny`: `rust/src/lib.rs` must carry
+//!   `#![deny(unsafe_op_in_unsafe_fn)]`.
+//! * **A — hot-path allocation.** `hot-alloc`: inside regions bracketed
+//!   by `// qgw-lint: hot` … `// qgw-lint: cold`, the allocating
+//!   patterns `Vec::new` / `.to_vec(` / `.clone()` / `.collect(` are
+//!   rejected — these regions are the workspace-driven inner loops whose
+//!   allocation-free contract BENCH_4 measures.
+//!
+//! Suppression is inline and audited:
+//! `// qgw-lint: allow(<rule>) -- <reason>` with a **mandatory** reason;
+//! a malformed annotation is itself a finding (`annotation-syntax`). An
+//! allow on a code line binds to that line; an allow on a comment-only
+//! line binds to the next code line within 10 lines. Suppressed findings
+//! are counted per rule per module and committed as `LINT_BASELINE.json`
+//! so hazard-count drift shows up in review the way BENCH_*.json drift
+//! does.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Result-affecting module prefixes: anything whose output can reach a
+/// coupling, a bound, or a reported statistic.
+pub const RESULT_MODULES: &[&str] = &[
+    "rust/src/qgw/",
+    "rust/src/gw/",
+    "rust/src/ot/",
+    "rust/src/partition/",
+    "rust/src/index/",
+];
+
+/// The only modules allowed to contain `unsafe` without an inline allow.
+pub const UNSAFE_MODULE_ALLOWLIST: &[&str] = &["rust/src/coordinator/pool.rs"];
+
+/// The one file that may spawn threads freely (the pool itself).
+pub const THREAD_ALLOWLIST: &[&str] = &["rust/src/coordinator/pool.rs"];
+
+/// Allocating patterns rejected inside `// qgw-lint: hot` regions.
+const HOT_ALLOC_PATTERNS: &[&str] =
+    &["Vec::new", ".to_vec(", ".clone()", ".collect(", ".collect::<"];
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Rule {
+    DeterminismHash,
+    DeterminismThread,
+    DeterminismTime,
+    UnsafeSafetyComment,
+    UnsafeModule,
+    UnsafeOpDeny,
+    HotAlloc,
+    AnnotationSyntax,
+}
+
+impl Rule {
+    pub const ALL: &'static [Rule] = &[
+        Rule::DeterminismHash,
+        Rule::DeterminismThread,
+        Rule::DeterminismTime,
+        Rule::UnsafeSafetyComment,
+        Rule::UnsafeModule,
+        Rule::UnsafeOpDeny,
+        Rule::HotAlloc,
+        Rule::AnnotationSyntax,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::DeterminismHash => "determinism-hash",
+            Rule::DeterminismThread => "determinism-thread",
+            Rule::DeterminismTime => "determinism-time",
+            Rule::UnsafeSafetyComment => "unsafe-safety-comment",
+            Rule::UnsafeModule => "unsafe-module",
+            Rule::UnsafeOpDeny => "unsafe-op-deny",
+            Rule::HotAlloc => "hot-alloc",
+            Rule::AnnotationSyntax => "annotation-syntax",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.name() == name)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One lint finding. `line` is 1-based. `suppressed_reason` is `Some`
+/// when an inline allow covered the finding (the mandatory reason text).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub suppressed_reason: Option<String>,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: split each line into code and comment, blanking string contents
+// ---------------------------------------------------------------------------
+
+/// Cross-line lexer state. Strings and comments can span lines; raw
+/// strings remember their `#` count so `"###` terminators match exactly.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum LexState {
+    Code,
+    BlockComment(u32),
+    Str,
+    RawStr(u8),
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Split one source line into `(code, comment)`. String literal contents
+/// are blanked to spaces in the code part (delimiters kept), so token
+/// searches never match inside strings; comment text is preserved so the
+/// annotation parser and the SAFETY-adjacency check can read it. Non-UTF8
+/// concerns don't arise (input is `&str`); non-ASCII bytes are carried
+/// through byte-wise, which is fine because every pattern searched for is
+/// ASCII.
+fn split_line(state: &mut LexState, line: &str) -> (String, String) {
+    let b = line.as_bytes();
+    let n = b.len();
+    let mut code = String::with_capacity(n);
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < n {
+        match *state {
+            LexState::BlockComment(depth) => {
+                if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    *state = if depth <= 1 {
+                        LexState::Code
+                    } else {
+                        LexState::BlockComment(depth - 1)
+                    };
+                    comment.push_str("*/");
+                    i += 2;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    *state = LexState::BlockComment(depth + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else {
+                    comment.push(b[i] as char);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if b[i] == b'\\' {
+                    code.push(' ');
+                    if i + 1 < n {
+                        code.push(' ');
+                    }
+                    i += 2;
+                } else if b[i] == b'"' {
+                    code.push('"');
+                    *state = LexState::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::RawStr(hashes) => {
+                let h = hashes as usize;
+                if b[i] == b'"' && i + h < n && b[i + 1..i + 1 + h].iter().all(|&c| c == b'#') {
+                    code.push('"');
+                    *state = LexState::Code;
+                    i += 1 + h;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::Code => {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'/' {
+                    for &c in &b[i..] {
+                        comment.push(c as char);
+                    }
+                    i = n;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    *state = LexState::BlockComment(1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if b[i] == b'"' {
+                    code.push('"');
+                    *state = LexState::Str;
+                    i += 1;
+                } else if b[i] == b'r' && (i == 0 || !is_ident_byte(b[i - 1])) {
+                    // Possible raw string r"..." / r#"..."#.
+                    let mut j = i + 1;
+                    let mut hashes = 0u8;
+                    while j < n && b[j] == b'#' && hashes < 255 {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && b[j] == b'"' {
+                        code.push('r');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        code.push('"');
+                        *state = LexState::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push('r');
+                        i += 1;
+                    }
+                } else if b[i] == b'\'' {
+                    // Char literal vs lifetime.
+                    if i + 1 < n && b[i + 1] == b'\\' {
+                        let mut k = i + 2;
+                        while k < n && b[k] != b'\'' {
+                            k += 1;
+                        }
+                        code.push('\'');
+                        code.push('\'');
+                        i = if k < n { k + 1 } else { n };
+                    } else if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                        code.push('\'');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(b[i] as char);
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comment)
+}
+
+/// Token search with identifier-boundary checks on both ends. Patterns
+/// containing punctuation (`::`, `.`, `(`) are effectively anchored by
+/// it; bare identifiers like `HashMap` must not match inside
+/// `MyHashMapper`.
+fn has_token(code: &str, tok: &str) -> bool {
+    let c = code.as_bytes();
+    let t = tok.as_bytes();
+    if t.is_empty() || c.len() < t.len() {
+        return false;
+    }
+    for p in 0..=c.len() - t.len() {
+        if &c[p..p + t.len()] != t {
+            continue;
+        }
+        let before_ok = p == 0 || !is_ident_byte(c[p - 1]) || !is_ident_byte(t[0]);
+        let after = p + t.len();
+        let after_ok =
+            after == c.len() || !is_ident_byte(c[after]) || !is_ident_byte(t[t.len() - 1]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Annotations
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum Directive {
+    Allow { rule: Rule, reason: String },
+    Hot,
+    Cold,
+    Malformed(String),
+}
+
+const ANNOTATION_KEY: &str = "qgw-lint:";
+
+/// Parse every `qgw-lint:` directive out of one line's comment text.
+fn parse_directives(comment: &str) -> Vec<Directive> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(ANNOTATION_KEY) {
+        let body = rest[pos + ANNOTATION_KEY.len()..].trim_start();
+        out.push(parse_one_directive(body));
+        rest = &rest[pos + ANNOTATION_KEY.len()..];
+    }
+    out
+}
+
+fn parse_one_directive(body: &str) -> Directive {
+    if let Some(tail) = body.strip_prefix("allow(") {
+        let Some(close) = tail.find(')') else {
+            return Directive::Malformed("allow(...) is missing its closing parenthesis".into());
+        };
+        let rule_name = tail[..close].trim();
+        let Some(rule) = Rule::from_name(rule_name) else {
+            return Directive::Malformed(format!("allow names unknown rule `{rule_name}`"));
+        };
+        let after = tail[close + 1..].trim_start();
+        let Some(reason) = after.strip_prefix("--") else {
+            return Directive::Malformed(format!(
+                "allow({rule_name}) is missing its mandatory `-- <reason>`"
+            ));
+        };
+        let reason = reason.trim();
+        if reason.is_empty() {
+            return Directive::Malformed(format!("allow({rule_name}) has an empty reason"));
+        }
+        Directive::Allow { rule, reason: reason.to_string() }
+    } else if let Some(tail) = word_prefix(body, "hot") {
+        if tail.is_empty() || tail.starts_with("--") {
+            Directive::Hot
+        } else {
+            Directive::Malformed(format!("unexpected text after `hot`: `{tail}`"))
+        }
+    } else if let Some(tail) = word_prefix(body, "cold") {
+        if tail.is_empty() || tail.starts_with("--") {
+            Directive::Cold
+        } else {
+            Directive::Malformed(format!("unexpected text after `cold`: `{tail}`"))
+        }
+    } else {
+        let word: String = body.chars().take_while(|c| !c.is_whitespace()).collect();
+        Directive::Malformed(format!("unknown directive `{word}`"))
+    }
+}
+
+/// `body` minus a leading `word`, if `word` is present and ends at a word
+/// boundary; the remainder is returned trimmed.
+fn word_prefix<'a>(body: &'a str, word: &str) -> Option<&'a str> {
+    let tail = body.strip_prefix(word)?;
+    match tail.as_bytes().first() {
+        Some(&b) if is_ident_byte(b) => None,
+        _ => Some(tail.trim_start()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-file scan
+// ---------------------------------------------------------------------------
+
+struct Line {
+    code: String,
+    comment: String,
+}
+
+fn path_in(list: &[&str], rel: &str) -> bool {
+    list.iter().any(|p| rel == *p)
+}
+
+fn in_result_module(rel: &str) -> bool {
+    RESULT_MODULES.iter().any(|m| rel.starts_with(m))
+}
+
+/// `module` key for the per-rule count aggregation: the directory under
+/// `rust/src/` (or the file stem for top-level files), `benches` for
+/// bench sources.
+pub fn module_of(rel: &str) -> String {
+    if let Some(tail) = rel.strip_prefix("rust/src/") {
+        match tail.split_once('/') {
+            Some((dir, _)) => dir.to_string(),
+            None => tail.strip_suffix(".rs").unwrap_or(tail).to_string(),
+        }
+    } else if rel.starts_with("rust/benches/") {
+        "benches".to_string()
+    } else {
+        "other".to_string()
+    }
+}
+
+fn safety_marker(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+/// Lint one file's source. `rel` must be the repo-relative path with
+/// forward slashes (e.g. `rust/src/qgw/hier.rs`) — the module rules key
+/// off it.
+pub fn lint_source(rel: &str, source: &str) -> Vec<Finding> {
+    let mut state = LexState::Code;
+    let lines: Vec<Line> = source
+        .lines()
+        .map(|raw| {
+            let (code, comment) = split_line(&mut state, raw);
+            Line { code, comment }
+        })
+        .collect();
+    let n = lines.len();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut push = |findings: &mut Vec<Finding>, rule: Rule, line: usize, message: String| {
+        findings.push(Finding {
+            rule,
+            file: rel.to_string(),
+            line: line + 1,
+            message,
+            suppressed_reason: None,
+        });
+    };
+
+    // --- annotations: allows, hot regions, syntax errors ---------------
+    let mut allows: BTreeMap<(usize, Rule), String> = BTreeMap::new();
+    let mut hot = vec![false; n];
+    let mut open_hot: Option<usize> = None;
+    for (i, line) in lines.iter().enumerate() {
+        for d in parse_directives(&line.comment) {
+            match d {
+                Directive::Allow { rule, reason } => {
+                    let target = if !line.code.trim().is_empty() {
+                        Some(i)
+                    } else {
+                        (i + 1..n.min(i + 11)).find(|&k| !lines[k].code.trim().is_empty())
+                    };
+                    match target {
+                        Some(t) => {
+                            allows.insert((t, rule), reason);
+                        }
+                        None => push(
+                            &mut findings,
+                            Rule::AnnotationSyntax,
+                            i,
+                            "allow annotation binds to no code line within 10 lines".to_string(),
+                        ),
+                    }
+                }
+                Directive::Hot => match open_hot {
+                    Some(_) => push(
+                        &mut findings,
+                        Rule::AnnotationSyntax,
+                        i,
+                        "nested `hot` region (previous region still open)".to_string(),
+                    ),
+                    None => open_hot = Some(i),
+                },
+                Directive::Cold => match open_hot.take() {
+                    Some(start) => {
+                        for h in hot.iter_mut().take(i + 1).skip(start) {
+                            *h = true;
+                        }
+                    }
+                    None => push(
+                        &mut findings,
+                        Rule::AnnotationSyntax,
+                        i,
+                        "`cold` marker without an open `hot` region".to_string(),
+                    ),
+                },
+                Directive::Malformed(msg) => {
+                    push(&mut findings, Rule::AnnotationSyntax, i, msg);
+                }
+            }
+        }
+    }
+    if let Some(start) = open_hot {
+        push(
+            &mut findings,
+            Rule::AnnotationSyntax,
+            start,
+            "unterminated `hot` region (missing `qgw-lint: cold`)".to_string(),
+        );
+    }
+
+    // --- enclosing-fn names (for the `*_scoped` thread exemption) -------
+    let mut cur_fn: Option<String> = None;
+    let mut fn_at: Vec<Option<String>> = Vec::with_capacity(n);
+    for line in &lines {
+        if let Some(name) = fn_name_on_line(&line.code) {
+            cur_fn = Some(name);
+        }
+        fn_at.push(cur_fn.clone());
+    }
+
+    // --- crate-level attribute check (U3) -------------------------------
+    if rel == "rust/src/lib.rs" {
+        let has_deny = lines
+            .iter()
+            .any(|l| has_token(&l.code, "unsafe_op_in_unsafe_fn") && l.code.contains("deny"));
+        if !has_deny {
+            push(
+                &mut findings,
+                Rule::UnsafeOpDeny,
+                0,
+                "crate root must carry #![deny(unsafe_op_in_unsafe_fn)]".to_string(),
+            );
+        }
+    }
+
+    // --- token rules -----------------------------------------------------
+    let result_mod = in_result_module(rel);
+    let thread_exempt_file = path_in(THREAD_ALLOWLIST, rel);
+    let unsafe_exempt_file = path_in(UNSAFE_MODULE_ALLOWLIST, rel);
+    for (i, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+        if result_mod {
+            for tok in ["HashMap", "HashSet"] {
+                if has_token(code, tok) {
+                    push(
+                        &mut findings,
+                        Rule::DeterminismHash,
+                        i,
+                        format!(
+                            "`{tok}` in a result-affecting module: iteration order is \
+                             per-process; use BTree{} or annotate a keyed-lookup-only site",
+                            &tok[4..]
+                        ),
+                    );
+                    break;
+                }
+            }
+            for pat in ["Instant::now", "SystemTime::now", "RandomState"] {
+                let hit = if pat == "RandomState" {
+                    has_token(code, pat)
+                } else {
+                    code.contains(pat)
+                };
+                if hit {
+                    push(
+                        &mut findings,
+                        Rule::DeterminismTime,
+                        i,
+                        format!("`{pat}` in a result-affecting module (solver paths must not \
+                             read wall clocks or seed from process entropy)"),
+                    );
+                    break;
+                }
+            }
+        }
+        if !thread_exempt_file
+            && (code.contains("thread::spawn") || code.contains("thread::scope"))
+        {
+            let in_scoped_ref = fn_at[i]
+                .as_deref()
+                .is_some_and(|name| name.ends_with("_scoped"));
+            if !in_scoped_ref {
+                push(
+                    &mut findings,
+                    Rule::DeterminismThread,
+                    i,
+                    "thread spawn outside coordinator/pool.rs and the `*_scoped` reference \
+                     paths bypasses the pool's determinism and spawn accounting"
+                        .to_string(),
+                );
+            }
+        }
+        if has_token(code, "unsafe") {
+            if !safety_adjacent(&lines, i) {
+                push(
+                    &mut findings,
+                    Rule::UnsafeSafetyComment,
+                    i,
+                    "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+                );
+            }
+            if !unsafe_exempt_file {
+                push(
+                    &mut findings,
+                    Rule::UnsafeModule,
+                    i,
+                    "`unsafe` outside the allowlisted module set (coordinator/pool.rs)"
+                        .to_string(),
+                );
+            }
+        }
+        if hot[i] {
+            for pat in HOT_ALLOC_PATTERNS {
+                let hit = if *pat == "Vec::new" {
+                    has_token(code, pat)
+                } else {
+                    code.contains(pat)
+                };
+                if hit {
+                    push(
+                        &mut findings,
+                        Rule::HotAlloc,
+                        i,
+                        format!("`{pat}` inside a `qgw-lint: hot` region (allocation-free \
+                             inner-loop contract, EXPERIMENTS.md §Perf)"),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    // --- apply suppressions ----------------------------------------------
+    for f in &mut findings {
+        if f.rule == Rule::AnnotationSyntax {
+            continue;
+        }
+        if let Some(reason) = allows.get(&(f.line - 1, f.rule)) {
+            f.suppressed_reason = Some(reason.clone());
+        }
+    }
+    findings
+}
+
+/// Name of the function declared on this line, if any (`fn foo(` and
+/// friends). Used only for the `*_scoped` thread-spawn exemption, so a
+/// heuristic that tracks the most recent declaration is enough.
+fn fn_name_on_line(code: &str) -> Option<String> {
+    let b = code.as_bytes();
+    let t = b"fn";
+    if b.len() < 3 {
+        return None;
+    }
+    for p in 0..b.len() - 2 {
+        if &b[p..p + 2] != t {
+            continue;
+        }
+        if p > 0 && is_ident_byte(b[p - 1]) {
+            continue;
+        }
+        if is_ident_byte(b[p + 2]) {
+            continue;
+        }
+        let mut k = p + 2;
+        while k < b.len() && (b[k] == b' ' || b[k] == b'\t') {
+            k += 1;
+        }
+        let start = k;
+        while k < b.len() && is_ident_byte(b[k]) {
+            k += 1;
+        }
+        if k > start {
+            return Some(code[start..k].to_string());
+        }
+    }
+    None
+}
+
+/// Is there a `SAFETY` marker adjacent to line `i`? Same-line trailing
+/// comments count; otherwise walk the contiguous run of comment-only,
+/// attribute-only, or other `unsafe impl` lines directly above (a doc
+/// block's `/// # Safety` section counts; a blank line or unrelated code
+/// breaks the run).
+fn safety_adjacent(lines: &[Line], i: usize) -> bool {
+    if safety_marker(&lines[i].comment) {
+        return true;
+    }
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        let code = lines[k].code.trim();
+        let comment = lines[k].comment.trim();
+        if safety_marker(comment) {
+            return true;
+        }
+        let passthrough = code.is_empty() && !comment.is_empty()
+            || code.starts_with("#[")
+            || code.starts_with("#![")
+            || code.starts_with("unsafe impl");
+        if !passthrough {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Tree walk + report
+// ---------------------------------------------------------------------------
+
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed_reason.is_none())
+    }
+
+    pub fn suppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed_reason.is_some())
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.unsuppressed().next().is_none()
+    }
+
+    /// Human report: every unsuppressed finding, then the summary line.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in self.unsuppressed() {
+            out.push_str(&format!("{}: {}:{}: {}\n", f.rule, f.file, f.line, f.message));
+        }
+        let bad = self.unsuppressed().count();
+        let ok = self.suppressed().count();
+        out.push_str(&format!(
+            "qgw-lint: {} files scanned, {} unsuppressed finding(s), {} suppressed\n",
+            self.files_scanned, bad, ok
+        ));
+        if bad == 0 {
+            out.push_str("qgw-lint: clean\n");
+        } else {
+            out.push_str(
+                "qgw-lint: FAILED (fix the findings or add `qgw-lint: allow(<rule>) -- <reason>`)\n",
+            );
+        }
+        out
+    }
+
+    /// Suppressed-finding counts per rule per module — the committed
+    /// baseline's payload.
+    pub fn suppressed_counts(&self) -> BTreeMap<&'static str, BTreeMap<String, usize>> {
+        let mut counts: BTreeMap<&'static str, BTreeMap<String, usize>> = BTreeMap::new();
+        for f in self.suppressed() {
+            *counts
+                .entry(f.rule.name())
+                .or_default()
+                .entry(module_of(&f.file))
+                .or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Full machine-readable report.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"qgw-lint-report-v1\",\n");
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!(
+            "  \"unsuppressed_total\": {},\n",
+            self.unsuppressed().count()
+        ));
+        s.push_str(&format!("  \"suppressed_total\": {},\n", self.suppressed().count()));
+        s.push_str("  \"findings\": [");
+        let mut first = true;
+        for f in &self.findings {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s.push_str("\n    {");
+            s.push_str(&format!("\"rule\": \"{}\", ", f.rule));
+            s.push_str(&format!("\"file\": \"{}\", ", json_escape(&f.file)));
+            s.push_str(&format!("\"line\": {}, ", f.line));
+            s.push_str(&format!("\"message\": \"{}\"", json_escape(&f.message)));
+            match &f.suppressed_reason {
+                Some(r) => s.push_str(&format!(", \"suppressed\": \"{}\"}}", json_escape(r))),
+                None => s.push_str(", \"suppressed\": null}"),
+            }
+        }
+        if !first {
+            s.push_str("\n  ");
+        }
+        s.push_str("],\n");
+        s.push_str("  \"suppressed_counts\": ");
+        push_counts_json(&mut s, &self.suppressed_counts(), 2);
+        s.push_str("\n}\n");
+        s
+    }
+
+    /// The committed `LINT_BASELINE.json` payload: suppressed hazard
+    /// counts per rule per module (unsuppressed must be zero on a clean
+    /// tree, and the total is included so a regression is visible even in
+    /// a raw diff).
+    pub fn baseline_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"qgw-lint-baseline-v1\",\n");
+        s.push_str(&format!(
+            "  \"unsuppressed_total\": {},\n",
+            self.unsuppressed().count()
+        ));
+        s.push_str(&format!(
+            "  \"suppressed_total\": {},\n",
+            self.suppressed().count()
+        ));
+        s.push_str("  \"suppressed\": ");
+        push_counts_json(&mut s, &self.suppressed_counts(), 2);
+        s.push_str("\n}\n");
+        s
+    }
+}
+
+fn push_counts_json(
+    s: &mut String,
+    counts: &BTreeMap<&'static str, BTreeMap<String, usize>>,
+    indent: usize,
+) {
+    let pad = " ".repeat(indent);
+    let pad2 = " ".repeat(indent + 2);
+    let pad3 = " ".repeat(indent + 4);
+    if counts.is_empty() {
+        s.push_str("{}");
+        return;
+    }
+    s.push_str("{\n");
+    let mut first_rule = true;
+    for (rule, mods) in counts {
+        if !first_rule {
+            s.push_str(",\n");
+        }
+        first_rule = false;
+        s.push_str(&format!("{pad2}\"{rule}\": {{\n"));
+        let mut first_mod = true;
+        for (m, c) in mods {
+            if !first_mod {
+                s.push_str(",\n");
+            }
+            first_mod = false;
+            s.push_str(&format!("{pad3}\"{}\": {c}", json_escape(m)));
+        }
+        s.push('\n');
+        s.push_str(&format!("{pad2}}}"));
+    }
+    s.push('\n');
+    s.push_str(&format!("{pad}}}"));
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint the whole tree: every `.rs` under `rust/src` and `rust/benches`,
+/// in sorted path order (deterministic reports).
+pub fn lint_tree(root: &Path) -> Result<Report, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for base in ["rust/src", "rust/benches"] {
+        let dir = root.join(base);
+        if !dir.is_dir() {
+            return Err(format!("{} not found under {}", base, root.display()));
+        }
+        collect_rs(&dir, &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .map_err(|_| format!("{} escapes root", f.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            fs::read_to_string(f).map_err(|e| format!("reading {}: {e}", f.display()))?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(Report { files_scanned: files.len(), findings })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

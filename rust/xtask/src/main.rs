@@ -1,0 +1,79 @@
+//! CLI for the in-tree developer tooling. One subcommand today:
+//!
+//! ```text
+//! cargo run -p qgw-xtask -- lint [--root PATH] [--json PATH] [--baseline PATH]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 unsuppressed findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use qgw_xtask::lint_tree;
+
+const USAGE: &str = "usage: qgw-xtask lint [--root PATH] [--json PATH] [--baseline PATH]
+
+  --root PATH      repo root to scan (default: the workspace root containing
+                   this crate, i.e. CARGO_MANIFEST_DIR/../..)
+  --json PATH      also write the full machine-readable report to PATH
+  --baseline PATH  also write the LINT_BASELINE.json payload to PATH
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(clean) => {
+            if clean {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(msg) => {
+            eprintln!("qgw-xtask: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<bool, String> {
+    let Some((cmd, rest)) = args.split_first() else {
+        return Err(format!("missing subcommand\n{USAGE}"));
+    };
+    if cmd != "lint" {
+        return Err(format!("unknown subcommand `{cmd}`\n{USAGE}"));
+    }
+
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let mut json_out: Option<PathBuf> = None;
+    let mut baseline_out: Option<PathBuf> = None;
+    let mut it = rest.iter();
+    while let Some(flag) = it.next() {
+        let mut take = |name: &str| -> Result<PathBuf, String> {
+            it.next()
+                .map(PathBuf::from)
+                .ok_or_else(|| format!("{name} needs a value\n{USAGE}"))
+        };
+        match flag.as_str() {
+            "--root" => root = take("--root")?,
+            "--json" => json_out = Some(take("--json")?),
+            "--baseline" => baseline_out = Some(take("--baseline")?),
+            other => return Err(format!("unknown flag `{other}`\n{USAGE}")),
+        }
+    }
+
+    let root = root
+        .canonicalize()
+        .map_err(|e| format!("resolving root {}: {e}", root.display()))?;
+    let report = lint_tree(&root)?;
+    print!("{}", report.render_human());
+    if let Some(path) = json_out {
+        std::fs::write(&path, report.to_json())
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+    }
+    if let Some(path) = baseline_out {
+        std::fs::write(&path, report.baseline_json())
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+    }
+    Ok(report.is_clean())
+}

@@ -1,0 +1,286 @@
+//! Per-rule fixture tests for `qgw-lint`: for every rule, a positive
+//! snippet that must fire and a suppressed/clean variant that must not.
+//! Fixtures are linted through `lint_source` with synthetic repo-relative
+//! paths, so module-sensitive rules (determinism, unsafe confinement) are
+//! exercised both inside and outside their scopes.
+
+use qgw_xtask::{lint_source, module_of, Rule};
+
+/// Unsuppressed findings for `rule` in `src` at path `rel`.
+fn fired(rel: &str, src: &str, rule: Rule) -> Vec<usize> {
+    lint_source(rel, src)
+        .into_iter()
+        .filter(|f| f.rule == rule && f.suppressed_reason.is_none())
+        .map(|f| f.line)
+        .collect()
+}
+
+/// Suppressed findings for `rule` in `src` at path `rel`.
+fn suppressed(rel: &str, src: &str, rule: Rule) -> Vec<usize> {
+    lint_source(rel, src)
+        .into_iter()
+        .filter(|f| f.rule == rule && f.suppressed_reason.is_some())
+        .map(|f| f.line)
+        .collect()
+}
+
+const QGW: &str = "rust/src/qgw/fixture.rs";
+const POOL: &str = "rust/src/coordinator/pool.rs";
+const COORD: &str = "rust/src/coordinator/service.rs";
+
+// --- determinism-hash -------------------------------------------------------
+
+#[test]
+fn hash_map_fires_in_result_module() {
+    let src = "use std::collections::HashMap;\n";
+    assert_eq!(fired(QGW, src, Rule::DeterminismHash), vec![1]);
+}
+
+#[test]
+fn hash_map_ignored_outside_result_modules() {
+    let src = "use std::collections::HashMap;\n";
+    assert!(fired(COORD, src, Rule::DeterminismHash).is_empty());
+}
+
+#[test]
+fn hash_map_trailing_allow_suppresses_with_reason() {
+    let src = "let m: HashMap<u32, u32> = HashMap::new(); \
+               // qgw-lint: allow(determinism-hash) -- keyed lookups only\n";
+    assert!(fired(QGW, src, Rule::DeterminismHash).is_empty());
+    assert_eq!(suppressed(QGW, src, Rule::DeterminismHash), vec![1]);
+}
+
+#[test]
+fn hash_map_comment_line_allow_binds_to_next_code_line() {
+    let src = "// qgw-lint: allow(determinism-hash) -- keyed lookups only\n\
+               let m: HashMap<u32, u32> = HashMap::new();\n";
+    assert!(fired(QGW, src, Rule::DeterminismHash).is_empty());
+    assert_eq!(suppressed(QGW, src, Rule::DeterminismHash), vec![2]);
+}
+
+#[test]
+fn allow_does_not_leak_past_its_bound_line() {
+    let src = "// qgw-lint: allow(determinism-hash) -- first use only\n\
+               let a: HashMap<u32, u32> = HashMap::new();\n\
+               let b: HashSet<u32> = HashSet::new();\n";
+    assert_eq!(fired(QGW, src, Rule::DeterminismHash), vec![3]);
+}
+
+#[test]
+fn hash_map_in_string_or_comment_does_not_fire() {
+    let src = "let s = \"HashMap iteration order\"; // HashMap in prose\n\
+               /* HashSet too */\n";
+    assert!(fired(QGW, src, Rule::DeterminismHash).is_empty());
+}
+
+#[test]
+fn hash_map_inside_longer_identifier_does_not_fire() {
+    let src = "struct MyHashMapper;\nlet x = NotAHashSetEither;\n";
+    assert!(fired(QGW, src, Rule::DeterminismHash).is_empty());
+}
+
+// --- determinism-thread -----------------------------------------------------
+
+#[test]
+fn thread_spawn_fires_outside_pool() {
+    let src = "fn serve() {\n    std::thread::spawn(move || run());\n}\n";
+    assert_eq!(fired(COORD, src, Rule::DeterminismThread), vec![2]);
+}
+
+#[test]
+fn thread_scope_exempt_in_scoped_reference_fn() {
+    let src = "fn par_matmul_into_scoped() {\n    std::thread::scope(|s| {});\n}\n";
+    assert!(fired("rust/src/gw/loss.rs", src, Rule::DeterminismThread).is_empty());
+}
+
+#[test]
+fn thread_spawn_exempt_in_pool_module() {
+    let src = "fn worker() {\n    std::thread::spawn(move || run());\n}\n";
+    assert!(fired(POOL, src, Rule::DeterminismThread).is_empty());
+}
+
+// --- determinism-time -------------------------------------------------------
+
+#[test]
+fn instant_now_fires_in_result_module() {
+    let src = "let t0 = std::time::Instant::now();\n";
+    assert_eq!(fired(QGW, src, Rule::DeterminismTime), vec![1]);
+}
+
+#[test]
+fn instant_import_alone_does_not_fire() {
+    let src = "use std::time::Instant;\n";
+    assert!(fired(QGW, src, Rule::DeterminismTime).is_empty());
+}
+
+#[test]
+fn instant_now_allow_suppresses() {
+    let src = "let t0 = Instant::now(); \
+               // qgw-lint: allow(determinism-time) -- timing stat only\n";
+    assert!(fired(QGW, src, Rule::DeterminismTime).is_empty());
+    assert_eq!(suppressed(QGW, src, Rule::DeterminismTime), vec![1]);
+}
+
+// --- unsafe-safety-comment --------------------------------------------------
+
+#[test]
+fn unsafe_without_safety_comment_fires() {
+    let src = "fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+    assert_eq!(fired(POOL, src, Rule::UnsafeSafetyComment), vec![2]);
+}
+
+#[test]
+fn unsafe_with_safety_comment_above_passes() {
+    let src = "fn f(p: *const u32) -> u32 {\n\
+               // SAFETY: caller guarantees p is valid for the call.\n\
+               unsafe { *p }\n}\n";
+    assert!(fired(POOL, src, Rule::UnsafeSafetyComment).is_empty());
+}
+
+#[test]
+fn unsafe_with_trailing_safety_comment_passes() {
+    let src = "unsafe impl Send for P {} // SAFETY: raw pointer is never aliased.\n";
+    assert!(fired(POOL, src, Rule::UnsafeSafetyComment).is_empty());
+}
+
+#[test]
+fn doc_safety_section_counts_for_unsafe_fn() {
+    let src = "/// Dispatch.\n///\n/// # Safety\n/// `data` must point at a live F.\n\
+               unsafe fn call(data: *const ()) {}\n";
+    assert!(fired(POOL, src, Rule::UnsafeSafetyComment).is_empty());
+}
+
+#[test]
+fn blank_line_breaks_the_safety_run() {
+    let src = "// SAFETY: stale comment.\n\nunsafe fn call(data: *const ()) {}\n";
+    assert_eq!(fired(POOL, src, Rule::UnsafeSafetyComment), vec![3]);
+}
+
+// --- unsafe-module ----------------------------------------------------------
+
+#[test]
+fn unsafe_outside_allowlist_fires() {
+    let src = "// SAFETY: fine.\nunsafe { core() }\n";
+    assert_eq!(fired(QGW, src, Rule::UnsafeModule), vec![2]);
+}
+
+#[test]
+fn unsafe_in_pool_is_exempt() {
+    let src = "// SAFETY: fine.\nunsafe { core() }\n";
+    assert!(fired(POOL, src, Rule::UnsafeModule).is_empty());
+}
+
+#[test]
+fn unsafe_module_allow_suppresses() {
+    let src = "// SAFETY: fine. qgw-lint: allow(unsafe-module) -- vetted kernel\n\
+               unsafe { core() }\n";
+    assert!(fired(QGW, src, Rule::UnsafeModule).is_empty());
+    assert_eq!(suppressed(QGW, src, Rule::UnsafeModule), vec![2]);
+}
+
+#[test]
+fn unsafe_inside_identifier_does_not_fire() {
+    let src = "#![deny(unsafe_op_in_unsafe_fn)]\n";
+    assert!(fired(QGW, src, Rule::UnsafeModule).is_empty());
+    assert!(fired(QGW, src, Rule::UnsafeSafetyComment).is_empty());
+}
+
+// --- unsafe-op-deny ---------------------------------------------------------
+
+#[test]
+fn lib_rs_without_deny_attribute_fires() {
+    let src = "pub mod qgw;\n";
+    assert_eq!(fired("rust/src/lib.rs", src, Rule::UnsafeOpDeny), vec![1]);
+}
+
+#[test]
+fn lib_rs_with_deny_attribute_passes() {
+    let src = "#![deny(unsafe_op_in_unsafe_fn)]\npub mod qgw;\n";
+    assert!(fired("rust/src/lib.rs", src, Rule::UnsafeOpDeny).is_empty());
+}
+
+#[test]
+fn deny_check_only_applies_to_lib_rs() {
+    let src = "pub mod inner;\n";
+    assert!(fired(QGW, src, Rule::UnsafeOpDeny).is_empty());
+}
+
+// --- hot-alloc --------------------------------------------------------------
+
+#[test]
+fn alloc_patterns_fire_inside_hot_region() {
+    let src = "// qgw-lint: hot\n\
+               let v = Vec::new();\n\
+               let w = xs.to_vec();\n\
+               let c = ys.clone();\n\
+               let z: Vec<_> = it.collect();\n\
+               // qgw-lint: cold\n";
+    assert_eq!(fired(QGW, src, Rule::HotAlloc), vec![2, 3, 4, 5]);
+}
+
+#[test]
+fn alloc_patterns_ignored_outside_hot_region() {
+    let src = "let v = Vec::new();\nlet z: Vec<_> = it.collect();\n";
+    assert!(fired(QGW, src, Rule::HotAlloc).is_empty());
+}
+
+#[test]
+fn hot_alloc_allow_suppresses() {
+    let src = "// qgw-lint: hot\n\
+               let v = Vec::new(); // qgw-lint: allow(hot-alloc) -- grows once\n\
+               // qgw-lint: cold\n";
+    assert!(fired(QGW, src, Rule::HotAlloc).is_empty());
+    assert_eq!(suppressed(QGW, src, Rule::HotAlloc), vec![2]);
+}
+
+#[test]
+fn clear_and_extend_are_fine_in_hot_regions() {
+    let src = "// qgw-lint: hot\nbuf.clear();\nbuf.extend_from_slice(xs);\n// qgw-lint: cold\n";
+    assert!(fired(QGW, src, Rule::HotAlloc).is_empty());
+}
+
+// --- annotation-syntax ------------------------------------------------------
+
+#[test]
+fn allow_without_reason_is_a_syntax_finding() {
+    let src = "let m = HashMap::new(); // qgw-lint: allow(determinism-hash)\n";
+    assert_eq!(fired(QGW, src, Rule::AnnotationSyntax), vec![1]);
+    // And the underlying finding is NOT suppressed.
+    assert_eq!(fired(QGW, src, Rule::DeterminismHash), vec![1]);
+}
+
+#[test]
+fn allow_with_unknown_rule_is_a_syntax_finding() {
+    let src = "// qgw-lint: allow(no-such-rule) -- whatever\n";
+    assert_eq!(fired(QGW, src, Rule::AnnotationSyntax), vec![1]);
+}
+
+#[test]
+fn stray_cold_and_unterminated_hot_are_syntax_findings() {
+    let stray = "// qgw-lint: cold\n";
+    assert_eq!(fired(QGW, stray, Rule::AnnotationSyntax), vec![1]);
+    let open = "// qgw-lint: hot\nlet x = 1;\n";
+    assert_eq!(fired(QGW, open, Rule::AnnotationSyntax), vec![1]);
+}
+
+#[test]
+fn nested_hot_is_a_syntax_finding() {
+    let src = "// qgw-lint: hot\n// qgw-lint: hot\n// qgw-lint: cold\n";
+    assert_eq!(fired(QGW, src, Rule::AnnotationSyntax), vec![2]);
+}
+
+#[test]
+fn unknown_directive_is_a_syntax_finding() {
+    let src = "// qgw-lint: frobnicate\n";
+    assert_eq!(fired(QGW, src, Rule::AnnotationSyntax), vec![1]);
+}
+
+// --- module keying for the baseline ----------------------------------------
+
+#[test]
+fn module_keys_match_the_baseline_schema() {
+    assert_eq!(module_of("rust/src/qgw/hier.rs"), "qgw");
+    assert_eq!(module_of("rust/src/lib.rs"), "lib");
+    assert_eq!(module_of("rust/src/coordinator/pool.rs"), "coordinator");
+    assert_eq!(module_of("rust/benches/micro.rs"), "benches");
+}

@@ -1,0 +1,56 @@
+//! Tree-wide self-check: `cargo test -p qgw-xtask` fails if anyone
+//! introduces an unsuppressed hazard under `rust/src`/`rust/benches`, or
+//! lets the committed `LINT_BASELINE.json` drift from the tree's actual
+//! suppressed-hazard counts.
+
+use std::path::PathBuf;
+
+use qgw_xtask::lint_tree;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+#[test]
+fn tree_is_clean() {
+    let report = lint_tree(&repo_root()).expect("lint walk");
+    let bad: Vec<String> = report
+        .unsuppressed()
+        .map(|f| format!("{}: {}:{}: {}", f.rule, f.file, f.line, f.message))
+        .collect();
+    assert!(
+        bad.is_empty(),
+        "unsuppressed qgw-lint findings (fix them or add \
+         `qgw-lint: allow(<rule>) -- <reason>`):\n{}",
+        bad.join("\n")
+    );
+}
+
+#[test]
+fn every_suppression_carries_a_reason() {
+    let report = lint_tree(&repo_root()).expect("lint walk");
+    for f in report.suppressed() {
+        let reason = f.suppressed_reason.as_deref().unwrap_or("");
+        assert!(
+            !reason.trim().is_empty(),
+            "{}:{} suppresses {} with an empty reason",
+            f.file,
+            f.line,
+            f.rule
+        );
+    }
+}
+
+#[test]
+fn committed_baseline_matches_tree() {
+    let root = repo_root();
+    let report = lint_tree(&root).expect("lint walk");
+    let committed = std::fs::read_to_string(root.join("LINT_BASELINE.json"))
+        .expect("LINT_BASELINE.json is committed at the repo root");
+    assert_eq!(
+        committed,
+        report.baseline_json(),
+        "LINT_BASELINE.json is stale; regenerate with \
+         `cargo run -p qgw-xtask -- lint --baseline LINT_BASELINE.json`"
+    );
+}

@@ -37,7 +37,16 @@
 //! asserted in full mode only, where its margin is not noise-sized. The
 //! zero-spawn assertions are deterministic and hold in both modes.
 //! `QGW_BENCH_JSON` / `QGW_BENCH5_JSON` / `QGW_BENCH6_JSON` /
-//! `QGW_BENCH7_JSON` override the output paths.
+//! `QGW_BENCH7_JSON` / `QGW_BENCH8_JSON` override the output paths.
+//!
+//! PR 9 added the batched-serving profile: C MATCH requests over D < C
+//! distinct payloads through the [`qgw::coordinator::BatchEngine`] cold
+//! (every request alone, cache off), batched (one admission-queue batch
+//! sharing stage-1 work per distinct payload), and cache-warm (repeat
+//! payloads skip stage 1 entirely), with per-series p50/p99 latency and
+//! throughput, the deterministic in-binary contract (cached repeats run
+//! zero stage-1 partitions; batched runs fewer than cold; replies stay
+//! byte-identical across all three series), and `BENCH_8.json`.
 
 // Benches are a separate crate target, so the library's lint attribute
 // does not reach them; same unsafe-hygiene contract as rust/src/lib.rs.
@@ -48,12 +57,14 @@ mod harness;
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use harness::BenchStats;
 use qgw::coordinator::{
-    parallel_map, parallel_map_scoped, threads_spawned_total, MatchPipeline, Metrics,
-    PipelineInput, QueryInput,
+    parallel_map, parallel_map_scoped, threads_spawned_total, BatchEngine, BatchOptions,
+    LatencyHistogram, MatchPipeline, MatchRequest, Metrics, PipelineInput, QueryInput,
+    QueryPayload,
 };
 use qgw::core::{uniform_measure, DenseMatrix, MmSpace, SparseCoupling};
 use qgw::data::blobs::make_blobs;
@@ -62,7 +73,7 @@ use qgw::gw::{
     gw_loss_sparse_threads_scoped, par_matmul_into, par_matmul_into_scoped, product_coupling,
     sliced_gw, GwOptions, GwWorkspace,
 };
-use qgw::index::RefIndex;
+use qgw::index::{IndexRegistry, RefIndex};
 use qgw::ot::{
     emd, emd1d, emd1d_presorted, emd_into, sinkhorn_log, sinkhorn_log_into, EmdWorkspace,
     SinkhornOptions, SinkhornWorkspace,
@@ -659,7 +670,224 @@ fn main() {
         write_bench7(&ar, test_mode);
     }
 
+    println!("--- batched query engine: cold vs batched vs cached (BENCH_8) ---");
+    {
+        // The serving contract (EXPERIMENTS.md §Serving-batch): one
+        // admission-queue batch runs one stage-1 partition per distinct
+        // payload instead of one per request, and the query cache drops
+        // repeat stage-1 work to zero — while every reply stays
+        // byte-identical to the request served alone. The stage-1 and
+        // cache-hit assertions are deterministic and hold in both modes;
+        // latency and throughput columns are machine-dependent.
+        let n = if test_mode { 200 } else { 4000 };
+        let dim = 3;
+        let requests = if test_mode { 6 } else { 12 };
+        let distinct = if test_mode { 2 } else { 3 };
+        let leaf = 16;
+        let cfg = QgwConfig {
+            size: PartitionSize::Count(balanced_m(n, leaf, 2)),
+            levels: 2,
+            leaf_size: leaf,
+            ..QgwConfig::default()
+        };
+        let reference = make_blobs(n, dim, 1.0, 10.0, &mut rng);
+        let registry = Arc::new(IndexRegistry::new(1 << 30));
+        registry.insert("ref", RefIndex::build_cloud(&reference, None, &cfg, 7));
+
+        let payloads: Vec<QueryPayload> = (0..distinct)
+            .map(|_| QueryPayload::Cloud {
+                coords: (0..n * dim).map(|_| rng.next_f64() * 10.0).collect(),
+                dim,
+            })
+            .collect();
+        let req_at = |i: usize| MatchRequest {
+            index_name: "ref".to_string(),
+            payload: payloads[i % distinct].clone(),
+        };
+        let opts = |window_ms: u64, cache_bytes: usize| BatchOptions {
+            queue_depth: 64,
+            batch_window: Duration::from_millis(window_ms),
+            cache_bytes,
+        };
+
+        // Cold: every request waits out its own batch (cache off) — one
+        // stage-1 partition per request.
+        let engine = BatchEngine::new(Some(Arc::clone(&registry)), cfg.clone(), 7, opts(0, 0));
+        let mut cold_hist = LatencyHistogram::new();
+        let mut cold_replies: Vec<String> = Vec::new();
+        let cold_start = Instant::now();
+        for i in 0..requests {
+            let out = engine.try_submit(req_at(i)).expect("queue slot").wait().expect("cold");
+            cold_hist.record(out.latency);
+            cold_replies.push(out.summary);
+        }
+        let cold_wall = cold_start.elapsed();
+        let cold_stage1 = engine.stats().stage1_partitions;
+        drop(engine);
+        assert_eq!(
+            cold_stage1, requests as u64,
+            "cold serving must run one stage-1 partition per request"
+        );
+
+        // Batched: all requests land in the admission queue under one
+        // lock hold, so the scheduler drains them as one batch and runs
+        // stage 1 once per distinct payload.
+        let engine = BatchEngine::new(Some(Arc::clone(&registry)), cfg.clone(), 7, opts(5, 0));
+        let mut batched_hist = LatencyHistogram::new();
+        let mut batched_replies: Vec<String> = Vec::new();
+        let batched_start = Instant::now();
+        let tickets =
+            engine.try_submit_batch((0..requests).map(req_at).collect()).expect("queue slots");
+        for t in tickets {
+            let out = t.wait().expect("batched");
+            batched_hist.record(out.latency);
+            batched_replies.push(out.summary);
+        }
+        let batched_wall = batched_start.elapsed();
+        let batched_stage1 = engine.stats().stage1_partitions;
+        drop(engine);
+        assert!(
+            batched_stage1 < cold_stage1,
+            "batching failed to share stage-1 work: {batched_stage1} batched vs \
+             {cold_stage1} cold partition invocations"
+        );
+
+        // Cached: warm the query cache with one solo pass over the
+        // distinct payloads, then repeat — stage 1 must not run again.
+        let engine =
+            BatchEngine::new(Some(Arc::clone(&registry)), cfg.clone(), 7, opts(0, 64 << 20));
+        for i in 0..distinct {
+            engine.try_submit(req_at(i)).expect("queue slot").wait().expect("warm");
+        }
+        let warm_stage1 = engine.stats().stage1_partitions;
+        let mut cached_hist = LatencyHistogram::new();
+        let mut cached_replies: Vec<String> = Vec::new();
+        let cached_start = Instant::now();
+        for i in 0..requests {
+            let out = engine.try_submit(req_at(i)).expect("queue slot").wait().expect("cached");
+            cached_hist.record(out.latency);
+            cached_replies.push(out.summary);
+        }
+        let cached_wall = cached_start.elapsed();
+        let cached_stats = engine.stats();
+        drop(engine);
+        assert_eq!(
+            cached_stats.stage1_partitions, warm_stage1,
+            "cache-warm repeat queries must run zero stage-1 partitions"
+        );
+        assert!(
+            cached_stats.cache_hits >= requests as u64,
+            "repeat payloads missed the query cache: {} hits over {requests} requests",
+            cached_stats.cache_hits
+        );
+        assert_eq!(batched_replies, cold_replies, "batched replies diverged from solo cold");
+        assert_eq!(cached_replies, cold_replies, "cached replies diverged from solo cold");
+
+        let p = |h: &LatencyHistogram, q: f64| h.quantile_us(q).unwrap_or(0);
+        let rps = |wall: Duration| requests as f64 / wall.as_secs_f64().max(1e-9);
+        println!(
+            "serve n={n} requests={requests} distinct={distinct}: stage-1 partitions cold \
+             {cold_stage1} vs batched {batched_stage1} vs cached-repeat 0 \
+             (cache hits {})",
+            cached_stats.cache_hits
+        );
+        println!(
+            "latency p50/p99 us: cold {}/{} batched {}/{} cached {}/{}",
+            p(&cold_hist, 0.5),
+            p(&cold_hist, 0.99),
+            p(&batched_hist, 0.5),
+            p(&batched_hist, 0.99),
+            p(&cached_hist, 0.5),
+            p(&cached_hist, 0.99),
+        );
+        let series = [
+            ServeRecord {
+                op: "serve_cold",
+                stage1_partitions: cold_stage1,
+                cache_hits: 0,
+                p50_us: p(&cold_hist, 0.5),
+                p99_us: p(&cold_hist, 0.99),
+                throughput_rps: rps(cold_wall),
+            },
+            ServeRecord {
+                op: "serve_batched",
+                stage1_partitions: batched_stage1,
+                cache_hits: 0,
+                p50_us: p(&batched_hist, 0.5),
+                p99_us: p(&batched_hist, 0.99),
+                throughput_rps: rps(batched_wall),
+            },
+            ServeRecord {
+                op: "serve_cached_repeat",
+                stage1_partitions: cached_stats.stage1_partitions - warm_stage1,
+                cache_hits: cached_stats.cache_hits,
+                p50_us: p(&cached_hist, 0.5),
+                p99_us: p(&cached_hist, 0.99),
+                throughput_rps: rps(cached_wall),
+            },
+        ];
+        write_bench8(&series, n, requests, distinct, test_mode);
+    }
+
     write_json(&records, test_mode);
+}
+
+/// One BENCH_8.json record: one serving series (cold / batched /
+/// cache-warm repeat) over the same request stream.
+struct ServeRecord {
+    op: &'static str,
+    stage1_partitions: u64,
+    cache_hits: u64,
+    p50_us: u64,
+    p99_us: u64,
+    throughput_rps: f64,
+}
+
+/// BENCH_8.json — the batched-serving trajectory: C requests over D < C
+/// distinct payloads through the cold, batched, and cache-warm engine
+/// (schema documented in EXPERIMENTS.md §Serving-batch).
+fn write_bench8(
+    records: &[ServeRecord],
+    n: usize,
+    requests: usize,
+    distinct: usize,
+    test_mode: bool,
+) {
+    let path = std::env::var("QGW_BENCH8_JSON").unwrap_or_else(|_| {
+        if test_mode {
+            std::env::temp_dir().join("BENCH_8_smoke.json").to_string_lossy().into_owned()
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_8.json").to_string()
+        }
+    });
+    let mut out = String::from("[\n");
+    out.push_str(&format!(
+        "  {{\"op\": \"_meta\", \"note\": \"measured by cargo bench --bench micro ({} mode); \
+         stage1_partitions and cache_hits are deterministic (cached repeats must stay at 0 \
+         stage-1 runs, batched must stay below cold), latency/throughput are \
+         machine-dependent\"}}{}\n",
+        if test_mode { "test" } else { "full" },
+        if records.is_empty() { "" } else { "," }
+    ));
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"op\": \"{}\", \"n\": {n}, \"requests\": {requests}, \
+             \"distinct_payloads\": {distinct}, \"stage1_partitions\": {}, \"cache_hits\": {}, \
+             \"p50_us\": {}, \"p99_us\": {}, \"throughput_rps\": {:.1}}}{}\n",
+            r.op,
+            r.stage1_partitions,
+            r.cache_hits,
+            r.p50_us,
+            r.p99_us,
+            r.throughput_rps,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 /// One BENCH_7.json record: a per-node alignment backend at rep size `m`

@@ -33,7 +33,9 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
-use crate::coordinator::{MatchPipeline, MatchService, Metrics, PipelineInput, QueryInput};
+use crate::coordinator::{
+    MatchPipeline, MatchService, Metrics, PipelineInput, QueryInput, ServeOptions,
+};
 use crate::data::shapes::{sample_shape, ShapeClass};
 use crate::eval::distortion_score;
 use crate::index::{IndexRegistry, RefIndex};
@@ -258,9 +260,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let svc = std::sync::Arc::new(svc);
     let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let bound = svc.serve(&addr, std::sync::Arc::clone(&shutdown))?;
+    let opts = serve_options(args)?;
+    let bound = svc.serve_batched(&addr, std::sync::Arc::clone(&shutdown), opts)?;
     println!("serving match queries on {bound} ({})", svc.stats());
-    println!("protocol: QUERY <i> | MAP <i> | MATCH <name> <n> <dim> | INDEXES | STATS | QUIT");
+    println!(
+        "batch engine: queue_depth={} batch_window={}ms query_cache_bytes={} max_conns={}",
+        opts.queue_depth,
+        opts.batch_window.as_millis(),
+        opts.cache_bytes,
+        opts.max_conns
+    );
+    println!(
+        "protocol: QUERY <i> | MAP <i> | MATCH <name> <n> <dim> | \
+         MATCHG <name> <nodes> <edges> | INDEXES | STATS | QUIT"
+    );
     // Block forever (ctrl-c to exit).
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -272,6 +285,22 @@ fn index_settings(args: &Args) -> Result<crate::config::IndexSettings> {
     Ok(match args.flag("config") {
         Some(path) => Config::load(std::path::Path::new(path))?.index_settings(),
         None => Config::parse("")?.index_settings(),
+    })
+}
+
+/// Batch-engine options: `[serve]` config defaults, flags win.
+fn serve_options(args: &Args) -> Result<ServeOptions> {
+    let settings = match args.flag("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.serve_settings(),
+        None => Config::parse("")?.serve_settings(),
+    };
+    Ok(ServeOptions {
+        queue_depth: args.usize_or("queue-depth", settings.queue_depth)?.max(1),
+        batch_window: std::time::Duration::from_millis(
+            args.usize_or("batch-window", settings.batch_window_ms)? as u64,
+        ),
+        cache_bytes: args.usize_or("query-cache-bytes", settings.query_cache_bytes)?,
+        max_conns: args.usize_or("max-conns", settings.max_conns)?.max(1),
     })
 }
 
@@ -453,7 +482,8 @@ fn print_usage() {
            experiment  regenerate a paper table/figure (table1 table2 fig1 fig2 fig3 fig4 scaling)\n\
            serve       compute a matching and serve row queries over TCP\n\
                        (--index p1.qgwi,p2.qgwi preloads a reference-index registry;\n\
-                        clients then use `MATCH <name> <n> <dim>` + point upload)\n\
+                        clients then use `MATCH <name> <n> <dim>` + point upload or\n\
+                        `MATCHG <name> <nodes> <edges>` + `u v [w]` edge lines)\n\
            query       client for serve (QUERY/MAP rows by point id)\n\
            index       build: precompute + persist a reference index (--out PATH)\n\
                        match: match query shapes against a loaded index (--queries K)\n\
@@ -483,6 +513,18 @@ fn print_usage() {
                                   deterministic: seeded from the node's seed\n\
                                   chain, byte-identical across thread counts\n\
                                   and cold-vs-indexed serving.\n\
+         \n\
+         serving knobs (serve — also the `[serve]` config section; flags win;\n\
+         batched, cached, and solo matches are all byte-identical):\n\
+           --queue-depth N        admission-queue bound; over it clients get a\n\
+                                  clean `ERR busy` (default 64)\n\
+           --batch-window MS      how long the scheduler waits to group\n\
+                                  concurrent MATCHes into one batch (default 2)\n\
+           --query-cache-bytes B  LRU budget for prepared query-side stage-1\n\
+                                  work, keyed by payload hash + structural\n\
+                                  config (default 64 MiB; 0 disables)\n\
+           --max-conns N          concurrent-connection cap for the evented\n\
+                                  serving loop (default 256)\n\
          \n\
          thread knobs (match/serve/index — couplings are byte-identical at\n\
          every setting of both):\n\

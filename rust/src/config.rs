@@ -178,6 +178,29 @@ impl Config {
             memory_bytes: self.usize_or("index.memory_bytes", 256 * 1024 * 1024),
         }
     }
+
+    /// Batched-serving settings from the `[serve]` section (admission
+    /// queue bound, batching window, query-cache budget, connection
+    /// cap). Absent keys take the serving defaults.
+    pub fn serve_settings(&self) -> ServeSettings {
+        ServeSettings {
+            queue_depth: self.usize_or("serve.queue_depth", 64).max(1),
+            batch_window_ms: self.usize_or("serve.batch_window_ms", 2),
+            query_cache_bytes: self.usize_or("serve.query_cache_bytes", 64 * 1024 * 1024),
+            max_conns: self.usize_or("serve.max_conns", 256).max(1),
+        }
+    }
+}
+
+/// Parsed `[serve]` section: knobs for the batched query engine behind
+/// `qgw serve` (mirrored by the `--queue-depth`, `--batch-window`,
+/// `--query-cache-bytes`, and `--max-conns` flags, which win).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSettings {
+    pub queue_depth: usize,
+    pub batch_window_ms: usize,
+    pub query_cache_bytes: usize,
+    pub max_conns: usize,
 }
 
 /// Parsed `[index]` section: where the CLI reads/writes index files and
@@ -349,6 +372,28 @@ full = false
         let d = Config::parse("").unwrap().index_settings();
         assert_eq!(d.dir, std::path::PathBuf::from("indices"));
         assert_eq!(d.memory_bytes, 256 * 1024 * 1024);
+    }
+
+    #[test]
+    fn serve_section_parses_and_defaults() {
+        let c = Config::parse(
+            "[serve]\nqueue_depth = 8\nbatch_window_ms = 5\nquery_cache_bytes = 4096\nmax_conns = 32\n",
+        )
+        .unwrap();
+        let s = c.serve_settings();
+        assert_eq!(s.queue_depth, 8);
+        assert_eq!(s.batch_window_ms, 5);
+        assert_eq!(s.query_cache_bytes, 4096);
+        assert_eq!(s.max_conns, 32);
+        let d = Config::parse("").unwrap().serve_settings();
+        assert_eq!(d.queue_depth, 64);
+        assert_eq!(d.batch_window_ms, 2);
+        assert_eq!(d.query_cache_bytes, 64 * 1024 * 1024);
+        assert_eq!(d.max_conns, 256);
+        // Zero bounds clamp to 1 rather than wedging the engine.
+        let z = Config::parse("[serve]\nqueue_depth = 0\nmax_conns = 0\n").unwrap();
+        assert_eq!(z.serve_settings().queue_depth, 1);
+        assert_eq!(z.serve_settings().max_conns, 1);
     }
 
     #[test]

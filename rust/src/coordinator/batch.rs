@@ -1,0 +1,1176 @@
+//! Batched async query engine: admission queue, batch scheduler, and the
+//! query-side cache — the serving-path counterpart of the reference
+//! index.
+//!
+//! The reference index already amortizes *reference-side* work across
+//! queries (build once, serve many). This module amortizes the
+//! *query-side* work across clients:
+//!
+//! * [`BatchEngine`] — a bounded admission queue (`ERR busy` beyond the
+//!   bound, never silent drops) feeding one scheduler thread. The
+//!   scheduler drains the queue after a short batching window, groups
+//!   concurrent requests by target index, and runs one stage-1
+//!   partition per *distinct* query payload (content-hashed) per batch
+//!   — K clients uploading the same cloud pay for one
+//!   [`MatchPipeline::prepare_query`], not K.
+//! * [`QueryCache`] (internal) — a bounded LRU over prepared queries
+//!   (substrate + quantized partition) keyed by payload hash and the
+//!   index's [`structural_key`](RefIndex::structural_key), so repeat
+//!   clients skip stage 1 entirely across batches.
+//! * [`UploadAccum`] — the one payload-line parser (cloud coordinate
+//!   lines, graph edge lines) shared by the evented serving loop and
+//!   the legacy thread-pool path, so their error strings and drain
+//!   semantics cannot drift.
+//!
+//! **Byte-identity contract.** Query-side stage 1 is a pure function of
+//! (payload, structural config, pipeline seed) — the per-side seed
+//! chains give the query partition its own lane (lane 0), untouched by
+//! batch composition or cache state. A batched or cached match
+//! therefore produces exactly the coupling bytes of the same request
+//! served alone; property-tested in `rust/tests/properties.rs` and
+//! asserted in-binary by BENCH_8.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::core::{uniform_measure, PointCloud};
+use crate::graph::Graph;
+use crate::index::{IndexKind, IndexRegistry, RefIndex};
+use crate::qgw::{QgwConfig, QuantizationCoupling, Substrate};
+
+use super::{MatchPipeline, Metrics, PreparedQuery};
+
+// ---------------------------------------------------------------------------
+// Payloads
+// ---------------------------------------------------------------------------
+
+/// An uploaded query, parsed off the wire (or built directly by benches
+/// and tests). The serving protocol's node measure for graph uploads is
+/// uniform.
+#[derive(Clone, Debug)]
+pub enum QueryPayload {
+    Cloud { coords: Vec<f64>, dim: usize },
+    Graph { num_nodes: usize, edges: Vec<(u32, u32, f64)> },
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv_u64(mut h: u64, v: u64) -> u64 {
+    // qgw-lint: hot
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    // qgw-lint: cold
+    h
+}
+
+impl QueryPayload {
+    /// Points (cloud) or nodes (graph) in the payload.
+    pub fn len(&self) -> usize {
+        match self {
+            QueryPayload::Cloud { coords, dim } => coords.len() / (*dim).max(1),
+            QueryPayload::Graph { num_nodes, .. } => *num_nodes,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// FNV-1a-64 over the payload content (kind tag, dimensions, raw
+    /// float bits). Two uploads with identical bytes hash identically,
+    /// which is what lets a batch share one stage-1 partition across
+    /// clients and the query cache recognize repeat payloads.
+    pub fn content_hash(&self) -> u64 {
+        // qgw-lint: hot
+        let mut h = FNV_OFFSET;
+        match self {
+            QueryPayload::Cloud { coords, dim } => {
+                h = fnv_u64(h, 1);
+                h = fnv_u64(h, *dim as u64);
+                for c in coords {
+                    h = fnv_u64(h, c.to_bits());
+                }
+            }
+            QueryPayload::Graph { num_nodes, edges } => {
+                h = fnv_u64(h, 2);
+                h = fnv_u64(h, *num_nodes as u64);
+                for (u, v, w) in edges {
+                    h = fnv_u64(h, *u as u64);
+                    h = fnv_u64(h, *v as u64);
+                    h = fnv_u64(h, w.to_bits());
+                }
+            }
+        }
+        // qgw-lint: cold
+        h
+    }
+
+    fn kind(&self) -> IndexKind {
+        match self {
+            QueryPayload::Cloud { .. } => IndexKind::Cloud,
+            QueryPayload::Graph { .. } => IndexKind::Graph,
+        }
+    }
+
+    /// Materialize the owned substrate stage 1 partitions. Graph uploads
+    /// are validated here for connectivity (the geodesic reference metric
+    /// needs one component; a disconnected upload would yield infinite
+    /// distances).
+    fn to_substrate(&self) -> Result<Substrate<'static>, String> {
+        match self {
+            QueryPayload::Cloud { coords, dim } => {
+                Ok(Substrate::owned_cloud(PointCloud::new(coords.clone(), *dim)))
+            }
+            QueryPayload::Graph { num_nodes, edges } => {
+                let mut g = Graph::new(*num_nodes);
+                for &(u, v, w) in edges {
+                    g.add_edge(u as usize, v as usize, w);
+                }
+                if !g.is_connected() {
+                    return Err("uploaded graph is not connected".to_string());
+                }
+                Ok(Substrate::owned_graph(g, uniform_measure(*num_nodes)))
+            }
+        }
+    }
+}
+
+/// One admission-queue entry: which index to match against, and the
+/// uploaded payload.
+#[derive(Clone, Debug)]
+pub struct MatchRequest {
+    pub index_name: String,
+    pub payload: QueryPayload,
+}
+
+// ---------------------------------------------------------------------------
+// Tickets
+// ---------------------------------------------------------------------------
+
+/// The result of a fulfilled match request.
+#[derive(Clone)]
+pub struct MatchOutcome {
+    pub coupling: Arc<QuantizationCoupling>,
+    /// The protocol summary line (`OK n=.. ref=.. loss=..`), identical
+    /// to the solo path's.
+    pub summary: String,
+    /// Enqueue-to-fulfill latency (what the client actually waited).
+    pub latency: Duration,
+}
+
+struct TicketState {
+    slot: Mutex<Option<Result<MatchOutcome, String>>>,
+    ready: Condvar,
+}
+
+/// A claim on a queued match request: `wait` blocks until the scheduler
+/// fulfills it, `poll` is the readiness-driven form the evented serving
+/// loop uses.
+pub struct Ticket(Arc<TicketState>);
+
+impl Ticket {
+    /// Non-blocking readiness check; returns the outcome once fulfilled.
+    pub fn poll(&self) -> Option<Result<MatchOutcome, String>> {
+        self.0.slot.lock().unwrap().clone()
+    }
+
+    /// Block until the scheduler fulfills this request.
+    pub fn wait(&self) -> Result<MatchOutcome, String> {
+        let mut slot = self.0.slot.lock().unwrap();
+        loop {
+            if let Some(out) = slot.as_ref() {
+                return out.clone();
+            }
+            slot = self.0.ready.wait(slot).unwrap();
+        }
+    }
+}
+
+fn fulfill(ticket: &Arc<TicketState>, result: Result<MatchOutcome, String>) {
+    let mut slot = ticket.slot.lock().unwrap();
+    *slot = Some(result);
+    ticket.ready.notify_all();
+}
+
+// ---------------------------------------------------------------------------
+// Query cache
+// ---------------------------------------------------------------------------
+
+struct CacheEntry {
+    prepared: Arc<PreparedQuery>,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    /// Keyed by (payload content hash, index structural key); BTreeMap
+    /// for a deterministic eviction scan, mirroring [`IndexRegistry`].
+    entries: BTreeMap<(u64, u64), CacheEntry>,
+    tick: u64,
+    total_bytes: usize,
+}
+
+/// Bounded LRU over prepared queries. The engine's pipeline seed is
+/// fixed per engine, so the key only needs the payload hash and the
+/// structural fingerprint; `max_bytes == 0` disables caching entirely.
+struct QueryCache {
+    max_bytes: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl QueryCache {
+    fn new(max_bytes: usize) -> Self {
+        Self {
+            max_bytes,
+            inner: Mutex::new(CacheInner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn get(&self, payload_hash: u64, structural_key: u64) -> Option<Arc<PreparedQuery>> {
+        if self.max_bytes == 0 {
+            return None;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.entries.get_mut(&(payload_hash, structural_key)) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.prepared))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn put(&self, payload_hash: u64, structural_key: u64, prepared: Arc<PreparedQuery>) {
+        if self.max_bytes == 0 {
+            return;
+        }
+        let bytes = prepared.memory_bytes();
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let key = (payload_hash, structural_key);
+        if let Some(old) = g.entries.insert(key, CacheEntry { prepared, bytes, last_used: tick })
+        {
+            g.total_bytes -= old.bytes;
+        }
+        g.total_bytes += bytes;
+        // Evict least-recently-used *other* entries down to the budget;
+        // like the index registry, one oversized entry is still admitted
+        // (the bound governs co-residency, not admission).
+        while g.total_bytes > self.max_bytes && g.entries.len() > 1 {
+            let victim = g
+                .entries
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { break };
+            if let Some(e) = g.entries.remove(&victim) {
+                g.total_bytes -= e.bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn total_bytes(&self) -> usize {
+        self.inner.lock().unwrap().total_bytes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// Tuning knobs for the [`BatchEngine`].
+#[derive(Clone, Debug)]
+pub struct BatchOptions {
+    /// Admission-queue bound: submits beyond this are refused (`ERR
+    /// busy`), never silently dropped.
+    pub queue_depth: usize,
+    /// How long the scheduler lingers after waking before draining the
+    /// queue — the window in which concurrent requests coalesce into one
+    /// batch. Zero drains immediately.
+    pub batch_window: Duration,
+    /// Query-cache budget in bytes; 0 disables the cache.
+    pub cache_bytes: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        Self {
+            queue_depth: 64,
+            batch_window: Duration::from_millis(2),
+            cache_bytes: 64 << 20,
+        }
+    }
+}
+
+struct PendingJob {
+    index_name: String,
+    payload: QueryPayload,
+    ticket: Arc<TicketState>,
+    enqueued: Instant,
+}
+
+struct EngineShared {
+    registry: Option<Arc<IndexRegistry>>,
+    qgw: QgwConfig,
+    seed: u64,
+    opts: BatchOptions,
+    queue: Mutex<VecDeque<PendingJob>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    cache: QueryCache,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    max_batch: AtomicU64,
+    stage1_partitions: AtomicU64,
+    refused: AtomicU64,
+}
+
+/// Point-in-time snapshot of the engine's counters (the `STATS` verb's
+/// serving-batch section).
+#[derive(Clone, Debug)]
+pub struct EngineStats {
+    pub queue_depth: usize,
+    pub queue_cap: usize,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub max_batch: u64,
+    pub stage1_partitions: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub cache_bytes: usize,
+    pub refused: u64,
+}
+
+impl EngineStats {
+    /// One-line `key=value` form appended to the `STATS` reply.
+    pub fn summary(&self) -> String {
+        format!(
+            "q_depth={} q_cap={} batches={} batched={} max_batch={} stage1={} \
+             qcache_hits={} qcache_misses={} qcache_evictions={} qcache_bytes={} \
+             engine_refused={}",
+            self.queue_depth,
+            self.queue_cap,
+            self.batches,
+            self.batched_requests,
+            self.max_batch,
+            self.stage1_partitions,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_evictions,
+            self.cache_bytes,
+            self.refused,
+        )
+    }
+}
+
+/// The batched async query engine: a bounded admission queue drained by
+/// one scheduler thread that batches concurrent requests per index,
+/// shares stage-1 work across identical payloads, and caches prepared
+/// queries across requests. Dropping the engine shuts the scheduler
+/// down (queued requests are fulfilled with an error first).
+pub struct BatchEngine {
+    shared: Arc<EngineShared>,
+    scheduler: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchEngine {
+    pub fn new(
+        registry: Option<Arc<IndexRegistry>>,
+        qgw: QgwConfig,
+        seed: u64,
+        opts: BatchOptions,
+    ) -> BatchEngine {
+        let cache_bytes = opts.cache_bytes;
+        let shared = Arc::new(EngineShared {
+            registry,
+            qgw,
+            seed,
+            opts,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            cache: QueryCache::new(cache_bytes),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            stage1_partitions: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+        });
+        let worker = Arc::clone(&shared);
+        super::count_thread_spawn();
+        // qgw-lint: allow(determinism-thread) -- batch-scheduler thread: sole admission-queue consumer, spawn counted above; couplings themselves still run on the ComputePool
+        let scheduler = std::thread::spawn(move || scheduler_loop(worker));
+        BatchEngine { shared, scheduler: Some(scheduler) }
+    }
+
+    /// Enqueue one request; `None` means the admission queue is full
+    /// (counted in `refused`) — the caller replies `ERR busy` and the
+    /// connection stays usable.
+    pub fn try_submit(&self, req: MatchRequest) -> Option<Ticket> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.shared.opts.queue_depth {
+            self.shared.refused.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let ticket = Arc::new(TicketState { slot: Mutex::new(None), ready: Condvar::new() });
+        q.push_back(PendingJob {
+            index_name: req.index_name,
+            payload: req.payload,
+            ticket: Arc::clone(&ticket),
+            enqueued: Instant::now(),
+        });
+        drop(q);
+        self.shared.queue_cv.notify_one();
+        Some(Ticket(ticket))
+    }
+
+    /// Enqueue several requests atomically (all under one queue-lock
+    /// hold, so the scheduler observes them as one batch) — all or
+    /// nothing against the queue bound. Benches and property tests use
+    /// this for deterministic batch composition.
+    pub fn try_submit_batch(&self, reqs: Vec<MatchRequest>) -> Option<Vec<Ticket>> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.len() + reqs.len() > self.shared.opts.queue_depth {
+            self.shared.refused.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+            return None;
+        }
+        let now = Instant::now();
+        let mut tickets = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let ticket =
+                Arc::new(TicketState { slot: Mutex::new(None), ready: Condvar::new() });
+            q.push_back(PendingJob {
+                index_name: req.index_name,
+                payload: req.payload,
+                ticket: Arc::clone(&ticket),
+                enqueued: now,
+            });
+            tickets.push(Ticket(ticket));
+        }
+        drop(q);
+        self.shared.queue_cv.notify_one();
+        Some(tickets)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let s = &self.shared;
+        EngineStats {
+            queue_depth: s.queue.lock().unwrap().len(),
+            queue_cap: s.opts.queue_depth,
+            batches: s.batches.load(Ordering::Relaxed),
+            batched_requests: s.batched_requests.load(Ordering::Relaxed),
+            max_batch: s.max_batch.load(Ordering::Relaxed),
+            stage1_partitions: s.stage1_partitions.load(Ordering::Relaxed),
+            cache_hits: s.cache.hits.load(Ordering::Relaxed),
+            cache_misses: s.cache.misses.load(Ordering::Relaxed),
+            cache_evictions: s.cache.evictions.load(Ordering::Relaxed),
+            cache_bytes: s.cache.total_bytes(),
+            refused: s.refused.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for BatchEngine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.queue_cv.notify_all();
+        if let Some(handle) = self.scheduler.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn scheduler_loop(shared: Arc<EngineShared>) {
+    loop {
+        // Wait for work (or shutdown). The timeout re-checks the flag so
+        // a missed notify cannot wedge the scheduler.
+        {
+            let mut q = shared.queue.lock().unwrap();
+            while q.is_empty() && !shared.shutdown.load(Ordering::Relaxed) {
+                let (guard, _) =
+                    shared.queue_cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+            if shared.shutdown.load(Ordering::Relaxed) {
+                for job in q.drain(..) {
+                    fulfill(&job.ticket, Err("service shutting down".to_string()));
+                }
+                return;
+            }
+        }
+        // The batching window: let concurrent requests pile up so they
+        // drain as one batch.
+        if !shared.opts.batch_window.is_zero() {
+            std::thread::sleep(shared.opts.batch_window);
+        }
+        let jobs: Vec<PendingJob> = {
+            let mut q = shared.queue.lock().unwrap();
+            q.drain(..).collect()
+        };
+        if jobs.is_empty() {
+            continue;
+        }
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.batched_requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        shared.max_batch.fetch_max(jobs.len() as u64, Ordering::Relaxed);
+        run_batch(&shared, jobs);
+    }
+}
+
+/// Serve one drained batch: group by target index (BTreeMap, so group
+/// order is deterministic), resolve each index once, and share stage-1
+/// work per distinct payload within each group.
+fn run_batch(shared: &EngineShared, jobs: Vec<PendingJob>) {
+    let mut groups: BTreeMap<String, Vec<PendingJob>> = BTreeMap::new();
+    for job in jobs {
+        groups.entry(job.index_name.clone()).or_default().push(job);
+    }
+    for (name, group) in groups {
+        let Some(registry) = &shared.registry else {
+            for job in group {
+                fulfill(&job.ticket, Err("no registry configured".to_string()));
+            }
+            continue;
+        };
+        let Some(index) = registry.get(&name) else {
+            for job in group {
+                fulfill(&job.ticket, Err(format!("unknown index {name:?} (try INDEXES)")));
+            }
+            continue;
+        };
+        serve_group(shared, &name, &index, group);
+    }
+}
+
+fn serve_group(shared: &EngineShared, name: &str, index: &RefIndex, group: Vec<PendingJob>) {
+    let cfg = index.structural_config(&shared.qgw);
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg, &metrics);
+    pipe.seed = shared.seed;
+    let skey = index.structural_key();
+    // One prepared query per distinct payload hash within this batch;
+    // the cache extends the sharing across batches.
+    let mut prepared_local: BTreeMap<u64, Result<Arc<PreparedQuery>, String>> = BTreeMap::new();
+    for job in group {
+        if job.payload.kind() != index.kind() {
+            let msg = match job.payload {
+                QueryPayload::Cloud { .. } => format!(
+                    "index {name:?} is a {} reference; MATCH uploads are point clouds",
+                    index.kind().name()
+                ),
+                QueryPayload::Graph { .. } => format!(
+                    "index {name:?} is a {} reference; MATCHG uploads are graphs",
+                    index.kind().name()
+                ),
+            };
+            fulfill(&job.ticket, Err(msg));
+            continue;
+        }
+        let hash = job.payload.content_hash();
+        let prepared = prepared_local
+            .entry(hash)
+            .or_insert_with(|| {
+                if let Some(p) = shared.cache.get(hash, skey) {
+                    return Ok(p);
+                }
+                shared.stage1_partitions.fetch_add(1, Ordering::Relaxed);
+                match job.payload.to_substrate() {
+                    Ok(sub) => {
+                        let p = Arc::new(pipe.prepare_query(sub));
+                        shared.cache.put(hash, skey, Arc::clone(&p));
+                        Ok(p)
+                    }
+                    Err(e) => Err(e),
+                }
+            })
+            .clone();
+        let prepared = match prepared {
+            Ok(p) => p,
+            Err(e) => {
+                fulfill(&job.ticket, Err(e));
+                continue;
+            }
+        };
+        // A panicking solver must fail one request, not kill the
+        // scheduler (and with it every future request).
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pipe.run_prepared(&prepared, index)
+        }));
+        let result = match run {
+            Ok(Ok(report)) => Ok(MatchOutcome {
+                summary: match_summary(prepared.len(), index, &report),
+                coupling: Arc::new(report.result.coupling),
+                latency: job.enqueued.elapsed(),
+            }),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(_) => Err("internal error while serving match".to_string()),
+        };
+        fulfill(&job.ticket, result);
+    }
+}
+
+/// The protocol's `MATCH` success line — one formatter for the batched
+/// and solo paths, so replies are identical wherever a request runs.
+fn match_summary(n: usize, index: &RefIndex, report: &super::PipelineReport) -> String {
+    format!(
+        "OK n={} ref={} loss={:.6} bound={:.6} levels={} leaves={} aligners={}",
+        n,
+        index.num_points(),
+        report.result.gw_loss,
+        report.result.error_bound,
+        report.levels,
+        report.result.num_local_matchings,
+        report.aligner_per_level.join(","),
+    )
+}
+
+/// Serve one request inline on the caller's thread (the legacy
+/// thread-pool path). Same prepare/run split, same summary formatter,
+/// and same error strings as the scheduler — byte-identical replies by
+/// construction.
+pub(crate) fn solo_match(
+    registry: Option<&Arc<IndexRegistry>>,
+    qgw: &QgwConfig,
+    seed: u64,
+    name: &str,
+    payload: &QueryPayload,
+) -> Result<(QuantizationCoupling, String), String> {
+    let Some(registry) = registry else {
+        return Err("no registry configured".to_string());
+    };
+    let Some(index) = registry.get(name) else {
+        return Err(format!("unknown index {name:?} (try INDEXES)"));
+    };
+    if payload.kind() != index.kind() {
+        return Err(match payload {
+            QueryPayload::Cloud { .. } => format!(
+                "index {name:?} is a {} reference; MATCH uploads are point clouds",
+                index.kind().name()
+            ),
+            QueryPayload::Graph { .. } => format!(
+                "index {name:?} is a {} reference; MATCHG uploads are graphs",
+                index.kind().name()
+            ),
+        });
+    }
+    let cfg = index.structural_config(qgw);
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg, &metrics);
+    pipe.seed = seed;
+    let sub = payload.to_substrate()?;
+    let prepared = pipe.prepare_query(sub);
+    let report = pipe.run_prepared(&prepared, &index).map_err(|e| e.to_string())?;
+    let summary = match_summary(prepared.len(), &index, &report);
+    Ok((report.result.coupling, summary))
+}
+
+// ---------------------------------------------------------------------------
+// Upload parsing
+// ---------------------------------------------------------------------------
+
+enum UploadKind {
+    Cloud { dim: usize, coords: Vec<f64> },
+    Graph { num_nodes: usize, edges: Vec<(u32, u32, f64)> },
+}
+
+/// Incremental payload-line parser shared by both serving paths. Errors
+/// latch (`feed_line` keeps draining the announced payload after the
+/// first bad line — the PR 5 rule that keeps the connection usable),
+/// and `finish` yields either the parsed [`MatchRequest`] or the first
+/// error.
+pub struct UploadAccum {
+    index_name: String,
+    kind: UploadKind,
+    remaining: usize,
+    err: Option<String>,
+}
+
+impl UploadAccum {
+    /// Accumulator for `MATCH <name> <n> <dim>`: `n` lines of exactly
+    /// `dim` finite floats.
+    pub fn cloud(index_name: &str, n: usize, dim: usize) -> UploadAccum {
+        UploadAccum {
+            index_name: index_name.to_string(),
+            kind: UploadKind::Cloud { dim, coords: Vec::new() },
+            remaining: n,
+            err: None,
+        }
+    }
+
+    /// Accumulator for `MATCHG <name> <nodes> <edges>`: `edges` lines of
+    /// `u v [w]` (weight defaults to 1; endpoints must be distinct,
+    /// in-range node ids).
+    pub fn graph(index_name: &str, num_nodes: usize, num_edges: usize) -> UploadAccum {
+        UploadAccum {
+            index_name: index_name.to_string(),
+            kind: UploadKind::Graph { num_nodes, edges: Vec::new() },
+            remaining: num_edges,
+            err: None,
+        }
+    }
+
+    /// Payload lines still expected.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// Consume one payload line. Counts toward the announced total even
+    /// after an error — the payload must drain fully either way.
+    pub fn feed_line(&mut self, line: &str) {
+        if self.remaining == 0 {
+            return;
+        }
+        self.remaining -= 1;
+        if self.err.is_some() {
+            return;
+        }
+        match &mut self.kind {
+            UploadKind::Cloud { dim, coords } => {
+                let dim = *dim;
+                let before = coords.len();
+                for tok in line.split_whitespace() {
+                    if coords.len() - before == dim {
+                        self.err = Some(format!("more than {dim} coordinates on a line"));
+                        return;
+                    }
+                    match tok.parse::<f64>() {
+                        Ok(v) if v.is_finite() => coords.push(v),
+                        Ok(_) => {
+                            self.err = Some(format!("non-finite coordinate {tok:?}"));
+                            return;
+                        }
+                        Err(_) => {
+                            self.err = Some(format!("bad coordinate {tok:?}"));
+                            return;
+                        }
+                    }
+                }
+                if coords.len() - before != dim {
+                    self.err = Some(format!(
+                        "expected {dim} coordinates per line, got {}",
+                        coords.len() - before
+                    ));
+                }
+            }
+            UploadKind::Graph { num_nodes, edges } => {
+                let num_nodes = *num_nodes;
+                let toks: Vec<&str> = line.split_whitespace().collect();
+                if toks.len() < 2 || toks.len() > 3 {
+                    self.err = Some(format!(
+                        "expected edge line `u v [w]`, got {} tokens",
+                        toks.len()
+                    ));
+                    return;
+                }
+                let mut ends = [0u32; 2];
+                for (slot, tok) in ends.iter_mut().zip(&toks) {
+                    match tok.parse::<u32>() {
+                        Ok(v) if (v as usize) < num_nodes => *slot = v,
+                        Ok(v) => {
+                            self.err = Some(format!(
+                                "edge endpoint {v} out of range (nodes={num_nodes})"
+                            ));
+                            return;
+                        }
+                        Err(_) => {
+                            self.err = Some(format!("bad edge endpoint {tok:?}"));
+                            return;
+                        }
+                    }
+                }
+                if ends[0] == ends[1] {
+                    self.err = Some(format!("self-loop edge {} {} not allowed", ends[0], ends[1]));
+                    return;
+                }
+                let w = match toks.get(2) {
+                    None => 1.0,
+                    Some(tok) => match tok.parse::<f64>() {
+                        Ok(v) if v.is_finite() && v > 0.0 => v,
+                        _ => {
+                            self.err = Some(format!(
+                                "edge weight must be finite and positive, got {tok:?}"
+                            ));
+                            return;
+                        }
+                    },
+                };
+                edges.push((ends[0], ends[1], w));
+            }
+        }
+    }
+
+    /// The parsed request, or the first latched error. Call only once
+    /// the announced payload is fully drained.
+    pub fn finish(self) -> Result<MatchRequest, String> {
+        if let Some(err) = self.err {
+            return Err(err);
+        }
+        let payload = match self.kind {
+            UploadKind::Cloud { dim, coords } => QueryPayload::Cloud { coords, dim },
+            UploadKind::Graph { num_nodes, edges } => {
+                QueryPayload::Graph { num_nodes, edges }
+            }
+        };
+        Ok(MatchRequest { index_name: self.index_name, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Gaussian, Pcg32};
+
+    fn cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        PointCloud::new((0..n * 3).map(|_| g.sample(&mut rng)).collect(), 3)
+    }
+
+    fn cloud_payload(n: usize, seed: u64) -> QueryPayload {
+        let c = cloud(n, seed);
+        QueryPayload::Cloud { coords: c.coords().to_vec(), dim: 3 }
+    }
+
+    fn registry_with_cloud_index(seed: u64) -> (Arc<IndexRegistry>, QgwConfig) {
+        let y = cloud(150, seed);
+        let cfg = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(4) };
+        let registry = Arc::new(IndexRegistry::new(usize::MAX));
+        registry.insert("shapes", RefIndex::build_cloud(&y, None, &cfg, 7));
+        (registry, cfg)
+    }
+
+    fn engine(registry: Arc<IndexRegistry>, cfg: &QgwConfig, opts: BatchOptions) -> BatchEngine {
+        BatchEngine::new(Some(registry), cfg.clone(), 7, opts)
+    }
+
+    fn shapes_req(payload: QueryPayload) -> MatchRequest {
+        MatchRequest { index_name: "shapes".into(), payload }
+    }
+
+    #[test]
+    fn content_hash_distinguishes_payloads_and_is_stable() {
+        let a = cloud_payload(40, 1);
+        let b = cloud_payload(40, 2);
+        assert_eq!(a.content_hash(), cloud_payload(40, 1).content_hash());
+        assert_ne!(a.content_hash(), b.content_hash());
+        let g1 = QueryPayload::Graph { num_nodes: 4, edges: vec![(0, 1, 1.0), (1, 2, 1.0)] };
+        let g2 = QueryPayload::Graph { num_nodes: 4, edges: vec![(0, 1, 1.0), (1, 3, 1.0)] };
+        assert_ne!(g1.content_hash(), g2.content_hash());
+        assert_ne!(a.content_hash(), g1.content_hash());
+        assert_eq!(a.len(), 40);
+        assert_eq!(g1.len(), 4);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn solo_submit_matches_solo_pipeline_bytes() {
+        let (registry, cfg) = registry_with_cloud_index(5);
+        let payload = cloud_payload(60, 9);
+        // Reference: the un-batched indexed pipeline run.
+        let QueryPayload::Cloud { coords, dim } = payload.clone() else { unreachable!() };
+        let x = PointCloud::new(coords, dim);
+        let index = registry.get("shapes").unwrap();
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(index.structural_config(&cfg), &metrics);
+        pipe.seed = 7;
+        let solo =
+            pipe.run_indexed(crate::coordinator::QueryInput::Cloud { x: &x }, &index).unwrap();
+
+        let eng = engine(registry, &cfg, BatchOptions::default());
+        let ticket = eng
+            .try_submit(MatchRequest { index_name: "shapes".into(), payload })
+            .expect("queue has room");
+        let out = ticket.wait().expect("match should succeed");
+        assert!(out.summary.starts_with("OK n=60 ref=150"), "summary: {}", out.summary);
+        crate::testutil::assert_sparse_bitwise_equal(
+            &solo.result.coupling.to_sparse(),
+            &out.coupling.to_sparse(),
+        );
+        let stats = eng.stats();
+        assert_eq!(stats.batched_requests, 1);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn batch_shares_stage1_across_identical_payloads() {
+        let (registry, cfg) = registry_with_cloud_index(6);
+        let opts = BatchOptions {
+            cache_bytes: 0,
+            batch_window: Duration::from_millis(20),
+            ..BatchOptions::default()
+        };
+        let eng = engine(registry, &cfg, opts);
+        let a = cloud_payload(50, 11);
+        let b = cloud_payload(55, 12);
+        // 4 requests, 2 distinct payloads, submitted as one atomic batch.
+        let reqs = vec![
+            MatchRequest { index_name: "shapes".into(), payload: a.clone() },
+            MatchRequest { index_name: "shapes".into(), payload: b.clone() },
+            MatchRequest { index_name: "shapes".into(), payload: a.clone() },
+            MatchRequest { index_name: "shapes".into(), payload: b },
+        ];
+        let tickets = eng.try_submit_batch(reqs).expect("queue has room");
+        let outs: Vec<MatchOutcome> =
+            tickets.iter().map(|t| t.wait().expect("match should succeed")).collect();
+        // Identical payloads produced byte-identical couplings.
+        crate::testutil::assert_sparse_bitwise_equal(
+            &outs[0].coupling.to_sparse(),
+            &outs[2].coupling.to_sparse(),
+        );
+        assert_eq!(outs[0].summary, outs[2].summary);
+        let stats = eng.stats();
+        assert_eq!(stats.stage1_partitions, 2, "stage 1 must run once per distinct payload");
+        assert_eq!(stats.batched_requests, 4);
+        assert_eq!(stats.max_batch, 4, "the atomic submit must drain as one batch");
+    }
+
+    #[test]
+    fn cache_skips_stage1_on_repeat_queries() {
+        let (registry, cfg) = registry_with_cloud_index(7);
+        let eng = engine(registry, &cfg, BatchOptions::default());
+        let payload = cloud_payload(50, 13);
+        let first = eng
+            .try_submit(MatchRequest { index_name: "shapes".into(), payload: payload.clone() })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(eng.stats().stage1_partitions, 1);
+        let second = eng
+            .try_submit(MatchRequest { index_name: "shapes".into(), payload })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let stats = eng.stats();
+        assert_eq!(stats.stage1_partitions, 1, "repeat query must hit the cache");
+        assert!(stats.cache_hits >= 1);
+        assert!(stats.cache_bytes > 0);
+        crate::testutil::assert_sparse_bitwise_equal(
+            &first.coupling.to_sparse(),
+            &second.coupling.to_sparse(),
+        );
+        assert_eq!(first.summary, second.summary);
+        let summary = stats.summary();
+        assert!(summary.contains("qcache_hits=1"), "{summary}");
+        assert!(summary.contains("stage1=1"), "{summary}");
+    }
+
+    #[test]
+    fn bounded_queue_refuses_cleanly() {
+        let (registry, cfg) = registry_with_cloud_index(8);
+        // A 1-slot queue and a long window: the second submit arrives
+        // while the first still occupies the only slot.
+        let eng = engine(
+            registry,
+            &cfg,
+            BatchOptions {
+                queue_depth: 1,
+                batch_window: Duration::from_millis(400),
+                cache_bytes: 0,
+            },
+        );
+        let t1 = eng.try_submit(shapes_req(cloud_payload(40, 14))).expect("first submit fits");
+        let refused = eng.try_submit(shapes_req(cloud_payload(40, 15)));
+        assert!(refused.is_none(), "second submit must be refused");
+        assert_eq!(eng.stats().refused, 1);
+        // The queued request still completes normally.
+        assert!(t1.wait().is_ok());
+        // Batch-submit beyond the bound is all-or-nothing.
+        let reqs = (0..3).map(|i| shapes_req(cloud_payload(30, 20 + i))).collect();
+        assert!(eng.try_submit_batch(reqs).is_none());
+        assert_eq!(eng.stats().refused, 4);
+    }
+
+    #[test]
+    fn unknown_index_and_kind_mismatch_are_clean_errors() {
+        let (registry, cfg) = registry_with_cloud_index(9);
+        let eng = engine(registry, &cfg, BatchOptions::default());
+        let req = MatchRequest { index_name: "nosuch".into(), payload: cloud_payload(30, 16) };
+        let err = eng.try_submit(req).unwrap().wait().unwrap_err();
+        assert!(err.starts_with("unknown index \"nosuch\""), "{err}");
+        let err = eng
+            .try_submit(MatchRequest {
+                index_name: "shapes".into(),
+                payload: QueryPayload::Graph {
+                    num_nodes: 4,
+                    edges: vec![(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)],
+                },
+            })
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(err.contains("cloud reference; MATCHG uploads are graphs"), "{err}");
+    }
+
+    #[test]
+    fn graph_payload_serves_and_rejects_disconnected() {
+        let (g, mu) = crate::testutil::ring_graph(60);
+        let cfg = QgwConfig { levels: 2, leaf_size: 6, ..QgwConfig::with_count(5) };
+        let registry = Arc::new(IndexRegistry::new(usize::MAX));
+        registry.insert("rings", RefIndex::build_graph(&g, &mu, None, &cfg, 7));
+        let eng =
+            BatchEngine::new(Some(Arc::clone(&registry)), cfg.clone(), 7, BatchOptions::default());
+        let ring_edges: Vec<(u32, u32, f64)> = (0..40u32).map(|i| (i, (i + 1) % 40, 1.0)).collect();
+        let out = eng
+            .try_submit(MatchRequest {
+                index_name: "rings".into(),
+                payload: QueryPayload::Graph { num_nodes: 40, edges: ring_edges },
+            })
+            .unwrap()
+            .wait()
+            .expect("graph match should succeed");
+        assert!(out.summary.starts_with("OK n=40 ref=60"), "summary: {}", out.summary);
+
+        // Batched/cached graph results equal the solo path too.
+        let (solo, solo_summary) = solo_match(
+            Some(&registry),
+            &cfg,
+            7,
+            "rings",
+            &QueryPayload::Graph {
+                num_nodes: 40,
+                edges: (0..40u32).map(|i| (i, (i + 1) % 40, 1.0)).collect(),
+            },
+        )
+        .unwrap();
+        crate::testutil::assert_sparse_bitwise_equal(
+            &solo.to_sparse(),
+            &out.coupling.to_sparse(),
+        );
+        assert_eq!(solo_summary, out.summary);
+
+        let err = eng
+            .try_submit(MatchRequest {
+                index_name: "rings".into(),
+                payload: QueryPayload::Graph { num_nodes: 4, edges: vec![(0, 1, 1.0)] },
+            })
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert_eq!(err, "uploaded graph is not connected");
+    }
+
+    #[test]
+    fn query_cache_lru_evicts_by_bytes() {
+        let probe = Arc::new({
+            let metrics = Metrics::new();
+            let pipe =
+                MatchPipeline::new(QgwConfig::with_count(4), &metrics);
+            pipe.prepare_query(Substrate::owned_cloud(cloud(80, 30)))
+        });
+        let bytes = probe.memory_bytes();
+        let cache = QueryCache::new(bytes * 2 + bytes / 2); // fits 2, not 3
+        cache.put(1, 0, Arc::clone(&probe));
+        cache.put(2, 0, Arc::clone(&probe));
+        assert!(cache.get(1, 0).is_some());
+        cache.put(3, 0, Arc::clone(&probe)); // evicts key 2 (LRU)
+        assert!(cache.get(2, 0).is_none());
+        assert!(cache.get(1, 0).is_some());
+        assert!(cache.get(3, 0).is_some());
+        assert_eq!(cache.evictions.load(Ordering::Relaxed), 1);
+        // A different structural key is a different entry.
+        assert!(cache.get(1, 9).is_none());
+        // Disabled cache stores nothing and counts nothing.
+        let off = QueryCache::new(0);
+        off.put(1, 0, probe);
+        assert!(off.get(1, 0).is_none());
+        assert_eq!(off.hits.load(Ordering::Relaxed), 0);
+        assert_eq!(off.misses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn upload_accum_cloud_matches_legacy_error_strings() {
+        let mut acc = UploadAccum::cloud("shapes", 2, 3);
+        acc.feed_line("1.0 2.0 3.0");
+        acc.feed_line("4.0 5.0 6.0");
+        assert!(acc.is_complete());
+        let req = acc.finish().unwrap();
+        assert_eq!(req.index_name, "shapes");
+        assert_eq!(req.payload.len(), 2);
+
+        let mut acc = UploadAccum::cloud("shapes", 2, 3);
+        acc.feed_line("1.0 2.0");
+        acc.feed_line("4.0 5.0 6.0"); // drained after the error
+        assert!(acc.is_complete());
+        assert_eq!(
+            acc.finish().unwrap_err(),
+            "expected 3 coordinates per line, got 2"
+        );
+
+        let mut acc = UploadAccum::cloud("shapes", 1, 2);
+        acc.feed_line("1.0 2.0 3.0");
+        assert_eq!(acc.finish().unwrap_err(), "more than 2 coordinates on a line");
+
+        let mut acc = UploadAccum::cloud("shapes", 1, 2);
+        acc.feed_line("1.0 nan");
+        assert_eq!(acc.finish().unwrap_err(), "non-finite coordinate \"nan\"");
+
+        let mut acc = UploadAccum::cloud("shapes", 1, 2);
+        acc.feed_line("1.0 bogus");
+        assert_eq!(acc.finish().unwrap_err(), "bad coordinate \"bogus\"");
+    }
+
+    #[test]
+    fn upload_accum_graph_validates_edges() {
+        let mut acc = UploadAccum::graph("rings", 4, 4);
+        acc.feed_line("0 1");
+        acc.feed_line("1 2 2.5");
+        acc.feed_line("2 3");
+        acc.feed_line("3 0");
+        let req = acc.finish().unwrap();
+        let QueryPayload::Graph { num_nodes, edges } = req.payload else {
+            panic!("wrong payload kind")
+        };
+        assert_eq!(num_nodes, 4);
+        assert_eq!(edges[1], (1, 2, 2.5));
+
+        let mut acc = UploadAccum::graph("rings", 4, 1);
+        acc.feed_line("0 9");
+        assert_eq!(acc.finish().unwrap_err(), "edge endpoint 9 out of range (nodes=4)");
+
+        let mut acc = UploadAccum::graph("rings", 4, 1);
+        acc.feed_line("0 0");
+        assert_eq!(acc.finish().unwrap_err(), "self-loop edge 0 0 not allowed");
+
+        let mut acc = UploadAccum::graph("rings", 4, 1);
+        acc.feed_line("0 1 -2.0");
+        assert_eq!(
+            acc.finish().unwrap_err(),
+            "edge weight must be finite and positive, got \"-2.0\""
+        );
+
+        let mut acc = UploadAccum::graph("rings", 4, 1);
+        acc.feed_line("0 1 2 3");
+        assert_eq!(acc.finish().unwrap_err(), "expected edge line `u v [w]`, got 4 tokens");
+
+        let mut acc = UploadAccum::graph("rings", 4, 1);
+        acc.feed_line("x 1");
+        assert_eq!(acc.finish().unwrap_err(), "bad edge endpoint \"x\"");
+    }
+}

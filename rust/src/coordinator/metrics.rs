@@ -14,6 +14,96 @@ pub struct Metrics {
 struct Inner {
     durations: BTreeMap<String, Duration>,
     counters: BTreeMap<String, u64>,
+    latencies: BTreeMap<String, LatencyHistogram>,
+}
+
+/// Number of log2 microsecond buckets in a [`LatencyHistogram`].
+///
+/// Bucket `i` holds samples whose latency in microseconds is in
+/// `[2^(i-1), 2^i)` (bucket 0 holds sub-microsecond samples); the last
+/// bucket absorbs everything above ~2^38 µs (~3 days), far beyond any
+/// serving latency we care to resolve.
+pub const LATENCY_BUCKETS: usize = 40;
+
+/// Fixed-bucket latency histogram with log2 microsecond buckets.
+///
+/// Quantiles are read as the *upper bound* of the bucket holding the
+/// requested rank, so a reported p99 is a deterministic over-estimate
+/// within one power of two — good enough for serving dashboards, and
+/// cheap enough (one increment per sample, no allocation after
+/// construction) to sit on the request hot path.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; LATENCY_BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { counts: [0; LATENCY_BUCKETS], total: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(micros: u128) -> usize {
+        // floor(log2(micros)) + 1, clamped; bucket 0 = sub-microsecond.
+        if micros == 0 {
+            return 0;
+        }
+        let bits = 128 - micros.leading_zeros() as usize;
+        bits.min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Upper bound (inclusive) of bucket `i`, in microseconds.
+    fn upper_bound_us(i: usize) -> u64 {
+        if i == 0 {
+            1
+        } else {
+            1u64 << i.min(63)
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.counts[Self::bucket_of(d.as_micros())] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper bound in microseconds of the bucket holding quantile `q`
+    /// (`0.0..=1.0`); `None` when no samples have been recorded.
+    pub fn quantile_us(&self, q: f64) -> Option<u64> {
+        if self.total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Rank of the requested quantile, 1-based, at least 1.
+        let rank = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(Self::upper_bound_us(i));
+            }
+        }
+        Some(Self::upper_bound_us(LATENCY_BUCKETS - 1))
+    }
+
+    /// Non-empty buckets as `(upper_bound_us, count)` pairs, ascending.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::upper_bound_us(i), c))
+            .collect()
+    }
 }
 
 impl Metrics {
@@ -44,6 +134,42 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Record one latency sample under a per-verb histogram.
+    pub fn observe_latency(&self, verb: &str, d: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.latencies.entry(verb.to_string()).or_default().record(d);
+    }
+
+    /// Number of latency samples recorded for `verb`.
+    pub fn latency_count(&self, verb: &str) -> u64 {
+        self.inner.lock().unwrap().latencies.get(verb).map_or(0, |h| h.count())
+    }
+
+    /// Bucket-upper-bound quantile in microseconds for `verb`; `None`
+    /// when the verb has no samples.
+    pub fn latency_quantile_us(&self, verb: &str, q: f64) -> Option<u64> {
+        self.inner.lock().unwrap().latencies.get(verb).and_then(|h| h.quantile_us(q))
+    }
+
+    /// `lat_<verb>_p50_us=.. lat_<verb>_p99_us=.. lat_<verb>_n=..` for
+    /// every verb with at least one sample, in verb order.
+    pub fn latency_summary(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut parts: Vec<String> = Vec::new();
+        for (verb, h) in &inner.latencies {
+            if h.count() == 0 {
+                continue;
+            }
+            let p50 = h.quantile_us(0.50).unwrap_or(0);
+            let p99 = h.quantile_us(0.99).unwrap_or(0);
+            parts.push(format!(
+                "lat_{verb}_p50_us={p50} lat_{verb}_p99_us={p99} lat_{verb}_n={}",
+                h.count()
+            ));
+        }
+        parts.join(" ")
     }
 
     /// `stage=1.234s ...` one-liner for logs and bench output.
@@ -120,5 +246,56 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("s=1.000s"));
         assert!(s.contains("n=1"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2_upper_bounds() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), None);
+        h.record(Duration::from_micros(0)); // bucket 0, bound 1
+        h.record(Duration::from_micros(1)); // [1,2) -> bound 2
+        h.record(Duration::from_micros(3)); // [2,4) -> bound 4
+        h.record(Duration::from_micros(900)); // [512,1024) -> bound 1024
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.quantile_us(0.0), Some(1));
+        assert_eq!(h.quantile_us(0.5), Some(2));
+        assert_eq!(h.quantile_us(1.0), Some(1024));
+        assert_eq!(h.buckets(), vec![(1, 1), (2, 1), (4, 1), (1024, 1)]);
+    }
+
+    #[test]
+    fn histogram_quantile_is_monotone_and_clamped() {
+        let mut h = LatencyHistogram::new();
+        for us in [1u64, 10, 100, 1_000, 10_000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        // A quantile upper bound never decreases as q grows.
+        let mut prev = 0;
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let b = h.quantile_us(q).unwrap();
+            assert!(b >= prev, "q={q}: {b} < {prev}");
+            prev = b;
+        }
+        // Huge samples land in the final bucket instead of overflowing.
+        h.record(Duration::from_secs(1 << 40));
+        assert_eq!(h.quantile_us(1.0), Some(1u64 << (LATENCY_BUCKETS - 1)));
+    }
+
+    #[test]
+    fn per_verb_latency_and_summary() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us("match", 0.5), None);
+        assert_eq!(m.latency_count("match"), 0);
+        m.observe_latency("match", Duration::from_micros(700));
+        m.observe_latency("match", Duration::from_micros(800));
+        m.observe_latency("query", Duration::from_micros(3));
+        assert_eq!(m.latency_count("match"), 2);
+        assert_eq!(m.latency_quantile_us("match", 0.5), Some(1024));
+        assert_eq!(m.latency_quantile_us("query", 0.99), Some(4));
+        let s = m.latency_summary();
+        assert!(s.contains("lat_match_p50_us=1024"), "{s}");
+        assert!(s.contains("lat_match_p99_us=1024"), "{s}");
+        assert!(s.contains("lat_match_n=2"), "{s}");
+        assert!(s.contains("lat_query_p50_us=4"), "{s}");
     }
 }

@@ -7,6 +7,7 @@
 //! `*_scoped` variants keep the old per-call `std::thread::scope`
 //! implementations as property-test references.
 
+mod batch;
 mod metrics;
 mod pipeline;
 mod pool;
@@ -14,10 +15,14 @@ mod service;
 
 pub(crate) use pool::{count_thread_spawn, lock_recover, SendPtr};
 
-pub use metrics::{Metrics, StageTimer};
-pub use pipeline::{MatchPipeline, PipelineInput, PipelineReport, QueryInput};
+pub use batch::{
+    BatchEngine, BatchOptions, EngineStats, MatchOutcome, MatchRequest, QueryPayload, Ticket,
+    UploadAccum,
+};
+pub use metrics::{LatencyHistogram, Metrics, StageTimer, LATENCY_BUCKETS};
+pub use pipeline::{MatchPipeline, PipelineInput, PipelineReport, PreparedQuery, QueryInput};
 pub use pool::{
     effective_threads, parallel_map, parallel_map_scoped, set_global_pool_size,
     threads_spawned_total, ComputePool, ThreadPool,
 };
-pub use service::MatchService;
+pub use service::{MatchService, ServeOptions};

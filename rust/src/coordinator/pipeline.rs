@@ -296,6 +296,88 @@ impl<'a> MatchPipeline<'a> {
 
         Ok(self.spine(total_start, partition_secs, &sx, &qx, RefSide::Indexed(index)))
     }
+
+    /// Run stage 1 (query-side partition) once and capture the result for
+    /// reuse: the batch scheduler shares one [`PreparedQuery`] across every
+    /// concurrent request carrying the same payload, and the query cache
+    /// keeps it resident across requests. The seed chain is exactly
+    /// [`MatchPipeline::run_indexed`]'s (lane 0 of the pipeline seed), so a
+    /// prepared query fed to [`MatchPipeline::run_prepared`] reproduces the
+    /// solo indexed run byte-for-byte regardless of what else shares the
+    /// batch.
+    pub fn prepare_query(&self, sub: Substrate<'static>) -> PreparedQuery {
+        let part_start = Instant::now();
+        let mut rng_x = Pcg32::seed_from(split_seed(self.seed, 0));
+        let q =
+            stage_partition(&sub, self.qgw.size.resolve(sub.len()), self.qgw.kmeans, &mut rng_x);
+        let partition_secs = part_start.elapsed().as_secs_f64();
+        self.metrics.add_duration("partition", part_start.elapsed());
+        PreparedQuery { sub, q, seed: self.seed, partition_secs }
+    }
+
+    /// Match a previously prepared query (see
+    /// [`MatchPipeline::prepare_query`]) against a prebuilt reference
+    /// index: stage 1 is skipped entirely — only the shared spine runs.
+    /// The prepared seed must match this pipeline's seed, otherwise the
+    /// lane-0 partition baked into `prepared` would not be the one this
+    /// configuration would produce.
+    pub fn run_prepared(
+        &self,
+        prepared: &PreparedQuery,
+        index: &RefIndex,
+    ) -> Result<PipelineReport> {
+        index.validate_config(&self.qgw)?;
+        if prepared.seed != self.seed {
+            anyhow::bail!(
+                "prepared query was partitioned at seed {} but the pipeline runs at seed {}",
+                prepared.seed,
+                self.seed
+            );
+        }
+        let total_start = Instant::now();
+        Ok(self.spine(total_start, 0.0, &prepared.sub, &prepared.q, RefSide::Indexed(index)))
+    }
+}
+
+/// The captured output of query-side stage 1: the owned substrate plus its
+/// partition, tagged with the pipeline seed that produced it. Shareable
+/// across a batch and cacheable across requests because the per-side seed
+/// chains make it a pure function of (payload, structural config, seed).
+#[derive(Debug)]
+pub struct PreparedQuery {
+    sub: Substrate<'static>,
+    q: QuantizedSpace,
+    seed: u64,
+    /// Wall time stage 1 took when this query was prepared (the cost a
+    /// cache hit avoids).
+    pub partition_secs: f64,
+}
+
+impl PreparedQuery {
+    /// Number of points/nodes in the prepared query substrate.
+    pub fn len(&self) -> usize {
+        self.sub.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sub.len() == 0
+    }
+
+    /// Number of blocks in the prepared query partition.
+    pub fn num_blocks(&self) -> usize {
+        self.q.num_blocks()
+    }
+
+    /// Seed the prepared partition was drawn at.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Resident size estimate for cache accounting: substrate bytes plus
+    /// quantized-partition bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.sub.memory_bytes() + self.q.memory_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -580,6 +662,49 @@ mod tests {
             &indexed.result.coupling.to_sparse(),
         );
         assert_eq!(cold.aligner_per_level, indexed.aligner_per_level);
+    }
+
+    #[test]
+    fn pipeline_prepared_query_reproduces_indexed_run() {
+        let x = cloud(260, 41);
+        let y = cloud(240, 42);
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(5) };
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+        pipe.seed = 19;
+        let idx = crate::index::RefIndex::build_cloud(&y, None, &cfg, 19);
+        let indexed = pipe.run_indexed(QueryInput::Cloud { x: &x }, &idx).unwrap();
+
+        let prepared = pipe.prepare_query(Substrate::owned_cloud(x.clone()));
+        assert_eq!(prepared.len(), x.len());
+        assert_eq!(prepared.seed(), 19);
+        assert!(prepared.num_blocks() >= 2);
+        assert!(prepared.memory_bytes() > 0);
+        // Reuse the same prepared stage-1 twice: both runs must be
+        // byte-identical to the solo indexed run.
+        for _ in 0..2 {
+            let rep = pipe.run_prepared(&prepared, &idx).unwrap();
+            crate::testutil::assert_sparse_bitwise_equal(
+                &indexed.result.coupling.to_sparse(),
+                &rep.result.coupling.to_sparse(),
+            );
+            assert_eq!(rep.m_x, indexed.m_x);
+            assert_eq!(rep.m_y, indexed.m_y);
+        }
+    }
+
+    #[test]
+    fn pipeline_prepared_query_rejects_seed_mismatch() {
+        let x = cloud(120, 43);
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(4) };
+        let idx = crate::index::RefIndex::build_cloud(&x, None, &cfg, 7);
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg, &metrics);
+        pipe.seed = 7;
+        let prepared = pipe.prepare_query(Substrate::owned_cloud(x));
+        pipe.seed = 8;
+        let err = pipe.run_prepared(&prepared, &idx).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
     }
 
     #[test]

@@ -14,22 +14,66 @@
 //!   (followed by n upload lines of dim whitespace-separated floats: the
 //!    query cloud, matched against registry entry <name>; QUERY/MAP then
 //!    serve the *connection's* fresh coupling)
+//! MATCHG <name> <nodes> <edges> -> OK n=.. ref=.. ...
+//!   (followed by <edges> lines `u v [w]`: an edge-list upload matched
+//!    against a graph reference index; weight defaults to 1)
 //! QUIT
 //! ```
 //!
-//! Connections are handled on a bounded [`ThreadPool`]: a connection
-//! flood saturates the pool's queue and further connections are refused
-//! (dropped, counted in `refused`) instead of exhausting threads.
+//! Two serving paths share one parser ([`UploadAccum`]) and one match
+//! routine, so replies are byte-identical wherever a request runs:
+//!
+//! * [`MatchService::serve`] / [`MatchService::serve_batched`] — the
+//!   default: one evented loop thread drives every connection through
+//!   readiness-driven states over non-blocking sockets and feeds
+//!   uploads to the [`BatchEngine`]'s admission queue. Backpressure is
+//!   a bounded queue (`ERR busy`, counted in `refused`) and a
+//!   connection cap; idle connections cost no threads.
+//! * [`MatchService::serve_with_pool`] — the legacy bounded
+//!   [`ThreadPool`] path: a connection flood saturates the pool's queue
+//!   and further connections are refused (dropped, counted in
+//!   `refused`) instead of exhausting threads.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::index::IndexRegistry;
 use crate::qgw::{QgwConfig, QuantizationCoupling};
 
-use super::{MatchPipeline, Metrics, QueryInput, ThreadPool};
+use super::batch::solo_match;
+use super::{BatchEngine, BatchOptions, Metrics, ThreadPool, Ticket, UploadAccum};
+
+/// Tuning for [`MatchService::serve_batched`] (and the defaults behind
+/// [`MatchService::serve`]): the admission-queue bound, the scheduler's
+/// batching window, the query-side cache budget, and the evented loop's
+/// connection cap.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Admission-queue bound; `MATCH`es beyond it get `ERR busy`.
+    pub queue_depth: usize,
+    /// How long concurrent requests coalesce before the scheduler
+    /// drains them as one batch.
+    pub batch_window: Duration,
+    /// Query-side cache budget in bytes; 0 disables the cache.
+    pub cache_bytes: usize,
+    /// Concurrent-connection cap; connections beyond it are dropped and
+    /// counted in `refused`.
+    pub max_conns: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            queue_depth: 64,
+            batch_window: Duration::from_millis(2),
+            cache_bytes: 64 << 20,
+            max_conns: 256,
+        }
+    }
+}
 
 pub struct MatchService {
     coupling: Option<Arc<QuantizationCoupling>>,
@@ -46,6 +90,8 @@ pub struct MatchService {
     /// [`accept_error_is_fatal`]. A nonzero value with a live process is
     /// the observable signal the old silent `break` never gave.
     accept_errors: AtomicU64,
+    /// Per-verb latency histograms (`STATS` surfaces p50/p99).
+    metrics: Metrics,
 }
 
 impl MatchService {
@@ -61,6 +107,7 @@ impl MatchService {
             matches: AtomicU64::new(0),
             refused: AtomicU64::new(0),
             accept_errors: AtomicU64::new(0),
+            metrics: Metrics::new(),
         }
     }
 
@@ -76,6 +123,7 @@ impl MatchService {
             matches: AtomicU64::new(0),
             refused: AtomicU64::new(0),
             accept_errors: AtomicU64::new(0),
+            metrics: Metrics::new(),
         }
     }
 
@@ -156,15 +204,67 @@ impl MatchService {
         )
     }
 
-    /// Serve the TCP protocol until `shutdown` is set, handling
-    /// connections on a bounded pool (32 workers, queue 8). Binds to
-    /// `addr` (e.g. `127.0.0.1:7979`); returns the bound address.
+    /// The `STATS` reply: base counters, then (when serving batched) the
+    /// engine's queue/batch/cache section, then per-verb latency
+    /// quantiles for every verb that has served at least one request.
+    fn stats_line(&self, engine: Option<&BatchEngine>) -> String {
+        let mut s = self.stats();
+        if let Some(engine) = engine {
+            s.push(' ');
+            s.push_str(&engine.stats().summary());
+        }
+        let lat = self.metrics.latency_summary();
+        if !lat.is_empty() {
+            s.push(' ');
+            s.push_str(&lat);
+        }
+        s
+    }
+
+    /// Serve the TCP protocol until `shutdown` is set — the batched
+    /// evented loop with default [`ServeOptions`]. Binds to `addr`
+    /// (e.g. `127.0.0.1:7979`); returns the bound address.
     pub fn serve(
         self: &Arc<Self>,
         addr: &str,
         shutdown: Arc<AtomicBool>,
     ) -> std::io::Result<std::net::SocketAddr> {
-        self.serve_with_pool(addr, shutdown, 32, 8)
+        self.serve_batched(addr, shutdown, ServeOptions::default())
+    }
+
+    /// Serve the TCP protocol on the batched query engine: one evented
+    /// loop thread drives every connection through readiness-driven
+    /// states (command, upload, waiting-on-match) over non-blocking
+    /// sockets — no worker thread is pinned per idle connection — and
+    /// `MATCH`/`MATCHG` uploads are enqueued on a [`BatchEngine`] that
+    /// batches concurrent requests per index, shares stage-1 work across
+    /// identical payloads, and caches prepared queries. A full admission
+    /// queue yields a clean `ERR busy` reply (counted in `refused`)
+    /// with the payload already drained, so the connection stays usable.
+    pub fn serve_batched(
+        self: &Arc<Self>,
+        addr: &str,
+        shutdown: Arc<AtomicBool>,
+        opts: ServeOptions,
+    ) -> std::io::Result<std::net::SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let engine = BatchEngine::new(
+            self.registry.clone(),
+            self.qgw.clone(),
+            self.seed,
+            BatchOptions {
+                queue_depth: opts.queue_depth,
+                batch_window: opts.batch_window,
+                cache_bytes: opts.cache_bytes,
+            },
+        );
+        let svc = Arc::clone(self);
+        super::count_thread_spawn();
+        // qgw-lint: allow(determinism-thread) -- evented serving-loop thread: readiness-driven connection states only, coupling math runs on the BatchEngine scheduler and ComputePool; spawn counted above
+        std::thread::spawn(move || evented_loop(svc, listener, shutdown, engine, opts.max_conns));
+        Ok(local)
     }
 
     /// [`MatchService::serve`] with explicit pool sizing. Connections are
@@ -257,6 +357,8 @@ impl MatchService {
             if read_line_shutdown(&mut reader, &mut line, shutdown)? == 0 {
                 break; // EOF or shutdown.
             }
+            let verb = line.split_whitespace().next().map(|v| v.to_ascii_lowercase());
+            let started = Instant::now();
             let mut parts = line.split_whitespace();
             let response = match (parts.next(), parts.next()) {
                 (Some("QUERY"), Some(i)) => match i.parse::<usize>() {
@@ -294,7 +396,22 @@ impl MatchService {
                     let dim = parts.next().and_then(|t| t.parse::<usize>().ok());
                     match (n, dim) {
                         (Some(n), Some(dim)) => {
-                            match self.handle_match(name, n, dim, &mut reader, shutdown)? {
+                            if dim == 0 || n.saturating_mul(dim) > MAX_UPLOAD_COORDS {
+                                // Refusing to read the payload desyncs the
+                                // stream by design; drop the connection
+                                // rather than stream-parse an unbounded (or
+                                // 0-dim, n-unbounded) announcement.
+                                return Err(std::io::Error::new(
+                                    std::io::ErrorKind::InvalidData,
+                                    format!(
+                                        "invalid MATCH upload header {n}x{dim} (cap 10M coordinates)"
+                                    ),
+                                ));
+                            }
+                            let empty_err =
+                                (n == 0).then(|| "empty upload (n must be positive)".to_string());
+                            let acc = UploadAccum::cloud(name, n, dim);
+                            match self.serve_upload_inline(acc, empty_err, &mut reader, shutdown)? {
                                 Ok((coupling, summary)) => {
                                     active = Some(Arc::new(coupling));
                                     summary
@@ -303,6 +420,33 @@ impl MatchService {
                             }
                         }
                         _ => "ERR usage: MATCH <name> <n> <dim>".to_string(),
+                    }
+                }
+                (Some("MATCHG"), Some(name)) => {
+                    let nodes = parts.next().and_then(|t| t.parse::<usize>().ok());
+                    let edges = parts.next().and_then(|t| t.parse::<usize>().ok());
+                    match (nodes, edges) {
+                        (Some(nodes), Some(edges)) => {
+                            if nodes > MAX_UPLOAD_COORDS || edges > MAX_UPLOAD_COORDS {
+                                return Err(std::io::Error::new(
+                                    std::io::ErrorKind::InvalidData,
+                                    format!(
+                                        "invalid MATCHG upload header {nodes}n/{edges}e (cap 10M)"
+                                    ),
+                                ));
+                            }
+                            let empty_err = (nodes == 0)
+                                .then(|| "empty upload (nodes must be positive)".to_string());
+                            let acc = UploadAccum::graph(name, nodes, edges);
+                            match self.serve_upload_inline(acc, empty_err, &mut reader, shutdown)? {
+                                Ok((coupling, summary)) => {
+                                    active = Some(Arc::new(coupling));
+                                    summary
+                                }
+                                Err(msg) => format!("ERR {msg}"),
+                            }
+                        }
+                        _ => "ERR usage: MATCHG <name> <nodes> <edges>".to_string(),
                     }
                 }
                 (Some("INDEXES"), _) => match &self.registry {
@@ -316,127 +460,464 @@ impl MatchService {
                     }
                     None => "ERR no registry configured".to_string(),
                 },
-                (Some("STATS"), _) => self.stats(),
+                (Some("STATS"), _) => self.stats_line(None),
                 (Some("QUIT"), _) => break,
                 _ => "ERR unknown command".to_string(),
             };
+            if let Some(v) = &verb {
+                if matches!(v.as_str(), "query" | "map" | "match" | "matchg") {
+                    self.metrics.observe_latency(v, started.elapsed());
+                }
+            }
             writeln!(writer, "{response}")?;
             line.clear();
         }
         Ok(())
     }
 
-    /// Read an uploaded query cloud and match it against a registry
-    /// entry. Outer `Err` = connection-level failure (tear down); inner
-    /// `Err` = protocol-level failure (reported to the client). Protocol
-    /// errors *consume the announced payload first* so the upload lines
-    /// are never re-parsed as commands — the connection stays usable
-    /// after any reported error. The one exception is an oversized
-    /// header, which tears the connection down instead of reading an
-    /// attacker-controlled amount of data.
+    /// Drain an announced upload and serve it inline on the calling pool
+    /// thread via [`solo_match`] — same parser, same pipeline split, and
+    /// same error strings as the batched path, so replies cannot drift
+    /// between the two. Outer `Err` = connection-level failure (tear
+    /// down); inner `Err` = protocol-level failure (reported to the
+    /// client). Protocol errors *consume the announced payload first* so
+    /// the upload lines are never re-parsed as commands — the connection
+    /// stays usable after any reported error.
     #[allow(clippy::type_complexity)]
-    fn handle_match(
+    fn serve_upload_inline(
         &self,
-        name: &str,
-        n: usize,
-        dim: usize,
+        mut acc: UploadAccum,
+        empty_err: Option<String>,
         reader: &mut BufReader<TcpStream>,
         shutdown: &AtomicBool,
     ) -> std::io::Result<Result<(QuantizationCoupling, String), String>> {
-        if dim == 0 || n.saturating_mul(dim) > 10_000_000 {
-            // Refusing to read the payload desyncs the stream by design;
-            // drop the connection rather than stream-parse an unbounded
-            // (or 0-dim, n-unbounded) announcement.
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("invalid MATCH upload header {n}x{dim} (cap 10M coordinates)"),
-            ));
-        }
-        if n == 0 {
-            return Ok(Err("empty upload (n must be positive)".to_string()));
-        }
-        // Read the announced payload unconditionally; `Vec::new` grows
-        // with the data actually received instead of pre-reserving from
-        // the client-controlled header, and no line may push more than
-        // `dim` values (the per-line read itself is capped by
-        // `MAX_LINE_BYTES`).
-        let mut coords: Vec<f64> = Vec::new();
-        let mut parse_err: Option<String> = None;
         let mut line = String::new();
-        for _ in 0..n {
+        while !acc.is_complete() {
             line.clear();
             if read_line_shutdown(reader, &mut line, shutdown)? == 0 {
                 return Ok(Err("upload truncated".to_string()));
             }
-            if parse_err.is_some() {
-                continue; // drain the rest of the payload
-            }
-            let before = coords.len();
-            for tok in line.split_whitespace() {
-                if coords.len() - before == dim {
-                    parse_err = Some(format!("more than {dim} coordinates on a line"));
-                    break;
-                }
-                match tok.parse::<f64>() {
-                    Ok(v) if v.is_finite() => coords.push(v),
-                    Ok(_) => {
-                        parse_err = Some(format!("non-finite coordinate {tok:?}"));
-                        break;
-                    }
-                    Err(_) => {
-                        parse_err = Some(format!("bad coordinate {tok:?}"));
-                        break;
-                    }
-                }
-            }
-            if parse_err.is_none() && coords.len() - before != dim {
-                parse_err = Some(format!(
-                    "expected {dim} coordinates per line, got {}",
-                    coords.len() - before
-                ));
-            }
+            acc.feed_line(&line);
         }
-        if let Some(msg) = parse_err {
+        if let Some(msg) = empty_err {
             return Ok(Err(msg));
         }
-        let Some(registry) = &self.registry else {
-            return Ok(Err("no registry configured".to_string()));
+        let req = match acc.finish() {
+            Ok(req) => req,
+            Err(msg) => return Ok(Err(msg)),
         };
-        let Some(index) = registry.get(name) else {
-            return Ok(Err(format!("unknown index {name:?} (try INDEXES)")));
-        };
-        if index.kind() != crate::index::IndexKind::Cloud {
-            return Ok(Err(format!(
-                "index {name:?} is a {} reference; MATCH uploads are point clouds",
-                index.kind().name()
-            )));
-        }
-        let cloud = crate::core::PointCloud::new(coords, dim);
-
-        // Structural knobs come from the index (they shape the tree, and
-        // the partition size pins to the build's realized m); solver
-        // knobs stay with the service configuration.
-        let cfg = index.structural_config(&self.qgw);
-        let metrics = Metrics::new();
-        let mut pipe = MatchPipeline::new(cfg, &metrics);
-        pipe.seed = self.seed;
-        let report = match pipe.run_indexed(QueryInput::Cloud { x: &cloud }, &index) {
-            Ok(r) => r,
-            Err(e) => return Ok(Err(e.to_string())),
-        };
-        self.matches.fetch_add(1, Ordering::Relaxed);
-        let summary = format!(
-            "OK n={} ref={} loss={:.6} bound={:.6} levels={} leaves={} aligners={}",
-            cloud.len(),
-            index.num_points(),
-            report.result.gw_loss,
-            report.result.error_bound,
-            report.levels,
-            report.result.num_local_matchings,
-            report.aligner_per_level.join(","),
+        let served = solo_match(
+            self.registry.as_ref(),
+            &self.qgw,
+            self.seed,
+            &req.index_name,
+            &req.payload,
         );
-        Ok(Ok((report.result.coupling, summary)))
+        match served {
+            Ok((coupling, summary)) => {
+                self.matches.fetch_add(1, Ordering::Relaxed);
+                Ok(Ok((coupling, summary)))
+            }
+            Err(msg) => Ok(Err(msg)),
+        }
     }
+}
+
+/// Cap on announced upload sizes (coordinates for `MATCH`, nodes or
+/// edges for `MATCHG`) — headers beyond it tear the connection down
+/// instead of reading an attacker-controlled amount of data.
+const MAX_UPLOAD_COORDS: usize = 10_000_000;
+
+/// Output-buffer cap for the evented loop: a client that streams
+/// requests without ever reading replies is dropped once this much
+/// reply data is pending, instead of growing the buffer without bound.
+const MAX_WRITE_BUF: usize = 4 << 20;
+
+/// Per-connection state in the evented loop.
+enum ConnMode {
+    /// Parsing command lines.
+    Command,
+    /// Draining an announced upload payload.
+    Upload(PendingUpload),
+    /// A match is in flight on the [`BatchEngine`]; command parsing is
+    /// paused (pipelined verbs queue in `rbuf`) until it resolves, so a
+    /// `MATCH → QUERY → MAP` burst written in one go sees the fresh
+    /// coupling.
+    Waiting { ticket: Ticket, verb: &'static str, started: Instant },
+}
+
+/// An upload in progress on an evented connection.
+struct PendingUpload {
+    acc: UploadAccum,
+    /// Latency-metric verb (`match` or `matchg`).
+    verb: &'static str,
+    /// Deferred empty-header error: the announced payload still drains
+    /// before this is reported (the desync rule).
+    empty_err: Option<String>,
+}
+
+/// One evented connection: non-blocking stream, buffered reads/writes,
+/// and the protocol state machine.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    mode: ConnMode,
+    /// The coupling QUERY/MAP read: the service's base coupling until a
+    /// successful MATCH replaces it.
+    active: Option<Arc<QuantizationCoupling>>,
+    eof: bool,
+    quit: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, base: Option<Arc<QuantizationCoupling>>) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            mode: ConnMode::Command,
+            active: base,
+            eof: false,
+            quit: false,
+        }
+    }
+
+    fn push_reply(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+}
+
+/// One parsed command's effect on an evented connection.
+enum Action {
+    Reply(String),
+    Begin(PendingUpload),
+    Quit,
+    TearDown,
+}
+
+fn dispatch_command(
+    svc: &MatchService,
+    engine: &BatchEngine,
+    active: &Option<Arc<QuantizationCoupling>>,
+    line: &str,
+) -> Action {
+    let started = Instant::now();
+    let mut parts = line.split_whitespace();
+    let verb = parts.next();
+    let action = match (verb, parts.next()) {
+        (Some("QUERY"), Some(i)) => Action::Reply(match i.parse::<usize>() {
+            Ok(i) => {
+                svc.queries.fetch_add(1, Ordering::Relaxed);
+                match active.as_deref() {
+                    Some(c) if i < c.num_source_points() => c
+                        .row_query(i)
+                        .iter()
+                        .map(|(j, w)| format!("{j}:{w:.9}"))
+                        .collect::<Vec<_>>()
+                        .join(" "),
+                    Some(_) => String::new(),
+                    None => "ERR no coupling (run MATCH <name> <n> <dim>)".to_string(),
+                }
+            }
+            Err(_) => "ERR bad index".to_string(),
+        }),
+        (Some("MAP"), Some(i)) => Action::Reply(match i.parse::<usize>() {
+            Ok(i) => {
+                svc.queries.fetch_add(1, Ordering::Relaxed);
+                match active.as_deref() {
+                    Some(c) if i < c.num_source_points() => c
+                        .map_point(i)
+                        .map(|j| j.to_string())
+                        .unwrap_or_else(|| "NONE".to_string()),
+                    Some(_) => "NONE".to_string(),
+                    None => "ERR no coupling (run MATCH <name> <n> <dim>)".to_string(),
+                }
+            }
+            Err(_) => "ERR bad index".to_string(),
+        }),
+        (Some("MATCH"), Some(name)) => {
+            let n = parts.next().and_then(|t| t.parse::<usize>().ok());
+            let dim = parts.next().and_then(|t| t.parse::<usize>().ok());
+            match (n, dim) {
+                (Some(n), Some(dim)) => {
+                    if dim == 0 || n.saturating_mul(dim) > MAX_UPLOAD_COORDS {
+                        Action::TearDown
+                    } else {
+                        let empty_err =
+                            (n == 0).then(|| "empty upload (n must be positive)".to_string());
+                        Action::Begin(PendingUpload {
+                            acc: UploadAccum::cloud(name, n, dim),
+                            verb: "match",
+                            empty_err,
+                        })
+                    }
+                }
+                _ => Action::Reply("ERR usage: MATCH <name> <n> <dim>".to_string()),
+            }
+        }
+        (Some("MATCHG"), Some(name)) => {
+            let nodes = parts.next().and_then(|t| t.parse::<usize>().ok());
+            let edges = parts.next().and_then(|t| t.parse::<usize>().ok());
+            match (nodes, edges) {
+                (Some(nodes), Some(edges)) => {
+                    if nodes > MAX_UPLOAD_COORDS || edges > MAX_UPLOAD_COORDS {
+                        Action::TearDown
+                    } else {
+                        let empty_err = (nodes == 0)
+                            .then(|| "empty upload (nodes must be positive)".to_string());
+                        Action::Begin(PendingUpload {
+                            acc: UploadAccum::graph(name, nodes, edges),
+                            verb: "matchg",
+                            empty_err,
+                        })
+                    }
+                }
+                _ => Action::Reply("ERR usage: MATCHG <name> <nodes> <edges>".to_string()),
+            }
+        }
+        (Some("INDEXES"), _) => Action::Reply(match &svc.registry {
+            Some(reg) => {
+                let names = reg.names();
+                if names.is_empty() {
+                    "EMPTY".to_string()
+                } else {
+                    names.join(" ")
+                }
+            }
+            None => "ERR no registry configured".to_string(),
+        }),
+        (Some("STATS"), _) => Action::Reply(svc.stats_line(Some(engine))),
+        (Some("QUIT"), _) => Action::Quit,
+        _ => Action::Reply("ERR unknown command".to_string()),
+    };
+    if let Some(v) = verb {
+        let v = v.to_ascii_lowercase();
+        if matches!(v.as_str(), "query" | "map") {
+            svc.metrics.observe_latency(&v, started.elapsed());
+        }
+    }
+    action
+}
+
+/// If the connection's upload is fully drained, submit it to the engine
+/// (or report the latched parse/empty error). A full admission queue
+/// becomes a clean `ERR busy` — the payload is already consumed, so the
+/// connection stays in protocol sync.
+fn try_complete_upload(svc: &MatchService, engine: &BatchEngine, conn: &mut Conn) {
+    let complete = matches!(&conn.mode, ConnMode::Upload(p) if p.acc.is_complete());
+    if !complete {
+        return;
+    }
+    let ConnMode::Upload(p) = std::mem::replace(&mut conn.mode, ConnMode::Command) else {
+        return;
+    };
+    if let Some(msg) = p.empty_err {
+        conn.push_reply(&format!("ERR {msg}"));
+        return;
+    }
+    match p.acc.finish() {
+        Err(msg) => conn.push_reply(&format!("ERR {msg}")),
+        Ok(req) => match engine.try_submit(req) {
+            Some(ticket) => {
+                conn.mode = ConnMode::Waiting { ticket, verb: p.verb, started: Instant::now() };
+            }
+            None => {
+                svc.refused.fetch_add(1, Ordering::Relaxed);
+                conn.push_reply("ERR busy (admission queue full; retry)");
+            }
+        },
+    }
+}
+
+/// Advance one connection: resolve a pending match, read what the
+/// socket has, process complete lines, flush pending replies. Returns
+/// `(keep, progressed)`.
+fn step_conn(svc: &MatchService, engine: &BatchEngine, conn: &mut Conn) -> (bool, bool) {
+    let mut progressed = false;
+
+    // Resolve a pending match ticket.
+    let resolved = if let ConnMode::Waiting { ticket, verb, started } = &conn.mode {
+        ticket.poll().map(|r| (r, *verb, *started))
+    } else {
+        None
+    };
+    if let Some((result, verb, started)) = resolved {
+        match result {
+            Ok(out) => {
+                svc.matches.fetch_add(1, Ordering::Relaxed);
+                svc.metrics.observe_latency(verb, out.latency);
+                conn.push_reply(&out.summary);
+                conn.active = Some(out.coupling);
+            }
+            Err(msg) => {
+                svc.metrics.observe_latency(verb, started.elapsed());
+                conn.push_reply(&format!("ERR {msg}"));
+            }
+        }
+        conn.mode = ConnMode::Command;
+        progressed = true;
+    }
+
+    // Read available bytes. Skipped while a match is in flight or the
+    // buffer already holds a large backlog — TCP backpressure then
+    // throttles the client instead of this buffer growing unboundedly.
+    if !conn.eof
+        && !matches!(conn.mode, ConnMode::Waiting { .. })
+        && conn.rbuf.len() < MAX_LINE_BYTES
+    {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    progressed = true;
+                    if conn.rbuf.len() >= MAX_LINE_BYTES {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return (false, true),
+            }
+        }
+    }
+
+    // Process complete lines until a match is in flight (or QUIT).
+    loop {
+        if conn.quit || matches!(conn.mode, ConnMode::Waiting { .. }) {
+            break;
+        }
+        let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') else { break };
+        let line = String::from_utf8_lossy(&conn.rbuf[..pos]).into_owned();
+        conn.rbuf.drain(..=pos);
+        progressed = true;
+        match std::mem::replace(&mut conn.mode, ConnMode::Command) {
+            ConnMode::Command => match dispatch_command(svc, engine, &conn.active, &line) {
+                Action::Reply(r) => conn.push_reply(&r),
+                Action::Begin(p) => {
+                    conn.mode = ConnMode::Upload(p);
+                    try_complete_upload(svc, engine, conn);
+                }
+                Action::Quit => conn.quit = true,
+                Action::TearDown => return (false, true),
+            },
+            ConnMode::Upload(mut p) => {
+                p.acc.feed_line(&line);
+                conn.mode = ConnMode::Upload(p);
+                try_complete_upload(svc, engine, conn);
+            }
+            ConnMode::Waiting { .. } => unreachable!("loop guard breaks on Waiting"),
+        }
+    }
+
+    // Same per-line length cap as the pool path's reader.
+    if conn.rbuf.len() > MAX_LINE_BYTES && !conn.rbuf.contains(&b'\n') {
+        return (false, true);
+    }
+
+    // An upload cut off by client EOF can never complete: report it
+    // (the pool path's "upload truncated") and let the close below run.
+    if conn.eof
+        && !conn.quit
+        && matches!(conn.mode, ConnMode::Upload(_))
+        && !conn.rbuf.contains(&b'\n')
+    {
+        conn.mode = ConnMode::Command;
+        conn.push_reply("ERR upload truncated");
+        progressed = true;
+    }
+
+    // Flush pending replies.
+    if !conn.wbuf.is_empty() {
+        match conn.stream.write(&conn.wbuf) {
+            Ok(0) => return (false, true),
+            Ok(n) => {
+                conn.wbuf.drain(..n);
+                progressed = true;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => return (false, true),
+        }
+    }
+    if conn.wbuf.len() > MAX_WRITE_BUF {
+        return (false, true); // reply-ignoring client
+    }
+
+    // Close once drained: QUIT, or EOF with nothing left to serve.
+    let drained = conn.wbuf.is_empty() && !matches!(conn.mode, ConnMode::Waiting { .. });
+    if drained && (conn.quit || (conn.eof && !conn.rbuf.contains(&b'\n'))) {
+        return (false, true);
+    }
+    (true, progressed)
+}
+
+/// The readiness-driven serving loop: accepts non-blocking connections
+/// (up to `max_conns`) and steps each through its state machine. One
+/// thread serves every idle connection; actual coupling math runs on
+/// the engine's scheduler (and the process-wide compute pool), so a
+/// thousand idle keep-alive clients cost file descriptors, not threads.
+fn evented_loop(
+    svc: Arc<MatchService>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    engine: BatchEngine,
+    max_conns: usize,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut accept_dead = false;
+    while !shutdown.load(Ordering::Relaxed) {
+        let mut progressed = false;
+        while !accept_dead {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    progressed = true;
+                    if conns.len() >= max_conns {
+                        // Dropped: the client sees a close, like the pool
+                        // path's saturated queue.
+                        svc.refused.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    conns.push(Conn::new(stream, svc.coupling.clone()));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    svc.accept_errors.fetch_add(1, Ordering::Relaxed);
+                    if accept_error_is_fatal(&e) {
+                        eprintln!("error: match service accept loop terminating: {e}");
+                        accept_dead = true;
+                    } else {
+                        eprintln!("warn: transient accept error: {e}");
+                    }
+                }
+            }
+        }
+        conns.retain_mut(|c| {
+            let (keep, p) = step_conn(&svc, &engine, c);
+            progressed |= p;
+            keep
+        });
+        if accept_dead && conns.is_empty() {
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // Dropping the connections EOFs the clients; dropping the engine
+    // joins its scheduler (pending requests are fulfilled with errors).
 }
 
 /// Classify an `accept()` error. Per-connection failures — the peer
@@ -751,6 +1232,171 @@ mod tests {
 
         writeln!(stream, "QUIT").unwrap();
         assert_eq!(svc.num_matches(), 1);
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    /// `MATCH <name> <n> <dim>` plus its payload, written in one shot.
+    fn match_upload(name: &str, n: usize, dim: usize, seed: u64) -> String {
+        let mut rng = Pcg32::seed_from(seed);
+        let mut g = Gaussian::new();
+        let mut msg = format!("MATCH {name} {n} {dim}\n");
+        for _ in 0..n {
+            let row: Vec<String> = (0..dim).map(|_| format!("{}", g.sample(&mut rng))).collect();
+            msg.push_str(&row.join(" "));
+            msg.push('\n');
+        }
+        msg
+    }
+
+    #[test]
+    fn batched_backpressure_replies_err_busy_without_desync() {
+        use std::io::{BufRead, BufReader, Write};
+        let (_, _, svc) = registry_service();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let opts = ServeOptions {
+            queue_depth: 1,
+            batch_window: Duration::from_millis(1500),
+            cache_bytes: 0,
+            max_conns: 16,
+        };
+        let addr = svc.serve_batched("127.0.0.1:0", Arc::clone(&shutdown), opts).unwrap();
+        let mut a = std::net::TcpStream::connect(addr).unwrap();
+        let mut b = std::net::TcpStream::connect(addr).unwrap();
+        // A fills the only admission slot; the long window holds it there.
+        a.write_all(match_upload("shapes", 40, 3, 21).as_bytes()).unwrap();
+        std::thread::sleep(Duration::from_millis(500));
+        // B's request finds the queue full — a clean refusal, with B's
+        // payload already drained.
+        b.write_all(match_upload("shapes", 40, 3, 22).as_bytes()).unwrap();
+        b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut rb = BufReader::new(b.try_clone().unwrap());
+        let mut line = String::new();
+        rb.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR busy"), "reply: {line:?}");
+        // No desync: the refused connection still parses commands.
+        line.clear();
+        writeln!(b, "MAP 0").unwrap();
+        rb.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR no coupling"), "reply: {line:?}");
+        // A's queued match still completes normally.
+        a.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let mut ra = BufReader::new(a.try_clone().unwrap());
+        line.clear();
+        ra.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK n=40 ref=200"), "reply: {line:?}");
+        assert_eq!(svc.num_refused(), 1);
+        // STATS surfaces the refusal and the engine's queue section.
+        line.clear();
+        writeln!(b, "STATS").unwrap();
+        rb.read_line(&mut line).unwrap();
+        assert!(line.contains("refused=1"), "STATS: {line}");
+        assert!(line.contains("q_cap=1"), "STATS: {line}");
+        assert!(line.contains("engine_refused=1"), "STATS: {line}");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn batched_path_pipelines_match_query_map() {
+        use std::io::{BufRead, BufReader, Write};
+        let (_, _, svc) = registry_service();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = svc.serve("127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        // One write carries the whole session; the verbs behind the
+        // upload must observe the *fresh* coupling.
+        let mut msg = match_upload("shapes", 50, 3, 23);
+        msg.push_str("MAP 0\nQUERY 0\nQUIT\n");
+        stream.write_all(msg.as_bytes()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let reader = BufReader::new(stream);
+        let lines: Vec<String> = reader.lines().take(3).map(|l| l.unwrap()).collect();
+        assert!(lines[0].starts_with("OK n=50 ref=200"), "MATCH reply: {}", lines[0]);
+        let j: usize = lines[1].trim().parse().expect("MAP after pipelined MATCH");
+        assert!(j < 200);
+        assert!(lines[2].contains(':'), "QUERY reply should be a sparse row: {}", lines[2]);
+        assert_eq!(svc.num_matches(), 1);
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn batched_repeat_match_hits_cache_and_reports_latency() {
+        use std::io::{BufRead, BufReader, Write};
+        let (_, _, svc) = registry_service();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = svc.serve("127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut first = String::new();
+        stream.write_all(match_upload("shapes", 40, 3, 31).as_bytes()).unwrap();
+        reader.read_line(&mut first).unwrap();
+        assert!(first.starts_with("OK n=40 ref=200"), "reply: {first:?}");
+        // The identical payload again: stage 1 must come from the cache,
+        // and the reply must be byte-identical.
+        let mut second = String::new();
+        stream.write_all(match_upload("shapes", 40, 3, 31).as_bytes()).unwrap();
+        reader.read_line(&mut second).unwrap();
+        assert_eq!(first, second, "cached match must reply identically");
+        let mut stats = String::new();
+        writeln!(stream, "STATS").unwrap();
+        reader.read_line(&mut stats).unwrap();
+        assert!(stats.contains("matches=2"), "STATS: {stats}");
+        assert!(stats.contains("qcache_hits=1"), "STATS: {stats}");
+        assert!(stats.contains("stage1=1"), "STATS: {stats}");
+        assert!(stats.contains("lat_match_p50_us="), "STATS: {stats}");
+        assert!(stats.contains("lat_match_n=2"), "STATS: {stats}");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn matchg_serves_graph_uploads_identically_on_both_paths() {
+        use std::io::{BufRead, BufReader, Write};
+        let (g, mu) = crate::testutil::ring_graph(80);
+        let cfg = QgwConfig { levels: 2, leaf_size: 6, ..QgwConfig::with_count(5) };
+        let registry = Arc::new(IndexRegistry::new(usize::MAX));
+        registry.insert("rings", RefIndex::build_graph(&g, &mu, None, &cfg, 7));
+        let svc = Arc::new(MatchService::from_registry(registry, cfg, 7));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let batched = svc.serve("127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let pooled = svc.serve_with_pool("127.0.0.1:0", Arc::clone(&shutdown), 4, 2).unwrap();
+        let mut replies = Vec::new();
+        for addr in [batched, pooled] {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            let mut msg = String::from("MATCHG rings 40 40\n");
+            for i in 0..40u32 {
+                msg.push_str(&format!("{} {}\n", i, (i + 1) % 40));
+            }
+            msg.push_str("MAP 0\nQUIT\n");
+            stream.write_all(msg.as_bytes()).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+            let reader = BufReader::new(stream);
+            let lines: Vec<String> = reader.lines().take(2).map(|l| l.unwrap()).collect();
+            assert!(lines[0].starts_with("OK n=40 ref=80"), "MATCHG reply: {}", lines[0]);
+            let j: usize = lines[1].trim().parse().expect("MAP after MATCHG");
+            assert!(j < 80);
+            replies.push(lines[0].clone());
+        }
+        assert_eq!(replies[0], replies[1], "batched and pooled replies must be byte-identical");
+        assert_eq!(svc.num_matches(), 2);
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn batched_truncated_upload_replies_then_closes() {
+        use std::io::{BufRead, BufReader, Write};
+        let (_, _, svc) = registry_service();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = svc.serve("127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        stream.write_all(b"MATCH shapes 5 3\n0 0 0\n").unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ERR upload truncated");
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "expected close after client EOF");
         shutdown.store(true, Ordering::Relaxed);
     }
 }

@@ -224,6 +224,40 @@ impl RefIndex {
         }
     }
 
+    /// A 64-bit fingerprint of everything
+    /// [`structural_config`](RefIndex::structural_config) overlays — kind,
+    /// `levels`, `leaf_size`, `kmeans`, and the realized block count `m`.
+    /// This is the structural half of the serving query cache's key: a
+    /// cached query-side stage-1 result (partition + quantized hierarchy)
+    /// is only reusable against indices whose structural knobs resolve to
+    /// the same effective config, and two indices that agree on this key
+    /// produce identical query-side work for the same payload and seed.
+    /// (Strictly, stage 1 depends only on `m` and `kmeans`; hashing all
+    /// the structural knobs is deliberately conservative.)
+    pub fn structural_key(&self) -> u64 {
+        // FNV-1a-64 over the knob bytes; stable and dependency-free.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |byte: u8| {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        eat(match self.params.kind {
+            IndexKind::Cloud => 1,
+            IndexKind::Graph => 2,
+        });
+        for v in [
+            self.params.levels as u64,
+            self.params.leaf_size as u64,
+            self.params.kmeans as u64,
+            self.params.m as u64,
+        ] {
+            for b in v.to_le_bytes() {
+                eat(b);
+            }
+        }
+        h
+    }
+
     /// Check that a match configuration is structurally compatible with
     /// this index. `levels` / `leaf_size` (and `kmeans` for clouds) shape
     /// the nested partitions themselves, so a mismatch would silently
@@ -452,6 +486,29 @@ mod tests {
         // breaks byte-identity and must be refused too.
         let bad_m = QgwConfig { size: crate::qgw::PartitionSize::Count(8), ..good };
         assert!(idx.validate_config(&bad_m).is_err());
+    }
+
+    #[test]
+    fn structural_key_tracks_structural_knobs_only() {
+        let a = tiny_index(3);
+        let b = tiny_index(4); // different data, same structural knobs
+        assert_eq!(a.structural_key(), b.structural_key());
+
+        let y = cloud(120, 3);
+        let other_leaf = RefIndex::build_cloud(
+            &y,
+            None,
+            &QgwConfig { levels: 2, leaf_size: 12, ..QgwConfig::with_count(4) },
+            3,
+        );
+        assert_ne!(a.structural_key(), other_leaf.structural_key());
+        let other_m = RefIndex::build_cloud(
+            &y,
+            None,
+            &QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(6) },
+            3,
+        );
+        assert_ne!(a.structural_key(), other_m.structural_key());
     }
 
     #[test]

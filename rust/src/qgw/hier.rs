@@ -365,8 +365,8 @@ impl<'a> Substrate<'a> {
     }
 
     /// Tracked bytes of the raw substrate data (for the peak-memory
-    /// accounting in [`HierStats`]).
-    fn memory_bytes(&self) -> usize {
+    /// accounting in [`HierStats`] and the serving query cache's budget).
+    pub(crate) fn memory_bytes(&self) -> usize {
         let base = match &self.data {
             SubstrateData::Cloud(c) => c.coords().len() * 8 + c.len() * 8,
             SubstrateData::Graph { graph, measure } => {

@@ -986,6 +986,128 @@ fn prop_indexed_match_byte_identical_graph() {
     });
 }
 
+/// PR-9 serving contract: couplings served by the [`BatchEngine`] —
+/// batched with other requests, deduplicated inside a batch, or replayed
+/// from the query cache — are byte-identical to the same query served
+/// alone, cold or indexed, at every thread cap and batch composition.
+#[test]
+fn prop_batched_match_byte_identical_to_solo() {
+    use qgw::coordinator::{BatchEngine, BatchOptions, MatchRequest, QueryPayload};
+    use qgw::index::IndexRegistry;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    forall(3, |rng| {
+        let y = random_cloud(rng, 150 + rng.below(60), 3);
+        let queries: Vec<_> =
+            (0..2).map(|_| random_cloud(rng, 140 + rng.below(60), 3)).collect();
+        let (gy, muy) = ring_graph(90 + rng.below(40));
+        let (gx, mux) = ring_graph(80 + rng.below(40));
+        let seed = rng.next_u64();
+        let cfg = QgwConfig { levels: 2, leaf_size: 8, ..QgwConfig::with_count(5) };
+
+        // Solo references: the cold pipeline and the solo indexed run
+        // agree (the PR-7 contract), so either is the byte-identity
+        // baseline for the engine.
+        let index = RefIndex::build_cloud(&y, None, &cfg, seed);
+        let colds: Vec<SparseCoupling> = queries
+            .iter()
+            .map(|x| {
+                let metrics = Metrics::new();
+                let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+                pipe.seed = seed;
+                pipe.run(PipelineInput::Clouds { x, y: &y }).result.coupling.to_sparse()
+            })
+            .collect();
+        for (x, cold) in queries.iter().zip(&colds) {
+            let metrics = Metrics::new();
+            let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+            pipe.seed = seed;
+            let got = pipe.run_indexed(QueryInput::Cloud { x }, &index).unwrap();
+            assert_bitwise_equal(cold, &got.result.coupling.to_sparse());
+        }
+        let graph_cold = {
+            let metrics = Metrics::new();
+            let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+            pipe.seed = seed;
+            pipe.run(PipelineInput::Graphs {
+                x: &gx,
+                y: &gy,
+                mu_x: &mux,
+                mu_y: &muy,
+                fx: None,
+                fy: None,
+            })
+            .result
+            .coupling
+            .to_sparse()
+        };
+
+        let cloud_payload = |x: &qgw::core::PointCloud| QueryPayload::Cloud {
+            coords: x.coords().to_vec(),
+            dim: x.dim(),
+        };
+        let nx = gx.num_nodes();
+        let graph_payload = QueryPayload::Graph {
+            num_nodes: nx,
+            edges: (0..nx).map(|i| (i as u32, ((i + 1) % nx) as u32, 1.0)).collect(),
+        };
+        // One batch mixing both indexes, with a repeated payload the
+        // engine deduplicates: [q0 -> ref, q1 -> ref, gx -> rings,
+        // q0 -> ref again].
+        let composition = [0usize, 1, 2, 0];
+        let req_at = |slot: usize| MatchRequest {
+            index_name: if slot == 2 { "rings".to_string() } else { "ref".to_string() },
+            payload: if slot == 2 {
+                graph_payload.clone()
+            } else {
+                cloud_payload(&queries[slot])
+            },
+        };
+        let check = |slot: usize, got: &SparseCoupling| {
+            let want = if slot == 2 { &graph_cold } else { &colds[slot] };
+            assert_bitwise_equal(want, got);
+        };
+
+        for threads in [1usize, 4] {
+            let tcfg = QgwConfig { num_threads: threads, ..cfg.clone() };
+            let registry = Arc::new(IndexRegistry::new(1 << 30));
+            registry.insert("ref", RefIndex::build_cloud(&y, None, &tcfg, seed));
+            registry.insert("rings", RefIndex::build_graph(&gy, &muy, None, &tcfg, seed));
+            let engine = BatchEngine::new(
+                Some(Arc::clone(&registry)),
+                tcfg,
+                seed,
+                BatchOptions {
+                    queue_depth: 16,
+                    batch_window: Duration::from_millis(2),
+                    cache_bytes: 16 << 20,
+                },
+            );
+            let reqs: Vec<MatchRequest> = composition.iter().map(|&s| req_at(s)).collect();
+            let tickets = engine.try_submit_batch(reqs).expect("queue has room");
+            for (t, &slot) in tickets.iter().zip(composition.iter()) {
+                check(slot, &t.wait().expect("batched match").coupling.to_sparse());
+            }
+            // Cache-warm repeats served solo stay byte-identical too.
+            for &slot in &[0usize, 1, 2] {
+                let out = engine
+                    .try_submit(req_at(slot))
+                    .expect("queue has room")
+                    .wait()
+                    .expect("cached match");
+                check(slot, &out.coupling.to_sparse());
+            }
+            let stats = engine.stats();
+            assert!(
+                stats.cache_hits >= 3,
+                "repeat payloads missed the query cache ({} hits)",
+                stats.cache_hits
+            );
+        }
+    });
+}
+
 #[test]
 fn prop_indexed_match_byte_identical_adaptive_tolerance() {
     // Adaptive prune decisions are pure per-node scalar functions, so the

@@ -47,6 +47,14 @@
 //! throughput, the deterministic in-binary contract (cached repeats run
 //! zero stage-1 partitions; batched runs fewer than cold; replies stay
 //! byte-identical across all three series), and `BENCH_8.json`.
+//!
+//! PR 10 added the tracing-overhead profile: the same hierarchical
+//! pipeline with the span recorder off vs on (fresh [`TraceBuf`] per run,
+//! as the serve loop pays per query), asserting in-binary that couplings
+//! stay byte-identical with tracing on, that the traced run records a
+//! non-empty span tree, and (full mode) that the on/off wall-time ratio
+//! stays within the 5% budget — and emits `BENCH_9.json`
+//! (`QGW_BENCH9_JSON` overrides the path).
 
 // Benches are a separate crate target, so the library's lint attribute
 // does not reach them; same unsafe-hygiene contract as rust/src/lib.rs.
@@ -64,7 +72,7 @@ use harness::BenchStats;
 use qgw::coordinator::{
     parallel_map, parallel_map_scoped, threads_spawned_total, BatchEngine, BatchOptions,
     LatencyHistogram, MatchPipeline, MatchRequest, Metrics, PipelineInput, QueryInput,
-    QueryPayload,
+    QueryPayload, TraceBuf, TraceCtx,
 };
 use qgw::core::{uniform_measure, DenseMatrix, MmSpace, SparseCoupling};
 use qgw::data::blobs::make_blobs;
@@ -829,6 +837,90 @@ fn main() {
         write_bench8(&series, n, requests, distinct, test_mode);
     }
 
+    println!("--- tracing overhead: span recorder on vs off (BENCH_9) ---");
+    {
+        // The observability contract (EXPERIMENTS.md §Observability):
+        // recording a full span tree — one span per hierarchy node and
+        // block pair — must cost at most 5% over the untraced pipeline,
+        // and the coupling must stay byte-identical with tracing on. The
+        // byte-identity and span-count assertions are deterministic and
+        // hold in both modes; the overhead ratio is asserted at full size
+        // only, where one pipeline run is long enough that the margin is
+        // not scheduler noise.
+        let n = if test_mode { 300 } else { 4000 };
+        let leaf = 16;
+        let cfg = QgwConfig {
+            size: PartitionSize::Count(balanced_m(n, leaf, 2)),
+            levels: 2,
+            leaf_size: leaf,
+            ..QgwConfig::default()
+        };
+        let x = make_blobs(n, 3, 1.0, 10.0, &mut rng);
+        let y = make_blobs(n, 3, 1.0, 10.0, &mut rng);
+        let metrics = Metrics::new();
+        let mut pipe = MatchPipeline::new(cfg, &metrics);
+        pipe.seed = 7;
+        let input = || PipelineInput::Clouds { x: &x, y: &y };
+        let sparse_bits = |report: &qgw::coordinator::PipelineReport| -> Vec<(usize, usize, u64)> {
+            report.result.coupling.to_sparse().iter().map(|(i, j, w)| (i, j, w.to_bits())).collect()
+        };
+
+        // One warmup pair outside the timed windows, doubling as the
+        // byte-identity check.
+        let plain = pipe.run(input());
+        let buf = TraceBuf::new();
+        let traced = pipe.run_traced(input(), &TraceCtx::root(&buf));
+        let span_count = buf.finish().len();
+        assert!(
+            span_count > 0,
+            "traced pipeline run recorded no spans (recorder wired through but inert)"
+        );
+        assert_eq!(
+            sparse_bits(&plain),
+            sparse_bits(&traced),
+            "tracing changed the coupling bytes — the recorder must be passive"
+        );
+
+        let iters = if test_mode { 1 } else { 8 };
+        let off_start = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(pipe.run(input()));
+        }
+        let off = off_start.elapsed();
+        let on_start = Instant::now();
+        for _ in 0..iters {
+            // Fresh buffer per iteration — exactly what the serve loop
+            // pays per query.
+            let buf = TraceBuf::new();
+            std::hint::black_box(pipe.run_traced(input(), &TraceCtx::root(&buf)));
+            std::hint::black_box(buf.finish());
+        }
+        let on = on_start.elapsed();
+        let ratio = on.as_secs_f64() / off.as_secs_f64().max(1e-12);
+        println!(
+            "tracing overhead n={n}: off {} ns/run, on {} ns/run ({span_count} spans) -> \
+             {ratio:.4}x",
+            off.as_nanos() / iters as u128,
+            on.as_nanos() / iters as u128,
+        );
+        if !test_mode {
+            assert!(
+                ratio <= 1.05,
+                "span recording exceeded the 5% overhead budget: {ratio:.4}x over \
+                 {iters} runs"
+            );
+        }
+        write_bench9(
+            n,
+            iters,
+            off.as_nanos() / iters as u128,
+            on.as_nanos() / iters as u128,
+            ratio,
+            span_count,
+            test_mode,
+        );
+    }
+
     write_json(&records, test_mode);
 }
 
@@ -969,6 +1061,44 @@ fn write_bench6(records: &[PoolRecord], test_mode: bool) {
         ));
     }
     out.push_str("]\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// BENCH_9.json — the tracing-overhead trajectory: the same hierarchical
+/// pipeline with the span recorder off vs on (fresh buffer per run, as
+/// the serve loop pays per query), the on/off ratio asserted under the 5%
+/// budget in full mode, and the recorded span count (schema documented in
+/// EXPERIMENTS.md §Observability).
+#[allow(clippy::too_many_arguments)]
+fn write_bench9(
+    n: usize,
+    iters: usize,
+    off_ns: u128,
+    on_ns: u128,
+    ratio: f64,
+    span_count: usize,
+    test_mode: bool,
+) {
+    let path = std::env::var("QGW_BENCH9_JSON").unwrap_or_else(|_| {
+        if test_mode {
+            std::env::temp_dir().join("BENCH_9_smoke.json").to_string_lossy().into_owned()
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_9.json").to_string()
+        }
+    });
+    let out = format!(
+        "[\n  {{\"op\": \"_meta\", \"note\": \"measured by cargo bench --bench micro ({} \
+         mode); span_count is deterministic and couplings must stay byte-identical with \
+         tracing on; timings are machine-dependent and the on/off ratio must stay <= 1.05 \
+         in full mode\"}},\n  {{\"op\": \"pipeline_untraced\", \"n\": {n}, \"iters\": \
+         {iters}, \"ns_per_run\": {off_ns}}},\n  {{\"op\": \"pipeline_traced\", \"n\": {n}, \
+         \"iters\": {iters}, \"ns_per_run\": {on_ns}, \"span_count\": {span_count}}},\n  \
+         {{\"op\": \"tracing_overhead\", \"n\": {n}, \"ratio\": {ratio:.4}}}\n]\n",
+        if test_mode { "test" } else { "full" },
+    );
     match std::fs::write(&path, out) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

@@ -10,6 +10,7 @@
 //! qgw index build --class dog --n 20000 --levels 2 --leaf-size 32 [--out PATH]
 //! qgw index match --index PATH --class dog --n 2000 [--queries K]
 //! qgw index info  --index PATH
+//! qgw trace       [--log PATH | --addr HOST:PORT] [--id N]   # render a span tree
 //! qgw artifacts   [--dir artifacts]     # report loaded AOT artifacts
 //! qgw info
 //! ```
@@ -112,13 +113,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(&args),
         "query" => cmd_query(&args),
         "index" => cmd_index(&args),
+        "trace" => cmd_trace(&args),
         "artifacts" => cmd_artifacts(&args),
         "info" => {
             print_usage();
             Ok(())
         }
         other => {
-            bail!("unknown command {other:?} (try: match, experiment, serve, index, artifacts, info)")
+            bail!("unknown command {other:?} (try: match, experiment, serve, index, trace, artifacts, info)")
         }
     }
 }
@@ -258,6 +260,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(registry) = load_indices(args)? {
         svc = svc.with_registry(registry, cfg, seed);
     }
+    if let Some(store) = trace_store(args)? {
+        println!(
+            "tracing: ring={} slow_query_ms={} log={}",
+            store.ring_cap(),
+            store.slow_query_ms(),
+            store.log_path().map_or_else(|| "off".to_string(), |p| p.display().to_string())
+        );
+        svc = svc.with_trace_store(store);
+    }
     let svc = std::sync::Arc::new(svc);
     let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let opts = serve_options(args)?;
@@ -272,7 +283,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "protocol: QUERY <i> | MAP <i> | MATCH <name> <n> <dim> | \
-         MATCHG <name> <nodes> <edges> | INDEXES | STATS | QUIT"
+         MATCHG <name> <nodes> <edges> | INDEXES | STATS [FULL] | METRICS | \
+         TRACE [<id>] | QUIT"
     );
     // Block forever (ctrl-c to exit).
     loop {
@@ -302,6 +314,33 @@ fn serve_options(args: &Args) -> Result<ServeOptions> {
         cache_bytes: args.usize_or("query-cache-bytes", settings.query_cache_bytes)?,
         max_conns: args.usize_or("max-conns", settings.max_conns)?.max(1),
     })
+}
+
+/// Build the serve-loop trace store from `--trace` / `--trace-log PATH` /
+/// `--slow-query-ms MS` / `--trace-ring N` (or the `[serve]` config
+/// mirrors; flags win). Tracing turns on when `--trace` is set or a log
+/// path is given; it is passive — couplings are byte-identical either way.
+fn trace_store(args: &Args) -> Result<Option<std::sync::Arc<crate::coordinator::TraceStore>>> {
+    let settings = match args.flag("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.serve_settings(),
+        None => Config::parse("")?.serve_settings(),
+    };
+    let log = args
+        .flag("trace-log")
+        .map(String::from)
+        .or_else(|| settings.trace_log.clone());
+    if !(args.bool_flag("trace") || settings.trace || log.is_some()) {
+        return Ok(None);
+    }
+    let ring = args.usize_or("trace-ring", settings.trace_ring)?.max(1);
+    let slow_ms = args.usize_or("slow-query-ms", settings.slow_query_ms as usize)? as u64;
+    let store = crate::coordinator::TraceStore::new(
+        ring,
+        slow_ms,
+        log.as_deref().map(std::path::Path::new),
+    )
+    .with_context(|| format!("opening --trace-log {log:?}"))?;
+    Ok(Some(std::sync::Arc::new(store)))
 }
 
 /// Load the `--index p1,p2,..` files into a registry (named by file stem),
@@ -459,6 +498,64 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `qgw trace` — render one recorded query trace as an indented
+/// flamegraph-style tree with per-span self/total wall times.
+///
+/// Exactly one source:
+///   `--log PATH`        JSONL written by `qgw serve --trace-log PATH`
+///   `--addr HOST:PORT`  live server (sends the `TRACE [<id>]` verb)
+/// `--id N` selects a trace id; the default is the most recent one.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use crate::coordinator::{parse_trace_json, render_tree};
+    let id = match args.flag("id") {
+        Some(v) => Some(v.parse::<u64>().with_context(|| format!("--id {v:?}"))?),
+        None => None,
+    };
+    let line = match (args.flag("log"), args.flag("addr")) {
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading --log {path}"))?;
+            // Last matching line wins: the log appends in completion order,
+            // so without --id this picks the most recent trace.
+            let mut picked = None;
+            for l in text.lines().filter(|l| !l.trim().is_empty()) {
+                let t = parse_trace_json(l)
+                    .map_err(|e| anyhow::anyhow!("parsing --log {path}: {e}"))?;
+                if id.map_or(true, |want| t.id == want) {
+                    picked = Some(l.to_string());
+                }
+            }
+            picked.ok_or_else(|| match id {
+                Some(want) => anyhow::anyhow!("no trace {want} in {path}"),
+                None => anyhow::anyhow!("{path} holds no traces"),
+            })?
+        }
+        (None, Some(addr)) => {
+            use std::io::{BufRead, BufReader, Write as IoWrite};
+            let mut stream = std::net::TcpStream::connect(addr)
+                .with_context(|| format!("connecting to {addr} (is `qgw serve --trace` running?)"))?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            match id {
+                Some(want) => writeln!(stream, "TRACE {want}")?,
+                None => writeln!(stream, "TRACE")?,
+            }
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let line = line.trim_end().to_string();
+            if let Some(err) = line.strip_prefix("ERR ") {
+                bail!("server: {err}");
+            }
+            writeln!(stream, "QUIT")?;
+            line
+        }
+        _ => bail!("usage: qgw trace (--log PATH | --addr HOST:PORT) [--id N]"),
+    };
+    let trace =
+        parse_trace_json(&line).map_err(|e| anyhow::anyhow!("parsing trace JSON: {e}"))?;
+    print!("{}", render_tree(&trace));
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(args.flag("dir").unwrap_or("artifacts"));
     match crate::runtime::XlaEngine::load(&dir)? {
@@ -488,6 +585,9 @@ fn print_usage() {
            index       build: precompute + persist a reference index (--out PATH)\n\
                        match: match query shapes against a loaded index (--queries K)\n\
                        info:  describe a persisted index\n\
+           trace       render a recorded query span tree (--log PATH from\n\
+                       `serve --trace-log`, or --addr HOST:PORT live; --id N\n\
+                       picks a trace, default the most recent)\n\
            artifacts   report AOT artifacts available to the runtime\n\
            info        this message\n\
          \n\
@@ -525,6 +625,20 @@ fn print_usage() {
                                   config (default 64 MiB; 0 disables)\n\
            --max-conns N          concurrent-connection cap for the evented\n\
                                   serving loop (default 256)\n\
+         \n\
+         observability knobs (serve — also the `[serve]` config section;\n\
+         tracing is passive: couplings are byte-identical on or off):\n\
+           --trace                record per-query span trees, served by the\n\
+                                  TRACE verb and `qgw trace` (default off)\n\
+           --trace-log PATH       append one JSON line per completed trace\n\
+                                  (implies --trace)\n\
+           --slow-query-ms MS     log `[serve] slow_query_ms=..` to stderr\n\
+                                  for queries over MS (default 0 = off)\n\
+           --trace-ring N         recent traces kept for TRACE/`qgw trace`\n\
+                                  (default 64)\n\
+           METRICS verb           Prometheus text exposition of engine,\n\
+                                  pool, cache, and latency metrics\n\
+           STATS FULL verb        multi-line stats grouped by subsystem\n\
          \n\
          thread knobs (match/serve/index — couplings are byte-identical at\n\
          every setting of both):\n\

@@ -188,19 +188,32 @@ impl Config {
             batch_window_ms: self.usize_or("serve.batch_window_ms", 2),
             query_cache_bytes: self.usize_or("serve.query_cache_bytes", 64 * 1024 * 1024),
             max_conns: self.usize_or("serve.max_conns", 256).max(1),
+            trace: self.bool_or("serve.trace", false),
+            trace_log: self.get("serve.trace_log").and_then(|v| v.as_str()).map(String::from),
+            slow_query_ms: self.usize_or("serve.slow_query_ms", 0) as u64,
+            trace_ring: self.usize_or("serve.trace_ring", 64).max(1),
         }
     }
 }
 
 /// Parsed `[serve]` section: knobs for the batched query engine behind
 /// `qgw serve` (mirrored by the `--queue-depth`, `--batch-window`,
-/// `--query-cache-bytes`, and `--max-conns` flags, which win).
-#[derive(Clone, Copy, Debug)]
+/// `--query-cache-bytes`, `--max-conns`, `--trace`, `--trace-log`,
+/// `--slow-query-ms`, and `--trace-ring` flags, which win).
+#[derive(Clone, Debug)]
 pub struct ServeSettings {
     pub queue_depth: usize,
     pub batch_window_ms: usize,
     pub query_cache_bytes: usize,
     pub max_conns: usize,
+    /// Record per-query span trees (implied by any other trace knob).
+    pub trace: bool,
+    /// JSONL export path for finished traces.
+    pub trace_log: Option<String>,
+    /// Log queries slower than this to stderr; 0 disables the check.
+    pub slow_query_ms: u64,
+    /// How many finished traces the in-memory ring keeps for `TRACE`.
+    pub trace_ring: usize,
 }
 
 /// Parsed `[index]` section: where the CLI reads/writes index files and
@@ -394,6 +407,28 @@ full = false
         let z = Config::parse("[serve]\nqueue_depth = 0\nmax_conns = 0\n").unwrap();
         assert_eq!(z.serve_settings().queue_depth, 1);
         assert_eq!(z.serve_settings().max_conns, 1);
+    }
+
+    #[test]
+    fn serve_trace_knobs_parse_and_default_off() {
+        let c = Config::parse(
+            "[serve]\ntrace = true\ntrace_log = \"traces.jsonl\"\nslow_query_ms = 250\ntrace_ring = 8\n",
+        )
+        .unwrap();
+        let s = c.serve_settings();
+        assert!(s.trace);
+        assert_eq!(s.trace_log.as_deref(), Some("traces.jsonl"));
+        assert_eq!(s.slow_query_ms, 250);
+        assert_eq!(s.trace_ring, 8);
+        // Defaults: tracing fully off, sane ring size.
+        let d = Config::parse("").unwrap().serve_settings();
+        assert!(!d.trace);
+        assert_eq!(d.trace_log, None);
+        assert_eq!(d.slow_query_ms, 0);
+        assert_eq!(d.trace_ring, 64);
+        // A zero ring clamps to 1 (the store always keeps the latest).
+        let z = Config::parse("[serve]\ntrace_ring = 0\n").unwrap();
+        assert_eq!(z.serve_settings().trace_ring, 1);
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::graph::Graph;
 use crate::index::{IndexKind, IndexRegistry, RefIndex};
 use crate::qgw::{QgwConfig, QuantizationCoupling, Substrate};
 
+use super::trace::{names as span, SpanMeta, SpanStart, TraceBuf, TraceCtx, TraceStore};
 use super::{MatchPipeline, Metrics, PreparedQuery};
 
 // ---------------------------------------------------------------------------
@@ -329,6 +330,12 @@ struct PendingJob {
     payload: QueryPayload,
     ticket: Arc<TicketState>,
     enqueued: Instant,
+    /// Span buffer for this request, created at submit time so its
+    /// origin timestamps the enqueue (the `admission_wait` span measures
+    /// enqueue → scheduler pickup). `None` when tracing is off.
+    buf: Option<Arc<TraceBuf>>,
+    /// Queue occupancy observed just before this job was pushed.
+    depth_at_admit: usize,
 }
 
 struct EngineShared {
@@ -345,6 +352,9 @@ struct EngineShared {
     max_batch: AtomicU64,
     stage1_partitions: AtomicU64,
     refused: AtomicU64,
+    /// Trace store shared with the service's `TRACE` verb; `None` when
+    /// tracing is off, in which case no job carries a span buffer.
+    trace: Option<Arc<TraceStore>>,
 }
 
 /// Point-in-time snapshot of the engine's counters (the `STATS` verb's
@@ -403,6 +413,21 @@ impl BatchEngine {
         seed: u64,
         opts: BatchOptions,
     ) -> BatchEngine {
+        Self::with_trace(registry, qgw, seed, opts, None)
+    }
+
+    /// [`BatchEngine::new`] plus a trace store: every batched request
+    /// records a per-query span tree (admission wait, queue depth at
+    /// admit, stage-1 outcome, and the full hierarchy recursion) into
+    /// `trace`. Tracing is passive observation — coupling bytes and
+    /// reply strings are identical with it on or off.
+    pub fn with_trace(
+        registry: Option<Arc<IndexRegistry>>,
+        qgw: QgwConfig,
+        seed: u64,
+        opts: BatchOptions,
+        trace: Option<Arc<TraceStore>>,
+    ) -> BatchEngine {
         let cache_bytes = opts.cache_bytes;
         let shared = Arc::new(EngineShared {
             registry,
@@ -418,6 +443,7 @@ impl BatchEngine {
             max_batch: AtomicU64::new(0),
             stage1_partitions: AtomicU64::new(0),
             refused: AtomicU64::new(0),
+            trace,
         });
         let worker = Arc::clone(&shared);
         super::count_thread_spawn();
@@ -435,12 +461,15 @@ impl BatchEngine {
             self.shared.refused.fetch_add(1, Ordering::Relaxed);
             return None;
         }
+        let depth_at_admit = q.len();
         let ticket = Arc::new(TicketState { slot: Mutex::new(None), ready: Condvar::new() });
         q.push_back(PendingJob {
             index_name: req.index_name,
             payload: req.payload,
             ticket: Arc::clone(&ticket),
             enqueued: Instant::now(),
+            buf: self.shared.trace.as_ref().map(|_| TraceBuf::new()),
+            depth_at_admit,
         });
         drop(q);
         self.shared.queue_cv.notify_one();
@@ -460,6 +489,7 @@ impl BatchEngine {
         let now = Instant::now();
         let mut tickets = Vec::with_capacity(reqs.len());
         for req in reqs {
+            let depth_at_admit = q.len();
             let ticket =
                 Arc::new(TicketState { slot: Mutex::new(None), ready: Condvar::new() });
             q.push_back(PendingJob {
@@ -467,6 +497,8 @@ impl BatchEngine {
                 payload: req.payload,
                 ticket: Arc::clone(&ticket),
                 enqueued: now,
+                buf: self.shared.trace.as_ref().map(|_| TraceBuf::new()),
+                depth_at_admit,
             });
             tickets.push(Ticket(ticket));
         }
@@ -575,8 +607,24 @@ fn serve_group(shared: &EngineShared, name: &str, index: &RefIndex, group: Vec<P
     // the cache extends the sharing across batches.
     let mut prepared_local: BTreeMap<u64, Result<Arc<PreparedQuery>, String>> = BTreeMap::new();
     for job in group {
+        let root = match &job.buf {
+            Some(buf) => TraceCtx::root(buf),
+            None => TraceCtx::off(),
+        };
+        if let Some(buf) = &job.buf {
+            // What the client actually waited before the scheduler
+            // picked the job up (the buffer's origin is the enqueue),
+            // plus the queue occupancy it saw at admission — a value
+            // span with no duration.
+            root.emit_leaf(span::ADMISSION_WAIT, buf.origin_start(), SpanMeta::default());
+            root.emit_leaf(
+                span::QUEUE_DEPTH_AT_ADMIT,
+                SpanStart::empty(),
+                SpanMeta { value: job.depth_at_admit as f64, ..SpanMeta::default() },
+            );
+        }
         if job.payload.kind() != index.kind() {
-            let msg = match job.payload {
+            let msg = match &job.payload {
                 QueryPayload::Cloud { .. } => format!(
                     "index {name:?} is a {} reference; MATCH uploads are point clouds",
                     index.kind().name()
@@ -586,50 +634,96 @@ fn serve_group(shared: &EngineShared, name: &str, index: &RefIndex, group: Vec<P
                     index.kind().name()
                 ),
             };
-            fulfill(&job.ticket, Err(msg));
+            finish_job(shared, name, &job, &root, span::OUT_ERROR, Err(msg));
             continue;
         }
         let hash = job.payload.content_hash();
-        let prepared = prepared_local
-            .entry(hash)
-            .or_insert_with(|| {
-                if let Some(p) = shared.cache.get(hash, skey) {
-                    return Ok(p);
-                }
-                shared.stage1_partitions.fetch_add(1, Ordering::Relaxed);
-                match job.payload.to_substrate() {
-                    Ok(sub) => {
-                        let p = Arc::new(pipe.prepare_query(sub));
-                        shared.cache.put(hash, skey, Arc::clone(&p));
-                        Ok(p)
+        // Stage-1 outcome for this job's span: `prepared` (this job
+        // paid for the partition), `shared` (another job in this batch
+        // paid), `cache_hit` (a previous batch paid). The pipeline's
+        // `run_prepared_traced` leaves this span to us — it is the only
+        // layer that knows which of the three happened.
+        let pipe_ctx = root.child(span::PIPELINE);
+        let s1_start = pipe_ctx.start();
+        let (prepared, s1_outcome) = match prepared_local.get(&hash) {
+            Some(r) => (r.clone(), span::OUT_SHARED),
+            None => {
+                let (r, out) = if let Some(p) = shared.cache.get(hash, skey) {
+                    (Ok(p), span::OUT_CACHE_HIT)
+                } else {
+                    shared.stage1_partitions.fetch_add(1, Ordering::Relaxed);
+                    match job.payload.to_substrate() {
+                        Ok(sub) => {
+                            let p = Arc::new(pipe.prepare_query(sub));
+                            shared.cache.put(hash, skey, Arc::clone(&p));
+                            (Ok(p), span::OUT_PREPARED)
+                        }
+                        Err(e) => (Err(e), span::OUT_ERROR),
                     }
-                    Err(e) => Err(e),
-                }
-            })
-            .clone();
+                };
+                prepared_local.insert(hash, r.clone());
+                (r, out)
+            }
+        };
+        pipe_ctx.emit_leaf(
+            span::STAGE1_PARTITION,
+            s1_start,
+            SpanMeta { outcome: s1_outcome, ..SpanMeta::default() },
+        );
         let prepared = match prepared {
             Ok(p) => p,
             Err(e) => {
-                fulfill(&job.ticket, Err(e));
+                finish_job(shared, name, &job, &root, span::OUT_ERROR, Err(e));
                 continue;
             }
         };
         // A panicking solver must fail one request, not kill the
         // scheduler (and with it every future request).
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            pipe.run_prepared(&prepared, index)
+            pipe.run_prepared_traced(&prepared, index, &root)
         }));
-        let result = match run {
-            Ok(Ok(report)) => Ok(MatchOutcome {
-                summary: match_summary(prepared.len(), index, &report),
-                coupling: Arc::new(report.result.coupling),
-                latency: job.enqueued.elapsed(),
-            }),
-            Ok(Err(e)) => Err(e.to_string()),
-            Err(_) => Err("internal error while serving match".to_string()),
+        let (outcome, result) = match run {
+            Ok(Ok(report)) => (
+                span::OUT_OK,
+                Ok(MatchOutcome {
+                    summary: match_summary(prepared.len(), index, &report),
+                    coupling: Arc::new(report.result.coupling),
+                    latency: job.enqueued.elapsed(),
+                }),
+            ),
+            Ok(Err(e)) => (span::OUT_ERROR, Err(e.to_string())),
+            Err(_) => {
+                (span::OUT_ERROR, Err("internal error while serving match".to_string()))
+            }
         };
-        fulfill(&job.ticket, result);
+        finish_job(shared, name, &job, &root, outcome, result);
     }
+}
+
+/// Fulfill a ticket, first closing the job's `query` span and recording
+/// the finished trace in the store — so a client that observes its
+/// reply can always `TRACE` the request that produced it.
+fn finish_job(
+    shared: &EngineShared,
+    index_name: &str,
+    job: &PendingJob,
+    root: &TraceCtx,
+    outcome: &'static str,
+    result: Result<MatchOutcome, String>,
+) {
+    if let (Some(buf), Some(store)) = (&job.buf, &shared.trace) {
+        root.emit_here(
+            span::QUERY,
+            buf.origin_start(),
+            SpanMeta { outcome, ..SpanMeta::default() },
+        );
+        let verb = match &job.payload {
+            QueryPayload::Cloud { .. } => "MATCH",
+            QueryPayload::Graph { .. } => "MATCHG",
+        };
+        store.push(verb, index_name, job.payload.len(), buf);
+    }
+    fulfill(&job.ticket, result);
 }
 
 /// The protocol's `MATCH` success line — one formatter for the batched
@@ -650,7 +744,8 @@ fn match_summary(n: usize, index: &RefIndex, report: &super::PipelineReport) -> 
 /// Serve one request inline on the caller's thread (the legacy
 /// thread-pool path). Same prepare/run split, same summary formatter,
 /// and same error strings as the scheduler — byte-identical replies by
-/// construction.
+/// construction. The legacy path does not record traces (it has no
+/// admission queue to observe); `--trace` implies the batched loop.
 pub(crate) fn solo_match(
     registry: Option<&Arc<IndexRegistry>>,
     qgw: &QgwConfig,
@@ -1074,6 +1169,61 @@ mod tests {
             .wait()
             .unwrap_err();
         assert_eq!(err, "uploaded graph is not connected");
+    }
+
+    #[test]
+    fn traced_engine_records_span_trees_and_identical_bytes() {
+        use crate::coordinator::trace::TraceStore;
+        let (registry, cfg) = registry_with_cloud_index(21);
+        let payload = cloud_payload(50, 22);
+        // Reference: the same request on an untraced engine.
+        let plain = engine(Arc::clone(&registry), &cfg, BatchOptions::default());
+        let base = plain.try_submit(shapes_req(payload.clone())).unwrap().wait().unwrap();
+
+        let store = Arc::new(TraceStore::new(8, 0, None).unwrap());
+        let traced = BatchEngine::with_trace(
+            Some(registry),
+            cfg.clone(),
+            7,
+            BatchOptions::default(),
+            Some(Arc::clone(&store)),
+        );
+        let out = traced.try_submit(shapes_req(payload.clone())).unwrap().wait().unwrap();
+        // Tracing is passive: coupling bytes and the reply line are
+        // identical with it on or off.
+        crate::testutil::assert_sparse_bitwise_equal(
+            &base.coupling.to_sparse(),
+            &out.coupling.to_sparse(),
+        );
+        assert_eq!(base.summary, out.summary);
+
+        let trace = store.latest().expect("trace recorded at fulfill");
+        assert_eq!(trace.verb, "MATCH");
+        assert_eq!(trace.index, "shapes");
+        assert_eq!(trace.n, 50);
+        let paths: Vec<&str> = trace.spans.iter().map(|s| s.path.as_str()).collect();
+        for want in [
+            "query",
+            "query/admission_wait",
+            "query/queue_depth_at_admit",
+            "query/pipeline",
+            "query/pipeline/stage1_partition",
+            "query/pipeline/hier/n0",
+            "query/pipeline/hier/n0/global_align",
+        ] {
+            assert!(paths.contains(&want), "missing span {want:?} in {paths:?}");
+        }
+        let s1 = trace.spans.iter().find(|s| s.name == "stage1_partition").unwrap();
+        assert_eq!(s1.outcome, "prepared", "first sight of a payload pays stage 1");
+
+        // A repeat of the same payload is served from the query cache,
+        // and its trace says so.
+        let _ = traced.try_submit(shapes_req(payload)).unwrap().wait().unwrap();
+        let trace = store.latest().unwrap();
+        let s1 = trace.spans.iter().find(|s| s.name == "stage1_partition").unwrap();
+        assert_eq!(s1.outcome, "cache_hit");
+        assert_eq!(store.recorded_total(), 2);
+        assert_eq!(store.ring_len(), 2);
     }
 
     #[test]

@@ -32,15 +32,16 @@ pub const LATENCY_BUCKETS: usize = 40;
 /// within one power of two — good enough for serving dashboards, and
 /// cheap enough (one increment per sample, no allocation after
 /// construction) to sit on the request hot path.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LatencyHistogram {
     counts: [u64; LATENCY_BUCKETS],
     total: u64,
+    sum_us: u64,
 }
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
-        Self { counts: [0; LATENCY_BUCKETS], total: 0 }
+        Self { counts: [0; LATENCY_BUCKETS], total: 0, sum_us: 0 }
     }
 }
 
@@ -68,16 +69,58 @@ impl LatencyHistogram {
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.counts[Self::bucket_of(d.as_micros())] += 1;
+        let us = d.as_micros();
+        self.counts[Self::bucket_of(us)] += 1;
         self.total += 1;
+        self.sum_us = self.sum_us.saturating_add(us.min(u64::MAX as u128) as u64);
     }
 
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Sum of all recorded samples in microseconds (saturating). Feeds
+    /// the Prometheus `_sum` series; unlike quantiles it is exact, not
+    /// bucket-rounded.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Fold another histogram into this one, bucket-wise. Merging is
+    /// commutative and associative, and a merged histogram reports the
+    /// same quantile bounds as if every sample had been recorded into
+    /// one histogram — buckets are fixed, so no re-binning happens.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *mine += theirs;
+        }
+        self.total += other.total;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+    }
+
+    /// All `LATENCY_BUCKETS` buckets as `(upper_bound_us, cumulative_count)`
+    /// pairs, ascending — the Prometheus `le` series shape. The final
+    /// pair's cumulative count always equals [`count`](Self::count);
+    /// empty buckets repeat the running total.
+    pub fn cumulative_buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts.iter().enumerate().scan(0u64, |cum, (i, &c)| {
+            *cum += c;
+            Some((Self::upper_bound_us(i), *cum))
+        })
+    }
+
     /// Upper bound in microseconds of the bucket holding quantile `q`
     /// (`0.0..=1.0`); `None` when no samples have been recorded.
+    ///
+    /// Semantics worth stating exactly (they are test-pinned):
+    ///
+    /// * The reported value is always a **bucket upper bound**, never an
+    ///   interpolated sample value, so it deterministically over-estimates
+    ///   by at most one power of two.
+    /// * `q = 0.0` clamps to rank 1, the *first* occupied bucket's upper
+    ///   bound — i.e. the minimum sample rounded up, not `0`.
+    /// * With a single sample, every `q` lands on that sample's bucket:
+    ///   `quantile_us(0.0) == quantile_us(1.0)`.
     pub fn quantile_us(&self, q: f64) -> Option<u64> {
         if self.total == 0 {
             return None;
@@ -151,6 +194,25 @@ impl Metrics {
     /// when the verb has no samples.
     pub fn latency_quantile_us(&self, verb: &str, q: f64) -> Option<u64> {
         self.inner.lock().unwrap().latencies.get(verb).and_then(|h| h.quantile_us(q))
+    }
+
+    /// Snapshot of every per-verb latency histogram, in verb order.
+    /// Clones under the lock so exporters can render without holding it.
+    pub fn latencies_snapshot(&self) -> Vec<(String, LatencyHistogram)> {
+        let inner = self.inner.lock().unwrap();
+        inner.latencies.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    /// Snapshot of every counter, in name order.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().unwrap();
+        inner.counters.iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+
+    /// Snapshot of every stage duration, in stage order.
+    pub fn durations_snapshot(&self) -> Vec<(String, Duration)> {
+        let inner = self.inner.lock().unwrap();
+        inner.durations.iter().map(|(k, &v)| (k.clone(), v)).collect()
     }
 
     /// `lat_<verb>_p50_us=.. lat_<verb>_p99_us=.. lat_<verb>_n=..` for
@@ -279,6 +341,84 @@ mod tests {
         // Huge samples land in the final bucket instead of overflowing.
         h.record(Duration::from_secs(1 << 40));
         assert_eq!(h.quantile_us(1.0), Some(1u64 << (LATENCY_BUCKETS - 1)));
+    }
+
+    #[test]
+    fn quantile_zero_is_first_occupied_bucket_bound_and_single_sample_is_flat() {
+        // q=0.0 clamps to rank 1: the minimum sample's bucket upper
+        // bound, not zero.
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100)); // [64,128) -> bound 128
+        h.record(Duration::from_micros(5_000)); // [4096,8192) -> bound 8192
+        assert_eq!(h.quantile_us(0.0), Some(128));
+        // A single sample answers every quantile with its own bucket.
+        let mut one = LatencyHistogram::new();
+        one.record(Duration::from_micros(300)); // [256,512) -> bound 512
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.quantile_us(q), Some(512), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one_histogram() {
+        let samples_a = [3u64, 90, 700, 700];
+        let samples_b = [1u64, 15_000];
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut combined = LatencyHistogram::new();
+        for &us in &samples_a {
+            a.record(Duration::from_micros(us));
+            combined.record(Duration::from_micros(us));
+        }
+        for &us in &samples_b {
+            b.record(Duration::from_micros(us));
+            combined.record(Duration::from_micros(us));
+        }
+        a.merge(&b);
+        assert_eq!(a, combined);
+        assert_eq!(a.count(), 6);
+        assert_eq!(a.sum_us(), samples_a.iter().sum::<u64>() + samples_b.iter().sum::<u64>());
+        // Merging an empty histogram is the identity.
+        let before = a.clone();
+        a.merge(&LatencyHistogram::new());
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn cumulative_buckets_cover_all_buckets_and_are_monotone() {
+        let mut h = LatencyHistogram::new();
+        for us in [1u64, 3, 3, 900] {
+            h.record(Duration::from_micros(us));
+        }
+        let cum: Vec<(u64, u64)> = h.cumulative_buckets().collect();
+        assert_eq!(cum.len(), LATENCY_BUCKETS);
+        assert_eq!(cum.last().unwrap().1, h.count());
+        for pair in cum.windows(2) {
+            assert!(pair[1].1 >= pair[0].1, "cumulative counts must be monotone");
+            assert!(pair[1].0 > pair[0].0, "bucket bounds must be strictly ascending");
+        }
+        // Spot-check against the sparse accessor: cumulative at each
+        // occupied bound equals the running sum of bucket counts.
+        assert!(cum.contains(&(2, 1)));
+        assert!(cum.contains(&(4, 3)));
+        assert!(cum.contains(&(1024, 4)));
+    }
+
+    #[test]
+    fn snapshots_expose_registry_contents() {
+        let m = Metrics::new();
+        m.incr("hier_nodes", 5);
+        m.add_duration("partition", Duration::from_millis(250));
+        m.observe_latency("match", Duration::from_micros(700));
+        assert_eq!(m.counters_snapshot(), vec![("hier_nodes".to_string(), 5)]);
+        let durs = m.durations_snapshot();
+        assert_eq!(durs.len(), 1);
+        assert_eq!(durs[0].0, "partition");
+        let lats = m.latencies_snapshot();
+        assert_eq!(lats.len(), 1);
+        assert_eq!(lats[0].0, "match");
+        assert_eq!(lats[0].1.count(), 1);
+        assert_eq!(lats[0].1.sum_us(), 700);
     }
 
     #[test]

@@ -12,6 +12,7 @@ mod metrics;
 mod pipeline;
 mod pool;
 mod service;
+pub mod trace;
 
 pub(crate) use pool::{count_thread_spawn, lock_recover, SendPtr};
 
@@ -23,6 +24,10 @@ pub use metrics::{LatencyHistogram, Metrics, StageTimer, LATENCY_BUCKETS};
 pub use pipeline::{MatchPipeline, PipelineInput, PipelineReport, PreparedQuery, QueryInput};
 pub use pool::{
     effective_threads, parallel_map, parallel_map_scoped, set_global_pool_size,
-    threads_spawned_total, ComputePool, ThreadPool,
+    threads_spawned_total, ComputePool, PoolStats, ThreadPool,
 };
 pub use service::{MatchService, ServeOptions};
+pub use trace::{
+    parse_trace_json, render_tree, trace_to_json, PromText, QueryTrace, SpanMeta, SpanRecord,
+    SpanStart, TraceBuf, TraceCtx, TraceStore,
+};

@@ -41,10 +41,11 @@ use crate::graph::Graph;
 use crate::index::RefIndex;
 use crate::prng::Pcg32;
 use crate::qgw::{
-    hier_match_indexed, hier_match_quantized, split_seed, stage_partition, FeatureSet,
-    GlobalAligner, PolicyAligner, QgwConfig, QgwResult, Substrate,
+    hier_match_indexed_traced, hier_match_quantized_traced, split_seed, stage_partition,
+    FeatureSet, GlobalAligner, PolicyAligner, QgwConfig, QgwResult, Substrate,
 };
 
+use super::trace::{names as span, SpanMeta, SpanStart, TraceCtx};
 use super::Metrics;
 
 /// What is being matched.
@@ -137,6 +138,15 @@ impl<'a> MatchPipeline<'a> {
     }
 
     pub fn run(&self, input: PipelineInput<'_>) -> PipelineReport {
+        self.run_traced(input, &TraceCtx::off())
+    }
+
+    /// [`MatchPipeline::run`] with a span recorder attached. `trace` is
+    /// the query-root context; this stage records `pipeline`,
+    /// `pipeline/stage1_partition`, and the hierarchy's subtree below
+    /// `pipeline/hier`. Tracing never touches result bytes.
+    pub fn run_traced(&self, input: PipelineInput<'_>, trace: &TraceCtx) -> PipelineReport {
+        let pipe_ctx = trace.child(span::PIPELINE);
         let total_start = Instant::now();
         // Per-side seed streams: lane 0 drives the query (X) partition,
         // lane 1 the reference (Y) partition, lane 2 the hierarchy
@@ -182,8 +192,20 @@ impl<'a> MatchPipeline<'a> {
         );
         let partition_secs = part_start.elapsed().as_secs_f64();
         self.metrics.add_duration("partition", part_start.elapsed());
+        pipe_ctx.emit_leaf(
+            span::STAGE1_PARTITION,
+            SpanStart::at(part_start),
+            SpanMeta { detail: "cold", ..SpanMeta::default() },
+        );
 
-        self.spine(total_start, partition_secs, &sx, &qx, RefSide::Cold { sub: &sy, q: &qy })
+        self.spine(
+            total_start,
+            partition_secs,
+            &sx,
+            &qx,
+            RefSide::Cold { sub: &sy, q: &qy },
+            &pipe_ctx,
+        )
     }
 
     /// The shared execution tail of cold and indexed matching: resolve the
@@ -199,6 +221,7 @@ impl<'a> MatchPipeline<'a> {
         sx: &Substrate<'_>,
         qx: &QuantizedSpace,
         reference: RefSide<'_>,
+        pipe_ctx: &TraceCtx,
     ) -> PipelineReport {
         let hier_seed = split_seed(self.seed, 2);
         let policy_aligner = PolicyAligner::from_config(&self.qgw);
@@ -206,6 +229,7 @@ impl<'a> MatchPipeline<'a> {
             Some(a) => a,
             None => &policy_aligner,
         };
+        let hier_ctx = pipe_ctx.child(span::HIER);
 
         // --- Stages 2+3: every substrate goes through the hierarchy ------
         // (`hier_match_quantized` gates the fused blend itself: `self.fused`
@@ -213,13 +237,15 @@ impl<'a> MatchPipeline<'a> {
         let (m_y, hres) = match reference {
             RefSide::Cold { sub, q } => (
                 q.num_blocks(),
-                hier_match_quantized(sx, sub, qx, q, &self.qgw, self.fused, aligner, hier_seed),
+                hier_match_quantized_traced(
+                    sx, sub, qx, q, &self.qgw, self.fused, aligner, hier_seed, &hier_ctx,
+                ),
             ),
             RefSide::Indexed(index) => {
                 self.metrics.incr("indexed_matches", 1);
                 (
                     index.root().num_blocks(),
-                    hier_match_indexed(
+                    hier_match_indexed_traced(
                         sx,
                         qx,
                         index.root(),
@@ -227,6 +253,7 @@ impl<'a> MatchPipeline<'a> {
                         self.fused,
                         aligner,
                         hier_seed,
+                        &hier_ctx,
                     ),
                 )
             }
@@ -237,6 +264,7 @@ impl<'a> MatchPipeline<'a> {
         self.metrics.add_duration("global_align", Duration::from_secs_f64(hres.global_secs));
         self.metrics.add_duration("local+assemble", Duration::from_secs_f64(hres.local_secs));
         self.metrics.incr("local_matchings", hres.result.num_local_matchings as u64);
+        pipe_ctx.emit_here(span::PIPELINE, SpanStart::at(total_start), SpanMeta::default());
 
         PipelineReport {
             m_x: qx.num_blocks(),
@@ -268,7 +296,19 @@ impl<'a> MatchPipeline<'a> {
         query: QueryInput<'_>,
         index: &RefIndex,
     ) -> Result<PipelineReport> {
+        self.run_indexed_traced(query, index, &TraceCtx::off())
+    }
+
+    /// [`MatchPipeline::run_indexed`] with a span recorder attached; same
+    /// span layout as [`MatchPipeline::run_traced`].
+    pub fn run_indexed_traced(
+        &self,
+        query: QueryInput<'_>,
+        index: &RefIndex,
+        trace: &TraceCtx,
+    ) -> Result<PipelineReport> {
         index.validate_config(&self.qgw)?;
+        let pipe_ctx = trace.child(span::PIPELINE);
         let total_start = Instant::now();
         let mut rng_x = Pcg32::seed_from(split_seed(self.seed, 0));
 
@@ -293,8 +333,13 @@ impl<'a> MatchPipeline<'a> {
         );
         let partition_secs = part_start.elapsed().as_secs_f64();
         self.metrics.add_duration("partition", part_start.elapsed());
+        pipe_ctx.emit_leaf(
+            span::STAGE1_PARTITION,
+            SpanStart::at(part_start),
+            SpanMeta { detail: "indexed", ..SpanMeta::default() },
+        );
 
-        Ok(self.spine(total_start, partition_secs, &sx, &qx, RefSide::Indexed(index)))
+        Ok(self.spine(total_start, partition_secs, &sx, &qx, RefSide::Indexed(index), &pipe_ctx))
     }
 
     /// Run stage 1 (query-side partition) once and capture the result for
@@ -326,6 +371,19 @@ impl<'a> MatchPipeline<'a> {
         prepared: &PreparedQuery,
         index: &RefIndex,
     ) -> Result<PipelineReport> {
+        self.run_prepared_traced(prepared, index, &TraceCtx::off())
+    }
+
+    /// [`MatchPipeline::run_prepared`] with a span recorder attached.
+    /// Stage 1 was already paid (or cache-hit) by the caller, so the
+    /// caller is responsible for the `stage1_partition` span; this method
+    /// records the `pipeline` span and the hierarchy subtree.
+    pub fn run_prepared_traced(
+        &self,
+        prepared: &PreparedQuery,
+        index: &RefIndex,
+        trace: &TraceCtx,
+    ) -> Result<PipelineReport> {
         index.validate_config(&self.qgw)?;
         if prepared.seed != self.seed {
             anyhow::bail!(
@@ -334,8 +392,16 @@ impl<'a> MatchPipeline<'a> {
                 self.seed
             );
         }
+        let pipe_ctx = trace.child(span::PIPELINE);
         let total_start = Instant::now();
-        Ok(self.spine(total_start, 0.0, &prepared.sub, &prepared.q, RefSide::Indexed(index)))
+        Ok(self.spine(
+            total_start,
+            0.0,
+            &prepared.sub,
+            &prepared.q,
+            RefSide::Indexed(index),
+            &pipe_ctx,
+        ))
     }
 }
 

@@ -197,6 +197,13 @@ struct PoolShared {
     epoch: Mutex<u64>,
     wake: Condvar,
     shutdown: AtomicBool,
+    /// Per-worker observability counters (relaxed; they feed METRICS, not
+    /// any scheduling decision): task handles a worker popped off its own
+    /// deque, handles it stole from a sibling, and park episodes (condvar
+    /// waits entered after an empty scan).
+    executed: Vec<AtomicU64>,
+    stolen: Vec<AtomicU64>,
+    parks: Vec<AtomicU64>,
 }
 
 impl PoolShared {
@@ -211,11 +218,13 @@ impl PoolShared {
 
     fn pop_task(&self, me: usize) -> Option<Arc<TaskState>> {
         if let Some(t) = lock_recover(&self.deques[me]).pop_front() {
+            self.executed[me].fetch_add(1, Ordering::Relaxed);
             return Some(t);
         }
         let n = self.deques.len();
         for off in 1..n {
             if let Some(t) = lock_recover(&self.deques[(me + off) % n]).pop_back() {
+                self.stolen[me].fetch_add(1, Ordering::Relaxed);
                 return Some(t);
             }
         }
@@ -235,9 +244,44 @@ fn worker_loop(shared: Arc<PoolShared>, me: usize) {
             continue;
         }
         let mut guard = lock_recover(&shared.epoch);
+        if *guard == seen && !shared.shutdown.load(Ordering::Acquire) {
+            shared.parks[me].fetch_add(1, Ordering::Relaxed);
+        }
         while *guard == seen && !shared.shutdown.load(Ordering::Acquire) {
             guard = shared.wake.wait(guard).unwrap_or_else(|e| e.into_inner());
         }
+    }
+}
+
+/// Point-in-time snapshot of the compute pool's observability counters
+/// (see [`ComputePool::stats`]). Purely passive: reading it never blocks
+/// workers beyond the epoch-mutex read for `wake_epoch`, and none of the
+/// counters feed back into scheduling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker count (the length of each per-worker vector below).
+    pub workers: usize,
+    /// Task handles each worker popped off its own deque.
+    pub executed: Vec<u64>,
+    /// Task handles each worker stole from a sibling's deque.
+    pub stolen: Vec<u64>,
+    /// Park episodes per worker (condvar waits entered after an empty scan).
+    pub parks: Vec<u64>,
+    /// Current wake epoch — bumped on every handle push and at shutdown.
+    pub wake_epoch: u64,
+}
+
+impl PoolStats {
+    pub fn executed_total(&self) -> u64 {
+        self.executed.iter().sum()
+    }
+
+    pub fn stolen_total(&self) -> u64 {
+        self.stolen.iter().sum()
+    }
+
+    pub fn parks_total(&self) -> u64 {
+        self.parks.iter().sum()
     }
 }
 
@@ -258,6 +302,9 @@ impl ComputePool {
             epoch: Mutex::new(0),
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            executed: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            stolen: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            parks: (0..threads).map(|_| AtomicU64::new(0)).collect(),
         });
         let workers = (0..threads)
             .map(|me| {
@@ -289,6 +336,20 @@ impl ComputePool {
 
     pub fn num_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Snapshot the per-worker steal/execute/park counters and the wake
+    /// epoch. Relaxed loads — the numbers are a telemetry snapshot, not a
+    /// consistent cut — but each counter is individually monotone.
+    pub fn stats(&self) -> PoolStats {
+        let load = |v: &[AtomicU64]| v.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        PoolStats {
+            workers: self.workers.len(),
+            executed: load(&self.shared.executed),
+            stolen: load(&self.shared.stolen),
+            parks: load(&self.shared.parks),
+            wake_epoch: *lock_recover(&self.shared.epoch),
+        }
     }
 
     /// Run `f(0) .. f(chunks - 1)` across the pool, returning when all
@@ -642,6 +703,29 @@ mod tests {
         })
         .expect_err("panic must propagate");
         assert_eq!(err.downcast_ref::<&str>(), Some(&"boom"));
+    }
+
+    #[test]
+    fn pool_stats_count_pops_and_bump_the_wake_epoch() {
+        let pool = ComputePool::new(4);
+        let zero = pool.stats();
+        assert_eq!(zero.workers, 4);
+        assert_eq!(zero.executed.len(), 4);
+        assert_eq!(zero.stolen.len(), 4);
+        assert_eq!(zero.parks.len(), 4);
+        assert_eq!(zero.executed_total() + zero.stolen_total(), 0);
+        // Slow chunks so workers actually join in (same shape as
+        // `pool_uses_multiple_workers`): at least one worker must have
+        // popped a task handle, and the push bumped the wake epoch.
+        pool.run(64, 0, &|_| {
+            thread::sleep(std::time::Duration::from_millis(2));
+        });
+        let stats = pool.stats();
+        assert!(
+            stats.executed_total() + stats.stolen_total() >= 1,
+            "no worker popped a handle: {stats:?}"
+        );
+        assert!(stats.wake_epoch >= 1, "push did not bump the wake epoch");
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //! QUERY <i>                    -> j:mass j:mass ...   (row of the coupling)
 //! MAP <i>                      -> j | NONE            (argmax assignment)
 //! STATS                        -> one summary line
+//! STATS FULL                   -> key=value lines grouped by subsystem,
+//!                                 terminated by a lone `.`
+//! METRICS                      -> Prometheus text exposition, terminated
+//!                                 by a lone `.`
+//! TRACE [<id>]                 -> one JSON line: the requested (or
+//!                                 latest) recorded span tree
 //! INDEXES                      -> registered index names
 //! MATCH <name> <n> <dim>       -> OK n=.. ref=.. loss=.. bound=.. ...
 //!   (followed by n upload lines of dim whitespace-separated floats: the
@@ -44,7 +50,11 @@ use crate::index::IndexRegistry;
 use crate::qgw::{QgwConfig, QuantizationCoupling};
 
 use super::batch::solo_match;
-use super::{BatchEngine, BatchOptions, Metrics, ThreadPool, Ticket, UploadAccum};
+use super::trace::{names, trace_to_json, PromText, TraceStore};
+use super::{
+    threads_spawned_total, BatchEngine, BatchOptions, ComputePool, Metrics, ThreadPool, Ticket,
+    UploadAccum,
+};
 
 /// Tuning for [`MatchService::serve_batched`] (and the defaults behind
 /// [`MatchService::serve`]): the admission-queue bound, the scheduler's
@@ -92,6 +102,10 @@ pub struct MatchService {
     accept_errors: AtomicU64,
     /// Per-verb latency histograms (`STATS` surfaces p50/p99).
     metrics: Metrics,
+    /// Trace store behind `--trace`: the batched loop records per-query
+    /// span trees into it; the `TRACE` verb and parts of `METRICS` read
+    /// from it. `None` when tracing is off.
+    trace: Option<Arc<TraceStore>>,
 }
 
 impl MatchService {
@@ -108,6 +122,7 @@ impl MatchService {
             refused: AtomicU64::new(0),
             accept_errors: AtomicU64::new(0),
             metrics: Metrics::new(),
+            trace: None,
         }
     }
 
@@ -124,6 +139,7 @@ impl MatchService {
             refused: AtomicU64::new(0),
             accept_errors: AtomicU64::new(0),
             metrics: Metrics::new(),
+            trace: None,
         }
     }
 
@@ -139,6 +155,16 @@ impl MatchService {
         self.registry = Some(registry);
         self.qgw = qgw;
         self.seed = seed;
+        self
+    }
+
+    /// Attach a trace store (builder-style): the batched serving loop
+    /// records a per-query span tree for every `MATCH`/`MATCHG` into it,
+    /// `TRACE [<id>]` replies with a recorded tree as one JSON line, and
+    /// `METRICS` exposes its counters. Tracing is passive — reply bytes
+    /// and coupling bytes are identical with or without a store.
+    pub fn with_trace_store(mut self, store: Arc<TraceStore>) -> Self {
+        self.trace = Some(store);
         self
     }
 
@@ -221,6 +247,236 @@ impl MatchService {
         s
     }
 
+    /// The `STATS FULL` reply body: every `key=value` of the one-line
+    /// `STATS` (same key names, so existing parsers apply per line),
+    /// grouped by subsystem and extended with the compute-pool and trace
+    /// sections. Multi-line; the serving loops terminate it with `.`.
+    fn stats_full(&self, engine: Option<&BatchEngine>) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("[service]\n");
+        match self.coupling.as_deref() {
+            Some(c) => {
+                let _ = writeln!(out, "points={}x{}", c.num_source_points(), c.num_target_points());
+                let _ = writeln!(out, "local_plans={}", c.num_local_plans());
+                let _ = writeln!(out, "memory_bytes={}", c.memory_bytes());
+            }
+            None => out.push_str("points=0x0\nlocal_plans=0\nmemory_bytes=0\n"),
+        }
+        if let Some(r) = &self.registry {
+            let _ = writeln!(out, "indices={}", r.len());
+            let _ = writeln!(out, "index_bytes={}", r.total_bytes());
+        }
+        let _ = writeln!(out, "queries={}", self.num_queries());
+        let _ = writeln!(out, "matches={}", self.num_matches());
+        let _ = writeln!(out, "refused={}", self.num_refused());
+        let _ = writeln!(out, "accept_errors={}", self.num_accept_errors());
+        let _ = writeln!(out, "aligner_policy={}", self.qgw.aligner_policy.describe());
+        if let Some(engine) = engine {
+            let s = engine.stats();
+            out.push_str("[engine]\n");
+            let _ = writeln!(out, "q_depth={}", s.queue_depth);
+            let _ = writeln!(out, "q_cap={}", s.queue_cap);
+            let _ = writeln!(out, "batches={}", s.batches);
+            let _ = writeln!(out, "batched={}", s.batched_requests);
+            let _ = writeln!(out, "max_batch={}", s.max_batch);
+            let _ = writeln!(out, "stage1={}", s.stage1_partitions);
+            let _ = writeln!(out, "engine_refused={}", s.refused);
+            out.push_str("[cache]\n");
+            let _ = writeln!(out, "qcache_hits={}", s.cache_hits);
+            let _ = writeln!(out, "qcache_misses={}", s.cache_misses);
+            let _ = writeln!(out, "qcache_evictions={}", s.cache_evictions);
+            let _ = writeln!(out, "qcache_bytes={}", s.cache_bytes);
+        }
+        let ps = ComputePool::global().stats();
+        out.push_str("[pool]\n");
+        let _ = writeln!(out, "pool_workers={}", ps.workers);
+        let _ = writeln!(out, "pool_executed={}", ps.executed_total());
+        let _ = writeln!(out, "pool_stolen={}", ps.stolen_total());
+        let _ = writeln!(out, "pool_parks={}", ps.parks_total());
+        let _ = writeln!(out, "pool_wake_epoch={}", ps.wake_epoch);
+        let _ = writeln!(out, "threads_spawned={}", threads_spawned_total());
+        let lat = self.metrics.latency_summary();
+        if !lat.is_empty() {
+            out.push_str("[latency]\n");
+            for kv in lat.split_whitespace() {
+                out.push_str(kv);
+                out.push('\n');
+            }
+        }
+        if let Some(store) = &self.trace {
+            out.push_str("[trace]\n");
+            let _ = writeln!(out, "traces_recorded={}", store.recorded_total());
+            let _ = writeln!(out, "slow_queries={}", store.slow_total());
+            let _ = writeln!(out, "trace_ring={}", store.ring_len());
+            let _ = writeln!(out, "slow_query_ms={}", store.slow_query_ms());
+        }
+        out
+    }
+
+    /// The `METRICS` reply body: Prometheus text exposition over the
+    /// service, engine, cache, compute-pool, latency, and trace
+    /// counters. Every family name comes from [`names`] — the one
+    /// registered table the `metric-name` lint checks.
+    fn metrics_text(&self, engine: Option<&BatchEngine>) -> String {
+        let mut p = PromText::new();
+        p.push_counter(names::QGW_QUERIES_TOTAL, "Row/assignment queries served.", self.num_queries());
+        p.push_counter(
+            names::QGW_MATCHES_TOTAL,
+            "MATCH/MATCHG requests served successfully.",
+            self.num_matches(),
+        );
+        p.push_counter(
+            names::QGW_REFUSED_TOTAL,
+            "Connections or requests refused by backpressure.",
+            self.num_refused(),
+        );
+        p.push_counter(
+            names::QGW_ACCEPT_ERRORS_TOTAL,
+            "Accept-loop errors observed (transient and fatal).",
+            self.num_accept_errors(),
+        );
+        if let Some(engine) = engine {
+            let s = engine.stats();
+            p.push_gauge(
+                names::QGW_ENGINE_QUEUE_DEPTH,
+                "Admission-queue occupancy.",
+                s.queue_depth as f64,
+            );
+            p.push_gauge(names::QGW_ENGINE_QUEUE_CAP, "Admission-queue bound.", s.queue_cap as f64);
+            p.push_counter(
+                names::QGW_ENGINE_BATCHES_TOTAL,
+                "Batches drained by the scheduler.",
+                s.batches,
+            );
+            p.push_counter(
+                names::QGW_ENGINE_BATCHED_REQUESTS_TOTAL,
+                "Requests served through batches.",
+                s.batched_requests,
+            );
+            p.push_gauge(names::QGW_ENGINE_MAX_BATCH, "Largest batch drained so far.", s.max_batch as f64);
+            p.push_counter(
+                names::QGW_ENGINE_STAGE1_PARTITIONS_TOTAL,
+                "Stage-1 partitions actually computed (misses of both sharing layers).",
+                s.stage1_partitions,
+            );
+            p.push_counter(
+                names::QGW_ENGINE_REFUSED_TOTAL,
+                "Requests refused at the admission queue.",
+                s.refused,
+            );
+            p.push_counter(names::QGW_QCACHE_HITS_TOTAL, "Query-cache hits.", s.cache_hits);
+            p.push_counter(names::QGW_QCACHE_MISSES_TOTAL, "Query-cache misses.", s.cache_misses);
+            p.push_counter(
+                names::QGW_QCACHE_EVICTIONS_TOTAL,
+                "Query-cache LRU evictions.",
+                s.cache_evictions,
+            );
+            p.push_gauge(names::QGW_QCACHE_BYTES, "Query-cache resident bytes.", s.cache_bytes as f64);
+        }
+        let ps = ComputePool::global().stats();
+        p.push_gauge(names::QGW_POOL_WORKERS, "Compute-pool workers.", ps.workers as f64);
+        for (w, v) in ps.executed.iter().enumerate() {
+            let worker = w.to_string();
+            p.push_counter_with(
+                names::QGW_POOL_EXECUTED_TOTAL,
+                "Task handles a worker popped off its own deque.",
+                &[("worker", worker.as_str())],
+                *v,
+            );
+        }
+        for (w, v) in ps.stolen.iter().enumerate() {
+            let worker = w.to_string();
+            p.push_counter_with(
+                names::QGW_POOL_STOLEN_TOTAL,
+                "Task handles a worker stole from a sibling's deque.",
+                &[("worker", worker.as_str())],
+                *v,
+            );
+        }
+        for (w, v) in ps.parks.iter().enumerate() {
+            let worker = w.to_string();
+            p.push_counter_with(
+                names::QGW_POOL_PARKS_TOTAL,
+                "Park episodes per worker (condvar waits after an empty scan).",
+                &[("worker", worker.as_str())],
+                *v,
+            );
+        }
+        p.push_counter(
+            names::QGW_POOL_WAKE_EPOCH,
+            "Compute-pool wake epoch (bumped per handle push).",
+            ps.wake_epoch,
+        );
+        p.push_counter(
+            names::QGW_THREADS_SPAWNED_TOTAL,
+            "OS threads the engine has ever spawned.",
+            threads_spawned_total(),
+        );
+        for (verb, h) in self.metrics.latencies_snapshot() {
+            p.push_histogram_with(
+                names::QGW_REQUEST_LATENCY_US,
+                "Request latency by verb, in microseconds.",
+                &[("verb", verb.as_str())],
+                &h,
+            );
+        }
+        for (stage, d) in self.metrics.durations_snapshot() {
+            p.push_gauge_with(
+                names::QGW_STAGE_SECONDS,
+                "Cumulative stage wall time in seconds.",
+                &[("stage", stage.as_str())],
+                d.as_secs_f64(),
+            );
+        }
+        for (name, v) in self.metrics.counters_snapshot() {
+            p.push_counter_with(
+                names::QGW_PIPELINE_COUNTER,
+                "Pipeline counters by registry name.",
+                &[("name", name.as_str())],
+                v,
+            );
+        }
+        if let Some(store) = &self.trace {
+            p.push_counter(
+                names::QGW_TRACES_RECORDED_TOTAL,
+                "Per-query span trees recorded.",
+                store.recorded_total(),
+            );
+            p.push_counter(
+                names::QGW_SLOW_QUERIES_TOTAL,
+                "Queries over the slow-query threshold.",
+                store.slow_total(),
+            );
+            p.push_gauge(
+                names::QGW_TRACE_RING_SIZE,
+                "Traces currently held in the ring.",
+                store.ring_len() as f64,
+            );
+        }
+        p.finish()
+    }
+
+    /// The `TRACE [<id>]` reply: one JSON line for the requested (or
+    /// latest) recorded span tree, or a protocol error.
+    fn trace_reply(&self, id_arg: Option<&str>) -> String {
+        let Some(store) = &self.trace else {
+            return "ERR tracing disabled (start serve with --trace)".to_string();
+        };
+        match id_arg {
+            None => match store.latest() {
+                Some(t) => trace_to_json(&t),
+                None => "ERR no trace recorded yet".to_string(),
+            },
+            Some(tok) => match tok.parse::<u64>() {
+                Ok(id) => match store.get(id) {
+                    Some(t) => trace_to_json(&t),
+                    None => format!("ERR no trace {id} (evicted or never recorded)"),
+                },
+                Err(_) => "ERR usage: TRACE [<id>]".to_string(),
+            },
+        }
+    }
+
     /// Serve the TCP protocol until `shutdown` is set — the batched
     /// evented loop with default [`ServeOptions`]. Binds to `addr`
     /// (e.g. `127.0.0.1:7979`); returns the bound address.
@@ -250,7 +506,7 @@ impl MatchService {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let engine = BatchEngine::new(
+        let engine = BatchEngine::with_trace(
             self.registry.clone(),
             self.qgw.clone(),
             self.seed,
@@ -259,6 +515,7 @@ impl MatchService {
                 batch_window: opts.batch_window,
                 cache_bytes: opts.cache_bytes,
             },
+            self.trace.clone(),
         );
         let svc = Arc::clone(self);
         super::count_thread_spawn();
@@ -460,7 +717,10 @@ impl MatchService {
                     }
                     None => "ERR no registry configured".to_string(),
                 },
+                (Some("STATS"), Some("FULL")) => multiline_reply(self.stats_full(None)),
                 (Some("STATS"), _) => self.stats_line(None),
+                (Some("METRICS"), _) => multiline_reply(self.metrics_text(None)),
+                (Some("TRACE"), id) => self.trace_reply(id),
                 (Some("QUIT"), _) => break,
                 _ => "ERR unknown command".to_string(),
             };
@@ -521,6 +781,18 @@ impl MatchService {
             Err(msg) => Ok(Err(msg)),
         }
     }
+}
+
+/// Frame a multi-line reply body (`STATS FULL`, `METRICS`): the body's
+/// lines followed by a line holding a lone `.` — the protocol's
+/// multi-line terminator, so clients read until the dot.
+fn multiline_reply(body: String) -> String {
+    let mut s = body;
+    if !s.is_empty() && !s.ends_with('\n') {
+        s.push('\n');
+    }
+    s.push('.');
+    s
 }
 
 /// Cap on announced upload sizes (coordinates for `MATCH`, nodes or
@@ -688,7 +960,10 @@ fn dispatch_command(
             }
             None => "ERR no registry configured".to_string(),
         }),
+        (Some("STATS"), Some("FULL")) => Action::Reply(multiline_reply(svc.stats_full(Some(engine)))),
         (Some("STATS"), _) => Action::Reply(svc.stats_line(Some(engine))),
+        (Some("METRICS"), _) => Action::Reply(multiline_reply(svc.metrics_text(Some(engine)))),
+        (Some("TRACE"), id) => Action::Reply(svc.trace_reply(id)),
         (Some("QUIT"), _) => Action::Quit,
         _ => Action::Reply("ERR unknown command".to_string()),
     };
@@ -1379,6 +1654,141 @@ mod tests {
         assert_eq!(replies[0], replies[1], "batched and pooled replies must be byte-identical");
         assert_eq!(svc.num_matches(), 2);
         shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn stats_full_lines_are_a_superset_of_the_stats_line() {
+        // The parser-compat contract: STATS stays byte-compatible, and
+        // every `key=value` token of the one-liner appears verbatim as a
+        // line of STATS FULL — so a client that parses `k=v` pairs can
+        // switch forms without remapping keys.
+        let (_, svc) = service();
+        svc.metrics.observe_latency("query", Duration::from_micros(100));
+        let one = svc.stats_line(None);
+        let full = svc.stats_full(None);
+        let full_lines: Vec<&str> = full.lines().collect();
+        for token in one.split_whitespace() {
+            assert!(
+                full_lines.contains(&token),
+                "STATS token {token:?} missing from STATS FULL:\n{full}"
+            );
+        }
+        assert!(full_lines.contains(&"[service]"), "{full}");
+        assert!(full_lines.contains(&"[pool]"), "{full}");
+        assert!(full_lines.contains(&"[latency]"), "{full}");
+        // The framed reply ends with the lone-dot terminator.
+        assert!(multiline_reply(full).ends_with("\n."));
+    }
+
+    #[test]
+    fn metrics_text_is_valid_exposition() {
+        let (_, svc) = service();
+        svc.queries.fetch_add(3, Ordering::Relaxed);
+        svc.metrics.observe_latency("match", Duration::from_micros(300));
+        let text = svc.metrics_text(None);
+        assert!(text.contains("# TYPE qgw_queries_total counter"), "{text}");
+        assert!(text.contains("\nqgw_queries_total 3\n"), "{text}");
+        assert!(
+            text.contains("qgw_request_latency_us_bucket{verb=\"match\",le=\"512\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("qgw_request_latency_us_count{verb=\"match\"} 1"), "{text}");
+        // Every line is either a comment or `name{labels} value`.
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name_part, value) = line.rsplit_once(' ').expect("sample line");
+            let name = name_part.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "bad family name in {line:?}"
+            );
+            assert!(value.parse::<f64>().is_ok(), "bad sample value in {line:?}");
+        }
+    }
+
+    #[test]
+    fn trace_metrics_and_stats_full_verbs_over_the_wire() {
+        use std::io::{BufRead, BufReader, Write};
+        let mut rng = Pcg32::seed_from(5);
+        let mut g = Gaussian::new();
+        let y = PointCloud::new((0..200 * 3).map(|_| g.sample(&mut rng)).collect(), 3);
+        let cfg = QgwConfig { levels: 2, leaf_size: 10, ..QgwConfig::with_count(5) };
+        let registry = Arc::new(IndexRegistry::new(usize::MAX));
+        registry.insert("shapes", RefIndex::build_cloud(&y, None, &cfg, 7));
+        let store = Arc::new(TraceStore::new(16, 0, None).unwrap());
+        let svc = Arc::new(
+            MatchService::from_registry(registry, cfg, 7).with_trace_store(Arc::clone(&store)),
+        );
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = svc.serve("127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        stream.write_all(match_upload("shapes", 40, 3, 41).as_bytes()).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK n=40 ref=200"), "reply: {line:?}");
+
+        // Multi-line replies read until the lone-dot terminator.
+        let read_block = |reader: &mut BufReader<std::net::TcpStream>| {
+            let mut lines = Vec::new();
+            loop {
+                let mut l = String::new();
+                reader.read_line(&mut l).unwrap();
+                if l.trim_end() == "." {
+                    break;
+                }
+                lines.push(l.trim_end().to_string());
+            }
+            lines
+        };
+
+        writeln!(stream, "METRICS").unwrap();
+        let metrics = read_block(&mut reader);
+        assert!(metrics.iter().any(|l| l == "# TYPE qgw_matches_total counter"), "{metrics:?}");
+        assert!(metrics.iter().any(|l| l == "qgw_matches_total 1"), "{metrics:?}");
+        assert!(
+            metrics.iter().any(|l| l.starts_with("qgw_request_latency_us_bucket{verb=\"match\"")),
+            "{metrics:?}"
+        );
+        assert!(metrics.iter().any(|l| l == "qgw_traces_recorded_total 1"), "{metrics:?}");
+
+        writeln!(stream, "STATS FULL").unwrap();
+        let full = read_block(&mut reader);
+        assert!(full.iter().any(|l| l == "[service]"), "{full:?}");
+        assert!(full.iter().any(|l| l == "[engine]"), "{full:?}");
+        assert!(full.iter().any(|l| l == "[trace]"), "{full:?}");
+        assert!(full.iter().any(|l| l == "matches=1"), "{full:?}");
+        assert!(full.iter().any(|l| l == "traces_recorded=1"), "{full:?}");
+
+        writeln!(stream, "TRACE").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let parsed = crate::coordinator::parse_trace_json(line.trim()).expect("TRACE json");
+        assert_eq!(parsed.verb, "MATCH");
+        assert_eq!(parsed.index, "shapes");
+        assert!(
+            parsed.spans.iter().any(|s| s.path == "query/pipeline/hier/n0"),
+            "spans: {:?}",
+            parsed.spans.iter().map(|s| &s.path).collect::<Vec<_>>()
+        );
+
+        writeln!(stream, "TRACE 999").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR no trace 999"), "{line:?}");
+
+        writeln!(stream, "QUIT").unwrap();
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn trace_verb_without_store_reports_disabled() {
+        let (_, svc) = service();
+        assert!(svc.trace_reply(None).starts_with("ERR tracing disabled"));
+        assert!(svc.trace_reply(Some("nonsense")).starts_with("ERR tracing disabled"));
     }
 
     #[test]

@@ -1,0 +1,1187 @@
+//! End-to-end tracing and telemetry: per-query span trees mirroring the
+//! qGW recursion, a Prometheus text-exposition renderer, and the bounded
+//! trace store behind the `TRACE` verb and `--trace-log` JSONL export.
+//!
+//! Design constraints (EXPERIMENTS.md §Observability):
+//!
+//! * **Zero-cost when off.** A [`TraceCtx`] is an `Option` around an
+//!   `Arc<TraceBuf>`; every span operation is one branch on that option
+//!   and the default context is off. Span segments and details are built
+//!   inside the on-branch only, so a disabled trace allocates nothing.
+//! * **Result bytes are untouchable.** Tracing observes the recursion, it
+//!   never feeds it: span records carry outcomes and bound terms *read
+//!   from* the solver, and the byte-identity property suites (thread
+//!   counts, cold-vs-indexed, batched-vs-solo) are the oracle that the
+//!   observation is passive. Span *trees* are themselves deterministic —
+//!   records are addressed by a path that depends only on the recursion
+//!   position, and [`TraceBuf::finish`] sorts by path so the parallel
+//!   fan-out's append order never shows.
+//! * **The clock lives here.** [`now`] is the engine's single wall-clock
+//!   read point. Result-affecting modules (`qgw/hier.rs`) call it instead
+//!   of `Instant::now()`, which keeps the qgw-lint `determinism-time`
+//!   rule clean by module boundary instead of by scattered allows — this
+//!   module is coordinator-side and may read clocks freely.
+//! * **One name table.** Every span and metric name is a constant in
+//!   [`names`]; the qgw-lint `metric-name` rule checks the table entries
+//!   are `snake_case` ASCII and rejects inline name literals at the
+//!   telemetry call sites, so dashboards cannot drift.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::lock_recover;
+use super::metrics::LatencyHistogram;
+
+/// The engine's single wall-clock read point. Solver modules take their
+/// timing reads through this function so the `determinism-time` lint
+/// boundary is a module, not an annotation; the returned `Instant` feeds
+/// only reported timings, never a coupling.
+pub fn now() -> Instant {
+    Instant::now()
+}
+
+/// The one registry of span and metric names. Every name is `snake_case`
+/// ASCII (enforced by the qgw-lint `metric-name` rule over this table);
+/// telemetry call sites must reference these constants rather than inline
+/// literals. Legacy stage labels that predate the rule (for example the
+/// `local+assemble` duration key) surface in the exposition as *label
+/// values*, never as metric names.
+pub mod names {
+    // --- span names -----------------------------------------------------
+    pub const QUERY: &str = "query";
+    pub const ADMISSION_WAIT: &str = "admission_wait";
+    pub const QUEUE_DEPTH_AT_ADMIT: &str = "queue_depth_at_admit";
+    pub const STAGE1_PARTITION: &str = "stage1_partition";
+    pub const PIPELINE: &str = "pipeline";
+    pub const HIER: &str = "hier";
+    pub const NODE: &str = "node";
+    pub const PAIR: &str = "pair";
+    pub const GLOBAL_ALIGN: &str = "global_align";
+    pub const LOCAL_ASSEMBLE: &str = "local_assemble";
+
+    // --- span outcomes --------------------------------------------------
+    pub const OUT_OK: &str = "ok";
+    pub const OUT_ERROR: &str = "error";
+    pub const OUT_LEAF: &str = "leaf";
+    pub const OUT_PRUNED: &str = "pruned";
+    pub const OUT_PRESKIPPED: &str = "preskipped";
+    pub const OUT_RECURSED: &str = "recursed";
+    pub const OUT_ALIGNED: &str = "aligned";
+    pub const OUT_CACHE_HIT: &str = "cache_hit";
+    pub const OUT_PREPARED: &str = "prepared";
+    pub const OUT_SHARED: &str = "shared";
+
+    // --- Prometheus metric names ---------------------------------------
+    pub const QGW_QUERIES_TOTAL: &str = "qgw_queries_total";
+    pub const QGW_MATCHES_TOTAL: &str = "qgw_matches_total";
+    pub const QGW_REFUSED_TOTAL: &str = "qgw_refused_total";
+    pub const QGW_ACCEPT_ERRORS_TOTAL: &str = "qgw_accept_errors_total";
+    pub const QGW_ENGINE_QUEUE_DEPTH: &str = "qgw_engine_queue_depth";
+    pub const QGW_ENGINE_QUEUE_CAP: &str = "qgw_engine_queue_cap";
+    pub const QGW_ENGINE_BATCHES_TOTAL: &str = "qgw_engine_batches_total";
+    pub const QGW_ENGINE_BATCHED_REQUESTS_TOTAL: &str = "qgw_engine_batched_requests_total";
+    pub const QGW_ENGINE_MAX_BATCH: &str = "qgw_engine_max_batch";
+    pub const QGW_ENGINE_STAGE1_PARTITIONS_TOTAL: &str = "qgw_engine_stage1_partitions_total";
+    pub const QGW_ENGINE_REFUSED_TOTAL: &str = "qgw_engine_refused_total";
+    pub const QGW_QCACHE_HITS_TOTAL: &str = "qgw_qcache_hits_total";
+    pub const QGW_QCACHE_MISSES_TOTAL: &str = "qgw_qcache_misses_total";
+    pub const QGW_QCACHE_EVICTIONS_TOTAL: &str = "qgw_qcache_evictions_total";
+    pub const QGW_QCACHE_BYTES: &str = "qgw_qcache_bytes";
+    pub const QGW_POOL_WORKERS: &str = "qgw_pool_workers";
+    pub const QGW_POOL_EXECUTED_TOTAL: &str = "qgw_pool_executed_total";
+    pub const QGW_POOL_STOLEN_TOTAL: &str = "qgw_pool_stolen_total";
+    pub const QGW_POOL_PARKS_TOTAL: &str = "qgw_pool_parks_total";
+    pub const QGW_POOL_WAKE_EPOCH: &str = "qgw_pool_wake_epoch";
+    pub const QGW_THREADS_SPAWNED_TOTAL: &str = "qgw_threads_spawned_total";
+    pub const QGW_REQUEST_LATENCY_US: &str = "qgw_request_latency_us";
+    pub const QGW_STAGE_SECONDS: &str = "qgw_stage_seconds";
+    pub const QGW_PIPELINE_COUNTER: &str = "qgw_pipeline_counter";
+    pub const QGW_TRACES_RECORDED_TOTAL: &str = "qgw_traces_recorded_total";
+    pub const QGW_SLOW_QUERIES_TOTAL: &str = "qgw_slow_queries_total";
+    pub const QGW_TRACE_RING_SIZE: &str = "qgw_trace_ring_size";
+
+    /// Every registered name, for the lint rule's completeness check and
+    /// for tooling that wants to enumerate the vocabulary.
+    pub const ALL: &[&str] = &[
+        QUERY,
+        ADMISSION_WAIT,
+        QUEUE_DEPTH_AT_ADMIT,
+        STAGE1_PARTITION,
+        PIPELINE,
+        HIER,
+        NODE,
+        PAIR,
+        GLOBAL_ALIGN,
+        LOCAL_ASSEMBLE,
+        OUT_OK,
+        OUT_ERROR,
+        OUT_LEAF,
+        OUT_PRUNED,
+        OUT_PRESKIPPED,
+        OUT_RECURSED,
+        OUT_ALIGNED,
+        OUT_CACHE_HIT,
+        OUT_PREPARED,
+        OUT_SHARED,
+        QGW_QUERIES_TOTAL,
+        QGW_MATCHES_TOTAL,
+        QGW_REFUSED_TOTAL,
+        QGW_ACCEPT_ERRORS_TOTAL,
+        QGW_ENGINE_QUEUE_DEPTH,
+        QGW_ENGINE_QUEUE_CAP,
+        QGW_ENGINE_BATCHES_TOTAL,
+        QGW_ENGINE_BATCHED_REQUESTS_TOTAL,
+        QGW_ENGINE_MAX_BATCH,
+        QGW_ENGINE_STAGE1_PARTITIONS_TOTAL,
+        QGW_ENGINE_REFUSED_TOTAL,
+        QGW_QCACHE_HITS_TOTAL,
+        QGW_QCACHE_MISSES_TOTAL,
+        QGW_QCACHE_EVICTIONS_TOTAL,
+        QGW_QCACHE_BYTES,
+        QGW_POOL_WORKERS,
+        QGW_POOL_EXECUTED_TOTAL,
+        QGW_POOL_STOLEN_TOTAL,
+        QGW_POOL_PARKS_TOTAL,
+        QGW_POOL_WAKE_EPOCH,
+        QGW_THREADS_SPAWNED_TOTAL,
+        QGW_REQUEST_LATENCY_US,
+        QGW_STAGE_SECONDS,
+        QGW_PIPELINE_COUNTER,
+        QGW_TRACES_RECORDED_TOTAL,
+        QGW_SLOW_QUERIES_TOTAL,
+        QGW_TRACE_RING_SIZE,
+    ];
+}
+
+// ---------------------------------------------------------------------------
+// Span records and the per-query buffer
+// ---------------------------------------------------------------------------
+
+/// One recorded span. `path` is the slash-joined address in the query's
+/// span tree (for example `query/pipeline/hier/n0/p2x3`) and depends only
+/// on the recursion position — never on scheduling — which is what makes
+/// span trees comparable across thread counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub path: String,
+    pub name: String,
+    pub level: u32,
+    /// Free-form annotation (aligner kind for node spans, empty otherwise).
+    pub detail: String,
+    /// What happened at this position: one of the `names::OUT_*` values.
+    pub outcome: String,
+    /// Theorem-6 bound term for hierarchy spans, `0.0` otherwise.
+    pub bound: f64,
+    /// Gauge payload (queue depth at admit), `0.0` otherwise.
+    pub value: f64,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanRecord {
+    /// The trailing path segment — the span's display name in the tree.
+    pub fn segment(&self) -> &str {
+        self.path.rsplit('/').next().unwrap_or(&self.path)
+    }
+
+    /// The structural identity of a span: everything except the timings.
+    /// Two runs at the same seed must produce equal keys span-for-span.
+    pub fn structural_key(&self) -> (String, String, u32, String, String, u64) {
+        (
+            self.path.clone(),
+            self.name.clone(),
+            self.level,
+            self.detail.clone(),
+            self.outcome.clone(),
+            self.bound.to_bits(),
+        )
+    }
+}
+
+/// Shared append-only span buffer for one query. Parallel workers push in
+/// whatever order the scheduler produces; [`TraceBuf::finish`] sorts by
+/// path so the exported tree is deterministic.
+pub struct TraceBuf {
+    origin: Instant,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl TraceBuf {
+    pub fn new() -> Arc<TraceBuf> {
+        Arc::new(TraceBuf { origin: now(), spans: Mutex::new(Vec::new()) })
+    }
+
+    /// A [`SpanStart`] pinned at the buffer's creation instant — the
+    /// admission-to-completion window of the whole query.
+    pub fn origin_start(&self) -> SpanStart {
+        SpanStart(Some(self.origin))
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        lock_recover(&self.spans).push(rec);
+    }
+
+    /// Snapshot the recorded spans sorted by path (then start time for
+    /// stability). Does not drain; safe to call more than once.
+    pub fn finish(&self) -> Vec<SpanRecord> {
+        let mut spans = lock_recover(&self.spans).clone();
+        spans.sort_by(|a, b| a.path.cmp(&b.path).then(a.start_us.cmp(&b.start_us)));
+        spans
+    }
+}
+
+/// The start instant of a span-to-be; `None` when the owning context is
+/// off, so a disabled trace never reads the clock.
+#[derive(Clone, Copy)]
+pub struct SpanStart(Option<Instant>);
+
+impl SpanStart {
+    /// A start with no duration — for point/gauge spans.
+    pub fn empty() -> SpanStart {
+        SpanStart(None)
+    }
+
+    /// Wrap an instant the caller already read (the hierarchy keeps its
+    /// phase instants for the reported stats regardless of tracing).
+    pub fn at(instant: Instant) -> SpanStart {
+        SpanStart(Some(instant))
+    }
+}
+
+/// Non-timing span fields. `Default` is a level-0 `ok` span.
+#[derive(Clone, Copy)]
+pub struct SpanMeta<'a> {
+    pub level: u32,
+    pub detail: &'a str,
+    pub outcome: &'a str,
+    pub bound: f64,
+    pub value: f64,
+}
+
+impl Default for SpanMeta<'_> {
+    fn default() -> Self {
+        SpanMeta { level: 0, detail: "", outcome: names::OUT_OK, bound: 0.0, value: 0.0 }
+    }
+}
+
+#[derive(Clone)]
+struct TraceInner {
+    buf: Arc<TraceBuf>,
+    path: String,
+}
+
+/// A position in a query's span tree. Cloning and deriving children is
+/// cheap; with no buffer attached (the default) every method is a single
+/// branch and no allocation or clock read happens.
+#[derive(Clone, Default)]
+pub struct TraceCtx {
+    inner: Option<TraceInner>,
+}
+
+impl TraceCtx {
+    /// The no-op context: spans vanish.
+    pub fn off() -> TraceCtx {
+        TraceCtx { inner: None }
+    }
+
+    /// The root context of a query, addressed `query`.
+    pub fn root(buf: &Arc<TraceBuf>) -> TraceCtx {
+        TraceCtx {
+            inner: Some(TraceInner { buf: Arc::clone(buf), path: names::QUERY.to_string() }),
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Child context under a registered static segment.
+    pub fn child(&self, seg: &'static str) -> TraceCtx {
+        self.child_seg(|| seg.to_string())
+    }
+
+    /// Child context for hierarchy node `n{level}`.
+    pub fn child_node(&self, level: usize) -> TraceCtx {
+        self.child_seg(|| format!("n{level}"))
+    }
+
+    /// Child context for block pair `p{pi}x{pj}`.
+    pub fn child_pair(&self, pi: usize, pj: usize) -> TraceCtx {
+        self.child_seg(|| format!("p{pi}x{pj}"))
+    }
+
+    fn child_seg(&self, seg: impl FnOnce() -> String) -> TraceCtx {
+        TraceCtx {
+            inner: self.inner.as_ref().map(|t| TraceInner {
+                buf: Arc::clone(&t.buf),
+                path: format!("{}/{}", t.path, seg()),
+            }),
+        }
+    }
+
+    /// Read the clock iff this context is on.
+    pub fn start(&self) -> SpanStart {
+        SpanStart(self.inner.as_ref().map(|_| now()))
+    }
+
+    /// Record a span at this context's own path (the context was derived
+    /// with the span's address segment, e.g. a node or pair context).
+    pub fn emit_here(&self, name: &'static str, started: SpanStart, meta: SpanMeta<'_>) {
+        if let Some(t) = &self.inner {
+            t.buf.push(make_record(t.path.clone(), name, &t.buf.origin, started, meta));
+        }
+    }
+
+    /// Record a span one level below this context, addressed by `name`
+    /// itself (phase and point spans: admission wait, stage 1, phases).
+    pub fn emit_leaf(&self, name: &'static str, started: SpanStart, meta: SpanMeta<'_>) {
+        if let Some(t) = &self.inner {
+            let path = format!("{}/{}", t.path, name);
+            t.buf.push(make_record(path, name, &t.buf.origin, started, meta));
+        }
+    }
+}
+
+fn make_record(
+    path: String,
+    name: &'static str,
+    origin: &Instant,
+    started: SpanStart,
+    meta: SpanMeta<'_>,
+) -> SpanRecord {
+    let (start_us, dur_us) = match started.0 {
+        Some(s) => {
+            let start_us = s.saturating_duration_since(*origin).as_micros() as u64;
+            let dur_us = s.elapsed().as_micros() as u64;
+            (start_us, dur_us)
+        }
+        None => (0, 0),
+    };
+    SpanRecord {
+        path,
+        name: name.to_string(),
+        level: meta.level,
+        detail: meta.detail.to_string(),
+        outcome: meta.outcome.to_string(),
+        bound: if meta.bound.is_finite() { meta.bound } else { 0.0 },
+        value: if meta.value.is_finite() { meta.value } else { 0.0 },
+        start_us,
+        dur_us,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trace store: bounded ring + JSONL export + slow-query log
+// ---------------------------------------------------------------------------
+
+/// One completed query's trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryTrace {
+    pub id: u64,
+    /// Payload kind served (`cloud` / `graph`).
+    pub verb: String,
+    /// Reference index the query matched against.
+    pub index: String,
+    /// Query size (points or nodes).
+    pub n: usize,
+    /// Admission-to-completion wall time.
+    pub total_us: u64,
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Bounded ring of recent query traces, with optional JSONL export and a
+/// slow-query threshold. Shared by the batch engine (producer) and the
+/// service verbs (`TRACE`, `METRICS`) plus the `qgw trace` CLI renderer.
+pub struct TraceStore {
+    ring: Mutex<VecDeque<Arc<QueryTrace>>>,
+    cap: usize,
+    next_id: AtomicU64,
+    slow_query_ms: u64,
+    recorded: AtomicU64,
+    slow: AtomicU64,
+    log: Option<Mutex<BufWriter<File>>>,
+    log_path: Option<std::path::PathBuf>,
+}
+
+impl TraceStore {
+    /// `cap` bounds the ring (clamped to at least 1); `slow_query_ms > 0`
+    /// logs `[serve] slow_query_ms=..` to stderr for queries over the
+    /// threshold; `log_path` appends one JSON line per trace (the file is
+    /// truncated at store creation — one serve run, one log).
+    pub fn new(cap: usize, slow_query_ms: u64, log_path: Option<&Path>) -> std::io::Result<Self> {
+        let log = match log_path {
+            Some(p) => Some(Mutex::new(BufWriter::new(File::create(p)?))),
+            None => None,
+        };
+        Ok(TraceStore {
+            ring: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+            next_id: AtomicU64::new(0),
+            slow_query_ms,
+            recorded: AtomicU64::new(0),
+            slow: AtomicU64::new(0),
+            log,
+            log_path: log_path.map(Path::to_path_buf),
+        })
+    }
+
+    /// Finalize `buf` into a stored trace: assigns the id, bounds the
+    /// ring, writes the JSONL line, and emits the slow-query log line.
+    /// Returns the assigned trace id.
+    pub fn push(&self, verb: &str, index: &str, n: usize, buf: &TraceBuf) -> u64 {
+        let spans = buf.finish();
+        let total_us = spans
+            .iter()
+            .find(|s| s.name == names::QUERY)
+            .map(|s| s.dur_us)
+            .or_else(|| spans.iter().map(|s| s.start_us + s.dur_us).max())
+            .unwrap_or(0);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let trace = Arc::new(QueryTrace {
+            id,
+            verb: verb.to_string(),
+            index: index.to_string(),
+            n,
+            total_us,
+            spans,
+        });
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        if let Some(log) = &self.log {
+            let mut w = lock_recover(log);
+            let _ = writeln!(w, "{}", trace_to_json(&trace));
+            let _ = w.flush();
+        }
+        if self.slow_query_ms > 0 && total_us > self.slow_query_ms.saturating_mul(1000) {
+            self.slow.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "[serve] slow_query_ms={} id={} verb={} index={} n={} spans={}",
+                total_us / 1000,
+                id,
+                trace.verb,
+                trace.index,
+                n,
+                trace.spans.len()
+            );
+        }
+        let mut ring = lock_recover(&self.ring);
+        ring.push_back(trace);
+        while ring.len() > self.cap {
+            ring.pop_front();
+        }
+        id
+    }
+
+    /// Trace by id, if still in the ring.
+    pub fn get(&self, id: u64) -> Option<Arc<QueryTrace>> {
+        lock_recover(&self.ring).iter().find(|t| t.id == id).cloned()
+    }
+
+    /// Most recently completed trace.
+    pub fn latest(&self) -> Option<Arc<QueryTrace>> {
+        lock_recover(&self.ring).back().cloned()
+    }
+
+    pub fn ring_len(&self) -> usize {
+        lock_recover(&self.ring).len()
+    }
+
+    pub fn recorded_total(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    pub fn slow_total(&self) -> u64 {
+        self.slow.load(Ordering::Relaxed)
+    }
+
+    pub fn slow_query_ms(&self) -> u64 {
+        self.slow_query_ms
+    }
+
+    /// Ring capacity (the `--trace-ring` bound, clamped to at least 1).
+    pub fn ring_cap(&self) -> usize {
+        self.cap
+    }
+
+    /// JSONL export destination, if `--trace-log` was given.
+    pub fn log_path(&self) -> Option<&Path> {
+        self.log_path.as_deref()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON: one-line trace serialization + the mini parser the CLI reads with
+// ---------------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    // `{}` prints integral floats without a dot; both forms are valid
+    // JSON numbers and round-trip through the parser below.
+    format!("{v}")
+}
+
+/// Serialize a trace as one JSON line (the `--trace-log` JSONL record and
+/// the `TRACE` verb's reply body).
+pub fn trace_to_json(t: &QueryTrace) -> String {
+    let mut s = String::with_capacity(128 + t.spans.len() * 160);
+    s.push_str(&format!(
+        "{{\"id\":{},\"verb\":\"{}\",\"index\":\"{}\",\"n\":{},\"total_us\":{},\"spans\":[",
+        t.id,
+        json_escape(&t.verb),
+        json_escape(&t.index),
+        t.n,
+        t.total_us
+    ));
+    for (i, sp) in t.spans.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"path\":\"{}\",\"name\":\"{}\",\"level\":{},\"detail\":\"{}\",\
+             \"outcome\":\"{}\",\"bound\":{},\"value\":{},\"start_us\":{},\"dur_us\":{}}}",
+            json_escape(&sp.path),
+            json_escape(&sp.name),
+            sp.level,
+            json_escape(&sp.detail),
+            json_escape(&sp.outcome),
+            json_f64(sp.bound),
+            json_f64(sp.value),
+            sp.start_us,
+            sp.dur_us
+        ));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Minimal JSON value for the hand-rolled parser (no serde offline).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|v| *v >= 0.0).map(|v| v as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {:?} at byte {}", other.map(|c| c as char), self.i)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>().map(JsonValue::Num).map_err(|e| format!("bad number {text:?}: {e}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err("truncated \\u escape".to_string());
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|e| e.to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|e| format!("bad \\u escape: {e}"))?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        other => return Err(format!("bad escape {other:?}")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (multi-byte sequences pass
+                    // through byte-wise; input came from &str so it is valid).
+                    let rest = std::str::from_utf8(&self.b[self.i..]).map_err(|e| e.to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                other => return Err(format!("expected , or ] got {other:?}")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(JsonValue::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Obj(fields));
+                }
+                other => return Err(format!("expected , or }} got {other:?}")),
+            }
+        }
+    }
+}
+
+/// Parse any JSON document (objects, arrays, strings, numbers, booleans).
+pub fn parse_json(text: &str) -> Result<JsonValue, String> {
+    let mut p = JsonParser { b: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing bytes after JSON value at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+/// Parse one trace JSONL line back into a [`QueryTrace`].
+pub fn parse_trace_json(line: &str) -> Result<QueryTrace, String> {
+    let v = parse_json(line)?;
+    let field_str =
+        |key: &str| v.get(key).and_then(|x| x.as_str()).map(str::to_string).unwrap_or_default();
+    let spans = v
+        .get("spans")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| "trace is missing its spans array".to_string())?
+        .iter()
+        .map(|sp| {
+            let s = |key: &str| {
+                sp.get(key).and_then(|x| x.as_str()).map(str::to_string).unwrap_or_default()
+            };
+            let u = |key: &str| sp.get(key).and_then(|x| x.as_u64()).unwrap_or(0);
+            let f = |key: &str| sp.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0);
+            SpanRecord {
+                path: s("path"),
+                name: s("name"),
+                level: u("level") as u32,
+                detail: s("detail"),
+                outcome: s("outcome"),
+                bound: f("bound"),
+                value: f("value"),
+                start_us: u("start_us"),
+                dur_us: u("dur_us"),
+            }
+        })
+        .collect();
+    Ok(QueryTrace {
+        id: v.get("id").and_then(|x| x.as_u64()).unwrap_or(0),
+        verb: field_str("verb"),
+        index: field_str("index"),
+        n: v.get("n").and_then(|x| x.as_u64()).unwrap_or(0) as usize,
+        total_us: v.get("total_us").and_then(|x| x.as_u64()).unwrap_or(0),
+        spans,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Flamegraph-style tree rendering (the `qgw trace` CLI verb)
+// ---------------------------------------------------------------------------
+
+/// Render a trace as an indented tree with total and self times per span
+/// (self = total minus the sum of direct children's totals).
+pub fn render_tree(t: &QueryTrace) -> String {
+    let mut out = format!(
+        "trace {} verb={} index={} n={} total={:.3}ms spans={}\n",
+        t.id,
+        t.verb,
+        t.index,
+        t.n,
+        t.total_us as f64 / 1000.0,
+        t.spans.len()
+    );
+    // Direct-children totals, keyed by parent path.
+    let mut child_us: std::collections::BTreeMap<&str, u64> = std::collections::BTreeMap::new();
+    for sp in &t.spans {
+        if let Some((parent, _)) = sp.path.rsplit_once('/') {
+            *child_us.entry(parent).or_insert(0) += sp.dur_us;
+        }
+    }
+    for sp in &t.spans {
+        let depth = sp.path.matches('/').count();
+        let indent = "  ".repeat(depth);
+        let self_us = sp.dur_us.saturating_sub(child_us.get(sp.path.as_str()).copied().unwrap_or(0));
+        let mut line = format!("{indent}{}", sp.segment());
+        if !sp.detail.is_empty() {
+            line.push_str(&format!(" [{}]", sp.detail));
+        }
+        if sp.outcome != names::OUT_OK {
+            line.push_str(&format!(" {}", sp.outcome));
+        }
+        if sp.bound != 0.0 {
+            line.push_str(&format!(" bound={:.4}", sp.bound));
+        }
+        if sp.value != 0.0 {
+            line.push_str(&format!(" value={}", sp.value));
+        }
+        let pad = 48usize.saturating_sub(line.chars().count()).max(1);
+        out.push_str(&format!(
+            "{line}{}total {:>9.3}ms  self {:>9.3}ms\n",
+            " ".repeat(pad),
+            sp.dur_us as f64 / 1000.0,
+            self_us as f64 / 1000.0
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Builder for Prometheus text-exposition output. `# HELP` / `# TYPE`
+/// headers are emitted once per metric family; metric names come from
+/// [`names`] (the `metric-name` lint rejects inline literals at call
+/// sites), label values may carry arbitrary text (escaped).
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+    typed: BTreeSet<String>,
+}
+
+fn prom_label_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn prom_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", prom_label_escape(v))).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        if self.typed.insert(name.to_string()) {
+            self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        }
+    }
+
+    pub fn push_counter(&mut self, name: &'static str, help: &str, v: u64) {
+        self.push_counter_with(name, help, &[], v);
+    }
+
+    pub fn push_counter_with(
+        &mut self,
+        name: &'static str,
+        help: &str,
+        labels: &[(&str, &str)],
+        v: u64,
+    ) {
+        self.header(name, help, "counter");
+        self.out.push_str(&format!("{name}{} {v}\n", prom_labels(labels)));
+    }
+
+    pub fn push_gauge(&mut self, name: &'static str, help: &str, v: f64) {
+        self.push_gauge_with(name, help, &[], v);
+    }
+
+    pub fn push_gauge_with(
+        &mut self,
+        name: &'static str,
+        help: &str,
+        labels: &[(&str, &str)],
+        v: f64,
+    ) {
+        self.header(name, help, "gauge");
+        self.out.push_str(&format!("{name}{} {}\n", prom_labels(labels), json_f64(v)));
+    }
+
+    /// Render a [`LatencyHistogram`] as cumulative `le` buckets plus the
+    /// `_sum` / `_count` series.
+    pub fn push_histogram_with(
+        &mut self,
+        name: &'static str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &LatencyHistogram,
+    ) {
+        self.header(name, help, "histogram");
+        let total = h.count();
+        for (le, cum) in h.cumulative_buckets() {
+            let mut all = labels.to_vec();
+            let le_s = le.to_string();
+            all.push(("le", le_s.as_str()));
+            self.out.push_str(&format!("{name}_bucket{} {cum}\n", prom_labels(&all)));
+            if cum == total {
+                break;
+            }
+        }
+        let mut inf = labels.to_vec();
+        inf.push(("le", "+Inf"));
+        self.out.push_str(&format!("{name}_bucket{} {total}\n", prom_labels(&inf)));
+        self.out.push_str(&format!("{name}_sum{} {}\n", prom_labels(labels), h.sum_us()));
+        self.out.push_str(&format!("{name}_count{} {total}\n", prom_labels(labels), total));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn meta(outcome: &'static str) -> SpanMeta<'static> {
+        SpanMeta { outcome, ..SpanMeta::default() }
+    }
+
+    #[test]
+    fn off_context_records_nothing_and_stays_off_through_children() {
+        let ctx = TraceCtx::off();
+        assert!(!ctx.is_on());
+        let child = ctx.child(names::PIPELINE).child_node(0).child_pair(1, 2);
+        assert!(!child.is_on());
+        child.emit_here(names::PAIR, child.start(), SpanMeta::default());
+        child.emit_leaf(names::GLOBAL_ALIGN, SpanStart::empty(), SpanMeta::default());
+        // Nothing observable: no buffer exists to inspect, and the calls
+        // above must simply not panic.
+    }
+
+    #[test]
+    fn span_paths_address_the_tree_and_sort_deterministically() {
+        let buf = TraceBuf::new();
+        let root = TraceCtx::root(&buf);
+        let hier = root.child(names::PIPELINE).child(names::HIER);
+        let n0 = hier.child_node(0);
+        // Emit out of address order, as a parallel fan-out would.
+        n0.child_pair(2, 1).emit_here(names::PAIR, SpanStart::empty(), meta(names::OUT_LEAF));
+        n0.child_pair(0, 0).emit_here(names::PAIR, SpanStart::empty(), meta(names::OUT_PRUNED));
+        n0.emit_here(names::NODE, SpanStart::empty(), meta(names::OUT_ALIGNED));
+        root.emit_here(names::QUERY, buf.origin_start(), SpanMeta::default());
+        let spans = buf.finish();
+        let paths: Vec<&str> = spans.iter().map(|s| s.path.as_str()).collect();
+        assert_eq!(
+            paths,
+            vec![
+                "query",
+                "query/pipeline/hier/n0",
+                "query/pipeline/hier/n0/p0x0",
+                "query/pipeline/hier/n0/p2x1",
+            ]
+        );
+        assert_eq!(spans[2].outcome, names::OUT_PRUNED);
+        assert_eq!(spans[3].outcome, names::OUT_LEAF);
+    }
+
+    #[test]
+    fn trace_json_round_trips() {
+        let buf = TraceBuf::new();
+        let root = TraceCtx::root(&buf);
+        root.emit_leaf(
+            names::STAGE1_PARTITION,
+            SpanStart::empty(),
+            SpanMeta { outcome: names::OUT_PREPARED, value: 3.0, ..SpanMeta::default() },
+        );
+        root.emit_here(names::QUERY, buf.origin_start(), SpanMeta::default());
+        let store = TraceStore::new(4, 0, None).unwrap();
+        let id = store.push("cloud", "dog \"quoted\"", 120, &buf);
+        let trace = store.get(id).unwrap();
+        let line = trace_to_json(&trace);
+        let parsed = parse_trace_json(&line).unwrap();
+        assert_eq!(parsed, *trace);
+        assert!(!line.contains('\n'), "JSONL record must be one line");
+    }
+
+    #[test]
+    fn store_ring_is_bounded_and_ids_are_stable() {
+        let store = TraceStore::new(2, 0, None).unwrap();
+        for k in 0..5 {
+            let buf = TraceBuf::new();
+            TraceCtx::root(&buf).emit_here(names::QUERY, buf.origin_start(), SpanMeta::default());
+            let id = store.push("cloud", "ref", 10 + k, &buf);
+            assert_eq!(id, k as u64 + 1);
+        }
+        assert_eq!(store.ring_len(), 2);
+        assert_eq!(store.recorded_total(), 5);
+        assert!(store.get(1).is_none(), "oldest traces must be evicted");
+        assert_eq!(store.get(5).unwrap().n, 14);
+        assert_eq!(store.latest().unwrap().id, 5);
+    }
+
+    #[test]
+    fn render_tree_indents_by_path_depth_with_self_and_total() {
+        let t = QueryTrace {
+            id: 9,
+            verb: "cloud".to_string(),
+            index: "ref".to_string(),
+            n: 100,
+            total_us: 5000,
+            spans: vec![
+                SpanRecord {
+                    path: "query".to_string(),
+                    name: names::QUERY.to_string(),
+                    level: 0,
+                    detail: String::new(),
+                    outcome: names::OUT_OK.to_string(),
+                    bound: 0.0,
+                    value: 0.0,
+                    start_us: 0,
+                    dur_us: 5000,
+                },
+                SpanRecord {
+                    path: "query/pipeline".to_string(),
+                    name: names::PIPELINE.to_string(),
+                    level: 0,
+                    detail: String::new(),
+                    outcome: names::OUT_OK.to_string(),
+                    bound: 0.0,
+                    value: 0.0,
+                    start_us: 1000,
+                    dur_us: 3000,
+                },
+            ],
+        };
+        let rendered = render_tree(&t);
+        let lines: Vec<&str> = rendered.lines().collect();
+        assert!(lines[0].starts_with("trace 9 verb=cloud index=ref n=100"));
+        assert!(lines[1].starts_with("query "));
+        assert!(lines[2].starts_with("  pipeline"));
+        // Parent self-time excludes the child's total.
+        assert!(lines[1].contains("self     2.000ms"), "{rendered}");
+        assert!(lines[2].contains("total     3.000ms"), "{rendered}");
+    }
+
+    #[test]
+    fn prom_text_emits_headers_once_and_escapes_label_values() {
+        let mut prom = PromText::new();
+        prom.push_counter(names::QGW_QUERIES_TOTAL, "total queries", 7);
+        prom.push_gauge_with(
+            names::QGW_STAGE_SECONDS,
+            "per-stage seconds",
+            &[("stage", "local+assemble")],
+            0.25,
+        );
+        prom.push_gauge_with(
+            names::QGW_STAGE_SECONDS,
+            "per-stage seconds",
+            &[("stage", "glo\"bal")],
+            1.5,
+        );
+        let text = prom.finish();
+        assert_eq!(text.matches("# TYPE qgw_stage_seconds gauge").count(), 1);
+        assert!(text.contains("qgw_queries_total 7\n"));
+        assert!(text.contains("qgw_stage_seconds{stage=\"local+assemble\"} 0.25\n"));
+        assert!(text.contains("stage=\"glo\\\"bal\""));
+    }
+
+    #[test]
+    fn prom_histogram_renders_cumulative_le_buckets() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(1)); // bound 2
+        h.record(Duration::from_micros(3)); // bound 4
+        h.record(Duration::from_micros(3)); // bound 4
+        let mut prom = PromText::new();
+        prom.push_histogram_with(
+            names::QGW_REQUEST_LATENCY_US,
+            "request latency",
+            &[("verb", "match")],
+            &h,
+        );
+        let text = prom.finish();
+        assert!(text.contains("qgw_request_latency_us_bucket{verb=\"match\",le=\"2\"} 1\n"), "{text}");
+        assert!(text.contains("qgw_request_latency_us_bucket{verb=\"match\",le=\"4\"} 3\n"), "{text}");
+        assert!(text.contains("qgw_request_latency_us_bucket{verb=\"match\",le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("qgw_request_latency_us_sum{verb=\"match\"} 7\n"), "{text}");
+        assert!(text.contains("qgw_request_latency_us_count{verb=\"match\"} 3\n"), "{text}");
+    }
+
+    #[test]
+    fn every_registered_name_is_snake_case_ascii() {
+        for name in names::ALL {
+            assert!(!name.is_empty());
+            assert!(
+                name.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_'),
+                "{name} is not snake_case"
+            );
+            assert!(name.as_bytes()[0].is_ascii_lowercase(), "{name} must start lowercase");
+        }
+    }
+
+    #[test]
+    fn json_parser_handles_nesting_escapes_and_rejects_trailing_garbage() {
+        let v = parse_json(r#"{"a": [1, -2.5, "x\ny", {"b": true}], "c": null}"#).unwrap();
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_f64(), Some(-2.5));
+        assert_eq!(arr[2].as_str(), Some("x\ny"));
+        assert_eq!(arr[3].get("b"), Some(&JsonValue::Bool(true)));
+        assert_eq!(v.get("c"), Some(&JsonValue::Null));
+        assert!(parse_json("{} trailing").is_err());
+        assert!(parse_json("{\"unterminated\": \"").is_err());
+    }
+}

@@ -130,9 +130,9 @@
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
-use std::time::Instant;
 
 use crate::coordinator::parallel_map;
+use crate::coordinator::trace::{names as span, now as wall_now, SpanMeta, SpanStart, TraceCtx};
 use crate::core::{PointCloud, QuantizedSpace, SparseCoupling};
 use crate::graph::Graph;
 use crate::gw::GwResult;
@@ -858,9 +858,28 @@ pub fn hier_match_quantized(
     aligner: &dyn GlobalAligner,
     seed: u64,
 ) -> HierQgwResult {
+    hier_match_quantized_traced(x, y, qx, qy, cfg, fused, aligner, seed, &TraceCtx::off())
+}
+
+/// [`hier_match_quantized`] with a span-tree recorder attached (the
+/// serving pipeline's path). `trace` observes the recursion — one span
+/// per node and supported pair — and never feeds it: the coupling is
+/// byte-identical with tracing on or off.
+#[allow(clippy::too_many_arguments)]
+pub fn hier_match_quantized_traced(
+    x: &Substrate<'_>,
+    y: &Substrate<'_>,
+    qx: &QuantizedSpace,
+    qy: &QuantizedSpace,
+    cfg: &QgwConfig,
+    fused: Option<(f64, f64)>,
+    aligner: &dyn GlobalAligner,
+    seed: u64,
+    trace: &TraceCtx,
+) -> HierQgwResult {
     let sx = SideCtx { sub: x, q: qx, src: SideSrc::Lazy { node_seed: side_seed(seed, 0) } };
     let sy = SideCtx { sub: y, q: qy, src: SideSrc::Lazy { node_seed: side_seed(seed, 1) } };
-    hier_match_sides(&sx, &sy, cfg, fused, aligner)
+    hier_match_sides(&sx, &sy, cfg, fused, aligner, trace)
 }
 
 /// Hierarchical match of a query substrate against a prebuilt reference
@@ -887,19 +906,41 @@ pub fn hier_match_indexed(
     aligner: &dyn GlobalAligner,
     seed: u64,
 ) -> HierQgwResult {
+    hier_match_indexed_traced(x, qx, reference, cfg, fused, aligner, seed, &TraceCtx::off())
+}
+
+/// [`hier_match_indexed`] with a span-tree recorder attached. Same
+/// byte-identity contract; indexed and cold runs at the same seed also
+/// produce identical span trees below the hierarchy root (structure,
+/// outcomes, and bound terms — timings excluded).
+#[allow(clippy::too_many_arguments)]
+pub fn hier_match_indexed_traced(
+    x: &Substrate<'_>,
+    qx: &QuantizedSpace,
+    reference: &RefNode,
+    cfg: &QgwConfig,
+    fused: Option<(f64, f64)>,
+    aligner: &dyn GlobalAligner,
+    seed: u64,
+    trace: &TraceCtx,
+) -> HierQgwResult {
     let sx = SideCtx { sub: x, q: qx, src: SideSrc::Lazy { node_seed: side_seed(seed, 0) } };
     let sy =
         SideCtx { sub: &reference.sub, q: &reference.q, src: SideSrc::Index(reference) };
-    hier_match_sides(&sx, &sy, cfg, fused, aligner)
+    hier_match_sides(&sx, &sy, cfg, fused, aligner, trace)
 }
 
-/// Shared body of the lazy and indexed entry points.
+/// Shared body of the lazy and indexed entry points. `trace` is the
+/// hierarchy-root context (usually `<query>/pipeline/hier`); the top
+/// node's span lands at `<root>/n0`, supported pairs at `<root>/n0/p{i}x{j}`,
+/// nested nodes at `<root>/n0/p{i}x{j}/n{level}`, and so on.
 fn hier_match_sides(
     x: &SideCtx<'_>,
     y: &SideCtx<'_>,
     cfg: &QgwConfig,
     fused: Option<(f64, f64)>,
     aligner: &dyn GlobalAligner,
+    trace: &TraceCtx,
 ) -> HierQgwResult {
     assert_eq!(x.q.num_points(), x.sub.len());
     assert_eq!(y.q.num_points(), y.sub.len());
@@ -925,17 +966,23 @@ fn hier_match_sides(
     let top_eps = qx.block_diameter_bound().max(qy.block_diameter_bound());
     let top_term = bound_term(q_x, q_y, top_eps, top_feat);
 
+    // Top node's trace context: `<root>/n0`. The wall-clock reads below
+    // go through the trace sink's `now()` — the module boundary that
+    // keeps `determinism-time` clean — and feed only the reported timing
+    // stats and spans, never the coupling.
+    let n0 = trace.child_node(0);
+    let n0_start = n0.start();
+
     // Step 1: global alignment of the top-level representatives — exactly
     // as flat qGW/qFGW.
-    // qgw-lint: allow(determinism-time) -- wall-clock feeds only the reported timing stats, never the coupling
-    let align_start = Instant::now();
+    let align_start = wall_now();
     let global_res = align_node(0, align_seed(&x.src), x.sub, y.sub, qx, qy, fused, aligner);
     let global_secs = align_start.elapsed().as_secs_f64();
+    n0.emit_leaf(span::GLOBAL_ALIGN, SpanStart::at(align_start), SpanMeta::default());
 
     // Step 2: solve every supported pair (leaf 1-D matching or a nested
     // quantized node), fanned out over the pool.
-    // qgw-lint: allow(determinism-time) -- wall-clock feeds only the reported timing stats, never the coupling
-    let local_start = Instant::now();
+    let local_start = wall_now();
     let global = SparseCoupling::from_dense(&global_res.plan, cfg.mass_threshold);
     let pairs: Vec<(u32, u32)> = global.iter().map(|(p, q, _)| (p as u32, q as u32)).collect();
     let node = solve_pairs(
@@ -949,6 +996,7 @@ fn hier_match_sides(
         fused,
         aligner,
         true,
+        &n0,
     );
 
     // Step 3: assemble the factored coupling and compose the bound.
@@ -964,6 +1012,18 @@ fn hier_match_sides(
         pairs.iter().copied().zip(node.plans).collect();
     let num_leaves = stats.leaf_matchings;
     let coupling = QuantizationCoupling::new(qx, qy, global, locals);
+    n0.emit_leaf(span::LOCAL_ASSEMBLE, SpanStart::at(local_start), SpanMeta::default());
+    n0.emit_here(
+        span::NODE,
+        n0_start,
+        SpanMeta {
+            level: 0,
+            detail: if n0.is_on() { aligner.kind_at(0) } else { "" },
+            outcome: span::OUT_ALIGNED,
+            bound: top_term,
+            ..SpanMeta::default()
+        },
+    );
     HierQgwResult {
         result: QgwResult {
             coupling,
@@ -1278,7 +1338,9 @@ fn build_side_cache<'a>(
 /// committed above these pairs) — consulted only when `cfg.tolerance > 0`.
 /// Only the top call fans out over the pool; recursive calls run inside
 /// their worker. Either side may be served from a prebuilt reference tree
-/// (see [`SideSrc`]); the pair logic is identical.
+/// (see [`SideSrc`]); the pair logic is identical. `trace` is the owning
+/// node's context — each pair records one span at `p{i}x{j}` below it
+/// with the realized outcome (leaf / preskipped / pruned / recursed).
 #[allow(clippy::too_many_arguments)]
 fn solve_pairs(
     x: &SideCtx<'_>,
@@ -1291,6 +1353,7 @@ fn solve_pairs(
     fused: Option<(f64, f64)>,
     aligner: &dyn GlobalAligner,
     parallel: bool,
+    trace: &TraceCtx,
 ) -> NodeOutcome {
     let (qx, qy) = (x.q, y.q);
     let leaf = cfg.leaf_size.max(1);
@@ -1382,16 +1445,28 @@ fn solve_pairs(
         build_side_cache(y, &need_y, levels_left, pair_level, cfg, is_fused, parallel);
     let cache_bytes: usize = cache_x.transient_bytes() + cache_y.transient_bytes();
 
+    let pair_meta = |outcome: &'static str, bound: f64| SpanMeta {
+        level: pair_level as u32,
+        outcome,
+        bound,
+        ..SpanMeta::default()
+    };
     let solve_one = |idx: usize| -> PairOutcome {
         let pair = &pairs[idx];
         let (pu, qu) = (pair.0 as usize, pair.1 as usize);
+        let pctx = trace.child_pair(pu, qu);
+        let pstart = pctx.start();
         if !may_recurse(pu, qu) {
-            return leaf_outcome(pu, qu, false, false);
+            let out = leaf_outcome(pu, qu, false, false);
+            pctx.emit_here(span::PAIR, pstart, pair_meta(span::OUT_LEAF, 0.0));
+            return out;
         }
         // Pre-skipped above: certified to prune without a nested
         // partition to read the exact term from.
         if preskip[idx] {
-            return leaf_outcome(pu, qu, true, true);
+            let out = leaf_outcome(pu, qu, true, true);
+            pctx.emit_here(span::PAIR, pstart, pair_meta(span::OUT_PRESKIPPED, 0.0));
+            return out;
         }
 
         let vx = cache_x.view(pair.0, is_fused);
@@ -1405,11 +1480,15 @@ fn solve_pairs(
         // pay for the nested alignment (deterministic: the decision is a
         // pure function of per-node scalars).
         if adaptive && node_term <= budget {
-            return leaf_outcome(pu, qu, true, false);
+            let out = leaf_outcome(pu, qu, true, false);
+            pctx.emit_here(span::PAIR, pstart, pair_meta(span::OUT_PRUNED, node_term));
+            return out;
         }
 
         // Nested node: align the cached sub-partitions' representatives,
         // then solve the supported sub-pairs one level down.
+        let nctx = pctx.child_node(pair_level + 1);
+        let nstart = nctx.start();
         let (sqx, sqy) = (vx.q, vy.q);
         let res =
             align_node(pair_level + 1, align_seed(&vx.src), vx.sub, vy.sub, sqx, sqy, fused, aligner);
@@ -1434,7 +1513,20 @@ fn solve_pairs(
             fused,
             aligner,
             false,
+            &nctx,
         );
+        nctx.emit_here(
+            span::NODE,
+            nstart,
+            SpanMeta {
+                level: (pair_level + 1) as u32,
+                detail: if nctx.is_on() { aligner.kind_at(pair_level + 1) } else { "" },
+                outcome: span::OUT_ALIGNED,
+                bound: node_term,
+                ..SpanMeta::default()
+            },
+        );
+        pctx.emit_here(span::PAIR, pstart, pair_meta(span::OUT_RECURSED, node_term));
 
         let mut stats = child.stats;
         stats.record_node(pair_level + 1, node_term);

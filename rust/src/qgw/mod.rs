@@ -41,8 +41,8 @@ pub use fused::{
     feature_quantized_eccentricity, qfgw_match, qfgw_match_quantized, FeatureSet, QfgwConfig,
 };
 pub use hier::{
-    balanced_m, build_ref_tree, hier_graph_match, hier_match_indexed, hier_match_quantized,
-    hier_qfgw_match, hier_qgw_match, hier_qgw_match_quantized, HierQgwResult, HierStats, RefNode,
-    Substrate,
+    balanced_m, build_ref_tree, hier_graph_match, hier_match_indexed, hier_match_indexed_traced,
+    hier_match_quantized, hier_match_quantized_traced, hier_qfgw_match, hier_qgw_match,
+    hier_qgw_match_quantized, HierQgwResult, HierStats, RefNode, Substrate,
 };
 pub(crate) use hier::{split_seed, stage_partition};

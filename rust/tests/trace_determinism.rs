@@ -1,0 +1,229 @@
+//! Span-tree determinism acceptance tests: tracing is *passive*
+//! observation of a deterministic recursion, so (1) the recorded span
+//! tree — paths, names, levels, details, outcomes, bound bits; everything
+//! except wall times — must be identical wherever the recursion itself is
+//! byte-identical (thread caps, cold vs indexed, batched vs solo), and
+//! (2) turning the recorder on must never change a coupling byte.
+//!
+//! These are the observability counterparts of the byte-identity suites
+//! in `properties.rs`: if a span tree drifts across thread counts, the
+//! recorder is observing scheduling, not structure.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use qgw::coordinator::{
+    BatchEngine, BatchOptions, MatchPipeline, MatchRequest, Metrics, PipelineInput,
+    QueryInput, QueryPayload, SpanRecord, TraceBuf, TraceCtx, TraceStore,
+};
+use qgw::core::PointCloud;
+use qgw::index::{IndexRegistry, RefIndex};
+use qgw::prng::{Gaussian, Pcg32, Rng};
+use qgw::qgw::{balanced_m, PartitionSize, QgwConfig};
+use qgw::testutil::assert_sparse_bitwise_equal;
+
+const N: usize = 200;
+const DIM: usize = 3;
+const SEED: u64 = 7;
+
+fn cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Pcg32::seed_from(seed);
+    let mut g = Gaussian::new();
+    PointCloud::new((0..n * DIM).map(|_| g.sample(&mut rng)).collect(), DIM)
+}
+
+/// Two-level hierarchy config so the span tree has real node/pair depth.
+fn config(num_threads: usize) -> QgwConfig {
+    let leaf = 16;
+    QgwConfig {
+        size: PartitionSize::Count(balanced_m(N, leaf, 2)),
+        levels: 2,
+        leaf_size: leaf,
+        num_threads,
+        ..QgwConfig::default()
+    }
+}
+
+/// Everything except timings: the structural identity of a span tree.
+fn structure(spans: &[SpanRecord]) -> Vec<(String, String, u32, String, String, u64)> {
+    spans.iter().map(SpanRecord::structural_key).collect()
+}
+
+/// The recursion subtree only — stage-1 spans legitimately differ in
+/// detail/outcome across serving paths (`cold` vs `indexed` vs the batch
+/// engine's `prepared`/`cache_hit`), the hierarchy below them must not.
+fn hier_structure(spans: &[SpanRecord]) -> Vec<(String, String, u32, String, String, u64)> {
+    spans.iter().filter(|s| s.path.contains("/hier")).map(SpanRecord::structural_key).collect()
+}
+
+fn run_cold_traced(cfg: QgwConfig, x: &PointCloud, y: &PointCloud) -> Vec<SpanRecord> {
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg, &metrics);
+    pipe.seed = SEED;
+    let buf = TraceBuf::new();
+    pipe.run_traced(PipelineInput::Clouds { x, y }, &TraceCtx::root(&buf));
+    buf.finish()
+}
+
+#[test]
+fn span_trees_are_identical_across_thread_caps() {
+    let x = cloud(N, 11);
+    let y = cloud(N, 12);
+    let serial = run_cold_traced(config(1), &x, &y);
+    let parallel = run_cold_traced(config(4), &x, &y);
+    assert!(!serial.is_empty(), "traced run recorded no spans");
+    assert_eq!(
+        structure(&serial),
+        structure(&parallel),
+        "span tree drifted between --threads 1 and --threads 4: the recorder is \
+         observing scheduling, not recursion structure"
+    );
+}
+
+#[test]
+fn span_paths_depend_only_on_recursion_position() {
+    let x = cloud(N, 11);
+    let y = cloud(N, 12);
+    let spans = run_cold_traced(config(2), &x, &y);
+    // The sorted span list is path-addressed: the same query replayed
+    // must produce the same addresses in the same order.
+    let replay = run_cold_traced(config(2), &x, &y);
+    assert_eq!(structure(&spans), structure(&replay));
+    // And the layout is the documented one: a pipeline span, a stage-1
+    // leaf, and an n0 hierarchy root with its global alignment.
+    let has = |p: &str| spans.iter().any(|s| s.path == p);
+    assert!(has("query/pipeline"), "missing pipeline span");
+    assert!(has("query/pipeline/stage1_partition"), "missing stage-1 span");
+    assert!(has("query/pipeline/hier/n0"), "missing hierarchy root span");
+    assert!(has("query/pipeline/hier/n0/global_align"), "missing global-align span");
+}
+
+#[test]
+fn cold_and_indexed_hier_subtrees_match_at_the_build_seed() {
+    let x = cloud(N, 11);
+    let y = cloud(N, 12);
+    let cfg = config(2);
+    let metrics = Metrics::new();
+
+    let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+    pipe.seed = SEED;
+    let cold_buf = TraceBuf::new();
+    let cold =
+        pipe.run_traced(PipelineInput::Clouds { x: &x, y: &y }, &TraceCtx::root(&cold_buf));
+
+    let index = RefIndex::build_cloud(&y, None, &cfg, SEED);
+    let idx_buf = TraceBuf::new();
+    let indexed = pipe
+        .run_indexed_traced(QueryInput::Cloud { x: &x }, &index, &TraceCtx::root(&idx_buf))
+        .expect("indexed match");
+
+    // The couplings are byte-identical (the PR-5 contract) — so the
+    // recursion the two traces observed was the same recursion.
+    assert_sparse_bitwise_equal(
+        &cold.result.coupling.to_sparse(),
+        &indexed.result.coupling.to_sparse(),
+    );
+    let cold_spans = cold_buf.finish();
+    let idx_spans = idx_buf.finish();
+    assert_eq!(
+        hier_structure(&cold_spans),
+        hier_structure(&idx_spans),
+        "hierarchy span subtree drifted between cold and indexed serving"
+    );
+    // While the stage-1 spans declare their provenance.
+    let detail_of = |spans: &[SpanRecord]| {
+        spans
+            .iter()
+            .find(|s| s.name == "stage1_partition")
+            .map(|s| s.detail.clone())
+            .unwrap_or_default()
+    };
+    assert_eq!(detail_of(&cold_spans), "cold");
+    assert_eq!(detail_of(&idx_spans), "indexed");
+}
+
+#[test]
+fn batched_and_solo_hier_subtrees_match() {
+    let cfg = config(2);
+    let y = cloud(N, 12);
+    let x = cloud(N, 11);
+    let index = RefIndex::build_cloud(&y, None, &cfg, SEED);
+
+    // Solo: the query against the same index through the pipeline.
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+    pipe.seed = SEED;
+    let solo_buf = TraceBuf::new();
+    pipe.run_indexed_traced(QueryInput::Cloud { x: &x }, &index, &TraceCtx::root(&solo_buf))
+        .expect("solo match");
+
+    // Batched: the same payload through the traced admission queue.
+    // (`RefIndex::build_cloud` is deterministic, so the registry's index
+    // is byte-identical to the solo one.)
+    let registry = Arc::new(IndexRegistry::new(1 << 30));
+    registry.insert("ref", RefIndex::build_cloud(&y, None, &cfg, SEED));
+    let store = Arc::new(TraceStore::new(8, 0, None).expect("store"));
+    let engine = BatchEngine::with_trace(
+        Some(registry),
+        cfg,
+        SEED,
+        BatchOptions {
+            queue_depth: 8,
+            batch_window: Duration::from_millis(0),
+            cache_bytes: 0,
+        },
+        Some(Arc::clone(&store)),
+    );
+    engine
+        .try_submit(MatchRequest {
+            index_name: "ref".to_string(),
+            payload: QueryPayload::Cloud { coords: x.coords().to_vec(), dim: DIM },
+        })
+        .expect("queue slot")
+        .wait()
+        .expect("batched match");
+    let trace = store.latest().expect("recorded trace");
+
+    assert_eq!(
+        hier_structure(&solo_buf.finish()),
+        hier_structure(&trace.spans),
+        "hierarchy span subtree drifted between batched and solo serving"
+    );
+    // The batched trace additionally records its admission story.
+    let has = |name: &str| trace.spans.iter().any(|s| s.name == name);
+    assert!(has("admission_wait"), "batched trace missing admission_wait span");
+    assert!(has("queue_depth_at_admit"), "batched trace missing queue-depth span");
+    assert!(has("query"), "batched trace missing the query root span");
+}
+
+#[test]
+fn tracing_on_and_off_produce_identical_coupling_bytes() {
+    let x = cloud(N, 11);
+    let y = cloud(N, 12);
+    let cfg = config(2);
+    let metrics = Metrics::new();
+    let mut pipe = MatchPipeline::new(cfg.clone(), &metrics);
+    pipe.seed = SEED;
+
+    let off = pipe.run(PipelineInput::Clouds { x: &x, y: &y });
+    let buf = TraceBuf::new();
+    let on = pipe.run_traced(PipelineInput::Clouds { x: &x, y: &y }, &TraceCtx::root(&buf));
+    assert!(!buf.finish().is_empty());
+    assert_sparse_bitwise_equal(
+        &off.result.coupling.to_sparse(),
+        &on.result.coupling.to_sparse(),
+    );
+
+    let index = RefIndex::build_cloud(&y, None, &cfg, SEED);
+    let off_idx =
+        pipe.run_indexed(QueryInput::Cloud { x: &x }, &index).expect("indexed off");
+    let buf = TraceBuf::new();
+    let on_idx = pipe
+        .run_indexed_traced(QueryInput::Cloud { x: &x }, &index, &TraceCtx::root(&buf))
+        .expect("indexed on");
+    assert!(!buf.finish().is_empty());
+    assert_sparse_bitwise_equal(
+        &off_idx.result.coupling.to_sparse(),
+        &on_idx.result.coupling.to_sparse(),
+    );
+}

@@ -10,7 +10,7 @@
 //! order hazards, possibly never — `HashMap` order is stable within one
 //! run).
 //!
-//! Three rule families over every `.rs` file under `rust/src` and
+//! Four rule families over every `.rs` file under `rust/src` and
 //! `rust/benches` (token-level scan; comments and string literals are
 //! excluded from matching, annotations are read *from* comments):
 //!
@@ -39,6 +39,14 @@
 //!   patterns `Vec::new` / `.to_vec(` / `.clone()` / `.collect(` are
 //!   rejected — these regions are the workspace-driven inner loops whose
 //!   allocation-free contract BENCH_4 measures.
+//! * **M — telemetry naming.** `metric-name`: every span/metric name
+//!   must be registered as a `snake_case` ASCII constant in the one
+//!   table (`coordinator/trace.rs` `names` module; checked against the
+//!   raw line text because the lexer blanks string contents), and the
+//!   telemetry entry points (`push_counter*` / `push_gauge*` /
+//!   `push_histogram_with` / `emit_here` / `emit_leaf`) must be passed
+//!   those constants — an inline string literal as the name argument is
+//!   rejected so exposition names cannot drift from the registry.
 //!
 //! Suppression is inline and audited:
 //! `// qgw-lint: allow(<rule>) -- <reason>` with a **mandatory** reason;
@@ -74,6 +82,24 @@ pub const THREAD_ALLOWLIST: &[&str] = &["rust/src/coordinator/pool.rs"];
 const HOT_ALLOC_PATTERNS: &[&str] =
     &["Vec::new", ".to_vec(", ".clone()", ".collect(", ".collect::<"];
 
+/// The one file allowed to define span/metric name string constants: the
+/// `names` registry module. Its `const X: &str = ".."` entries are the
+/// vocabulary the `metric-name` rule checks for `snake_case`.
+pub const METRIC_NAME_TABLE: &str = "rust/src/coordinator/trace.rs";
+
+/// Telemetry entry points whose name argument must be a `names::`
+/// constant. The lexer keeps string delimiters while blanking contents,
+/// so `pattern("` in blanked code means an inline literal was passed.
+const METRIC_CALL_PATTERNS: &[&str] = &[
+    "push_counter(\"",
+    "push_counter_with(\"",
+    "push_gauge(\"",
+    "push_gauge_with(\"",
+    "push_histogram_with(\"",
+    "emit_here(\"",
+    "emit_leaf(\"",
+];
+
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 pub enum Rule {
     DeterminismHash,
@@ -83,6 +109,7 @@ pub enum Rule {
     UnsafeModule,
     UnsafeOpDeny,
     HotAlloc,
+    MetricName,
     AnnotationSyntax,
 }
 
@@ -95,6 +122,7 @@ impl Rule {
         Rule::UnsafeModule,
         Rule::UnsafeOpDeny,
         Rule::HotAlloc,
+        Rule::MetricName,
         Rule::AnnotationSyntax,
     ];
 
@@ -107,6 +135,7 @@ impl Rule {
             Rule::UnsafeModule => "unsafe-module",
             Rule::UnsafeOpDeny => "unsafe-op-deny",
             Rule::HotAlloc => "hot-alloc",
+            Rule::MetricName => "metric-name",
             Rule::AnnotationSyntax => "annotation-syntax",
         }
     }
@@ -379,6 +408,9 @@ fn word_prefix<'a>(body: &'a str, word: &str) -> Option<&'a str> {
 struct Line {
     code: String,
     comment: String,
+    /// Unlexed source text — the `metric-name` table check reads string
+    /// literal *values*, which the code field blanks.
+    raw: String,
 }
 
 fn path_in(list: &[&str], rel: &str) -> bool {
@@ -418,7 +450,7 @@ pub fn lint_source(rel: &str, source: &str) -> Vec<Finding> {
         .lines()
         .map(|raw| {
             let (code, comment) = split_line(&mut state, raw);
-            Line { code, comment }
+            Line { code, comment, raw: raw.to_string() }
         })
         .collect();
     let n = lines.len();
@@ -600,6 +632,36 @@ pub fn lint_source(rel: &str, source: &str) -> Vec<Finding> {
                 );
             }
         }
+        if rel == METRIC_NAME_TABLE {
+            if let Some((ident, value)) = name_table_entry(&line.raw) {
+                if !is_snake_case_name(value) {
+                    push(
+                        &mut findings,
+                        Rule::MetricName,
+                        i,
+                        format!(
+                            "name-table constant `{ident}` registers {value:?}, which is \
+                             not snake_case ASCII ([a-z][a-z0-9_]*)"
+                        ),
+                    );
+                }
+            }
+        }
+        for pat in METRIC_CALL_PATTERNS {
+            if code.contains(pat) {
+                push(
+                    &mut findings,
+                    Rule::MetricName,
+                    i,
+                    format!(
+                        "inline metric/span name literal at `{}`; register the name in \
+                         coordinator::trace::names and pass the constant",
+                        &pat[..pat.len() - 1]
+                    ),
+                );
+                break;
+            }
+        }
         if hot[i] {
             for pat in HOT_ALLOC_PATTERNS {
                 let hit = if *pat == "Vec::new" {
@@ -665,6 +727,28 @@ fn fn_name_on_line(code: &str) -> Option<String> {
         }
     }
     None
+}
+
+/// Parse a name-table entry off one raw source line:
+/// `pub const IDENT: &str = "value";` → `(IDENT, value)`. Lines whose
+/// type is not exactly `&str` (for example the `ALL: &[&str]` roster) are
+/// not entries.
+fn name_table_entry(raw: &str) -> Option<(&str, &str)> {
+    let t = raw.trim_start();
+    let rest = t.strip_prefix("pub const ").or_else(|| t.strip_prefix("const "))?;
+    let (ident, rest) = rest.split_once(':')?;
+    let rest = rest.trim_start().strip_prefix("&str")?.trim_start();
+    let rest = rest.strip_prefix('=')?.trim_start().strip_prefix('"')?;
+    let (value, _) = rest.split_once('"')?;
+    Some((ident.trim(), value))
+}
+
+/// `snake_case` ASCII: a lowercase first byte, then lowercase, digits, or
+/// underscores — the Prometheus-safe subset every registered name uses.
+fn is_snake_case_name(name: &str) -> bool {
+    let b = name.as_bytes();
+    matches!(b.first(), Some(c) if c.is_ascii_lowercase())
+        && b.iter().all(|&c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_')
 }
 
 /// Is there a `SAFETY` marker adjacent to line `i`? Same-line trailing

@@ -284,3 +284,56 @@ fn module_keys_match_the_baseline_schema() {
     assert_eq!(module_of("rust/src/coordinator/pool.rs"), "coordinator");
     assert_eq!(module_of("rust/benches/micro.rs"), "benches");
 }
+
+// --- metric-name ------------------------------------------------------------
+
+#[test]
+fn inline_name_literal_at_a_telemetry_call_fires() {
+    let src = "prom.push_counter(\"qgw_adhoc_total\", \"help\", 1);\n\
+               ctx.emit_here(\"my_span\", started, meta);\n";
+    assert_eq!(fired(COORD, src, Rule::MetricName), vec![1, 2]);
+}
+
+#[test]
+fn constant_name_arguments_are_fine() {
+    let src = "prom.push_counter(names::QGW_QUERIES_TOTAL, \"help\", 1);\n\
+               ctx.emit_leaf(span::PAIR, started, meta);\n";
+    assert!(fired(COORD, src, Rule::MetricName).is_empty());
+}
+
+#[test]
+fn call_patterns_in_comments_and_strings_do_not_fire() {
+    let src = "// prom.push_counter(\"doc_example_total\", ..) is rejected\n\
+               let msg = \"emit_here(\\\"x\\\")\";\n";
+    assert!(fired(COORD, src, Rule::MetricName).is_empty());
+}
+
+#[test]
+fn non_snake_case_table_entry_fires_in_the_registry_file() {
+    let table = "rust/src/coordinator/trace.rs";
+    let src = "pub const BAD: &str = \"local+assemble\";\n\
+               pub const ALSO_BAD: &str = \"CamelName\";\n\
+               pub const GOOD: &str = \"qgw_queries_total\";\n";
+    assert_eq!(fired(table, src, Rule::MetricName), vec![1, 2]);
+}
+
+#[test]
+fn table_check_only_applies_to_the_registry_file() {
+    let src = "pub const ELSEWHERE: &str = \"Not A Metric\";\n";
+    assert!(fired(COORD, src, Rule::MetricName).is_empty());
+}
+
+#[test]
+fn non_str_consts_in_the_registry_file_are_not_entries() {
+    let table = "rust/src/coordinator/trace.rs";
+    let src = "pub const ALL: &[&str] = &[QUERY];\npub const CAP: usize = 64;\n";
+    assert!(fired(table, src, Rule::MetricName).is_empty());
+}
+
+#[test]
+fn metric_name_allow_suppresses_with_reason() {
+    let src = "prom.push_gauge(\"legacy_gauge\", \"h\", 0.0); \
+               // qgw-lint: allow(metric-name) -- grandfathered dashboard name\n";
+    assert!(fired(COORD, src, Rule::MetricName).is_empty());
+    assert_eq!(suppressed(COORD, src, Rule::MetricName), vec![1]);
+}
